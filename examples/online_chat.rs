@@ -1,0 +1,53 @@
+//! Latency-oriented online serving (§2.2): Poisson arrivals, per-request
+//! latency percentiles, with the unified scheduler + delayed verification.
+//!
+//!   cargo run --release --example online_chat [-- --rate 1.5 --horizon 20]
+
+use std::rc::Rc;
+
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::runtime::Runtime;
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
+use sparsespec::util::cli::Args;
+use sparsespec::workload::{Dataset, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rt = Rc::new(Runtime::load(&args.str("artifacts", "artifacts"))?);
+    let rate = args.f64("rate", 1.5);
+    let horizon = args.f64("horizon", 20.0);
+
+    for (name, drafter, sched, delayed) in [
+        ("vanilla", DrafterKind::Vanilla, Schedule::Lockstep, false),
+        (
+            "sparsespec(unified+delayed)",
+            DrafterKind::Pillar { w: 128 },
+            Schedule::Unified,
+            true,
+        ),
+    ] {
+        let mut gen = WorkloadGen::new(
+            rt.cfg.grammar.clone(),
+            rt.cfg.model.clone(),
+            Dataset::LiveCodeBench,
+            17,
+        );
+        let reqs = gen.online_trace(rate, horizon);
+        println!("{name}: {} arrivals over {horizon}s at {rate}/s", reqs.len());
+        let cfg = EngineConfig::new(drafter).with_k(8).with_schedule(sched, delayed);
+        let mut eng = Engine::new(rt.clone(), cfg)?;
+        let r = eng.run(reqs)?;
+        println!("  {}", r.summary());
+        let mut lat = r.request_latency_s.clone();
+        if lat.len() > 0 {
+            println!(
+                "  latency: p50={:.2}s p99={:.2}s max={:.2}s",
+                lat.percentile(50.0),
+                lat.percentile(99.0),
+                lat.max()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! The paper's headline experiment in miniature: serve all three reasoning
+//! datasets with every training-free system and print the Fig. 10-style
+//! comparison table.
+//!
+//!   cargo run --release --example reasoning_serve [-- --requests 12]
+
+use std::rc::Rc;
+
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::runtime::Runtime;
+use sparsespec::spec::DrafterKind;
+use sparsespec::util::cli::Args;
+use sparsespec::workload::{Dataset, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rt = Rc::new(Runtime::load(&args.str("artifacts", "artifacts"))?);
+    let n = args.usize("requests", 12);
+    let systems: Vec<(&str, DrafterKind)> = vec![
+        ("vllm", DrafterKind::Vanilla),
+        ("vllm-ngram", DrafterKind::NGram { n: 3 }),
+        ("magicdec", DrafterKind::Window { w: 128 }),
+        ("triforce", DrafterKind::TriForce { w: 64 }),
+        ("sparsespec", DrafterKind::Pillar { w: 128 }),
+    ];
+    println!(
+        "{:<14} {:<14} {:>10} {:>12} {:>8} {:>8}",
+        "dataset", "system", "wall tok/s", "sim tok/s", "alpha", "acc/rnd"
+    );
+    for ds in Dataset::all() {
+        let mut base = 0.0;
+        for (name, d) in &systems {
+            let reqs = WorkloadGen::new(
+                rt.cfg.grammar.clone(),
+                rt.cfg.model.clone(),
+                ds,
+                42,
+            )
+            .offline_batch(n);
+            let mut eng = Engine::new(rt.clone(), EngineConfig::new(*d).with_k(8))?;
+            let r = eng.run(reqs)?;
+            if *name == "vllm" {
+                base = r.sim_tok_s();
+            }
+            println!(
+                "{:<14} {:<14} {:>10.1} {:>9.1} ({:>4.2}x) {:>8.2} {:>8.2}",
+                ds.name(),
+                name,
+                r.wall_tok_s(),
+                r.sim_tok_s(),
+                r.sim_tok_s() / base,
+                r.accept.alpha(),
+                r.accept.mean_accepted()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+"""Kernel-level microbenchmark for Fig. 15 (build/bench-time only).
+
+Measures the three batching strategies over a mixed draft/verify batch at
+the L1 kernel level:
+
+  sequential  — two pallas_calls: sparse(W) for draft rows, dense(T) for
+                verify rows;
+  naive_batch — one pallas_call where every row pays the dense template
+                (the fused kernel with idx = full range for all rows);
+  fused       — one pallas_call with per-row dispatch (our fused kernel).
+
+Interpret-mode wallclock is a *numerics-path* measurement, not a TPU time
+proxy (XLA traces both branches of the fused kernel); the TPU-shape
+comparison lives in rust/src/bench/kernels.rs on top of the DeviceModel.
+Results land in artifacts/kernel_bench.json for the Rust bench to report.
+
+Run: cd python && python -m compile.bench_kernels
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fused_attn, full_attn, sparse_attn
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), (tuple, list)) else None
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        leaf = out[0] if isinstance(out, (tuple, list)) else out
+        leaf.block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def main(out_path="../artifacts/kernel_bench.json"):
+    rng = np.random.default_rng(0)
+    S, Q, Hq, Hkv, D, T, W = 12, 9, 4, 2, 32, 512, 64
+    k = 8
+    q = jnp.asarray(rng.normal(size=(S, Q, Hq, D)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(S, T, Hkv, D)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(S, T, Hkv, D)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(64, 300, size=(S,)).astype(np.int32))
+    idx = jnp.asarray(rng.integers(0, 64, size=(S, Hkv, W)).astype(np.int32))
+    idx_full = jnp.asarray(
+        np.broadcast_to(np.arange(T, dtype=np.int32), (S, Hkv, T)).copy()
+    )
+    qv = jnp.asarray(np.full((S,), Q, np.int32))
+    # 1/(k+1) of rows verify, rest draft
+    kind = jnp.asarray((np.arange(S) % (k + 1) == 0).astype(np.int32))
+
+    results = {}
+    # sequential: sparse for draft rows + dense for verify rows
+    t_sparse = timeit(lambda: sparse_attn(q[:, :1], kc, vc, idx, pos))
+    t_dense = timeit(lambda: full_attn(q, kc, vc, pos, qv))
+    results["sequential_s"] = t_sparse + t_dense
+    results["sparse_call_s"] = t_sparse
+    results["dense_call_s"] = t_dense
+    # naive batch: everything through the fused kernel at dense width
+    results["naive_batch_s"] = timeit(
+        lambda: fused_attn(q, kc, vc, idx_full, pos, qv, jnp.ones_like(kind))
+    )
+    # fused: per-row dispatch
+    results["fused_s"] = timeit(lambda: fused_attn(q, kc, vc, idx, pos, qv, kind))
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    for key, v in results.items():
+        print(f"{key:>16}: {v*1e3:8.2f} ms")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Synthetic "reasoning trace" corpus generator (pointer-chasing grammar).
+
+Build-time only.  The Rust workload generator re-implements the same
+grammar (see rust/src/workload/grammar.rs) from the constants exported in
+artifacts/config.json — a golden-trace pytest (test_data.py) and a Rust
+unit test pin both implementations to the same token stream for the same
+seed, so prompts generated in Rust come from the model's training
+distribution.
+
+RNG: SplitMix64, chosen because it is trivially portable between Python
+and Rust (the Rust side uses the identical constants).
+"""
+
+from .config import GRAMMAR, GrammarConfig
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic, language-portable PRNG (same impl in rust/util/rng.rs)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Unbiased-enough modulo draw (documented bias < 2^-32 for n << 2^64)."""
+        return self.next_u64() % n
+
+    def unit(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+class TraceGen:
+    """Stateful generator of one reasoning trace.
+
+    A trace = BOS, n_defs definition blocks (``DEF slot value SEP``) and then
+    an unbounded body of blocks, each either
+      * a query block  ``QRY slot EQ value[slot] SEP``  (long-range lookup), or
+      * a redefinition ``DEF slot value' SEP``          (context *dynamics*), or
+      * a filler run   ``f, next(f), next(next(f)), ...`` (locally predictable).
+    """
+
+    def __init__(self, seed: int, g: GrammarConfig = GRAMMAR):
+        self.g = g
+        self.rng = SplitMix64(seed)
+        self.slots = {}
+        self.focus = None
+        self.buf = []
+        self._emit_header()
+
+    def _slot_tok(self, i: int) -> int:
+        return self.g.slot_base + i
+
+    def _val_tok(self, i: int) -> int:
+        return self.g.value_base + i
+
+    def _emit_header(self):
+        g = self.g
+        self.buf.append(g.bos)
+        for i in range(g.n_defs):
+            s = self.rng.below(g.n_slots)
+            v = self.rng.below(g.n_values)
+            self.slots[s] = v
+            self.buf += [g.def_tok, self._slot_tok(s), self._val_tok(v), g.sep]
+
+    def _pick_focus(self):
+        keys = sorted(self.slots.keys())
+        self.focus = keys[self.rng.below(len(keys))]
+
+    def _emit_block(self):
+        g = self.g
+        r = self.rng.unit()
+        if r < g.query_prob and self.slots:
+            if self.focus is None or self.focus not in self.slots:
+                self._pick_focus()
+            # queries dwell on the focus slot (temporal locality of the
+            # critical definition), occasionally probing another slot
+            if self.rng.unit() < g.focus_query_prob:
+                s = self.focus
+            else:
+                keys = sorted(self.slots.keys())
+                s = keys[self.rng.below(len(keys))]
+            self.buf += [g.qry, self._slot_tok(s), g.eq,
+                         self._val_tok(self.slots[s]), g.sep]
+            if self.rng.unit() < g.focus_switch_prob:
+                self._pick_focus()
+        elif r < g.query_prob + g.redefine_prob:
+            s = self.rng.below(g.n_slots)
+            v = self.rng.below(g.n_values)
+            self.slots[s] = v
+            self.buf += [g.def_tok, self._slot_tok(s), self._val_tok(v), g.sep]
+        else:
+            m = self.rng.below(g.n_modes)
+            f = g.filler_base + self.rng.below(g.n_filler)
+            run = 3 + self.rng.below(6)
+            self.buf.append(g.mode_base + m)
+            for j in range(run):
+                self.buf.append(f)
+                f = g.filler_next(f, m, j)
+
+    def take(self, n: int):
+        """Return the next n tokens of the trace."""
+        while len(self.buf) < n:
+            self._emit_block()
+        out, self.buf = self.buf[:n], self.buf[n:]
+        return out
+
+
+def training_batch(rng_seed: int, batch: int, seq: int):
+    """[batch, seq+1] token matrix; model trains on next-token prediction."""
+    import numpy as np
+
+    out = np.zeros((batch, seq + 1), dtype=np.int32)
+    for b in range(batch):
+        gen = TraceGen(seed=(rng_seed * 0x5851F42D + b * 0x14057B7E) & MASK64)
+        out[b] = np.array(gen.take(seq + 1), dtype=np.int32)
+    return out
+
+
+def prompt(seed: int, g: GrammarConfig = GRAMMAR):
+    """A serving prompt: the definition header plus a couple of body blocks.
+
+    Mirrors rust/src/workload/grammar.rs::prompt — pinned by golden tests.
+    """
+    gen = TraceGen(seed, g)
+    # header is 1 + 4*n_defs tokens; add a couple of blocks of context
+    n = 1 + 4 * g.n_defs
+    gen.take(0)
+    while len(gen.buf) < n + 8:
+        gen._emit_block()
+    return gen.take(min(len(gen.buf), 32))
+
+
+if __name__ == "__main__":
+    toks = TraceGen(7).take(64)
+    print(toks)

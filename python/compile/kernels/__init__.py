@@ -1,0 +1,31 @@
+"""Layer-1 kernels: Pallas implementations + pure-jnp oracles.
+
+`impl="ref"` (pure jnp) is what the CPU-serving artifacts lower through;
+`impl="pallas"` (interpret mode) is the TPU-shaped implementation whose
+numerics are pinned to the ref by pytest and which `aot.py` also lowers
+into a compose-proof artifact (see DESIGN.md §2).
+"""
+
+from . import ref
+from .pillar_attn import sparse_attn
+from .full_attn import full_attn
+from .fused_attn import fused_attn
+
+
+def sparse(q, k_cache, v_cache, idx, pos, impl="ref"):
+    if impl == "pallas":
+        return sparse_attn(q, k_cache, v_cache, idx, pos)
+    return ref.sparse_attn_ref(q, k_cache, v_cache, idx, pos)
+
+
+def full(q, k_cache, v_cache, pos, q_valid, impl="ref"):
+    """Returns (out, dump, lse)."""
+    if impl == "pallas":
+        return full_attn(q, k_cache, v_cache, pos, q_valid)
+    return ref.full_attn_ref(q, k_cache, v_cache, pos, q_valid)
+
+
+def fused(q, k_cache, v_cache, idx, pos, q_valid, kind, impl="ref"):
+    if impl == "pallas":
+        return fused_attn(q, k_cache, v_cache, idx, pos, q_valid, kind)
+    return ref.fused_attn_ref(q, k_cache, v_cache, idx, pos, q_valid, kind)

@@ -1,0 +1,123 @@
+"""Dense verification attention with score dumping, as a Pallas kernel.
+
+This is the verification-phase half of PillarAttn's *zero-overhead
+identification* (§4.1): the same kernel that verifies the k drafted tokens
+dumps, per cache position, the attention mass the drafted queries put on
+it.  The dump is the Top-K input for the next k draft steps — no extra
+memory pass over the KV-cache is ever made.
+
+Implementation is a two-pass flash-decoding scheme over KV tiles:
+  pass 1  online softmax statistics (running max m, denominator d) per
+          (query, head) — this is the LSE the paper caches;
+  pass 2  *rematerialises* probabilities tile-by-tile from the cached
+          logits/LSE (exactly the paper's "attention logits and logarithm
+          summation of exponential are cached ... used to rematerialize
+          attention scores"), accumulating the output PV product and the
+          per-position score dump.
+
+TPU mapping: grid=(S,), KV tiles of TILE=128 rows live in VMEM
+(128 x Hkv x D f32 = 32 KiB per tile), the MXU consumes the QK^T / PV
+einsums; pass 2's recompute trades FLOPs (cheap on MXU) for not keeping
+[Q, Hq, T] probabilities resident.  interpret=True for CPU execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+TILE = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qv_ref, o_ref, dump_ref, lse_ref, *, group):
+    q = q_ref[0]                        # [Q, Hq, D]
+    k = k_ref[0]                        # [T, Hkv, D]
+    v = v_ref[0]
+    pos = pos_ref[0]
+    q_valid = qv_ref[0]
+
+    Q, Hq, D = q.shape
+    T, Hkv, _ = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+    qpos = pos + jnp.arange(Q)                              # [Q]
+    n_tiles = T // TILE
+
+    def tile_logits(t0, kt):
+        """logits for one KV tile: [Q, Hq, TILE] (causal-masked)."""
+        kx = jnp.repeat(kt, group, axis=1)                  # [TILE, Hq, D]
+        lg = jnp.einsum("qhd,thd->qht", q, kx) * scale
+        tpos = t0 + jnp.arange(TILE)
+        mask = tpos[None, None, :] <= qpos[:, None, None]
+        return jnp.where(mask, lg, NEG_INF)
+
+    # ---- pass 1: online softmax statistics (flash) --------------------
+    m = jnp.full((Q, Hq), NEG_INF, dtype=q.dtype)
+    d = jnp.zeros((Q, Hq), dtype=q.dtype)
+    for i in range(n_tiles):
+        lg = tile_logits(i * TILE, k[i * TILE : (i + 1) * TILE])
+        mt = jnp.max(lg, axis=-1)
+        m_new = jnp.maximum(m, mt)
+        d = d * jnp.exp(m - m_new) + jnp.sum(jnp.exp(lg - m_new[..., None]), axis=-1)
+        m = m_new
+    d = jnp.maximum(d, 1e-30)
+    lse_ref[0] = m + jnp.log(d)                             # [Q, Hq]
+
+    # ---- pass 2: rematerialise probs, accumulate out + dump -----------
+    valid_q = (jnp.arange(Q) < q_valid).astype(q.dtype)     # [Q]
+    nq = jnp.maximum(q_valid.astype(q.dtype), 1.0)
+    acc = jnp.zeros((Q, Hq, D), dtype=q.dtype)
+    for i in range(n_tiles):
+        kt = k[i * TILE : (i + 1) * TILE]
+        vt = jnp.repeat(v[i * TILE : (i + 1) * TILE], group, axis=1)
+        lg = tile_logits(i * TILE, kt)
+        p = jnp.exp(lg - m[..., None]) / d[..., None]       # [Q, Hq, TILE]
+        acc = acc + jnp.einsum("qht,thd->qhd", p, vt)
+        pq = p * valid_q[:, None, None]
+        dump_t = pq.reshape(Q, Hkv, group, TILE).sum(axis=(0, 2)) / (nq * group)
+        dump_ref[0, :, i * TILE : (i + 1) * TILE] = dump_t
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def full_attn(q, k_cache, v_cache, pos, q_valid, interpret=True):
+    """Pallas verification attention. Contract == ref.full_attn_ref."""
+    S, Q, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    group = Hq // Hkv
+    assert T % TILE == 0, "max_seq must be a multiple of the KV tile"
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, T), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, Q, Hq), lambda s: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Q, Hq, D), q.dtype),
+            jax.ShapeDtypeStruct((S, Hkv, T), q.dtype),
+            jax.ShapeDtypeStruct((S, Q, Hq), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos, q_valid)
+
+
+def vmem_bytes(Q, Hq, Hkv, D, T, dtype_bytes=4):
+    """VMEM working set per grid step (tile-resident variant; full cache
+    streams through TILE-row windows)."""
+    q = Q * Hq * D
+    kv_tile = 2 * TILE * Hkv * D
+    logits = Q * Hq * TILE
+    acc = Q * Hq * D + Q * Hq * 2      # out + (m, d)
+    dump_tile = Hkv * TILE
+    return (q + kv_tile + logits + acc + dump_tile) * dtype_bytes

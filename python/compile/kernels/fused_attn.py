@@ -1,0 +1,113 @@
+"""Fused sparse+full attention kernel (§4.2 "Fused sparse and full attention").
+
+The paper's persistent CUDA kernel keeps one kernel resident and
+dispatches each batch row to the template (tile shape / MMA config) best
+suited to its phase — draft rows to the sparse gather template, verify
+rows to the dense streaming template — recovering the bandwidth that a
+one-size-fits-all launch ("Naive Batch") or two back-to-back launches
+("Sequential") lose.
+
+Pallas analogue: a single `pallas_call` whose grid walks a *worklist* of
+rows; the per-row `kind` flag selects the code path inside the kernel.
+Under interpret=True both paths are traced (XLA has no divergent branches)
+so CPU wallclock does not show the win — the Fig. 15 comparison therefore
+combines (a) this kernel for numerics, and (b) the launch/bytes cost model
+in rust/src/perfmodel calibrated with the measured per-shape kernels
+(python/compile/bench_kernels.py).  On a real TPU the dispatch is a
+`lax.cond` over scalar-prefetched kind with genuinely different DMA
+schedules per branch.
+
+Contract == ref.fused_attn_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _kernel(q_ref, k_ref, v_ref, idx_ref, pos_ref, qv_ref, kind_ref,
+            o_ref, dump_ref, *, group):
+    q = q_ref[0]                      # [Q, Hq, D]
+    k = k_ref[0]                      # [T, Hkv, D]
+    v = v_ref[0]
+    idx = idx_ref[0]                  # [Hkv, W]
+    pos = pos_ref[0]
+    q_valid = qv_ref[0]
+    kind = kind_ref[0]
+
+    Q, Hq, D = q.shape
+    T, Hkv, _ = k.shape
+    W = idx.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+    qpos = pos + jnp.arange(Q)
+
+    # --- sparse path (draft template) ----------------------------------
+    safe = jnp.clip(idx, 0, T - 1)
+    kg = jnp.take(k, safe.reshape(-1), axis=0).reshape(Hkv, W, Hkv, D)
+    kg = kg[jnp.arange(Hkv), :, jnp.arange(Hkv)]
+    vg = jnp.take(v, safe.reshape(-1), axis=0).reshape(Hkv, W, Hkv, D)
+    vg = vg[jnp.arange(Hkv), :, jnp.arange(Hkv)]
+    qh = q.reshape(Q, Hkv, group, D)
+    lg_s = jnp.einsum("qhgd,hwd->qhgw", qh, kg) * scale
+    vis = (idx[None, :, None, :] >= 0) & (
+        idx[None, :, None, :] <= qpos[:, None, None, None]
+    )
+    lg_s = jnp.where(vis, lg_s, NEG_INF)
+    e = jnp.exp(lg_s - jnp.max(lg_s, axis=-1, keepdims=True))
+    p_s = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out_s = jnp.einsum("qhgw,hwd->qhgd", p_s, vg).reshape(Q, Hq, D)
+
+    # --- dense path (verify template) -----------------------------------
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    lg_d = jnp.einsum("qhd,thd->qht", q, kx) * scale
+    mask = jnp.arange(T)[None, None, :] <= qpos[:, None, None]
+    lg_d = jnp.where(mask, lg_d, NEG_INF)
+    m = jnp.max(lg_d, axis=-1, keepdims=True)
+    ed = jnp.exp(lg_d - m)
+    dd = jnp.maximum(jnp.sum(ed, axis=-1, keepdims=True), 1e-30)
+    p_d = ed / dd
+    out_d = jnp.einsum("qht,thd->qhd", p_d, vx)
+
+    valid_q = (jnp.arange(Q) < q_valid).astype(q.dtype)
+    nq = jnp.maximum(q_valid.astype(q.dtype), 1.0)
+    pq = p_d * valid_q[:, None, None]
+    dump = pq.reshape(Q, Hkv, group, T).sum(axis=(0, 2)) / (nq * group)
+
+    kf = kind.astype(q.dtype)
+    o_ref[0] = out_s * (1.0 - kf) + out_d * kf
+    dump_ref[0] = dump * kf
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_attn(q, k_cache, v_cache, idx, pos, q_valid, kind, interpret=True):
+    S, Q, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    W = idx.shape[-1]
+    group = Hq // Hkv
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, W), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, T), lambda s: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Q, Hq, D), q.dtype),
+            jax.ShapeDtypeStruct((S, Hkv, T), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, idx, pos, q_valid, kind)

@@ -1,0 +1,100 @@
+"""PillarAttn sparse draft attention as a Pallas kernel.
+
+Hardware-adaptation notes (DESIGN.md §2).  The paper implements this as a
+CUDA gather kernel over page-size-1 PagedAttention (threadblock per
+(request, kv-head), selected pages staged HBM->SMEM).  The TPU/Pallas
+mapping used here:
+
+  * grid = (S,)  — one program per request row; within a row, the W
+    selected tokens form a single VMEM tile (W <= 256, so the K/V gather
+    tile is W x D = at most 256x32 f32 = 32 KiB per head: trivially
+    VMEM-resident; the HBM->VMEM schedule is the BlockSpec).
+  * On a real TPU the gather would be expressed with
+    `pltpu.PrefetchScalarGridSpec`: the idx table is scalar-prefetched and
+    drives the K/V BlockSpec index_map, so only the selected rows are DMAd
+    (the SMEM-staging analogue).  Under interpret=True (mandatory on CPU —
+    Mosaic custom-calls cannot execute on the CPU PJRT plugin) dynamic
+    index_maps execute as gathers; we keep the gather inside the kernel
+    body (`jnp.take`) which is numerically identical.
+  * QK^T and PV products are `jnp.einsum` so the TPU lowering targets the
+    MXU; head_dim 32 / W multiples of 8 keep tiles MXU-shaped.
+
+Correctness oracle: kernels.ref.sparse_attn_ref (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _kernel(q_ref, k_ref, v_ref, idx_ref, pos_ref, o_ref, *, group):
+    """One request row: q [1,Q,Hq,D], caches [1,T,Hkv,D], idx [1,Hkv,W]."""
+    q = q_ref[0]                       # [Q, Hq, D]
+    k = k_ref[0]                       # [T, Hkv, D]
+    v = v_ref[0]
+    idx = idx_ref[0]                   # [Hkv, W]
+    pos = pos_ref[0]
+
+    Q, Hq, D = q.shape
+    T = k.shape[0]
+    Hkv, W = idx.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+
+    safe = jnp.clip(idx, 0, T - 1)
+    # Gather the W selected tokens per kv head: [Hkv, W, D].
+    kg = jnp.take(k, safe.reshape(-1), axis=0).reshape(Hkv, W, Hkv, D)
+    kg = kg[jnp.arange(Hkv), :, jnp.arange(Hkv)]            # [Hkv, W, D]
+    vg = jnp.take(v, safe.reshape(-1), axis=0).reshape(Hkv, W, Hkv, D)
+    vg = vg[jnp.arange(Hkv), :, jnp.arange(Hkv)]
+
+    qh = q.reshape(Q, Hkv, group, D)
+    logits = jnp.einsum("qhgd,hwd->qhgw", qh, kg) * scale    # [Q,Hkv,G,W]
+
+    qpos = pos + jnp.arange(Q)
+    vis = (idx[None, :, None, :] >= 0) & (
+        idx[None, :, None, :] <= qpos[:, None, None, None]
+    )
+    logits = jnp.where(vis, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("qhgw,hwd->qhgd", p, vg)                # [Q,Hkv,G,D]
+    o_ref[0] = out.reshape(Q, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_attn(q, k_cache, v_cache, idx, pos, interpret=True):
+    """Pallas PillarAttn. Same contract as ref.sparse_attn_ref."""
+    S, Q, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    W = idx.shape[-1]
+    group = Hq // Hkv
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, T, Hkv, D), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, W), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, Hq, D), lambda s: (s, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, Q, Hq, D), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, idx, pos)
+
+
+def vmem_bytes(Q, Hq, Hkv, D, W, T, dtype_bytes=4):
+    """Estimated VMEM working set per grid step (real-TPU scalar-prefetch
+    variant: only the gathered K/V tiles are resident, never the full cache).
+    Used by the §Perf roofline estimate in EXPERIMENTS.md."""
+    q = Q * Hq * D
+    kv = 2 * Hkv * W * D
+    logits = Q * Hq * W
+    out = Q * Hq * D
+    return (q + kv + logits + out) * dtype_bytes

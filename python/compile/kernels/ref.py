@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth for the Pallas kernels (pytest
+compares kernel vs ref under hypothesis-driven shape/dtype sweeps) and the
+implementation that the *CPU-serving* artifacts lower through (see
+DESIGN.md §2: CPU PJRT cannot execute Mosaic custom-calls and interpret
+mode is a correctness vehicle, so `aot.py` emits both a ref-path artifact
+for serving and a pallas-path artifact as the compose proof).
+
+Shape glossary (matches rust/src/model/config.rs):
+  S  slots (batch)        T  max_seq (KV positions per slot)
+  Q  query tokens/step    W  sparse attention budget per (layer, kv-head)
+  Hq q heads   Hkv kv heads   G = Hq/Hkv group   D head_dim
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_gqa(x, group):
+    """[S, T, Hkv, D] -> [S, T, Hkv*G, D] by repeating each kv head G times."""
+    return jnp.repeat(x, group, axis=2)
+
+
+def sparse_attn_ref(q, k_cache, v_cache, idx, pos):
+    """PillarAttn draft attention (gather form, page size 1).
+
+    Args:
+      q:        [S, Q, Hq, D] query vectors (RoPE already applied)
+      k_cache:  [S, T, Hkv, D] post-RoPE keys (current tokens already written)
+      v_cache:  [S, T, Hkv, D]
+      idx:      [S, Hkv, W] int32 token indices to attend; -1 = hole
+      pos:      [S] int32 position of query 0 (query qi sits at pos+qi)
+
+    Returns:
+      out: [S, Q, Hq, D]
+
+    Causality: entry w is visible to query qi iff 0 <= idx <= pos+qi.
+    The Rust coordinator guarantees the current positions pos..pos+qi are
+    members of idx (they are part of the recent window), so the token can
+    attend itself.
+    """
+    S, Q, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+
+    safe = jnp.clip(idx, 0, T - 1)                                   # [S,Hkv,W]
+    s_ix = jnp.arange(S)[:, None, None]
+    kg = k_cache[s_ix, safe, jnp.arange(Hkv)[None, :, None]]          # [S,Hkv,W,D]
+    vg = v_cache[s_ix, safe, jnp.arange(Hkv)[None, :, None]]
+
+    # queries grouped by kv head: [S, Q, Hkv, G, D]
+    qh = q.reshape(S, Q, Hkv, G, D)
+    logits = jnp.einsum("sqhgd,shwd->sqhgw", qh, kg) * scale          # [S,Q,Hkv,G,W]
+
+    qpos = pos[:, None] + jnp.arange(Q)[None, :]                      # [S,Q]
+    visible = (idx[:, None, :, None, :] >= 0) & (
+        idx[:, None, :, None, :] <= qpos[:, :, None, None, None]
+    )
+    logits = jnp.where(visible, logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("sqhgw,shwd->sqhgd", p, vg)
+    return out.reshape(S, Q, Hq, D)
+
+
+def full_attn_ref(q, k_cache, v_cache, pos, q_valid):
+    """Dense verification attention with zero-overhead score dumping.
+
+    Args:
+      q:        [S, Q, Hq, D]
+      k_cache:  [S, T, Hkv, D] (verify tokens already written at pos..pos+Q-1)
+      v_cache:  [S, T, Hkv, D]
+      pos:      [S] position of query 0
+      q_valid:  [S] number of valid query rows (invalid rows are padding)
+
+    Returns:
+      out:   [S, Q, Hq, D]
+      dump:  [S, Hkv, T] attention mass per cache position, averaged over the
+             valid queries and the G query heads of the group — exactly the
+             statistic PillarAttn's Top-K identification consumes (§4.1).
+      lse:   [S, Q, Hq] log-sum-exp of the logits (the paper caches logits +
+             LSE and rematerialises probabilities; we expose LSE so tests can
+             check the rematerialisation identity).
+    """
+    S, Q, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+
+    kx = _expand_gqa(k_cache, G)                                      # [S,T,Hq,D]
+    vx = _expand_gqa(v_cache, G)
+    logits = jnp.einsum("sqhd,sthd->sqht", q, kx) * scale             # [S,Q,Hq,T]
+
+    qpos = pos[:, None] + jnp.arange(Q)[None, :]                      # [S,Q]
+    tpos = jnp.arange(T)[None, None, None, :]
+    causal = tpos <= qpos[:, :, None, None]
+    logits = jnp.where(causal, logits, NEG_INF)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    p = e / denom                                                     # [S,Q,Hq,T]
+    out = jnp.einsum("sqht,sthd->sqhd", p, vx)
+    lse = (m + jnp.log(denom))[..., 0]                                # [S,Q,Hq]
+
+    # --- score dump: mean prob over valid queries and group heads -------
+    valid_q = (jnp.arange(Q)[None, :] < q_valid[:, None]).astype(q.dtype)
+    pq = p * valid_q[:, :, None, None]
+    nq = jnp.maximum(q_valid.astype(q.dtype), 1.0)[:, None, None]
+    dump = pq.reshape(S, Q, Hkv, G, T).sum(axis=(1, 3)) / (nq * G)    # [S,Hkv,T]
+    return out, dump, lse
+
+
+def fused_attn_ref(q, k_cache, v_cache, idx, pos, q_valid, kind):
+    """Unified draft+verify batch (Fig. 15 'fused' semantics, reference).
+
+    kind[s] == 0: draft row — sparse attention over idx.
+    kind[s] == 1: verify row — dense attention, plus score dump.
+    Rows keep one output shape; draft rows produce a zero dump.
+    """
+    out_s = sparse_attn_ref(q, k_cache, v_cache, idx, pos)
+    out_d, dump, _ = full_attn_ref(q, k_cache, v_cache, pos, q_valid)
+    kindf = kind.astype(q.dtype)[:, None, None, None]
+    out = out_s * (1.0 - kindf) + out_d * kindf
+    dump = dump * kind.astype(q.dtype)[:, None, None]
+    return out, dump
+
+
+def topk_ids_ref(dump, length, budget, recent, sinks):
+    """Critical-token identification (reference for the Rust implementation).
+
+    Given a score dump [Hkv, T] for one request of current length `length`,
+    return per-kv-head index sets of size `budget`:
+      sinks      first `sinks` positions (attention sinks),
+      recents    last `recent` positions,
+      top-k      highest-dump positions among the rest.
+    Padding entries are -1, indices ascending.  Mirrors rust/src/spec/pillar.rs.
+    """
+    import numpy as np
+
+    dump = np.asarray(dump)
+    Hkv, T = dump.shape
+    out = np.full((Hkv, budget), -1, dtype=np.int32)
+    for h in range(Hkv):
+        fixed = list(range(min(sinks, length)))
+        lo = max(length - recent, 0)
+        fixed += [t for t in range(lo, length) if t not in fixed]
+        fixed = fixed[:budget]
+        rest = budget - len(fixed)
+        if rest > 0:
+            cand = [t for t in range(length) if t not in set(fixed)]
+            cand.sort(key=lambda t: (-dump[h, t], t))
+            fixed += cand[:rest]
+        fixed.sort()
+        out[h, : len(fixed)] = np.array(fixed, dtype=np.int32)
+    return out

@@ -1,0 +1,354 @@
+"""Layer-2: the Qwen3-shaped JAX model, calling the Layer-1 kernels.
+
+Everything here is *build-time* Python.  `aot.py` lowers the step
+functions below to HLO text once; the Rust coordinator then executes them
+via PJRT with device-resident weights and KV buffers.  Python is never on
+the request path.
+
+Step-function contracts (argument order is the PJRT calling convention —
+rust/src/runtime/artifacts.rs must match exactly):
+
+  prefill(params, kv_k, kv_v, tokens[S,P], plen[S], active[S])
+      -> (logits[S,V], kv_k', kv_v')
+  draft(params, kv_k, kv_v, token[S], pos[S], idx[S,L,Hkv,W], active[S])
+      -> (logits[S,V], kv_k', kv_v')
+  verify(params, kv_k, kv_v, tokens[S,Q], pos[S], q_valid[S], active[S])
+      -> (logits[S,Q,V], kv_k', kv_v', dump[S,L,Hkv,T])
+  sparse_verify(params, kv_k, kv_v, tokens[S,Q], pos[S], q_valid[S],
+                idx[S,L,Hkv,W], active[S])
+      -> (logits[S,Q,V], kv_k', kv_v')            # TriForce middle layer
+  kv_load(kv_k, kv_v, slot[1], rows_k[L,T,Hkv,D], rows_v[L,T,Hkv,D])
+      -> (kv_k', kv_v')                           # host->device KV onload
+  eagle(eparams, ctx[S,ECTX]) -> logits[S,V]      # EAGLE-like draft head
+
+KV layout: kv_k/kv_v are f32[L, S, T, Hkv, D] — one device-resident pool
+for all slots; the batch dimension IS the slot dimension (continuous
+batching over fixed slots).  Inactive slots are masked via `active`.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .config import MODEL, EAGLE
+
+
+# --------------------------------------------------------------------------
+# Parameter manifest: a single flat f32 vector (one device buffer in Rust).
+# --------------------------------------------------------------------------
+
+def param_shapes(cfg=MODEL):
+    """Ordered (name, shape) list — the weights.bin layout contract."""
+    shapes = [("embed", (cfg.vocab, cfg.hidden))]
+    for l in range(cfg.layers):
+        shapes += [
+            (f"l{l}.ln1", (cfg.hidden,)),
+            (f"l{l}.wq", (cfg.hidden, cfg.q_dim)),
+            (f"l{l}.wk", (cfg.hidden, cfg.kv_dim)),
+            (f"l{l}.wv", (cfg.hidden, cfg.kv_dim)),
+            (f"l{l}.wo", (cfg.q_dim, cfg.hidden)),
+            (f"l{l}.ln2", (cfg.hidden,)),
+            (f"l{l}.wg", (cfg.hidden, cfg.ffn)),
+            (f"l{l}.wu", (cfg.hidden, cfg.ffn)),
+            (f"l{l}.wd", (cfg.ffn, cfg.hidden)),
+        ]
+    shapes.append(("ln_f", (cfg.hidden,)))
+    return shapes
+
+
+def n_params(cfg=MODEL):
+    return sum(math.prod(s) for _, s in param_shapes(cfg))
+
+
+def unpack(params, cfg=MODEL):
+    """Flat f32[NP] -> dict of named arrays (static slicing; XLA folds it)."""
+    out, off = {}, 0
+    for name, shape in param_shapes(cfg):
+        n = math.prod(shape)
+        out[name] = params[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(key, cfg=MODEL):
+    """He-style init, returned as the flat vector."""
+    parts = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name == "embed" else 1.0 / math.sqrt(fan_in)
+            parts.append((jax.random.normal(sub, shape) * std).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=MODEL.rms_eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta=MODEL.rope_theta):
+    """Rotary embedding. x: [..., P, H, D]; positions broadcastable [..., P]."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv        # [..., P, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+def _write_kv(cache, slot_rows, positions, active):
+    """Scatter new KV rows into the per-layer cache.
+
+    cache: [S, T, Hkv, D]; slot_rows: [S, Q, Hkv, D]; positions: [S, Q].
+    Inactive slots / out-of-range positions are dropped (mode='drop').
+    """
+    S, Q = positions.shape
+    T = cache.shape[1]
+    pos_safe = jnp.where(active[:, None] > 0, positions, T)   # T => dropped
+    s_ix = jnp.broadcast_to(jnp.arange(S)[:, None], (S, Q))
+    return cache.at[s_ix, pos_safe].set(slot_rows, mode="drop")
+
+
+def _mlp(pt, l, x):
+    g = jax.nn.silu(x @ pt[f"l{l}.wg"])
+    u = x @ pt[f"l{l}.wu"]
+    return (g * u) @ pt[f"l{l}.wd"]
+
+
+def _qkv(pt, l, x, positions, cfg):
+    """x: [S, Q, H] -> q [S,Q,Hq,D] (roped), k/v [S,Q,Hkv,D] (k roped)."""
+    S, Q, _ = x.shape
+    q = (x @ pt[f"l{l}.wq"]).reshape(S, Q, cfg.q_heads, cfg.head_dim)
+    k = (x @ pt[f"l{l}.wk"]).reshape(S, Q, cfg.kv_heads, cfg.head_dim)
+    v = (x @ pt[f"l{l}.wv"]).reshape(S, Q, cfg.kv_heads, cfg.head_dim)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    return q, k, v
+
+
+def _logits(pt, x):
+    return rmsnorm(x, pt["ln_f"]) @ pt["embed"].T
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+def _decode_core(pt, kv_k, kv_v, tokens, pos, active, attend, cfg, impl):
+    """Shared trunk: embed -> L x (attn via `attend` + MLP) -> hidden.
+
+    tokens: [S, Q]; pos: [S]; attend(l, q, kc, vc, positions) -> (out, extra).
+    Returns (hidden [S,Q,H], kv_k', kv_v', extras list per layer).
+    """
+    S, Q = tokens.shape
+    x = pt["embed"][tokens]                                    # [S, Q, H]
+    positions = pos[:, None] + jnp.arange(Q)[None, :]          # [S, Q]
+    extras = []
+    for l in range(cfg.layers):
+        h = rmsnorm(x, pt[f"l{l}.ln1"])
+        q, k, v = _qkv(pt, l, h, positions, cfg)
+        kc = _write_kv(kv_k[l], k, positions, active)
+        vc = _write_kv(kv_v[l], v, positions, active)
+        kv_k = kv_k.at[l].set(kc)
+        kv_v = kv_v.at[l].set(vc)
+        attn_out, extra = attend(l, q, kc, vc)
+        extras.append(extra)
+        x = x + attn_out.reshape(S, Q, cfg.q_dim) @ pt[f"l{l}.wo"]
+        x = x + _mlp(pt, l, rmsnorm(x, pt[f"l{l}.ln2"]))
+    return x, kv_k, kv_v, extras
+
+
+def make_prefill(cfg=MODEL, impl="ref"):
+    def prefill(params, kv_k, kv_v, tokens, plen, active):
+        pt = unpack(params, cfg)
+        S, P = tokens.shape
+        pos0 = jnp.zeros((S,), jnp.int32)
+
+        def attend(l, q, kc, vc):
+            out, _, _ = kernels.full(q, kc, vc, pos0, plen, impl=impl)
+            return out, None
+
+        x, kv_k, kv_v, _ = _decode_core(
+            pt, kv_k, kv_v, tokens, pos0, active, attend, cfg, impl
+        )
+        # logits at the last valid prompt position per slot
+        last = jnp.clip(plen - 1, 0, P - 1)
+        xl = x[jnp.arange(S), last]                            # [S, H]
+        return _logits(pt, xl), kv_k, kv_v
+
+    return prefill
+
+
+def make_draft(cfg=MODEL, impl="ref"):
+    def draft(params, kv_k, kv_v, token, pos, idx, active):
+        pt = unpack(params, cfg)
+        tokens = token[:, None]                                # [S, 1]
+
+        def attend(l, q, kc, vc):
+            return kernels.sparse(q, kc, vc, idx[:, l], pos, impl=impl), None
+
+        x, kv_k, kv_v, _ = _decode_core(
+            pt, kv_k, kv_v, tokens, pos, active, attend, cfg, impl
+        )
+        return _logits(pt, x[:, 0]), kv_k, kv_v
+
+    return draft
+
+
+def make_verify(cfg=MODEL, impl="ref"):
+    def verify(params, kv_k, kv_v, tokens, pos, q_valid, active):
+        pt = unpack(params, cfg)
+
+        def attend(l, q, kc, vc):
+            out, dump, _ = kernels.full(q, kc, vc, pos, q_valid, impl=impl)
+            return out, dump
+
+        x, kv_k, kv_v, dumps = _decode_core(
+            pt, kv_k, kv_v, tokens, pos, active, attend, cfg, impl
+        )
+        dump = jnp.stack(dumps, axis=1)                        # [S, L, Hkv, T]
+        return _logits(pt, x), kv_k, kv_v, dump
+
+    return verify
+
+
+def make_sparse_verify(cfg=MODEL, impl="ref"):
+    """TriForce middle layer: verify candidate tokens *under the sparse
+    (window) draft model* — multi-query sparse attention, no dump."""
+
+    def sparse_verify(params, kv_k, kv_v, tokens, pos, q_valid, idx, active):
+        pt = unpack(params, cfg)
+
+        def attend(l, q, kc, vc):
+            return kernels.sparse(q, kc, vc, idx[:, l], pos, impl=impl), None
+
+        x, kv_k, kv_v, _ = _decode_core(
+            pt, kv_k, kv_v, tokens, pos, active, attend, cfg, impl
+        )
+        return _logits(pt, x), kv_k, kv_v
+
+    return sparse_verify
+
+
+def make_kv_load(cfg=MODEL):
+    def kv_load(kv_k, kv_v, slot, rows_k, rows_v):
+        s = slot[0]
+        kv_k = jax.lax.dynamic_update_slice(
+            kv_k, rows_k[:, None], (0, s, 0, 0, 0)
+        )
+        kv_v = jax.lax.dynamic_update_slice(
+            kv_v, rows_v[:, None], (0, s, 0, 0, 0)
+        )
+        return kv_k, kv_v
+
+    return kv_load
+
+
+# --------------------------------------------------------------------------
+# EAGLE-like draft head (Fig. 11 baseline)
+# --------------------------------------------------------------------------
+
+def eagle_param_shapes(cfg=MODEL, e=EAGLE):
+    return [
+        ("emb", (cfg.vocab, e.embed)),
+        ("w1", (e.ctx * e.embed, e.hidden)),
+        ("b1", (e.hidden,)),
+        ("w2", (e.hidden, e.hidden)),
+        ("b2", (e.hidden,)),
+        ("w3", (e.hidden, cfg.vocab)),
+    ]
+
+
+def eagle_n_params(cfg=MODEL, e=EAGLE):
+    return sum(math.prod(s) for _, s in eagle_param_shapes(cfg, e))
+
+
+def eagle_unpack(params, cfg=MODEL, e=EAGLE):
+    out, off = {}, 0
+    for name, shape in eagle_param_shapes(cfg, e):
+        n = math.prod(shape)
+        out[name] = params[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def eagle_init(key, cfg=MODEL, e=EAGLE):
+    parts = []
+    for name, shape in eagle_param_shapes(cfg, e):
+        key, sub = jax.random.split(key)
+        if name.startswith("b"):
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 0.02 if name == "emb" else 1.0 / math.sqrt(shape[0])
+            parts.append((jax.random.normal(sub, shape) * std).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def make_eagle(cfg=MODEL, e=EAGLE):
+    def eagle(eparams, ctx):
+        pt = eagle_unpack(eparams, cfg, e)
+        S = ctx.shape[0]
+        x = pt["emb"][ctx].reshape(S, e.ctx * e.embed)
+        h = jax.nn.relu(x @ pt["w1"] + pt["b1"])
+        h = jax.nn.relu(h @ pt["w2"] + pt["b2"])
+        return h @ pt["w3"]
+
+    return eagle
+
+
+# --------------------------------------------------------------------------
+# Training-time full forward (teacher forcing) — used only by train.py
+# --------------------------------------------------------------------------
+
+def make_train_forward(cfg=MODEL, with_attn_entropy=False):
+    """Causal LM forward over [B, Lseq] without KV caches (dense training).
+
+    When `with_attn_entropy` is set, also returns the mean attention
+    entropy across layers/heads/queries.  Training penalises it lightly:
+    large reasoning models concentrate attention mass on few tokens (the
+    empirical basis of the paper's §3.2 sparsity claim); a ~0.7M-param
+    model needs an explicit nudge to land in the same regime (DESIGN.md §1
+    scale substitution).  Without it an occasional run learns a diffuse
+    "averaging" layer whose output no small token budget can reproduce.
+    """
+
+    def fwd(params, tokens):
+        pt = unpack(params, cfg)
+        B, L = tokens.shape
+        x = pt["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+        mask = jnp.tril(jnp.ones((L, L), jnp.float32))
+        neg = jnp.array(-1e30, jnp.float32)
+        ent_sum = 0.0
+        for l in range(cfg.layers):
+            h = rmsnorm(x, pt[f"l{l}.ln1"])
+            q, k, v = _qkv(pt, l, h, positions, cfg)
+            kx = jnp.repeat(k, cfg.group, axis=2)
+            vx = jnp.repeat(v, cfg.group, axis=2)
+            lg = jnp.einsum("bqhd,bthd->bhqt", q, kx) / math.sqrt(cfg.head_dim)
+            lg = jnp.where(mask[None, None] > 0, lg, neg)
+            p = jax.nn.softmax(lg, axis=-1)
+            if with_attn_entropy:
+                ent = -jnp.sum(p * jnp.log(p + 1e-30), axis=-1)  # [B,H,Q]
+                ent_sum = ent_sum + jnp.mean(ent)
+            o = jnp.einsum("bhqt,bthd->bqhd", p, vx).reshape(B, L, cfg.q_dim)
+            x = x + o @ pt[f"l{l}.wo"]
+            x = x + _mlp(pt, l, rmsnorm(x, pt[f"l{l}.ln2"]))
+        logits = _logits(pt, x)
+        if with_attn_entropy:
+            return logits, ent_sum / cfg.layers
+        return logits
+
+    return fwd

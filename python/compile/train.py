@@ -1,0 +1,123 @@
+"""Build-time miniature training.
+
+Why this exists (DESIGN.md §1): self-speculation acceptance measures the
+agreement between sparse- and full-attention forward passes of the *same*
+weights.  A randomly-initialised model has near-uniform attention, which is
+not the regime the paper exploits; a model trained on the pointer-chasing
+corpus concentrates attention on definition tokens (the "pillars"),
+reproducing the concentrated-attention / peaked-logits regime of real
+reasoning models.  Training runs once inside `make artifacts`, on CPU, in
+a couple of minutes; the request path never sees Python.
+
+Also distils the EAGLE-like draft head (Fig. 11 baseline).  Per the paper's
+observation that EAGLE3's training distribution is OOD for reasoning
+workloads, the head is trained on *filler-only* traces (no query blocks):
+it learns the locally-predictable chains but misses the long-range lookups
+— the same qualitative gap the paper reports.
+
+Optimiser: hand-rolled Adam (optax is not available in this environment).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+from .config import MODEL, EAGLE, GRAMMAR, TRAIN, GrammarConfig
+
+
+def _adam_update(p, g, m, v, step, lr, cfg=TRAIN):
+    m = cfg.adam_b1 * m + (1 - cfg.adam_b1) * g
+    v = cfg.adam_b2 * v + (1 - cfg.adam_b2) * g * g
+    mh = m / (1 - cfg.adam_b1 ** step)
+    vh = v / (1 - cfg.adam_b2 ** step)
+    return p - lr * mh / (jnp.sqrt(vh) + cfg.adam_eps), m, v
+
+
+def _lr(step, cfg=TRAIN):
+    warm = jnp.minimum(step / cfg.warmup, 1.0)
+    decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / cfg.steps, 1.0)))
+    return cfg.lr * warm * (0.1 + 0.9 * decay)
+
+
+def _ce_loss(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def train_model(log=print):
+    """Train the target model; returns (params, [(step, loss, acc)])."""
+    fwd = model.make_train_forward(MODEL)
+    fwd_ent = model.make_train_forward(MODEL, with_attn_entropy=True)
+
+    def loss_fn(params, tokens):
+        logits, ent = fwd_ent(params, tokens[:, :-1])
+        # Attention-concentration pressure (see make_train_forward doc).
+        return _ce_loss(logits, tokens[:, 1:]) + TRAIN.attn_entropy_lambda * ent
+
+    @jax.jit
+    def train_step(params, m, v, tokens, step):
+        loss, g = jax.value_and_grad(loss_fn)(params, tokens)
+        params, m, v = _adam_update(params, g, m, v, step, _lr(step))
+        return params, m, v, loss
+
+    @jax.jit
+    def acc_fn(params, tokens):
+        logits = fwd(params, tokens[:, :-1])
+        return jnp.mean(jnp.argmax(logits, -1) == tokens[:, 1:])
+
+    params = model.init_params(jax.random.PRNGKey(TRAIN.seed))
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    curve = []
+    t0 = time.time()
+    for step in range(1, TRAIN.steps + 1):
+        batch = jnp.asarray(
+            data.training_batch(TRAIN.seed + step, TRAIN.batch, TRAIN.seq)
+        )
+        params, m, v, loss = train_step(params, m, v, batch, step)
+        if step % 25 == 0 or step == 1:
+            acc = float(acc_fn(params, batch))
+            curve.append((step, float(loss), acc))
+            log(f"[train] step {step:4d} loss {float(loss):.4f} "
+                f"acc {acc:.3f} ({time.time()-t0:.0f}s)")
+    return params, curve
+
+
+def _filler_only_grammar():
+    """EAGLE training distribution: body is filler chains only (OOD for the
+    query-heavy serving workload)."""
+    return GrammarConfig(query_prob=0.0, redefine_prob=0.02)
+
+
+def train_eagle(target_params, log=print):
+    """Distil the draft head on filler-only traces against the corpus."""
+    e_fwd = model.make_eagle(MODEL, EAGLE)
+
+    def loss_fn(ep, ctx, tgt):
+        return _ce_loss(e_fwd(ep, ctx), tgt)
+
+    @jax.jit
+    def train_step(ep, m, v, ctx, tgt, step):
+        loss, g = jax.value_and_grad(loss_fn)(ep, ctx, tgt)
+        ep, m, v = _adam_update(ep, g, m, v, step, TRAIN.eagle_lr)
+        return ep, m, v, loss
+
+    g = _filler_only_grammar()
+    ep = model.eagle_init(jax.random.PRNGKey(TRAIN.seed + 777))
+    m = jnp.zeros_like(ep)
+    v = jnp.zeros_like(ep)
+    ectx = EAGLE.ctx
+    for step in range(1, TRAIN.eagle_steps + 1):
+        gen = data.TraceGen(seed=TRAIN.seed * 31 + step, g=g)
+        seq = np.array(gen.take(TRAIN.eagle_batch + ectx), dtype=np.int32)
+        ctx = np.stack([seq[i : i + ectx] for i in range(TRAIN.eagle_batch)])
+        tgt = seq[ectx : ectx + TRAIN.eagle_batch]
+        ep, m, v, loss = train_step(ep, m, v, jnp.asarray(ctx),
+                                    jnp.asarray(tgt), step)
+        if step % 50 == 0:
+            log(f"[eagle] step {step:4d} loss {float(loss):.4f}")
+    return ep

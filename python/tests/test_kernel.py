@@ -1,0 +1,159 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE L1 correctness
+# signal.  Hypothesis sweeps shapes (and the f32/bf16 dtypes the serving
+# stack uses); every kernel must match its ref to float tolerance.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sparse_attn, full_attn, fused_attn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_inputs(rng, S, Q, Hq, Hkv, D, T, W, dtype=np.float32):
+    q = rng.normal(size=(S, Q, Hq, D)).astype(dtype)
+    k = rng.normal(size=(S, T, Hkv, D)).astype(dtype)
+    v = rng.normal(size=(S, T, Hkv, D)).astype(dtype)
+    pos = rng.integers(0, T - Q, size=(S,)).astype(np.int32)
+    idx = rng.integers(-1, T, size=(S, Hkv, W)).astype(np.int32)
+    qv = rng.integers(1, Q + 1, size=(S,)).astype(np.int32)
+    kind = rng.integers(0, 2, size=(S,)).astype(np.int32)
+    return map(jnp.asarray, (q, k, v, pos, idx, qv, kind))
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),            # S
+    st.integers(1, 6),            # Q
+    st.sampled_from([2, 4, 6]),   # Hkv candidates -> Hq = Hkv * G
+    st.sampled_from([1, 2, 3]),   # G
+    st.sampled_from([8, 16, 32]), # D
+    st.sampled_from([128, 256]),  # T (multiple of kernel TILE)
+    st.integers(1, 48),           # W
+    st.integers(0, 2**31 - 1),    # seed
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_sparse_attn_matches_ref(params):
+    S, Q, Hkv, G, D, T, W, seed = params
+    Hq = Hkv * G
+    rng = np.random.default_rng(seed)
+    q, k, v, pos, idx, _, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, W)
+    out_ref = ref.sparse_attn_ref(q, k, v, idx, pos)
+    out_pl = sparse_attn(q, k, v, idx, pos)
+    np.testing.assert_allclose(out_pl, out_ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape_strategy)
+def test_full_attn_matches_ref(params):
+    S, Q, Hkv, G, D, T, _, seed = params
+    Hq = Hkv * G
+    rng = np.random.default_rng(seed)
+    q, k, v, pos, _, qv, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, 4)
+    o_r, d_r, l_r = ref.full_attn_ref(q, k, v, pos, qv)
+    o_p, d_p, l_p = full_attn(q, k, v, pos, qv)
+    np.testing.assert_allclose(o_p, o_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(d_p, d_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(l_p, l_r, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape_strategy)
+def test_fused_attn_matches_ref(params):
+    S, Q, Hkv, G, D, T, W, seed = params
+    Hq = Hkv * G
+    rng = np.random.default_rng(seed)
+    q, k, v, pos, idx, qv, kind = rand_inputs(rng, S, Q, Hq, Hkv, D, T, W)
+    o_r, d_r = ref.fused_attn_ref(q, k, v, idx, pos, qv, kind)
+    o_p, d_p = fused_attn(q, k, v, idx, pos, qv, kind)
+    np.testing.assert_allclose(o_p, o_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(d_p, d_r, rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_path():
+    """The TPU-native dtype must flow through both kernels."""
+    rng = np.random.default_rng(0)
+    S, Q, Hq, Hkv, D, T, W = 2, 3, 4, 2, 16, 128, 16
+    q, k, v, pos, idx, qv, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, W)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    o_r = ref.sparse_attn_ref(qb, kb, vb, idx, pos)
+    o_p = sparse_attn(qb, kb, vb, idx, pos)
+    np.testing.assert_allclose(
+        np.asarray(o_p, np.float32), np.asarray(o_r, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_full_attn_dump_is_probability():
+    rng = np.random.default_rng(1)
+    q, k, v, pos, _, qv, _ = rand_inputs(rng, 3, 4, 4, 2, 16, 256, 4)
+    _, dump, _ = full_attn(q, k, v, pos, qv)
+    sums = np.asarray(dump).sum(-1)
+    np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-4)
+    assert (np.asarray(dump) >= 0).all()
+
+
+def test_lse_rematerialisation_identity():
+    """exp(logits - lse) must reproduce the softmax the kernel used —
+    the identity PillarAttn's zero-overhead identification relies on."""
+    rng = np.random.default_rng(2)
+    S, Q, Hq, Hkv, D, T = 2, 3, 2, 2, 8, 128
+    q, k, v, pos, _, qv, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, 4)
+    out, dump, lse = full_attn(q, k, v, pos, qv)
+    # rematerialise probabilities for slot 0, head 0, query 0
+    scale = 1.0 / np.sqrt(D)
+    kx = np.repeat(np.asarray(k), Hq // Hkv, axis=2)
+    logits = np.einsum("qhd,thd->qht", np.asarray(q)[0], kx[0]) * scale
+    t = np.arange(T)
+    mask = t[None, None, :] <= (np.asarray(pos)[0] + np.arange(Q))[:, None, None]
+    logits = np.where(mask, logits, -1e30)
+    p = np.exp(logits - np.asarray(lse)[0][:, :, None])
+    np.testing.assert_allclose(p.sum(-1), np.ones((Q, Hq)), rtol=1e-4)
+
+
+def test_sparse_idx_holes_are_ignored():
+    """-1 entries must not contribute attention mass."""
+    rng = np.random.default_rng(3)
+    S, Q, Hq, Hkv, D, T, W = 1, 1, 2, 2, 8, 128, 8
+    q, k, v, pos, idx, _, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, W)
+    idx = np.asarray(idx).copy()
+    idx[:, :, 1:] = -1
+    idx[:, :, 0] = 5
+    pos = jnp.asarray(np.array([100], np.int32))
+    out = sparse_attn(q, k, v, jnp.asarray(idx), pos)
+    # attending exactly one token => each q head outputs its kv head's value
+    g = Hq // Hkv
+    expect = np.asarray(v)[0, 5][np.repeat(np.arange(Hkv), g)]  # [Hq, D]
+    np.testing.assert_allclose(np.asarray(out)[0, 0], expect, rtol=1e-5)
+
+
+def test_sparse_causality():
+    """Future entries in idx (beyond pos+q) must be masked."""
+    rng = np.random.default_rng(4)
+    S, Q, Hq, Hkv, D, T, W = 1, 2, 2, 2, 8, 128, 6
+    q, k, v, _, _, _, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, W)
+    pos = jnp.asarray(np.array([10], np.int32))
+    # idx contains only past (3) and future (50) tokens
+    idx = np.full((1, Hkv, W), -1, np.int32)
+    idx[:, :, 0] = 3
+    idx[:, :, 1] = 50
+    out = sparse_attn(q, k, v, jnp.asarray(idx), pos)
+    idx2 = np.full((1, Hkv, W), -1, np.int32)
+    idx2[:, :, 0] = 3
+    out2 = sparse_attn(q, k, v, jnp.asarray(idx2), pos)
+    np.testing.assert_allclose(out, out2, rtol=1e-6)
+
+
+def test_full_matches_sparse_with_complete_index():
+    """Page-size-1 unified abstraction: full attention == sparse attention
+    with the complete index set (the §4.2 uniform abstraction)."""
+    rng = np.random.default_rng(5)
+    S, Q, Hq, Hkv, D, T = 2, 2, 4, 2, 16, 128
+    q, k, v, pos, _, qv, _ = rand_inputs(rng, S, Q, Hq, Hkv, D, T, 4)
+    full_idx = np.broadcast_to(np.arange(T, dtype=np.int32), (S, Hkv, T)).copy()
+    o_sparse = sparse_attn(q, k, v, jnp.asarray(full_idx), pos)
+    o_full, _, _ = full_attn(q, k, v, pos, qv)
+    np.testing.assert_allclose(o_sparse, o_full, rtol=2e-5, atol=2e-5)

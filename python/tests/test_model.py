@@ -1,0 +1,148 @@
+# L2 model tests: step-function consistency against the dense training
+# forward, KV bookkeeping, parameter manifest.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import MODEL as cfg
+
+jax.config.update("jax_platform_name", "cpu")
+
+S, T, L, Hkv, D, P, V = (
+    cfg.slots,
+    cfg.max_seq,
+    cfg.layers,
+    cfg.kv_heads,
+    cfg.head_dim,
+    cfg.prompt_pad,
+    cfg.vocab,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    seq = rng.integers(3, V, size=(S, 48)).astype(np.int32)
+    return params, seq
+
+
+def zero_kv():
+    return jnp.zeros((L, S, T, Hkv, D)), jnp.zeros((L, S, T, Hkv, D))
+
+
+def test_param_manifest_size():
+    assert model.n_params(cfg) == 656512
+    p = model.init_params(jax.random.PRNGKey(1))
+    assert p.shape == (model.n_params(cfg),)
+    pt = model.unpack(p, cfg)
+    assert pt["embed"].shape == (V, cfg.hidden)
+    assert pt["l0.wq"].shape == (cfg.hidden, cfg.q_dim)
+
+
+def test_prefill_matches_dense_forward(setup):
+    params, seq = setup
+    kvk, kvv = zero_kv()
+    plen = np.full((S,), 12, np.int32)
+    active = np.ones((S,), np.int32)
+    toks = np.zeros((S, P), np.int32)
+    toks[:, :12] = seq[:, :12]
+    prefill = jax.jit(model.make_prefill(cfg))
+    lg, _, _ = prefill(params, kvk, kvv, jnp.asarray(toks), jnp.asarray(plen), jnp.asarray(active))
+    dense = jax.jit(model.make_train_forward(cfg))(params, jnp.asarray(seq[:, :12]))
+    np.testing.assert_allclose(lg, dense[:, 11], rtol=1e-4, atol=1e-4)
+
+
+def test_verify_matches_dense_forward(setup):
+    params, seq = setup
+    kvk, kvv = zero_kv()
+    plen = np.full((S,), 12, np.int32)
+    active = np.ones((S,), np.int32)
+    toks = np.zeros((S, P), np.int32)
+    toks[:, :12] = seq[:, :12]
+    prefill = jax.jit(model.make_prefill(cfg))
+    _, kvk, kvv = prefill(params, kvk, kvv, jnp.asarray(toks), jnp.asarray(plen), jnp.asarray(active))
+    Q = cfg.spec_k + 1
+    verify = jax.jit(model.make_verify(cfg))
+    vt = seq[:, 12 : 12 + Q]
+    lg, _, _, dump = verify(
+        params, kvk, kvv, jnp.asarray(vt), jnp.asarray(plen),
+        jnp.asarray(np.full((S,), Q, np.int32)), jnp.asarray(active),
+    )
+    dense = jax.jit(model.make_train_forward(cfg))(params, jnp.asarray(seq[:, : 12 + Q]))
+    np.testing.assert_allclose(lg, dense[:, 12 : 12 + Q], rtol=1e-4, atol=1e-4)
+    # dump rows are probability distributions over attended positions
+    sums = np.asarray(dump).sum(-1)
+    np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-4)
+
+
+def test_draft_with_complete_index_matches_dense(setup):
+    params, seq = setup
+    kvk, kvv = zero_kv()
+    plen = np.full((S,), 12, np.int32)
+    active = np.ones((S,), np.int32)
+    toks = np.zeros((S, P), np.int32)
+    toks[:, :12] = seq[:, :12]
+    prefill = jax.jit(model.make_prefill(cfg))
+    _, kvk, kvv = prefill(params, kvk, kvv, jnp.asarray(toks), jnp.asarray(plen), jnp.asarray(active))
+    W = cfg.draft_budget
+    idx = np.full((S, L, Hkv, W), -1, np.int32)
+    idx[:, :, :, :13] = np.arange(13)
+    draft = jax.jit(model.make_draft(cfg))
+    lg, _, _ = draft(
+        params, kvk, kvv, jnp.asarray(seq[:, 12]), jnp.asarray(plen),
+        jnp.asarray(idx), jnp.asarray(active),
+    )
+    dense = jax.jit(model.make_train_forward(cfg))(params, jnp.asarray(seq[:, :13]))
+    np.testing.assert_allclose(lg, dense[:, 12], rtol=1e-4, atol=1e-4)
+
+
+def test_inactive_slots_untouched(setup):
+    params, seq = setup
+    kvk, kvv = zero_kv()
+    plen = np.full((S,), 8, np.int32)
+    active = np.zeros((S,), np.int32)
+    active[0] = 1
+    toks = np.zeros((S, P), np.int32)
+    toks[:, :8] = seq[:, :8]
+    prefill = jax.jit(model.make_prefill(cfg))
+    _, kvk2, kvv2 = prefill(
+        params, kvk, kvv, jnp.asarray(toks), jnp.asarray(plen), jnp.asarray(active)
+    )
+    # slot 0 written, slots 1.. remain zero
+    assert float(jnp.abs(kvk2[:, 0, :8]).sum()) > 0
+    assert float(jnp.abs(kvk2[:, 1:]).sum()) == 0.0
+    assert float(jnp.abs(kvv2[:, 1:]).sum()) == 0.0
+
+
+def test_kv_load_scatters_one_slot():
+    kvk, kvv = zero_kv()
+    rows_k = jnp.ones((L, T, Hkv, D))
+    rows_v = jnp.full((L, T, Hkv, D), 2.0)
+    kv_load = jax.jit(model.make_kv_load(cfg))
+    kvk2, kvv2 = kv_load(kvk, kvv, jnp.asarray(np.array([3], np.int32)), rows_k, rows_v)
+    assert float(kvk2[:, 3].min()) == 1.0
+    assert float(kvv2[:, 3].max()) == 2.0
+    assert float(jnp.abs(kvk2[:, [0, 1, 2] + list(range(4, S))]).sum()) == 0.0
+
+
+def test_eagle_head_shapes():
+    ep = model.eagle_init(jax.random.PRNGKey(3))
+    assert ep.shape == (model.eagle_n_params(),)
+    eagle = jax.jit(model.make_eagle(cfg))
+    ctx = jnp.asarray(np.zeros((S, 4), np.int32))
+    lg = eagle(ep, ctx)
+    assert lg.shape == (S, V)
+
+
+def test_rope_position_dependence():
+    """Same token at different positions must produce different keys."""
+    x = jnp.ones((1, 2, 2, D))
+    r1 = model.rope(x, jnp.asarray(np.array([[1, 2]], np.int32)))
+    r2 = model.rope(x, jnp.asarray(np.array([[3, 4]], np.int32)))
+    assert float(jnp.abs(r1 - r2).max()) > 1e-3
+    # position 0 is identity
+    r0 = model.rope(x[:, :1], jnp.asarray(np.array([[0]], np.int32)))
+    np.testing.assert_allclose(r0, x[:, :1], rtol=1e-6)

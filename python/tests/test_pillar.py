@@ -1,0 +1,61 @@
+# Critical-token identification: python reference vs the pinned semantics
+# shared with rust/src/spec/pillar.rs.
+import numpy as np
+
+from compile.kernels.ref import topk_ids_ref
+
+
+def test_topk_selects_highest_mass():
+    dump = np.zeros((2, 64), np.float32)
+    dump[0, 30] = 0.9
+    dump[0, 45] = 0.8
+    dump[1, 10] = 0.7
+    ids = topk_ids_ref(dump, length=64, budget=16, recent=4, sinks=2)
+    assert ids.shape == (2, 16)
+    assert 30 in ids[0] and 45 in ids[0]
+    assert 10 in ids[1]
+    for h in range(2):
+        assert 0 in ids[h] and 1 in ids[h]           # sinks
+        for t in range(60, 64):                      # recent
+            assert t in ids[h]
+
+
+def test_topk_short_context_padding():
+    dump = np.full((1, 32), 0.1, np.float32)
+    ids = topk_ids_ref(dump, length=5, budget=16, recent=4, sinks=2)
+    valid = ids[0][ids[0] >= 0]
+    np.testing.assert_array_equal(valid, [0, 1, 2, 3, 4])
+    assert (ids[0][5:] == -1).all()
+
+
+def test_topk_ascending_unique_in_range():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        hkv = rng.integers(1, 3)
+        t = int(rng.integers(16, 256))
+        length = int(rng.integers(0, t))
+        budget = int(rng.integers(4, 64))
+        recent = int(rng.integers(1, budget))
+        sinks = int(rng.integers(0, max(budget - recent, 1)))
+        dump = rng.random((hkv, t)).astype(np.float32)
+        ids = topk_ids_ref(dump, length, budget, recent, sinks)
+        for h in range(hkv):
+            valid = ids[h][ids[h] >= 0]
+            assert len(valid) == min(budget, length)
+            assert (np.diff(valid) > 0).all() if len(valid) > 1 else True
+            assert (valid < max(length, 1)).all()
+            if length > 0 and budget > 0:
+                assert (length - 1) in valid  # newest position always kept
+
+
+def test_topk_cross_language_pinned_case():
+    """Exact case mirrored in rust/src/spec/pillar.rs tests: sinks=2,
+    recent=4, budget=16 over scores with spikes at 30/45/10 of len 64."""
+    dump = np.zeros((1, 64), np.float32)
+    for t, s in [(30, 0.9), (45, 0.8), (10, 0.7), (20, 0.6)]:
+        dump[0, t] = s
+    ids = topk_ids_ref(dump, 64, 12, 4, 2)
+    # sinks 0,1 + recent 60..63 + top-6 of the rest by mass then index
+    expect = [0, 1, 10, 20, 30, 45, 60, 61, 62, 63]
+    for e in expect:
+        assert e in ids[0], f"{e} missing from {ids[0]}"

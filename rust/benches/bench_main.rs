@@ -1,0 +1,26 @@
+//! `cargo bench` entrypoint — regenerates every paper table/figure via the
+//! shared harness (criterion is unavailable offline; this is the
+//! from-scratch bench runner, see DESIGN.md §1).
+//!
+//! Select experiments: `cargo bench -- fig10 fig13` (default: all).
+
+use sparsespec::bench::{run_named, BenchCtx};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let names: Vec<&str> = if args.is_empty() {
+        vec!["all"]
+    } else {
+        args.iter().map(|s| s.as_str()).collect()
+    };
+    let artifacts = std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut ctx = BenchCtx::new(&artifacts, "reports")?;
+    if let Ok(n) = std::env::var("BENCH_REQUESTS") {
+        ctx.n_requests = n.parse().unwrap_or(12);
+    }
+    for n in names {
+        println!("\n================ {n} ================");
+        run_named(&mut ctx, n)?;
+    }
+    Ok(())
+}

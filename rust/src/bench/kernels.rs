@@ -1,0 +1,139 @@
+//! Fig. 15 — fused vs sequential vs naive-batch attention.
+//!
+//! Two data sources, combined (DESIGN.md §1 fused-kernel substitution):
+//!
+//! 1. **Measured**: wallclock of the real artifacts on this CPU —
+//!    `draft_w64` (sparse template), `verify_q9` (dense template) — giving
+//!    the per-launch costs of the *Sequential* strategy, and the
+//!    `draft_w256`-as-dense cost standing in for the one-size-fits-all
+//!    *Naive Batch* template (every row pays the widest gather).
+//! 2. **Modelled**: the `DeviceModel` launch-overhead + bandwidth account
+//!    of the three strategies at paper scale, which is where the 1.3x /
+//!    1.8x shape comes from on a real accelerator.
+//!
+//! The Pallas fused kernel itself (python/compile/kernels/fused_attn.py)
+//! is numerics-verified against both paths in pytest; interpret-mode
+//! wallclock is not a TPU proxy, hence the split here.
+
+use super::BenchCtx;
+use crate::perfmodel::DeviceModel;
+use crate::runtime::ModelRunner;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+pub fn fig15_fused_kernel(ctx: &mut BenchCtx) -> Result<()> {
+    println!("Fig 15: fused vs sequential vs naive-batch attention");
+    let m = ctx.rt.cfg.model.clone();
+    let mut runner = ModelRunner::new(ctx.rt.clone())?;
+    let s = m.slots;
+    let k = m.spec_k;
+    let q = k + 1;
+
+    // Warm both artifacts, then measure steady-state call time.
+    let token = vec![5i32; s];
+    let pos = vec![64i32; s];
+    let active = vec![1i32; s];
+    let w = m.draft_budget;
+    let idx: Vec<i32> = (0..s * m.layers * m.kv_heads * w)
+        .map(|i| (i % 64) as i32)
+        .collect();
+    let vt = vec![5i32; s * q];
+    let qv = vec![q as i32; s];
+
+    let reps = 5;
+    runner.draft(w, &token, &pos, &idx, &active)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        runner.draft(w, &token, &pos, &idx, &active)?;
+    }
+    let t_draft = t0.elapsed().as_secs_f64() / reps as f64;
+
+    runner.verify(q, &vt, &pos, &qv, &active)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        runner.verify(q, &vt, &pos, &qv, &active)?;
+    }
+    let t_verify = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // Naive batch: every row pays the dense/widest template.  Measured
+    // stand-in: the W=256 gather draft (widest sparse tile) + dense call.
+    let w_wide = 256;
+    let idx_wide: Vec<i32> = (0..s * m.layers * m.kv_heads * w_wide)
+        .map(|i| (i % 64) as i32)
+        .collect();
+    runner.draft(w_wide, &token, &pos, &idx_wide, &active)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        runner.draft(w_wide, &token, &pos, &idx_wide, &active)?;
+    }
+    let t_wide = t0.elapsed().as_secs_f64() / reps as f64;
+
+    println!(
+        "  measured artifact costs: draft(sparse W=64) {:.1}ms, verify(dense) {:.1}ms, widest-template draft {:.1}ms",
+        t_draft * 1e3,
+        t_verify * 1e3,
+        t_wide * 1e3
+    );
+
+    // Modelled comparison at paper scale: a mixed batch of B rows, 1/(k+1)
+    // of them dense (verify) and the rest sparse.
+    let dev = DeviceModel::default();
+    let b = 128.0;
+    let n_verify = b / (k as f64 + 1.0);
+    let n_draft = b - n_verify;
+    let bpt = m.kv_bytes_per_token() as f64 * 50.0; // unscale lengths
+    let ctx_len = 300.0;
+    let sparse_bytes = n_draft * (w as f64) * bpt;
+    let dense_bytes = n_verify * ctx_len * bpt;
+
+    // Sequential: two launches, each at its best template (full BW each,
+    // but pays two launch latencies + loses inter-kernel pipelining on the
+    // small sparse kernel: model that as a fixed efficiency of 50% BW for
+    // the sparse launch, per the paper's FlashInfer profile).
+    let t_seq = dev.t_attn(dense_bytes) / 0.85
+        + dev.t_attn(sparse_bytes) / 0.50
+        + 2.0 * dev.t_launch;
+    // Naive batch: one launch, one-size-fits-all template: dense rows fine,
+    // sparse rows read at dense-template efficiency AND pad to the dense
+    // tile (extra bytes), per the paper's "degrade to 50%" profile.
+    let t_naive = (dev.t_attn(dense_bytes) + dev.t_attn(n_draft * ctx_len * bpt)) / 0.85
+        + dev.t_launch;
+    // Fused: one launch, on-chip dispatch to the best template per row:
+    // both classes near their peak efficiency (85% / 80%).
+    let t_fused = dev.t_attn(dense_bytes) / 0.85
+        + dev.t_attn(sparse_bytes) / 0.80
+        + dev.t_launch;
+
+    println!(
+        "  modelled (paper-scale): sequential {:.2}ms, naive-batch {:.2}ms, fused {:.2}ms",
+        t_seq * 1e3,
+        t_naive * 1e3,
+        t_fused * 1e3
+    );
+    println!(
+        "  fused speedup: {:.2}x vs sequential (paper 1.3x), {:.2}x vs naive batch (paper 1.8x)",
+        t_seq / t_fused,
+        t_naive / t_fused
+    );
+
+    // Kernel-level pallas microbench results, if the python side produced
+    // them (make kernel-bench).
+    let kb = std::path::Path::new(&ctx.rt.cfg.dir).join("kernel_bench.json");
+    if let Ok(txt) = std::fs::read_to_string(&kb) {
+        if let Ok(j) = crate::util::json::Json::parse(&txt) {
+            println!("  pallas interpret-mode microbench (numerics-path, not TPU-time):");
+            for key in j.keys() {
+                if let Some(v) = j.get(key).and_then(|x| x.as_f64()) {
+                    println!("    {key}: {:.2} ms", v * 1e3);
+                }
+            }
+        }
+    }
+
+    let mut csv = String::from("strategy,modelled_ms,measured_component_ms\n");
+    let _ = writeln!(csv, "sequential,{:.4},{:.4}", t_seq * 1e3, (t_draft + t_verify) * 1e3);
+    let _ = writeln!(csv, "naive_batch,{:.4},{:.4}", t_naive * 1e3, (t_wide + t_verify) * 1e3);
+    let _ = writeln!(csv, "fused,{:.4},", t_fused * 1e3);
+    ctx.save("fig15.csv", &csv)
+}

@@ -1,0 +1,72 @@
+//! Benchmark harness: one entry per table/figure of the paper's
+//! evaluation (DESIGN.md §4 experiment index).  Shared by the `sparsespec
+//! bench` subcommand and `cargo bench` (rust/benches/bench_main.rs).
+//!
+//! Every function prints the regenerated rows/series and writes raw CSVs
+//! under `reports/` so the markdown in EXPERIMENTS.md can cite them.
+
+mod experiments;
+mod kernels;
+
+pub use experiments::*;
+pub use kernels::fig15_fused_kernel;
+
+use crate::runtime::Runtime;
+use std::rc::Rc;
+
+pub struct BenchCtx {
+    pub rt: Rc<Runtime>,
+    pub out_dir: String,
+    /// Requests per engine run (scaled-down stand-in for the paper's 2048).
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl BenchCtx {
+    pub fn new(artifacts_dir: &str, out_dir: &str) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(BenchCtx {
+            rt: Rc::new(Runtime::load(artifacts_dir)?),
+            out_dir: out_dir.to_string(),
+            n_requests: 12,
+            seed: 42,
+        })
+    }
+
+    pub fn save(&self, name: &str, contents: &str) -> anyhow::Result<()> {
+        let path = format!("{}/{}", self.out_dir, name);
+        std::fs::write(&path, contents)?;
+        println!("  [saved {path}]");
+        Ok(())
+    }
+}
+
+/// Registry: name -> runner.  `all` runs everything in paper order.
+pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
+    match name {
+        "table1" => table1_dataset_stats(ctx),
+        "fig2" => fig2_utilization(ctx),
+        "fig3" => fig3_theory_vs_achieved(ctx),
+        "fig4" => fig4_attention_dynamics(ctx),
+        "fig5" => fig5_memory_policies(ctx),
+        "table2" => table2_breakdown(ctx),
+        "fig10" => fig10_training_free(ctx),
+        "fig11" => fig11_draft_model(ctx),
+        "fig12_accept" => fig12_acceptance(ctx),
+        "fig12_sens" => fig12_sensitivity(ctx),
+        "fig13" => fig13_ablation(ctx),
+        "fig14" => fig14_schedule_trace(ctx),
+        "fig15" => fig15_fused_kernel(ctx),
+        "all" => {
+            for n in [
+                "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
+                "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15",
+            ] {
+                println!("\n================ {n} ================");
+                run_named(ctx, n)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench '{other}'"),
+    }
+}

@@ -1,0 +1,942 @@
+//! Engine implementation: the per-iteration serving loop.
+
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::slot::{Phase, Slot};
+use super::{EngineConfig, RunReport};
+use crate::kv_cache::{HostKv, KvManager, OffloadEngine, OffloadJob, PressureAction};
+use crate::metrics::Histogram;
+use crate::perfmodel::{DeviceModel, SimScale};
+use crate::runtime::{ModelRunner, Runtime};
+use crate::sampling;
+use crate::scheduler::{BucketScheduler, IterComposition, Schedule, ScheduleTrace};
+use crate::spec::{AcceptStats, DrafterKind, IndexPolicy, NGramIndex, PillarState};
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::{Promise, ThreadPool};
+use crate::workload::Request;
+
+/// State parked on the host while a request's KV lives in the host tier.
+struct Suspended {
+    req: Request,
+    len: usize,
+    gen_count: usize,
+    pending: i32,
+    output: Vec<i32>,
+    pillar: PillarState,
+    ngram_hist: Vec<i32>,
+    admitted_at: Instant,
+    sim_admitted_at: f64,
+}
+
+/// Result of the off-thread verification processing (delayed mode).
+struct VerifyWork {
+    slot_idx: usize,
+    accepted: usize,
+    next_token: i32,
+    /// Refreshed pillar state (top-k over the dump) — the expensive part.
+    pillar: Option<PillarState>,
+    cpu_s: f64,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub runner: ModelRunner,
+    rt: Rc<Runtime>,
+    queue: VecDeque<Request>,
+    slots: Vec<Option<Slot>>,
+    buckets: BucketScheduler,
+    kv: KvManager,
+    offload: OffloadEngine,
+    suspended: HashMap<u64, Suspended>,
+    pool: ThreadPool,
+    delayed: Vec<Promise<VerifyWork>>,
+    rng: Xoshiro256,
+    device: DeviceModel,
+    sim_scale: SimScale,
+    // accounting
+    iter: u64,
+    sim_s: f64,
+    sim_cpu_s: f64,
+    accept: AcceptStats,
+    trace: ScheduleTrace,
+    kv_util_sum: f64,
+    tokens_generated: u64,
+    outputs: BTreeMap<u64, Vec<i32>>,
+    latency: Histogram,
+    requests_done: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
+        let runner = ModelRunner::new(rt.clone())?;
+        let m = &rt.cfg.model;
+        let k = if cfg.drafter == DrafterKind::Vanilla { 0 } else { cfg.k };
+        let mut cfg = cfg;
+        cfg.k = k;
+        let worst_case = m.max_seq;
+        let device = DeviceModel::default();
+        let sim_scale = cfg
+            .sim_scale
+            .unwrap_or_else(|| SimScale::paper_scale(m.slots, m.kv_bytes_per_token()));
+        let chunk = 256 * 1024;
+        // Precompile every artifact this configuration can touch, so
+        // first-call XLA compilation (~2 s each) never lands inside the
+        // serving loop's wallclock.
+        {
+            let mut names: Vec<String> = vec!["prefill".into()];
+            names.push(format!("verify_q{}", k + 1));
+            match cfg.drafter {
+                DrafterKind::Pillar { w }
+                | DrafterKind::Window { w }
+                | DrafterKind::OracleTopK { w } => {
+                    names.push(format!("draft_w{w}"));
+                    if matches!(cfg.drafter, DrafterKind::OracleTopK { .. }) {
+                        names.push("verify_q1".into());
+                    }
+                }
+                DrafterKind::TriForce { .. } => names.push("sparse_verify".into()),
+                DrafterKind::Eagle => names.push("eagle".into()),
+                DrafterKind::Vanilla | DrafterKind::NGram { .. } => {}
+            }
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            rt.precompile(&refs)?;
+        }
+        Ok(Engine {
+            runner,
+            queue: VecDeque::new(),
+            slots: (0..m.slots).map(|_| None).collect(),
+            buckets: BucketScheduler::new(k.max(1)),
+            kv: KvManager::new(cfg.kv_policy, cfg.kv_budget, worst_case),
+            offload: OffloadEngine::new(chunk, device.pcie_bw),
+            suspended: HashMap::new(),
+            pool: ThreadPool::new(2),
+            delayed: Vec::new(),
+            rng: Xoshiro256::new(cfg.seed),
+            device,
+            sim_scale,
+            iter: 0,
+            sim_s: 0.0,
+            sim_cpu_s: 0.0,
+            accept: AcceptStats::new(k.max(1)),
+            trace: ScheduleTrace::default(),
+            kv_util_sum: 0.0,
+            tokens_generated: 0,
+            outputs: BTreeMap::new(),
+            latency: Histogram::default(),
+            requests_done: 0,
+            rt,
+            cfg,
+        })
+    }
+
+    fn mcfg(&self) -> &crate::model::ModelConfig {
+        &self.rt.cfg.model
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        let w = self.cfg.drafter.budget().unwrap_or(self.mcfg().draft_budget);
+        match self.cfg.drafter {
+            DrafterKind::Window { .. } | DrafterKind::TriForce { .. } => IndexPolicy::window(w),
+            _ => IndexPolicy::pillar(w),
+        }
+    }
+
+    /// Run a request set to completion; the entry point for examples and
+    /// benches.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<RunReport> {
+        for r in requests {
+            self.queue.push_back(r);
+        }
+        let t0 = Instant::now();
+        while self.iter < self.cfg.max_iterations {
+            let busy = self.step()?;
+            if !busy {
+                break;
+            }
+        }
+        // Drain any in-flight offloads (their requests will never resume).
+        for (id, kv) in self.offload.drain() {
+            self.kv.host.insert(id, kv);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(RunReport {
+            name: self.cfg.drafter.name(),
+            iterations: self.iter,
+            wall_s,
+            sim_s: self.sim_s,
+            sim_cpu_s: self.sim_cpu_s,
+            requests_done: self.requests_done,
+            tokens_generated: self.tokens_generated,
+            accept: self.accept.clone(),
+            kv: self.kv.stats.clone(),
+            offload: self.offload.stats(),
+            trace: self.trace.clone(),
+            step_stats: self.runner.stats.clone(),
+            mean_kv_util: self.kv_util_sum / self.iter.max(1) as f64,
+            outputs: std::mem::take(&mut self.outputs),
+            request_latency_s: self.latency.clone(),
+        })
+    }
+
+    /// One engine iteration.  Returns false when fully idle.
+    pub fn step(&mut self) -> Result<bool> {
+        let any_slot = self.slots.iter().any(|s| s.is_some());
+        if self.queue.is_empty()
+            && !any_slot
+            && self.suspended.is_empty()
+            && self.delayed.is_empty()
+        {
+            return Ok(false);
+        }
+        self.iter += 1;
+        let mut comp = IterComposition::default();
+        let mut launches = 0u32;
+        let mut cpu_s = 0.0;
+
+        // 0. consume delayed verification results from the previous iter.
+        cpu_s += self.collect_delayed()?;
+
+        // 1. reload offloaded requests when capacity allows.
+        self.try_reloads()?;
+
+        // 2. admission (prefill newly accepted requests).
+        let admitted = self.admit(&mut comp)?;
+        if admitted > 0 {
+            launches += 1;
+        }
+
+        // 3. proposal generation for drafters that need it (ngram/eagle/
+        //    triforce): fills `drafts` and moves slots to ReadyVerify.
+        launches += self.generate_proposals(&mut comp, &mut cpu_s)?;
+
+        // 4. sparse draft step for self-spec slots in Drafting phase.
+        launches += self.draft_step(&mut comp, &mut cpu_s)?;
+
+        // 5. verification for ReadyVerify slots.
+        launches += self.verify_step(&mut comp, &mut cpu_s)?;
+
+        // 6. memory pressure + retirement bookkeeping happen inside the
+        //    processing paths; record the iteration.
+        self.kv_util_sum += self.kv.utilization().min(1.0);
+        let t_dev = self.device.t_iteration(
+            comp.gemm_rows as f64 * self.sim_scale.gemm_rows,
+            comp.attn_bytes as f64 * self.sim_scale.kv_bytes,
+            launches,
+        );
+        let cpu_charge = if self.cfg.delayed_verify {
+            (cpu_s - t_dev).max(0.0) // overlapped; only the overshoot stalls
+        } else {
+            cpu_s
+        };
+        self.sim_s += t_dev + cpu_charge;
+        self.sim_cpu_s += cpu_charge;
+        self.trace.push(comp);
+        Ok(true)
+    }
+
+    // ------------------------------------------------------------------
+    // admission / suspension
+    // ------------------------------------------------------------------
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    fn admit(&mut self, comp: &mut IterComposition) -> Result<usize> {
+        let m = self.mcfg().clone();
+        let mut tokens = vec![0i32; m.slots * m.prompt_pad];
+        let mut plen = vec![1i32; m.slots];
+        let mut active = vec![0i32; m.slots];
+        let mut newly: Vec<usize> = Vec::new();
+
+        while let Some(req) = self.queue.front() {
+            let p = req.prompt.len().min(m.prompt_pad);
+            if self.free_slot().is_none() || !self.kv.can_admit(p) {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            let idx = self.free_slot().unwrap();
+            let bucket = match self.cfg.schedule {
+                Schedule::Unified => self.buckets.assign(),
+                Schedule::Lockstep => {
+                    // Everyone lives in one bucket; still tracked so
+                    // release() stays balanced.
+                    let b = self.buckets.assign();
+                    let _ = b;
+                    0
+                }
+            };
+            for (j, &t) in req.prompt.iter().take(p).enumerate() {
+                tokens[idx * m.prompt_pad + j] = t;
+            }
+            plen[idx] = p as i32;
+            active[idx] = 1;
+            self.kv.admit(req.id, p);
+            let pol = self.index_policy();
+            let slot = Slot {
+                len: p,
+                gen_count: 0,
+                pending: 0,
+                anchor: 0,
+                round_start_len: p,
+                drafts: Vec::new(),
+                draft_probs: Vec::new(),
+                draft_target: 0,
+                phase: Phase::ReadyVerify,
+                bucket,
+                pillar: PillarState::new(m.layers, m.kv_heads, pol),
+                ngram: NGramIndex::new(3),
+                output: Vec::new(),
+                admitted_at: Instant::now(),
+                sim_admitted_at: self.sim_s,
+                req,
+            };
+            self.slots[idx] = Some(slot);
+            newly.push(idx);
+        }
+        if newly.is_empty() {
+            return Ok(0);
+        }
+        comp.prefilling = newly.len();
+        comp.gemm_rows += newly.len() * m.prompt_pad;
+        comp.attn_bytes += newly.len() * m.prompt_pad * m.kv_bytes_per_token();
+
+        let logits = self.runner.prefill(&tokens, &plen, &active)?;
+        let v = m.vocab;
+        for &idx in &newly {
+            let slot = self.slots[idx].as_mut().unwrap();
+            let row = &logits[idx * v..(idx + 1) * v];
+            let t0 = sampling::sample_logits(row, self.cfg.temperature, &mut self.rng) as i32;
+            slot.output.push(t0);
+            slot.gen_count = 1;
+            slot.pending = t0;
+            self.tokens_generated += 1;
+            let mut hist = slot.req.prompt.clone();
+            hist.push(t0);
+            slot.ngram.extend(&hist);
+            // Begin the first round, aligned to the slot's bucket.
+            let target = self.first_round_target(idx);
+            self.slots[idx].as_mut().unwrap().begin_round(target);
+        }
+        Ok(newly.len())
+    }
+
+    fn first_round_target(&self, idx: usize) -> usize {
+        let slot = self.slots[idx].as_ref().unwrap();
+        if !self.cfg.drafter.is_self_spec() {
+            return 0; // proposal drafters fill drafts outside draft steps
+        }
+        match self.cfg.schedule {
+            Schedule::Lockstep => self.cfg.k.min(slot.remaining().max(1)),
+            Schedule::Unified => self
+                .buckets
+                .first_draft_len(self.iter, slot.bucket)
+                .min(slot.remaining().max(1)),
+        }
+    }
+
+    fn next_round_target(&self, slot: &Slot) -> usize {
+        if !self.cfg.drafter.is_self_spec() {
+            return 0;
+        }
+        self.cfg.k.min(slot.remaining().max(1))
+    }
+
+    fn try_reloads(&mut self) -> Result<()> {
+        loop {
+            if self.free_slot().is_none() {
+                return Ok(());
+            }
+            // harvest finished offload transfers into the host tier
+            for (id, kv) in self.offload.poll() {
+                self.kv.host.insert(id, kv);
+            }
+            let Some((id, host_kv)) = self.kv.try_reload() else {
+                return Ok(());
+            };
+            let Some(sus) = self.suspended.remove(&id) else {
+                continue;
+            };
+            let idx = self.free_slot().unwrap();
+            self.runner.kv_load(idx, &host_kv.k, &host_kv.v)?;
+            self.kv.admit(id, sus.len);
+            let bucket = self.buckets.assign();
+            let bucket = if self.cfg.schedule == Schedule::Unified { bucket } else { 0 };
+            let mut ngram = NGramIndex::new(3);
+            ngram.extend(&sus.ngram_hist);
+            let slot = Slot {
+                len: sus.len,
+                gen_count: sus.gen_count,
+                pending: sus.pending,
+                anchor: sus.pending,
+                round_start_len: sus.len,
+                drafts: Vec::new(),
+                draft_probs: Vec::new(),
+                draft_target: 0,
+                phase: Phase::ReadyVerify,
+                bucket,
+                pillar: sus.pillar,
+                ngram,
+                output: sus.output,
+                admitted_at: sus.admitted_at,
+                sim_admitted_at: sus.sim_admitted_at,
+                req: sus.req,
+            };
+            self.slots[idx] = Some(slot);
+            let target = self.first_round_target(idx);
+            self.slots[idx].as_mut().unwrap().begin_round(target);
+        }
+    }
+
+    /// Handle KV pressure after frontier growth.  Only round-boundary
+    /// slots (just verified) are eligible victims.
+    fn handle_pressure(&mut self, boundary: &[usize]) -> Result<()> {
+        let boundary_ids: Vec<u64> = boundary
+            .iter()
+            .filter_map(|&i| self.slots[i].as_ref().map(|s| s.req.id))
+            .collect();
+        let protect: Vec<u64> = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| s.req.id)
+            .filter(|id| !boundary_ids.contains(id))
+            .collect();
+        let actions = self.kv.check_pressure(&protect);
+        if actions.is_empty() {
+            return Ok(());
+        }
+        // One pool dump serves all victims this iteration.
+        let mut pool: Option<(Vec<f32>, Vec<f32>)> = None;
+        for act in actions {
+            match act {
+                PressureAction::Offload { req_id } => {
+                    let Some(idx) = self.slot_of(req_id) else { continue };
+                    if pool.is_none() {
+                        pool = Some(self.runner.kv_dump()?);
+                    }
+                    let (ref pk, ref pv) = pool.as_ref().unwrap();
+                    let (rows_k, rows_v) = self.extract_slot_rows(pk, pv, idx);
+                    let slot = self.slots[idx].take().unwrap();
+                    self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
+                    let len = slot.len;
+                    let bytes = (rows_k.len() + rows_v.len()) * 4;
+                    self.suspended.insert(
+                        req_id,
+                        Suspended {
+                            len,
+                            gen_count: slot.gen_count,
+                            pending: slot.pending,
+                            output: slot.output.clone(),
+                            pillar: slot.pillar.clone(),
+                            ngram_hist: slot.full_context(),
+                            admitted_at: slot.admitted_at,
+                            sim_admitted_at: slot.sim_admitted_at,
+                            req: slot.req,
+                        },
+                    );
+                    self.kv.complete_offload(
+                        req_id,
+                        HostKv { k: vec![], v: vec![], len },
+                    );
+                    // the actual rows travel through the async copier
+                    self.kv.host.remove(&req_id);
+                    self.offload.submit(OffloadJob {
+                        req_id,
+                        kv: HostKv { k: rows_k, v: rows_v, len },
+                        bytes,
+                    });
+                }
+                PressureAction::Preempt { req_id } => {
+                    let Some(idx) = self.slot_of(req_id) else { continue };
+                    let slot = self.slots[idx].take().unwrap();
+                    self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
+                    self.kv.complete_preempt(req_id);
+                    // Restart from scratch (greedy decode regenerates the
+                    // same tokens; they count as recomputed, not new).
+                    self.tokens_generated -= slot.gen_count.min(slot.output.len()) as u64;
+                    self.queue.push_back(slot.req);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn slot_of(&self, req_id: u64) -> Option<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.as_ref().map(|x| x.req.id) == Some(req_id))
+    }
+
+    fn extract_slot_rows(&self, pk: &[f32], pv: &[f32], idx: usize) -> (Vec<f32>, Vec<f32>) {
+        // pool layout [L, S, T, Hkv, D] -> rows [L, T, Hkv, D] for slot idx
+        let m = self.mcfg();
+        let row = m.max_seq * m.kv_heads * m.head_dim;
+        let per_l = m.slots * row;
+        let mut k = Vec::with_capacity(m.layers * row);
+        let mut v = Vec::with_capacity(m.layers * row);
+        for l in 0..m.layers {
+            let off = l * per_l + idx * row;
+            k.extend_from_slice(&pk[off..off + row]);
+            v.extend_from_slice(&pv[off..off + row]);
+        }
+        (k, v)
+    }
+
+    // ------------------------------------------------------------------
+    // draft / proposal / verify phases
+    // ------------------------------------------------------------------
+
+    /// One sparse draft step for all Drafting self-spec slots.
+    fn draft_step(&mut self, comp: &mut IterComposition, cpu_s: &mut f64) -> Result<u32> {
+        if !self.cfg.drafter.is_self_spec() {
+            return Ok(0);
+        }
+        let m = self.mcfg().clone();
+        let w = self.cfg.drafter.budget().unwrap_or(m.draft_budget);
+        let t_cpu = Instant::now();
+        let mut token = vec![0i32; m.slots];
+        let mut pos = vec![0i32; m.slots];
+        let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
+        let mut active = vec![0i32; m.slots];
+        let mut participating = Vec::new();
+        for i in 0..m.slots {
+            let Some(slot) = self.slots[i].as_ref() else { continue };
+            if slot.phase != Phase::Drafting {
+                continue;
+            }
+            participating.push(i);
+            token[i] = slot.pending;
+            pos[i] = slot.len as i32;
+            let composed = slot.pillar.compose(slot.len + 1);
+            let base = i * m.layers * m.kv_heads * w;
+            idxs[base..base + composed.len()].copy_from_slice(&composed);
+            active[i] = 1;
+        }
+        if participating.is_empty() {
+            return Ok(0);
+        }
+        comp.drafting = participating.len();
+        comp.gemm_rows += participating.len();
+        comp.attn_bytes += participating.len() * w * m.kv_bytes_per_token();
+        *cpu_s += t_cpu.elapsed().as_secs_f64();
+
+        let out = self.runner.draft(w, &token, &pos, &idxs, &active)?;
+
+        let t_cpu = Instant::now();
+        let v = m.vocab;
+        let temp = self.cfg.temperature;
+        let oracle = matches!(self.cfg.drafter, DrafterKind::OracleTopK { .. });
+        for &i in &participating {
+            let row = out.logits[i * v..(i + 1) * v].to_vec();
+            let slot = self.slots[i].as_mut().unwrap();
+            let d = sampling::sample_logits(&row, temp, &mut self.rng) as i32;
+            slot.drafts.push(d);
+            if temp > 0.0 {
+                slot.draft_probs.extend(sampling::softmax(&row, temp));
+            } else {
+                let mut onehot = vec![0.0f32; v];
+                onehot[d as usize] = 1.0;
+                slot.draft_probs.extend(onehot);
+            }
+            slot.pending = d;
+            slot.len += 1; // the fed token's KV row was written
+            let id = slot.req.id;
+            let full = slot.drafts.len() >= slot.draft_target;
+            if full {
+                slot.phase = Phase::ReadyVerify;
+            }
+            self.kv.grow(id, 1);
+        }
+        *cpu_s += t_cpu.elapsed().as_secs_f64();
+
+        // Oracle drafter: refresh critical tokens from exact scores after
+        // every step (one dense q1 pass; Fig. 3 upper bound — acceptance
+        // comparisons only, not a wallclock-fair system).
+        if oracle {
+            let mut toks = vec![0i32; m.slots];
+            let mut opos = vec![0i32; m.slots];
+            let qv = vec![1i32; m.slots];
+            let mut act = vec![0i32; m.slots];
+            for &i in &participating {
+                let slot = self.slots[i].as_ref().unwrap();
+                // re-feed the token we just wrote, at its own position
+                toks[i] = slot.drafts[slot.drafts.len() - 1 - 0]; // == pending
+                toks[i] = slot.pending;
+                opos[i] = (slot.len - 1) as i32;
+                act[i] = 1;
+            }
+            let vo = self.runner.verify(1, &toks, &opos, &qv, &act)?;
+            let t_dim = m.max_seq;
+            let per = m.layers * m.kv_heads * t_dim;
+            for &i in &participating {
+                let slot = self.slots[i].as_mut().unwrap();
+                let dump = &vo.dump[i * per..(i + 1) * per];
+                slot.pillar.refresh(dump, t_dim, slot.len);
+            }
+            comp.attn_bytes += participating.len()
+                * self.slots[participating[0]].as_ref().map(|s| s.len).unwrap_or(0)
+                * m.kv_bytes_per_token();
+            return Ok(2);
+        }
+        Ok(1)
+    }
+
+    /// Proposal generation for NGram / Eagle / TriForce slots.
+    fn generate_proposals(
+        &mut self,
+        comp: &mut IterComposition,
+        cpu_s: &mut f64,
+    ) -> Result<u32> {
+        let k = self.cfg.k;
+        let m = self.mcfg().clone();
+        match self.cfg.drafter {
+            DrafterKind::NGram { .. } => {
+                let t = Instant::now();
+                for slot in self.slots.iter_mut().flatten() {
+                    if slot.phase == Phase::ReadyVerify && slot.drafts.is_empty() {
+                        let props = slot.ngram.propose(k.min(slot.remaining().max(1)));
+                        set_proposals(slot, props, m.vocab);
+                    }
+                }
+                *cpu_s += t.elapsed().as_secs_f64();
+                Ok(0)
+            }
+            DrafterKind::Eagle => {
+                let ectx = self.rt.cfg.eagle.ctx;
+                let need: Vec<usize> = (0..m.slots)
+                    .filter(|&i| {
+                        self.slots[i]
+                            .as_ref()
+                            .map(|s| s.phase == Phase::ReadyVerify && s.drafts.is_empty())
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                if need.is_empty() {
+                    return Ok(0);
+                }
+                // k sequential head calls, batched across slots.
+                let mut ctxs: Vec<Vec<i32>> = vec![vec![0; ectx]; m.slots];
+                for &i in &need {
+                    let slot = self.slots[i].as_ref().unwrap();
+                    let full = slot.full_context();
+                    let tail = &full[full.len().saturating_sub(ectx)..];
+                    let mut c = vec![0i32; ectx];
+                    c[ectx - tail.len()..].copy_from_slice(tail);
+                    ctxs[i] = c;
+                }
+                let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
+                let mut launches = 0;
+                for _ in 0..k {
+                    let flat: Vec<i32> = ctxs.iter().flatten().copied().collect();
+                    let logits = self.runner.eagle(&flat)?;
+                    launches += 1;
+                    for &i in &need {
+                        let row = &logits[i * m.vocab..(i + 1) * m.vocab];
+                        let t = sampling::argmax(row) as i32;
+                        proposals[i].push(t);
+                        ctxs[i].rotate_left(1);
+                        let last = ctxs[i].len() - 1;
+                        ctxs[i][last] = t;
+                    }
+                }
+                comp.gemm_rows += need.len(); // head rows are tiny
+                let t = Instant::now();
+                for &i in &need {
+                    let slot = self.slots[i].as_mut().unwrap();
+                    let kk = k.min(slot.remaining().max(1));
+                    let props = proposals[i][..kk].to_vec();
+                    set_proposals(slot, props, m.vocab);
+                }
+                *cpu_s += t.elapsed().as_secs_f64();
+                Ok(launches)
+            }
+            DrafterKind::TriForce { w } => {
+                let need: Vec<usize> = (0..m.slots)
+                    .filter(|&i| {
+                        self.slots[i]
+                            .as_ref()
+                            .map(|s| s.phase == Phase::ReadyVerify && s.drafts.is_empty())
+                            .unwrap_or(false)
+                    })
+                    .collect();
+                if need.is_empty() {
+                    return Ok(0);
+                }
+                let q = self.cfg.k + 1;
+                let t = Instant::now();
+                let mut tokens = vec![0i32; m.slots * q];
+                let mut pos = vec![0i32; m.slots];
+                let mut qv = vec![1i32; m.slots];
+                let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
+                let mut active = vec![0i32; m.slots];
+                let mut props: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
+                for &i in &need {
+                    let slot = self.slots[i].as_ref().unwrap();
+                    // level-1: n-gram chunk proposal
+                    let mut p = slot.ngram.propose(self.cfg.k);
+                    if p.is_empty() {
+                        // no match: degenerate to the window model's own
+                        // prediction chain (propose anchor continuation)
+                        p = vec![slot.pending; 1];
+                    }
+                    p.truncate(self.cfg.k);
+                    tokens[i * q] = slot.pending;
+                    for (j, &pt) in p.iter().enumerate() {
+                        tokens[i * q + 1 + j] = pt;
+                    }
+                    qv[i] = (1 + p.len()) as i32;
+                    pos[i] = slot.len as i32;
+                    let composed = slot.pillar.compose(slot.len + q);
+                    let base = i * m.layers * m.kv_heads * w;
+                    idxs[base..base + composed.len()].copy_from_slice(&composed);
+                    active[i] = 1;
+                    props[i] = p;
+                }
+                *cpu_s += t.elapsed().as_secs_f64();
+                comp.gemm_rows += need.len() * q;
+                comp.attn_bytes += need.len() * w * m.kv_bytes_per_token();
+                let logits = self.runner.sparse_verify(&tokens, &pos, &qv, &idxs, &active)?;
+
+                let t = Instant::now();
+                for &i in &need {
+                    let slot = self.slots[i].as_mut().unwrap();
+                    // middle layer: greedy-match proposals under the window
+                    // model; corrected draft = matched prefix + window pick.
+                    let v = m.vocab;
+                    let rows = &logits[i * q * v..(i + 1) * q * v];
+                    let mut mid: Vec<i32> = Vec::new();
+                    for (j, &pt) in props[i].iter().enumerate() {
+                        let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
+                        if e == pt {
+                            mid.push(pt);
+                        } else {
+                            mid.push(e);
+                            break;
+                        }
+                    }
+                    if mid.len() < self.cfg.k.min(slot.remaining().max(1)) {
+                        // window model's bonus guess extends the chain
+                        let j = mid.len();
+                        if j < q - 1 {
+                            let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
+                            if mid.last() != Some(&e) || j == 0 {
+                                // only if it continues the fed sequence
+                            }
+                            let _ = e;
+                        }
+                    }
+                    // KV frontier: the sparse_verify wrote qv rows; but only
+                    // the anchor row (and later the verified rows) matter —
+                    // verification overwrites everything it validates.
+                    let kk = self.cfg.k.min(slot.remaining().max(1));
+                    mid.truncate(kk);
+                    set_proposals(slot, mid, m.vocab);
+                }
+                *cpu_s += t.elapsed().as_secs_f64();
+                Ok(1)
+            }
+            _ => Ok(0),
+        }
+    }
+
+    /// Dense verification for all ReadyVerify slots.
+    fn verify_step(&mut self, comp: &mut IterComposition, cpu_s: &mut f64) -> Result<u32> {
+        let m = self.mcfg().clone();
+        let q = self.cfg.k + 1;
+        let t_cpu = Instant::now();
+        let mut tokens = vec![0i32; m.slots * q];
+        let mut pos = vec![0i32; m.slots];
+        let mut qv = vec![1i32; m.slots];
+        let mut active = vec![0i32; m.slots];
+        let mut participating = Vec::new();
+        for i in 0..m.slots {
+            let Some(slot) = self.slots[i].as_ref() else { continue };
+            if slot.phase != Phase::ReadyVerify {
+                continue;
+            }
+            participating.push(i);
+            tokens[i * q] = slot.anchor;
+            for (j, &d) in slot.drafts.iter().enumerate().take(q - 1) {
+                tokens[i * q + 1 + j] = d;
+            }
+            qv[i] = (1 + slot.drafts.len()) as i32;
+            pos[i] = slot.round_start_len as i32;
+            active[i] = 1;
+        }
+        if participating.is_empty() {
+            return Ok(0);
+        }
+        comp.verifying = participating.len();
+        for &i in &participating {
+            let slot = self.slots[i].as_ref().unwrap();
+            comp.gemm_rows += 1 + slot.drafts.len();
+            comp.attn_bytes +=
+                (slot.round_start_len + 1 + slot.drafts.len()) * m.kv_bytes_per_token();
+        }
+        *cpu_s += t_cpu.elapsed().as_secs_f64();
+
+        let out = self.runner.verify(q, &tokens, &pos, &qv, &active)?;
+
+        // Process: acceptance + pillar refresh.  In delayed mode the CPU
+        // part runs on the worker pool and is consumed next iteration.
+        let v = m.vocab;
+        let t_dim = m.max_seq;
+        let per_dump = m.layers * m.kv_heads * t_dim;
+        let is_pillar = matches!(self.cfg.drafter, DrafterKind::Pillar { .. });
+        let temp = self.cfg.temperature;
+
+        let mut works: Vec<VerifyWork> = Vec::new();
+        for &i in &participating {
+            let slot = self.slots[i].as_ref().unwrap();
+            let drafts = slot.drafts.clone();
+            let dprobs = slot.draft_probs.clone();
+            let logits = out.logits[i * q * v..(i + 1) * q * v].to_vec();
+            let dump = if is_pillar {
+                Some(out.dump[i * per_dump..(i + 1) * per_dump].to_vec())
+            } else {
+                None
+            };
+            let rsl = slot.round_start_len;
+            let mut pillar = slot.pillar.clone();
+            let seed = self.rng.next_u64();
+            let job = move || {
+                let t0 = Instant::now();
+                let res = if temp > 0.0 {
+                    let mut rng = Xoshiro256::new(seed);
+                    sampling::verify_stochastic(&drafts, &dprobs, &logits, v, temp, &mut rng)
+                } else {
+                    sampling::verify_greedy(&drafts, &logits, v)
+                };
+                let new_len = rsl + res.accepted + 1;
+                let pillar_out = dump.map(|d| {
+                    pillar.refresh(&d, t_dim, new_len);
+                    pillar
+                });
+                VerifyWork {
+                    slot_idx: i,
+                    accepted: res.accepted,
+                    next_token: res.next_token,
+                    pillar: pillar_out,
+                    cpu_s: t0.elapsed().as_secs_f64(),
+                }
+            };
+            if self.cfg.delayed_verify {
+                self.slots[i].as_mut().unwrap().phase = Phase::AwaitVerify;
+                self.delayed.push(Promise::spawn_on(&self.pool, job));
+            } else {
+                works.push(job());
+            }
+        }
+        if !works.is_empty() {
+            let mut c = 0.0;
+            for w in works {
+                c += w.cpu_s;
+                self.apply_verify(w)?;
+            }
+            *cpu_s += c;
+            self.post_verify(&participating)?;
+        }
+        Ok(1)
+    }
+
+    fn collect_delayed(&mut self) -> Result<f64> {
+        if self.delayed.is_empty() {
+            return Ok(0.0);
+        }
+        let promises = std::mem::take(&mut self.delayed);
+        let mut boundary = Vec::new();
+        let mut stall = 0.0;
+        for p in promises {
+            let t0 = Instant::now();
+            let w = p.get(); // usually already done: ran during GPU work
+            stall += t0.elapsed().as_secs_f64();
+            boundary.push(w.slot_idx);
+            self.apply_verify(w)?;
+        }
+        self.post_verify(&boundary)?;
+        Ok(stall)
+    }
+
+    fn apply_verify(&mut self, w: VerifyWork) -> Result<()> {
+        let Some(slot) = self.slots[w.slot_idx].as_mut() else {
+            return Ok(());
+        };
+        let drafted = slot.drafts.len();
+        self.accept.record(drafted, w.accepted);
+        let old_len = slot.len;
+        let new_len = slot.round_start_len + w.accepted + 1;
+
+        // Accepted tokens + correction/bonus token enter the output.
+        let take = w.accepted.min(slot.remaining());
+        for j in 0..take {
+            slot.output.push(slot.drafts[j]);
+        }
+        let mut newly: Vec<i32> = slot.drafts[..take].to_vec();
+        slot.gen_count += take;
+        if slot.remaining() > 0 {
+            slot.output.push(w.next_token);
+            slot.gen_count += 1;
+            newly.push(w.next_token);
+        }
+        self.tokens_generated += newly.len() as u64;
+        slot.ngram.extend(&newly);
+        slot.pending = w.next_token;
+        slot.len = new_len;
+        if let Some(p) = w.pillar {
+            slot.pillar = p;
+        }
+        let id = slot.req.id;
+        if new_len > old_len {
+            self.kv.grow(id, new_len - old_len);
+        } else {
+            self.kv.shrink(id, old_len - new_len);
+        }
+        Ok(())
+    }
+
+    /// Retirement, pressure and round restart for slots that just finished
+    /// verification.
+    fn post_verify(&mut self, indices: &[usize]) -> Result<()> {
+        for &i in indices {
+            let Some(slot) = self.slots[i].as_ref() else { continue };
+            if slot.done() {
+                let slot = self.slots[i].take().unwrap();
+                self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
+                self.kv.release(slot.req.id);
+                let mut out = slot.output;
+                out.truncate(slot.req.max_new);
+                self.outputs.insert(slot.req.id, out);
+                self.latency
+                    .record(slot.admitted_at.elapsed().as_secs_f64());
+                self.requests_done += 1;
+            }
+        }
+        self.handle_pressure(indices)?;
+        for &i in indices {
+            if let Some(slot) = self.slots[i].as_mut() {
+                if slot.phase == Phase::ReadyVerify || slot.phase == Phase::AwaitVerify {
+                    let target = self.next_round_target(self.slots[i].as_ref().unwrap());
+                    self.slots[i].as_mut().unwrap().begin_round(target);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Install proposal tokens as the slot's drafts (with one-hot q for the
+/// stochastic verifier, since proposals are deterministic).
+fn set_proposals(slot: &mut Slot, props: Vec<i32>, vocab: usize) {
+    slot.draft_probs.clear();
+    for &p in &props {
+        let mut onehot = vec![0.0f32; vocab];
+        onehot[p as usize] = 1.0;
+        slot.draft_probs.extend(onehot);
+    }
+    slot.drafts = props;
+    slot.phase = Phase::ReadyVerify;
+}

@@ -1,0 +1,138 @@
+//! The SparseSpec serving engine (Layer 3).
+//!
+//! One `Engine` drives one drafter configuration over a request trace:
+//! admission → (draft* → verify) rounds → acceptance/rollback → retire,
+//! with the unified batch scheduler (§4.2), delayed verification (§4.3)
+//! and the dynamic KV manager (§4.4) wired in.  Every baseline of the
+//! paper's evaluation runs through this same engine with a different
+//! `DrafterKind`, so comparisons isolate the drafting/scheduling policy.
+//!
+//! Timing is accounted twice (DESIGN.md §1):
+//! * **wallclock** — real time on this CPU testbed (PJRT executes the AOT
+//!   artifacts; shapes are static, so inactive batch rows cost as much as
+//!   active ones), and
+//! * **simulated** — the calibrated H100 `DeviceModel` applied to the
+//!   engine's *real* per-iteration schedule (rows drafted/verified, KV
+//!   bytes actually touched).  Scheduling experiments (Figs. 13/14) read
+//!   the simulated clock; acceptance and correctness are identical.
+
+mod core;
+mod slot;
+
+pub use self::core::Engine;
+pub use slot::{Phase, Slot};
+
+use crate::kv_cache::KvPolicy;
+use crate::scheduler::Schedule;
+use crate::spec::{AcceptStats, DrafterKind};
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub drafter: DrafterKind,
+    /// Draft length k (verification uses the verify_q{k+1} artifact).
+    pub k: usize,
+    pub schedule: Schedule,
+    /// Overlap verification CPU work with the next iteration (§4.3).
+    pub delayed_verify: bool,
+    pub kv_policy: KvPolicy,
+    /// Device KV capacity in tokens (models HBM; < slots×max_seq so the
+    /// §4.4 policies are exercised).
+    pub kv_budget: usize,
+    /// 0.0 => greedy (deterministic); paper uses 0.65.
+    pub temperature: f32,
+    pub seed: u64,
+    /// Safety valve for tests/benches.
+    pub max_iterations: u64,
+    pub verbose: bool,
+    /// Simulated-clock calibration (None => paper scale; see perfmodel).
+    pub sim_scale: Option<crate::perfmodel::SimScale>,
+}
+
+impl EngineConfig {
+    pub fn new(drafter: DrafterKind) -> Self {
+        EngineConfig {
+            drafter,
+            k: 8,
+            schedule: Schedule::Lockstep,
+            delayed_verify: false,
+            kv_policy: KvPolicy::Dynamic,
+            kv_budget: usize::MAX / 2, // effectively unbounded by default
+            temperature: 0.0,
+            seed: 7,
+            max_iterations: 1_000_000,
+            verbose: false,
+            sim_scale: None,
+        }
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule, delayed: bool) -> Self {
+        self.schedule = s;
+        self.delayed_verify = delayed;
+        self
+    }
+
+    pub fn with_kv(mut self, policy: KvPolicy, budget: usize) -> Self {
+        self.kv_policy = policy;
+        self.kv_budget = budget;
+        self
+    }
+}
+
+/// Everything a run produces (one row of the paper's figures).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub name: String,
+    pub iterations: u64,
+    pub wall_s: f64,
+    /// Simulated H100 time of the same schedule.
+    pub sim_s: f64,
+    pub sim_cpu_s: f64,
+    pub requests_done: usize,
+    pub tokens_generated: u64,
+    pub accept: AcceptStats,
+    pub kv: crate::kv_cache::KvStats,
+    pub offload: crate::kv_cache::OffloadStats,
+    pub trace: crate::scheduler::ScheduleTrace,
+    pub step_stats: crate::runtime::StepStats,
+    /// Mean device-KV utilisation over the run (Fig. 5).
+    pub mean_kv_util: f64,
+    /// Outputs per request id (for losslessness checks).
+    pub outputs: std::collections::BTreeMap<u64, Vec<i32>>,
+    pub request_latency_s: crate::metrics::Histogram,
+}
+
+impl RunReport {
+    pub fn wall_tok_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn sim_tok_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.sim_s.max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} reqs={:<4} toks={:<6} iters={:<5} wall={:>7.2}s ({:>7.1} tok/s) \
+             sim={:>7.3}s ({:>8.1} tok/s) acc/rnd={:>5.2} α={:>4.2} kv_util={:>4.2} \
+             offl={} recomp={}",
+            self.name,
+            self.requests_done,
+            self.tokens_generated,
+            self.iterations,
+            self.wall_s,
+            self.wall_tok_s(),
+            self.sim_s,
+            self.sim_tok_s(),
+            self.accept.mean_accepted(),
+            self.accept.alpha(),
+            self.mean_kv_util,
+            self.kv.offload_events,
+            self.kv.recomputed_tokens,
+        )
+    }
+}

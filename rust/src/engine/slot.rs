@@ -1,0 +1,80 @@
+//! Per-slot request state.
+
+use crate::spec::{NGramIndex, PillarState};
+use crate::workload::Request;
+
+/// Where a slot is inside its speculation round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Running sparse draft steps (self-spec) or collecting proposals.
+    Drafting,
+    /// Draft buffer full; waiting for the verification iteration.
+    ReadyVerify,
+    /// Verification launched; result consumed next iteration (§4.3).
+    AwaitVerify,
+}
+
+/// One resident request.
+pub struct Slot {
+    pub req: Request,
+    /// KV frontier: positions [0, len) hold valid keys/values.
+    pub len: usize,
+    /// Accepted generated tokens so far (== output.len()).
+    pub gen_count: usize,
+    /// Next token to feed (sampled, KV not yet written).
+    pub pending: i32,
+    /// Anchor = round-start pending token (first token fed this round).
+    pub anchor: i32,
+    /// Anchor position == KV frontier at round start.
+    pub round_start_len: usize,
+    /// Drafted (provisional) tokens this round, in order.
+    pub drafts: Vec<i32>,
+    /// Draft distributions (k rows × vocab) for stochastic verification.
+    pub draft_probs: Vec<f32>,
+    /// How many drafts to take this round (shortened first round aligns
+    /// the slot with its bucket — Fig. 8).
+    pub draft_target: usize,
+    pub phase: Phase,
+    pub bucket: usize,
+    /// PillarAttn / window critical-token state.
+    pub pillar: PillarState,
+    /// N-gram history index (NGram + TriForce drafters).
+    pub ngram: NGramIndex,
+    /// Accepted output tokens.
+    pub output: Vec<i32>,
+    /// Wallclock admission time (for latency accounting).
+    pub admitted_at: std::time::Instant,
+    /// Simulated-clock admission time.
+    pub sim_admitted_at: f64,
+}
+
+impl Slot {
+    pub fn remaining(&self) -> usize {
+        self.req.max_new.saturating_sub(self.gen_count)
+    }
+
+    pub fn done(&self) -> bool {
+        self.gen_count >= self.req.max_new
+    }
+
+    /// The token sequence so far (prompt + accepted output).
+    pub fn full_context(&self) -> Vec<i32> {
+        let mut v = self.req.prompt.clone();
+        v.extend_from_slice(&self.output);
+        v
+    }
+
+    /// Start a fresh speculation round.
+    pub fn begin_round(&mut self, draft_target: usize) {
+        self.anchor = self.pending;
+        self.round_start_len = self.len;
+        self.drafts.clear();
+        self.draft_probs.clear();
+        self.draft_target = draft_target;
+        self.phase = if draft_target == 0 {
+            Phase::ReadyVerify
+        } else {
+            Phase::Drafting
+        };
+    }
+}

@@ -1,0 +1,373 @@
+//! Dynamic KV-cache management (§4.4) — the two-tier (device/host) pool.
+//!
+//! Design: the engine owns S device *slots* (the compute batch dimension);
+//! this module owns the *capacity policy* over a token budget that models
+//! HBM (the budget is deliberately smaller than S×T so the policies are
+//! exercised, exactly like real HBM runs out before slots do on long
+//! reasoning outputs).  Three policies reproduce Fig. 5:
+//!
+//! * `Conservative` — reserve worst-case length at admission; never
+//!   offloads, never recomputes, *underutilises*.
+//! * `Preempt` — admit optimistically; on pressure, evict a victim and
+//!   restart it later (recomputation).
+//! * `Dynamic` (SparseSpec) — admit optimistically; on pressure, offload
+//!   the *newest-admitted* resident's KV to host RAM chunk-by-chunk via the
+//!   async copier, reload FIFO when space frees: full utilisation, zero
+//!   recomputation.
+
+pub mod offload;
+
+pub use offload::{OffloadEngine, OffloadJob, OffloadStats};
+
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPolicy {
+    Conservative,
+    Preempt,
+    Dynamic,
+}
+
+impl KvPolicy {
+    pub fn parse(s: &str) -> Option<KvPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "conservative" => Some(KvPolicy::Conservative),
+            "preempt" | "preemption" => Some(KvPolicy::Preempt),
+            "dynamic" | "sparsespec" => Some(KvPolicy::Dynamic),
+            _ => None,
+        }
+    }
+}
+
+/// A request's KV rows pulled to the host tier: [L, T, Hkv, D] each,
+/// padded beyond `len` (only `len` positions are meaningful).
+#[derive(Clone)]
+pub struct HostKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+}
+
+/// What the engine must do about memory pressure this iteration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PressureAction {
+    /// Move this resident request's KV to host and free its slot.
+    Offload { req_id: u64 },
+    /// Drop this resident request's KV and re-enqueue it (recompute).
+    Preempt { req_id: u64 },
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct KvStats {
+    pub offload_events: u64,
+    pub offloaded_tokens: u64,
+    pub reload_events: u64,
+    pub recompute_events: u64,
+    pub recomputed_tokens: u64,
+    pub peak_used_tokens: usize,
+    pub admitted: u64,
+    pub rejected_conservative: u64,
+}
+
+/// Token-budget accounting + policy.  The engine reports growth/release;
+/// `check_pressure` returns actions; `host` holds offloaded KV.
+pub struct KvManager {
+    pub policy: KvPolicy,
+    /// Device token capacity (the modelled HBM size).
+    pub budget: usize,
+    /// Worst-case length used by the conservative reservation.
+    pub worst_case: usize,
+    used: usize,
+    reserved: usize,
+    /// Resident request lengths, in admission order (FIFO for fairness —
+    /// §4.4 "both offloading and loading follow the FIFO order").
+    resident: BTreeMap<u64, usize>,
+    admission_order: VecDeque<u64>,
+    /// Offloaded requests, FIFO for reload priority.
+    pub host: BTreeMap<u64, HostKv>,
+    reload_queue: VecDeque<u64>,
+    pub stats: KvStats,
+}
+
+impl KvManager {
+    pub fn new(policy: KvPolicy, budget: usize, worst_case: usize) -> Self {
+        KvManager {
+            policy,
+            budget,
+            worst_case,
+            used: 0,
+            reserved: 0,
+            resident: BTreeMap::new(),
+            admission_order: VecDeque::new(),
+            host: BTreeMap::new(),
+            reload_queue: VecDeque::new(),
+            stats: KvStats::default(),
+        }
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.used
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used as f64 / self.budget as f64
+    }
+
+    /// Can a new request with `initial` tokens be admitted now?
+    pub fn can_admit(&mut self, initial: usize) -> bool {
+        match self.policy {
+            KvPolicy::Conservative => {
+                // Reserve the worst case; reject if it would not fit.
+                if self.reserved + self.worst_case <= self.budget {
+                    true
+                } else {
+                    self.stats.rejected_conservative += 1;
+                    false
+                }
+            }
+            // Optimistic: admit whenever current usage + prompt fits.
+            KvPolicy::Preempt | KvPolicy::Dynamic => self.used + initial <= self.budget,
+        }
+    }
+
+    pub fn admit(&mut self, req_id: u64, initial: usize) {
+        self.resident.insert(req_id, initial);
+        self.admission_order.push_back(req_id);
+        self.used += initial;
+        if self.policy == KvPolicy::Conservative {
+            self.reserved += self.worst_case;
+        }
+        self.stats.admitted += 1;
+        self.stats.peak_used_tokens = self.stats.peak_used_tokens.max(self.used);
+    }
+
+    /// A resident request grew by `n` tokens.
+    pub fn grow(&mut self, req_id: u64, n: usize) {
+        if let Some(len) = self.resident.get_mut(&req_id) {
+            *len += n;
+            self.used += n;
+            self.stats.peak_used_tokens = self.stats.peak_used_tokens.max(self.used);
+        }
+    }
+
+    /// Rollback: a verification rejected drafted tokens, shrinking the
+    /// valid KV frontier by `n`.
+    pub fn shrink(&mut self, req_id: u64, n: usize) {
+        if let Some(len) = self.resident.get_mut(&req_id) {
+            let d = n.min(*len);
+            *len -= d;
+            self.used -= d;
+        }
+    }
+
+    /// A resident request finished; free its tokens.
+    pub fn release(&mut self, req_id: u64) {
+        if let Some(len) = self.resident.remove(&req_id) {
+            self.used -= len;
+            self.admission_order.retain(|&id| id != req_id);
+            if self.policy == KvPolicy::Conservative {
+                self.reserved -= self.worst_case;
+            }
+        }
+    }
+
+    /// Over budget? Return the actions to take (possibly several).
+    /// Victim choice: the *most recently admitted* resident (LIFO victim /
+    /// FIFO service): the oldest requests keep running to completion, which
+    /// is the starvation-free order of §4.4.
+    pub fn check_pressure(&mut self, protect: &[u64]) -> Vec<PressureAction> {
+        let mut actions = Vec::new();
+        if self.policy == KvPolicy::Conservative {
+            return actions; // reservations make pressure impossible
+        }
+        let mut projected = self.used;
+        let mut order = self.admission_order.clone();
+        while projected > self.budget {
+            // Scan newest-first, skipping protected (e.g. mid-verification).
+            let victim = order
+                .iter()
+                .rev()
+                .find(|id| !protect.contains(id))
+                .copied();
+            let Some(victim) = victim else { break };
+            order.retain(|&id| id != victim);
+            let len = self.resident.get(&victim).copied().unwrap_or(0);
+            projected -= len;
+            actions.push(match self.policy {
+                KvPolicy::Preempt => PressureAction::Preempt { req_id: victim },
+                KvPolicy::Dynamic => PressureAction::Offload { req_id: victim },
+                KvPolicy::Conservative => unreachable!(),
+            });
+        }
+        actions
+    }
+
+    /// Engine completed an offload: store the host copy.
+    pub fn complete_offload(&mut self, req_id: u64, kv: HostKv) {
+        let len = self.resident.remove(&req_id).unwrap_or(kv.len);
+        self.used -= len;
+        self.admission_order.retain(|&id| id != req_id);
+        self.stats.offload_events += 1;
+        self.stats.offloaded_tokens += len as u64;
+        self.host.insert(req_id, kv);
+        self.reload_queue.push_back(req_id);
+    }
+
+    /// Engine completed a preemption: account the recompute.
+    pub fn complete_preempt(&mut self, req_id: u64) {
+        if let Some(len) = self.resident.remove(&req_id) {
+            self.used -= len;
+            self.admission_order.retain(|&id| id != req_id);
+            self.stats.recompute_events += 1;
+            self.stats.recomputed_tokens += len as u64;
+        }
+    }
+
+    /// If capacity allows, pop the next offloaded request to reload
+    /// (§4.4: "prioritizes scheduling the offloaded requests whenever GPU
+    /// has available memory").
+    pub fn try_reload(&mut self) -> Option<(u64, HostKv)> {
+        let id = *self.reload_queue.front()?;
+        let len = self.host.get(&id)?.len;
+        if self.used + len + 16 > self.budget {
+            return None;
+        }
+        self.reload_queue.pop_front();
+        let kv = self.host.remove(&id)?;
+        self.stats.reload_events += 1;
+        Some((id, kv))
+    }
+
+    pub fn has_offloaded(&self) -> bool {
+        !self.host.is_empty()
+    }
+
+    pub fn resident_len(&self, req_id: u64) -> Option<usize> {
+        self.resident.get(&req_id).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest;
+
+    #[test]
+    fn conservative_reserves_worst_case() {
+        let mut kv = KvManager::new(KvPolicy::Conservative, 1000, 400);
+        assert!(kv.can_admit(50));
+        kv.admit(1, 50);
+        assert!(kv.can_admit(50));
+        kv.admit(2, 50);
+        // Two reservations of 400 leave no room for a third.
+        assert!(!kv.can_admit(50));
+        assert_eq!(kv.stats.rejected_conservative, 1);
+        // Utilisation stays low even though budget is mostly unused.
+        assert!(kv.utilization() < 0.2);
+        // Conservative never produces pressure actions.
+        kv.grow(1, 300);
+        assert!(kv.check_pressure(&[]).is_empty());
+    }
+
+    #[test]
+    fn dynamic_offloads_newest_first() {
+        let mut kv = KvManager::new(KvPolicy::Dynamic, 300, 400);
+        kv.admit(1, 100);
+        kv.admit(2, 100);
+        kv.admit(3, 80);
+        kv.grow(1, 50); // used = 330 > 300
+        let a = kv.check_pressure(&[]);
+        assert_eq!(a, vec![PressureAction::Offload { req_id: 3 }]);
+        kv.complete_offload(3, HostKv { k: vec![], v: vec![], len: 80 });
+        assert_eq!(kv.used_tokens(), 250);
+        assert!(kv.has_offloaded());
+    }
+
+    #[test]
+    fn preempt_counts_recompute() {
+        let mut kv = KvManager::new(KvPolicy::Preempt, 200, 400);
+        kv.admit(1, 150);
+        kv.admit(2, 60); // 210 > 200
+        let a = kv.check_pressure(&[]);
+        assert_eq!(a, vec![PressureAction::Preempt { req_id: 2 }]);
+        kv.complete_preempt(2);
+        assert_eq!(kv.stats.recomputed_tokens, 60);
+        assert_eq!(kv.used_tokens(), 150);
+    }
+
+    #[test]
+    fn reload_fifo_and_capacity_gated() {
+        let mut kv = KvManager::new(KvPolicy::Dynamic, 300, 400);
+        kv.admit(1, 280);
+        kv.admit(2, 10);
+        kv.admit(3, 20); // 310 > 300
+        for act in kv.check_pressure(&[]) {
+            if let PressureAction::Offload { req_id } = act {
+                let len = kv.resident_len(req_id).unwrap();
+                kv.complete_offload(req_id, HostKv { k: vec![], v: vec![], len });
+            }
+        }
+        // No room to reload while request 1 occupies 280 of 300.
+        assert!(kv.try_reload().is_none());
+        kv.release(1);
+        let (id, _) = kv.try_reload().expect("reload after release");
+        assert_eq!(id, 3); // FIFO: 3 was offloaded first
+    }
+
+    #[test]
+    fn protected_requests_not_victimised() {
+        let mut kv = KvManager::new(KvPolicy::Dynamic, 100, 400);
+        kv.admit(1, 60);
+        kv.admit(2, 60);
+        let a = kv.check_pressure(&[2]);
+        assert_eq!(a, vec![PressureAction::Offload { req_id: 1 }]);
+    }
+
+    ptest!(accounting_never_negative_and_conserves, |g| {
+        let policy = *g.pick(&[KvPolicy::Preempt, KvPolicy::Dynamic]);
+        let budget = g.usize(100, 2000);
+        let mut kv = KvManager::new(policy, budget, budget / 2);
+        let mut live: Vec<u64> = Vec::new();
+        let mut expected: i64 = 0;
+        for step in 0..g.usize(10, 200) {
+            let id = step as u64;
+            let n = g.usize(1, 80);
+            if kv.can_admit(n) && g.bool(0.6) {
+                kv.admit(id, n);
+                live.push(id);
+                expected += n as i64;
+            } else if !live.is_empty() && g.bool(0.5) {
+                let idx = g.usize(0, live.len() - 1);
+                let victim = live[idx];
+                let grow = g.usize(1, 30);
+                kv.grow(victim, grow);
+                expected += grow as i64;
+            } else if !live.is_empty() {
+                let idx = g.usize(0, live.len() - 1);
+                let victim = live.remove(idx);
+                expected -= kv.resident_len(victim).unwrap_or(0) as i64;
+                kv.release(victim);
+            }
+            for act in kv.check_pressure(&[]) {
+                match act {
+                    PressureAction::Offload { req_id } => {
+                        let len = kv.resident_len(req_id).unwrap();
+                        expected -= len as i64;
+                        kv.complete_offload(
+                            req_id,
+                            HostKv { k: vec![], v: vec![], len },
+                        );
+                        live.retain(|&x| x != req_id);
+                    }
+                    PressureAction::Preempt { req_id } => {
+                        expected -= kv.resident_len(req_id).unwrap() as i64;
+                        kv.complete_preempt(req_id);
+                        live.retain(|&x| x != req_id);
+                    }
+                }
+            }
+            assert_eq!(kv.used_tokens() as i64, expected, "accounting drift");
+            assert!(kv.used_tokens() <= budget + 80 + 30, "unbounded overshoot");
+        }
+    });
+}

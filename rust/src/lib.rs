@@ -1,0 +1,30 @@
+//! # SparseSpec — sparse self-speculative decoding for reasoning-model serving
+//!
+//! Reproduction of "Accelerating Large-Scale Reasoning Model Inference:
+//! Self-Speculative Decoding with Sparse Attention" as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): PillarAttn sparse attention,
+//!   dense verification attention with zero-overhead score dumping, and the
+//!   fused draft+verify kernel — Pallas, with pure-jnp oracles.
+//! * **Layer 2** (`python/compile/model.py`): Qwen3-shaped decoder step
+//!   functions, AOT-lowered once to HLO text (`make artifacts`).
+//! * **Layer 3** (this crate): the serving coordinator — unified batch
+//!   scheduler, delayed verification, dynamic two-tier KV-cache manager,
+//!   PillarAttn critical-token state, all baselines, the benchmark harness.
+//!
+//! Python never runs on the request path: the Rust binary loads the HLO
+//! artifacts through PJRT (`runtime`) and owns the entire serving loop.
+
+pub mod bench;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod spec;
+pub mod util;
+pub mod workload;

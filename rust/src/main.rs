@@ -1,0 +1,131 @@
+//! SparseSpec CLI — the Layer-3 launcher.
+//!
+//! Subcommands:
+//!   serve   run one engine configuration over a generated workload
+//!   bench   regenerate a paper table/figure (or `all`)
+//!   info    show artifact + config summary
+//!
+//! Examples:
+//!   sparsespec serve --drafter pillar --dataset aime --requests 16 --k 8
+//!   sparsespec bench fig10
+//!   sparsespec bench all --out reports
+
+use std::rc::Rc;
+
+use sparsespec::bench::{run_named, BenchCtx};
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::kv_cache::KvPolicy;
+use sparsespec::runtime::Runtime;
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
+use sparsespec::util::cli::Args;
+use sparsespec::workload::{Dataset, WorkloadGen};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sparsespec <serve|bench|info> [flags]\n\
+         serve flags: --drafter vanilla|pillar|magicdec|oracle|ngram|eagle|triforce\n\
+         \x20            --dataset aime|olympiad|livecode|short  --requests N  --k K  --w W\n\
+         \x20            --schedule lockstep|unified  --delayed  --kv-policy conservative|preempt|dynamic\n\
+         \x20            --kv-budget TOKENS  --temp T  --seed S  --online-rate R --horizon SECS\n\
+         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 all\n\
+         common: --artifacts DIR (default ./artifacts)  --out DIR (default ./reports)"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let artifacts = args.str("artifacts", "artifacts");
+    match cmd {
+        "info" => {
+            let rt = Runtime::load(&artifacts)?;
+            println!("platform: {}", rt.client.platform_name());
+            println!("model: {:?}", rt.cfg.model);
+            println!("params: {} (trained: {})", rt.cfg.n_params, rt.cfg.trained);
+            println!("artifacts ({}):", rt.cfg.artifacts.len());
+            for (name, info) in &rt.cfg.artifacts {
+                println!("  {name:<16} {}", info.file);
+            }
+            Ok(())
+        }
+        "serve" => {
+            let rt = Rc::new(Runtime::load(&artifacts)?);
+            let w = args.usize("w", rt.cfg.model.draft_budget);
+            let n = args.usize("ngram-n", 3);
+            let drafter = DrafterKind::parse(&args.str("drafter", "pillar"), w, n)
+                .unwrap_or_else(|| usage());
+            let dataset =
+                Dataset::parse(&args.str("dataset", "aime")).unwrap_or_else(|| usage());
+            let schedule = Schedule::parse(&args.str("schedule", "lockstep"))
+                .unwrap_or_else(|| usage());
+            let kv_policy = KvPolicy::parse(&args.str("kv-policy", "dynamic"))
+                .unwrap_or_else(|| usage());
+            let mut cfg = EngineConfig::new(drafter)
+                .with_k(args.usize("k", rt.cfg.model.spec_k))
+                .with_schedule(schedule, args.bool("delayed", false))
+                .with_kv(kv_policy, args.usize("kv-budget", usize::MAX / 2));
+            cfg.temperature = args.f64("temp", 0.0) as f32;
+            cfg.seed = args.u64("seed", 7);
+            cfg.verbose = args.bool("verbose", false);
+            let mut gen = WorkloadGen::new(
+                rt.cfg.grammar.clone(),
+                rt.cfg.model.clone(),
+                dataset,
+                args.u64("seed", 7),
+            );
+            let reqs = if let Some(path) = args.opt("trace-in") {
+                sparsespec::workload::trace::load(path)?
+            } else if let Some(rate) = args.opt("online-rate") {
+                let rate: f64 = rate.parse().unwrap_or(2.0);
+                gen.online_trace(rate, args.f64("horizon", 30.0))
+            } else {
+                gen.offline_batch(args.usize("requests", 12))
+            };
+            if let Some(path) = args.opt("trace-out") {
+                sparsespec::workload::trace::save(path, &reqs)?;
+                println!("trace saved to {path}");
+            }
+            println!(
+                "serving {} {} requests with {}",
+                reqs.len(),
+                dataset.name(),
+                drafter.name()
+            );
+            let mut engine = Engine::new(rt, cfg)?;
+            let report = engine.run(reqs)?;
+            println!("{}", report.summary());
+            let mut lat = report.request_latency_s.clone();
+            if lat.len() > 0 {
+                println!(
+                    "request latency: p50={:.2}s p99={:.2}s",
+                    lat.percentile(50.0),
+                    lat.percentile(99.0)
+                );
+            }
+            if args.bool("stats", false) {
+                println!("\nper-artifact phase times (s):");
+                println!(
+                    "{:<16} {:>6} {:>9} {:>9} {:>9}",
+                    "artifact", "calls", "upload", "exec", "fetch"
+                );
+                for (name, p) in &report.step_stats.per_artifact {
+                    println!(
+                        "{:<16} {:>6} {:>9.3} {:>9.3} {:>9.3}",
+                        name, p.calls, p.upload_s, p.exec_s, p.fetch_s
+                    );
+                }
+            }
+            Ok(())
+        }
+        "bench" => {
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let mut ctx = BenchCtx::new(&artifacts, &args.str("out", "reports"))?;
+            ctx.n_requests = args.usize("requests", 12);
+            ctx.seed = args.u64("seed", 42);
+            run_named(&mut ctx, name)
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,230 @@
+//! Metrics: counters, streaming histograms, per-phase timers, and report
+//! emission (markdown + CSV).  Built from scratch (no external crates).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Reservoir-less exact histogram: keeps all samples (our runs are at most
+/// a few hundred thousand samples, so exactness is cheaper than HDR-style
+/// bucketing and gives exact p50/p99 for the reports).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank). `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Named counters + histograms + monotonically-sampled traces.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub counters: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+    /// Time-series traces (iteration-indexed), e.g. GEMM batch size per
+    /// iteration for Fig. 14 or memory utilisation for Fig. 5.
+    pub traces: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn trace(&mut self, name: &str, v: f64) {
+        self.traces.entry(name.to_string()).or_default().push(v);
+    }
+
+    pub fn hist(&mut self, name: &str) -> &mut Histogram {
+        self.histograms.entry(name.to_string()).or_default()
+    }
+
+    /// Render a compact markdown report.
+    pub fn to_markdown(&mut self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            let _ = writeln!(out, "| counter | value |\n|---|---|");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "| {k} | {v:.4} |");
+            }
+        }
+        if !self.histograms.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n| histogram | n | mean | p50 | p99 | max |\n|---|---|---|---|---|---|"
+            );
+            let names: Vec<String> = self.histograms.keys().cloned().collect();
+            for k in names {
+                let h = self.histograms.get_mut(&k).unwrap();
+                let (n, mean, max) = (h.len(), h.mean(), h.max());
+                let p50 = h.percentile(50.0);
+                let p99 = h.percentile(99.0);
+                let _ = writeln!(
+                    out,
+                    "| {k} | {n} | {mean:.4} | {p50:.4} | {p99:.4} | {max:.4} |"
+                );
+            }
+        }
+        out
+    }
+
+    /// Dump one trace as CSV (`iter,value`).
+    pub fn trace_csv(&self, name: &str) -> String {
+        let mut out = String::from("iter,value\n");
+        if let Some(t) = self.traces.get(name) {
+            for (i, v) in t.iter().enumerate() {
+                let _ = writeln!(out, "{i},{v}");
+            }
+        }
+        out
+    }
+}
+
+/// Scoped wall-clock timer: `let _t = Stopwatch::new(); ... t.secs()`.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.min(), 1.0);
+    }
+
+    #[test]
+    fn counters_and_traces() {
+        let mut m = Metrics::new();
+        m.inc("tokens", 5.0);
+        m.inc("tokens", 3.0);
+        assert_eq!(m.get("tokens"), 8.0);
+        m.trace("bs", 4.0);
+        m.trace("bs", 6.0);
+        assert_eq!(m.traces["bs"], vec![4.0, 6.0]);
+        let csv = m.trace_csv("bs");
+        assert!(csv.contains("1,6"));
+    }
+
+    #[test]
+    fn markdown_report_renders() {
+        let mut m = Metrics::new();
+        m.inc("a", 1.0);
+        m.observe("lat", 0.5);
+        m.observe("lat", 1.5);
+        let md = m.to_markdown();
+        assert!(md.contains("| a | 1.0000 |"));
+        assert!(md.contains("| lat | 2 |"));
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let mut h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! Typed view over `artifacts/config.json`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Mirror of python/compile/config.py::ModelConfig.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub slots: usize,
+    pub prompt_pad: usize,
+    pub spec_k: usize,
+    pub draft_budget: usize,
+    pub verify_q_variants: Vec<usize>,
+    pub draft_w_variants: Vec<usize>,
+}
+
+impl ModelConfig {
+    /// KV-cache bytes for one token (all layers, K+V, f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.layers * 2 * self.kv_heads * self.head_dim * 4
+    }
+
+    /// Elements of one slot row set [L, T, Hkv, D] (one of K or V).
+    pub fn kv_slot_elems(&self) -> usize {
+        self.layers * self.max_seq * self.kv_heads * self.head_dim
+    }
+
+    /// Elements of the whole pool [L, S, T, Hkv, D].
+    pub fn kv_pool_elems(&self) -> usize {
+        self.kv_slot_elems() * self.slots
+    }
+}
+
+/// Mirror of python/compile/config.py::GrammarConfig (the synthetic
+/// reasoning-trace language; must stay bit-identical to the Python side —
+/// golden tests pin both).
+#[derive(Clone, Debug)]
+pub struct GrammarConfig {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub def_tok: i32,
+    pub qry: i32,
+    pub eq: i32,
+    pub sep: i32,
+    pub slot_base: i32,
+    pub n_slots: i32,
+    pub value_base: i32,
+    pub n_values: i32,
+    pub filler_base: i32,
+    pub n_filler: i32,
+    pub mode_base: i32,
+    pub n_modes: i32,
+    pub n_defs: i32,
+    pub redefine_prob: f64,
+    pub query_prob: f64,
+    pub focus_query_prob: f64,
+    pub focus_switch_prob: f64,
+    pub mode_mul: Vec<i32>,
+    pub mode_add: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EagleConfig {
+    pub ctx: usize,
+    pub embed: usize,
+    pub hidden: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub args: Vec<Vec<usize>>,
+}
+
+/// Everything `config.json` carries.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub model: ModelConfig,
+    pub grammar: GrammarConfig,
+    pub eagle: EagleConfig,
+    pub n_params: usize,
+    pub eagle_n_params: usize,
+    pub trained: bool,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub dir: String,
+}
+
+fn req_usize(j: &Json, path: &[&str]) -> Result<usize> {
+    j.at(path)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("config.json missing {}", path.join(".")))
+}
+
+fn req_i32(j: &Json, path: &[&str]) -> Result<i32> {
+    Ok(req_usize(j, path)? as i32)
+}
+
+fn req_f64(j: &Json, path: &[&str]) -> Result<f64> {
+    j.at(path)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("config.json missing {}", path.join(".")))
+}
+
+fn i32_list(j: &Json, path: &[&str]) -> Result<Vec<i32>> {
+    Ok(j.at(path)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("config.json missing {}", path.join(".")))?
+        .iter()
+        .filter_map(|x| x.as_i64().map(|n| n as i32))
+        .collect())
+}
+
+impl SystemConfig {
+    pub fn load(dir: &str) -> Result<SystemConfig> {
+        let path = Path::new(dir).join("config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing config.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &str) -> Result<SystemConfig> {
+        let usize_list = |p: &[&str]| -> Result<Vec<usize>> {
+            Ok(j.at(p)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing {}", p.join(".")))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect())
+        };
+        let model = ModelConfig {
+            vocab: req_usize(j, &["model", "vocab"])?,
+            hidden: req_usize(j, &["model", "hidden"])?,
+            layers: req_usize(j, &["model", "layers"])?,
+            q_heads: req_usize(j, &["model", "q_heads"])?,
+            kv_heads: req_usize(j, &["model", "kv_heads"])?,
+            head_dim: req_usize(j, &["model", "head_dim"])?,
+            ffn: req_usize(j, &["model", "ffn"])?,
+            max_seq: req_usize(j, &["model", "max_seq"])?,
+            slots: req_usize(j, &["model", "slots"])?,
+            prompt_pad: req_usize(j, &["model", "prompt_pad"])?,
+            spec_k: req_usize(j, &["model", "spec_k"])?,
+            draft_budget: req_usize(j, &["model", "draft_budget"])?,
+            verify_q_variants: usize_list(&["model", "verify_q_variants"])?,
+            draft_w_variants: usize_list(&["model", "draft_w_variants"])?,
+        };
+        let grammar = GrammarConfig {
+            pad: req_i32(j, &["grammar", "pad"])?,
+            bos: req_i32(j, &["grammar", "bos"])?,
+            eos: req_i32(j, &["grammar", "eos"])?,
+            def_tok: req_i32(j, &["grammar", "def_tok"])?,
+            qry: req_i32(j, &["grammar", "qry"])?,
+            eq: req_i32(j, &["grammar", "eq"])?,
+            sep: req_i32(j, &["grammar", "sep"])?,
+            slot_base: req_i32(j, &["grammar", "slot_base"])?,
+            n_slots: req_i32(j, &["grammar", "n_slots"])?,
+            value_base: req_i32(j, &["grammar", "value_base"])?,
+            n_values: req_i32(j, &["grammar", "n_values"])?,
+            filler_base: req_i32(j, &["grammar", "filler_base"])?,
+            n_filler: req_i32(j, &["grammar", "n_filler"])?,
+            mode_base: req_i32(j, &["grammar", "mode_base"])?,
+            n_modes: req_i32(j, &["grammar", "n_modes"])?,
+            n_defs: req_i32(j, &["grammar", "n_defs"])?,
+            redefine_prob: req_f64(j, &["grammar", "redefine_prob"])?,
+            query_prob: req_f64(j, &["grammar", "query_prob"])?,
+            focus_query_prob: req_f64(j, &["grammar", "focus_query_prob"])?,
+            focus_switch_prob: req_f64(j, &["grammar", "focus_switch_prob"])?,
+            mode_mul: i32_list(j, &["grammar", "mode_mul"])?,
+            mode_add: i32_list(j, &["grammar", "mode_add"])?,
+        };
+        let eagle = EagleConfig {
+            ctx: req_usize(j, &["eagle", "ctx"])?,
+            embed: req_usize(j, &["eagle", "embed"])?,
+            hidden: req_usize(j, &["eagle", "hidden"])?,
+        };
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts") {
+            for (name, info) in m {
+                let file = info
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .to_string();
+                let args = info
+                    .get("args")
+                    .and_then(|a| a.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|shape| {
+                                shape
+                                    .as_arr()
+                                    .unwrap_or(&[])
+                                    .iter()
+                                    .filter_map(|d| d.as_usize())
+                                    .collect()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                artifacts.insert(name.clone(), ArtifactInfo { file, args });
+            }
+        }
+        Ok(SystemConfig {
+            model,
+            grammar,
+            eagle,
+            n_params: req_usize(j, &["n_params"])?,
+            eagle_n_params: req_usize(j, &["eagle_n_params"])?,
+            trained: j.get("trained").and_then(|v| v.as_bool()).unwrap_or(false),
+            artifacts,
+            dir: dir.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_json() -> Json {
+        Json::parse(
+            r#"{
+          "model": {"vocab":512,"hidden":128,"layers":4,"q_heads":4,"kv_heads":2,
+            "head_dim":32,"ffn":256,"rope_theta":10000.0,"rms_eps":1e-5,
+            "max_seq":512,"slots":12,"prompt_pad":32,"spec_k":8,"draft_budget":64,
+            "verify_q_variants":[5,9,13,17,21],"draft_w_variants":[16,32,64,128,256]},
+          "grammar": {"pad":0,"bos":1,"eos":2,"def_tok":3,"qry":4,"eq":5,"sep":6,
+            "slot_base":16,"n_slots":48,"value_base":80,"n_values":256,
+            "filler_base":336,"n_filler":120,"mode_base":456,"n_modes":12,
+            "n_defs":8,"redefine_prob":0.08,"query_prob":0.30,
+            "focus_query_prob":0.85,"focus_switch_prob":0.18,
+            "mode_mul":[1,7,11,13,17,19,23,29,31,37,41,43],
+            "mode_add":[3,8,1,14,5,11,2,7,9,4,13,6]},
+          "eagle": {"ctx":4,"embed":32,"hidden":128},
+          "n_params": 656512, "eagle_n_params": 123,
+          "trained": true,
+          "artifacts": {"prefill": {"file":"prefill.hlo.txt","args":[[656512],[4,12,512,2,32]]}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_config() {
+        let c = SystemConfig::from_json(&fake_json(), "/tmp").unwrap();
+        assert_eq!(c.model.hidden, 128);
+        assert_eq!(c.model.verify_q_variants, vec![5, 9, 13, 17, 21]);
+        assert_eq!(c.grammar.n_defs, 8);
+        assert!(c.trained);
+        assert_eq!(c.artifacts["prefill"].args[1], vec![4, 12, 512, 2, 32]);
+        // KV math: 4 layers * 2 * 2 heads * 32 dim * 4 B = 2 KiB per token
+        assert_eq!(c.model.kv_bytes_per_token(), 2048);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"model": {"vocab": 512}}"#).unwrap();
+        assert!(SystemConfig::from_json(&j, "/tmp").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Host-side model metadata: parses `artifacts/config.json` (the contract
+//! written by `python/compile/aot.py`) into typed configs shared by the
+//! runtime, the engine and the workload generator.
+
+mod config;
+
+pub use config::{ArtifactInfo, EagleConfig, GrammarConfig, ModelConfig, SystemConfig};

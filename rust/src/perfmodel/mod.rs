@@ -1,0 +1,247 @@
+//! Analytical device cost model — the §3.2 formulation of the paper, used
+//! two ways:
+//!
+//! 1. **Theory curves** (Fig. 3): the closed-form speedup η(k, α, s, B, M)
+//!    under the paper's H100 latency functions.
+//! 2. **Simulated-time accounting** (Figs. 13/14, Table 2): the Rust
+//!    engine emits real per-iteration schedules (which rows drafted,
+//!    which verified, how many KV bytes each touched); this module converts
+//!    them into H100-calibrated iteration times.  This is the documented
+//!    substitution for not having an H100: *schedules are real, the clock
+//!    is modelled* — scheduling-policy comparisons therefore reproduce the
+//!    paper's who-wins shapes under the paper's own latency model.
+//!
+//! Latency model (paper §2.1):
+//!   T_GEMM(B): near-constant below the saturation point B̂, then linear.
+//!   T_Attn(M): linear in the total KV bytes M touched.
+
+/// Calibration constants.  Defaults approximate an H100 SXM5 serving a
+/// Qwen3-8B-shaped model (the paper's Fig. 2/Table 2 operating point).
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    /// HBM bandwidth usable by attention (bytes/s).
+    pub hbm_bw: f64,
+    /// GEMM saturation point (token rows per step).
+    pub b_hat: f64,
+    /// GEMM latency in the flat (weight-bound) region (s) — time to stream
+    /// the weights once.
+    pub t_gemm_flat: f64,
+    /// Incremental GEMM cost per token row past saturation (s/row).
+    pub t_gemm_per_row: f64,
+    /// Fixed per-kernel-launch overhead (s) — drives the Fig. 15 fused-vs-
+    /// sequential comparison.
+    pub t_launch: f64,
+    /// CPU scheduling overhead per iteration when NOT overlapped (s);
+    /// the paper's Table 2 measures 3.2 ms for vLLM.
+    pub t_cpu_sync: f64,
+    /// Host<->device (PCIe) bandwidth for KV offload (bytes/s).
+    pub pcie_bw: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            hbm_bw: 3.0e12,          // ~3 TB/s effective
+            b_hat: 256.0,            // §3.2: "B̂=256 only incurs minimal latency increase"
+            t_gemm_flat: 5.0e-3,     // weight streaming floor for the 8B model
+            t_gemm_per_row: 2.0e-5,  // past saturation
+            t_launch: 5.0e-6,
+            t_cpu_sync: 3.2e-3,      // vLLM CPU overhead, Table 2
+            pcie_bw: 55.0e9,         // PCIe gen5 x16 practical
+        }
+    }
+}
+
+impl DeviceModel {
+    /// T_GEMM(B): flat below B̂ (weight-loading bound), linear above.
+    pub fn t_gemm(&self, rows: f64) -> f64 {
+        if rows <= 0.0 {
+            0.0
+        } else if rows <= self.b_hat {
+            self.t_gemm_flat
+        } else {
+            self.t_gemm_flat + (rows - self.b_hat) * self.t_gemm_per_row
+        }
+    }
+
+    /// T_Attn(M): linear in bytes of KV touched.
+    pub fn t_attn(&self, kv_bytes: f64) -> f64 {
+        kv_bytes / self.hbm_bw
+    }
+
+    /// One iteration over a mixed batch.
+    pub fn t_iteration(&self, gemm_rows: f64, kv_bytes: f64, launches: u32) -> f64 {
+        self.t_gemm(gemm_rows) + self.t_attn(kv_bytes) + self.t_launch * launches as f64
+    }
+
+    /// Offload time for `bytes` of KV over PCIe (chunked, asynchronous —
+    /// the *budgeted* time the copier thread needs; Fig. 5 overhead check).
+    pub fn t_offload(&self, bytes: f64) -> f64 {
+        bytes / self.pcie_bw
+    }
+}
+
+/// Scale factors mapping this testbed's schedules to the paper's H100
+/// operating point (Qwen3-8B, batch 128, ~4-8K contexts).  The engine's
+/// simulated clock multiplies its *measured* per-iteration GEMM rows and
+/// KV bytes by these before applying the latency model, so scheduling
+/// and speculation trade-offs are evaluated in the regime the paper
+/// studies (attention 17 ms vs GEMM 7 ms per step, B̂ at ~2× the uniform
+/// mixed-batch row count) rather than at toy scale where the weight-
+/// streaming floor would swamp everything.
+#[derive(Clone, Copy, Debug)]
+pub struct SimScale {
+    pub gemm_rows: f64,
+    pub kv_bytes: f64,
+}
+
+impl SimScale {
+    /// slots -> paper batch (128 requests); testbed full-batch KV foot-
+    /// print (~12 slots x ~260 ctx x 2 KiB) -> the paper's 63 GB touched.
+    pub fn paper_scale(slots: usize, kv_bytes_per_token: usize) -> SimScale {
+        let batch_scale = 128.0 / slots as f64;
+        let testbed_full = slots as f64 * 260.0 * kv_bytes_per_token as f64;
+        SimScale {
+            gemm_rows: batch_scale,
+            kv_bytes: 63.0e9 / testbed_full,
+        }
+    }
+
+    /// Identity scale (report raw testbed numbers).
+    pub fn raw() -> SimScale {
+        SimScale { gemm_rows: 1.0, kv_bytes: 1.0 }
+    }
+}
+
+/// The §3.2 closed-form speedup of sparse self-speculative decoding.
+#[derive(Clone, Debug)]
+pub struct SpeedupModel {
+    pub device: DeviceModel,
+    /// Concurrent requests.
+    pub batch: f64,
+    /// Total KV bytes across the batch.
+    pub kv_bytes: f64,
+}
+
+impl SpeedupModel {
+    /// Baseline per-token latency: T_GEMM(B) + T_Attn(M).
+    pub fn t_base(&self) -> f64 {
+        self.device.t_gemm(self.batch) + self.device.t_attn(self.kv_bytes)
+    }
+
+    /// Per-accepted-token latency with speculation (paper's simplified
+    /// form):  (k+1)/(kα+1)·T_GEMM((2k+1)/(k+1)·B) + (ks+1)/(kα+1)·T_Attn(M)
+    pub fn t_spec(&self, k: f64, alpha: f64, s: f64) -> f64 {
+        let gemm = self.device.t_gemm((2.0 * k + 1.0) / (k + 1.0) * self.batch);
+        let attn = self.device.t_attn(self.kv_bytes);
+        ((k + 1.0) * gemm + (k * s + 1.0) * attn) / (k * alpha + 1.0)
+    }
+
+    /// η = T_base / T_spec.
+    pub fn speedup(&self, k: f64, alpha: f64, s: f64) -> f64 {
+        self.t_base() / self.t_spec(k, alpha, s)
+    }
+}
+
+/// Roofline-style utilisation split for one iteration (Fig. 2): what
+/// fraction of the iteration is attention (bandwidth-bound) vs GEMM.
+pub struct UtilSplit {
+    pub attn_frac: f64,
+    pub gemm_frac: f64,
+    pub bw_util: f64,
+    pub compute_util: f64,
+}
+
+impl DeviceModel {
+    /// Fig. 2 style split.  `flops` is the GEMM work of the iteration,
+    /// `peak_flops` the device peak.
+    pub fn util_split(
+        &self,
+        gemm_rows: f64,
+        kv_bytes: f64,
+        flops: f64,
+        peak_flops: f64,
+    ) -> UtilSplit {
+        let tg = self.t_gemm(gemm_rows);
+        let ta = self.t_attn(kv_bytes);
+        let tot = (tg + ta).max(1e-12);
+        UtilSplit {
+            attn_frac: ta / tot,
+            gemm_frac: tg / tot,
+            bw_util: (kv_bytes / self.hbm_bw) / tot,
+            compute_util: (flops / peak_flops) / tot,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SpeedupModel {
+        // Paper's running example: Qwen3-8B, batch 128, ~8K contexts:
+        // attention ~21 ms per step => M = 21e-3 * 3e12 = 63 GB touched.
+        SpeedupModel {
+            device: DeviceModel::default(),
+            batch: 128.0,
+            kv_bytes: 63.0e9,
+        }
+    }
+
+    #[test]
+    fn gemm_flat_then_linear() {
+        let d = DeviceModel::default();
+        assert_eq!(d.t_gemm(1.0), d.t_gemm(200.0));
+        assert!(d.t_gemm(512.0) > d.t_gemm(256.0));
+        assert_eq!(d.t_gemm(0.0), 0.0);
+    }
+
+    #[test]
+    fn attention_reduction_matches_paper_example() {
+        // §3.2: k=16, α=0.75, s=0.05 — attention latency cut (kα+1)/(ks+1).
+        let (k, alpha, s) = (16.0f64, 0.75, 0.05);
+        let reduction = (k * alpha + 1.0) / (k * s + 1.0);
+        assert!(reduction > 6.0 && reduction < 8.0, "reduction={reduction}");
+    }
+
+    #[test]
+    fn speedup_positive_and_bounded() {
+        let m = model();
+        let eta = m.speedup(8.0, 0.77, 0.05);
+        assert!(eta > 1.5, "eta={eta}");
+        // Bounded by the attention reduction ratio (+1 slack for GEMM).
+        assert!(eta < (8.0 * 0.77 + 1.0) / (8.0 * 0.05 + 1.0) + 1.0);
+    }
+
+    #[test]
+    fn speedup_monotone_in_alpha_and_sparsity() {
+        let m = model();
+        assert!(m.speedup(8.0, 0.8, 0.05) > m.speedup(8.0, 0.4, 0.05));
+        assert!(m.speedup(8.0, 0.8, 0.05) > m.speedup(8.0, 0.8, 0.5));
+    }
+
+    #[test]
+    fn no_speedup_when_draft_no_better_than_dense() {
+        let m = model();
+        let eta = m.speedup(8.0, 0.05, 0.05);
+        assert!(eta < 1.05, "eta={eta}");
+    }
+
+    #[test]
+    fn unified_vs_naive_schedule_shape() {
+        // §3.3 workload fluctuation: naive = k small GEMMs + 1 big GEMM;
+        // unified = k+1 medium GEMMs.  Past saturation the big GEMM hurts.
+        let d = DeviceModel::default();
+        let (b, k) = (128.0, 8.0);
+        let naive = k * d.t_gemm(b) + d.t_gemm((k + 1.0) * b);
+        let unified = (k + 1.0) * d.t_gemm((2.0 * k + 1.0) / (k + 1.0) * b);
+        assert!(unified < naive, "unified={unified} naive={naive}");
+    }
+
+    #[test]
+    fn util_split_attention_dominates_long_context() {
+        let d = DeviceModel::default();
+        let u = d.util_split(128.0, 63.0e9, 2.0e12, 989e12);
+        assert!(u.attn_frac > 0.7, "attn_frac={}", u.attn_frac);
+    }
+}

@@ -1,0 +1,242 @@
+//! Token sampling + lossless speculative verification.
+//!
+//! Two verification modes, both lossless w.r.t. the target model:
+//! * **greedy** — target and draft both argmax; a drafted token is accepted
+//!   iff it equals the target argmax at its position (deterministic, used
+//!   by the benchmark suite for reproducibility).
+//! * **stochastic** — the Leviathan/Chen rejection-sampling rule: accept
+//!   x with prob min(1, p(x)/q(x)), else resample from norm(max(p-q, 0));
+//!   preserves the target distribution exactly (property-tested).
+
+use crate::util::rng::Xoshiro256;
+
+/// Softmax over logits at temperature `t` (t=0 ⇒ argmax one-hot).
+pub fn softmax(logits: &[f32], t: f32) -> Vec<f32> {
+    let n = logits.len();
+    if t <= 0.0 {
+        let mut p = vec![0.0; n];
+        p[argmax(logits)] = 1.0;
+        return p;
+    }
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut p: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    let s: f32 = p.iter().sum();
+    for x in &mut p {
+        *x /= s;
+    }
+    p
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample from a categorical distribution.
+pub fn sample_cat(p: &[f32], rng: &mut Xoshiro256) -> usize {
+    let u = rng.unit() as f32;
+    let mut acc = 0.0;
+    for (i, &pi) in p.iter().enumerate() {
+        acc += pi;
+        if u < acc {
+            return i;
+        }
+    }
+    p.len() - 1
+}
+
+/// Sample a token from logits at temperature `t`.
+pub fn sample_logits(logits: &[f32], t: f32, rng: &mut Xoshiro256) -> usize {
+    if t <= 0.0 {
+        argmax(logits)
+    } else {
+        sample_cat(&softmax(logits, t), rng)
+    }
+}
+
+/// Outcome of verifying a drafted sequence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyResult {
+    /// Number of drafted tokens accepted (prefix length m ∈ [0, k]).
+    pub accepted: usize,
+    /// The bonus/correction token appended after the accepted prefix
+    /// (target argmax / resample at the first rejected position, or the
+    /// bonus continuation if everything was accepted).
+    pub next_token: i32,
+}
+
+/// Greedy verification: `target_logits` holds k+1 rows of `vocab` logits
+/// (row j = target distribution at draft position j); `draft` holds the k
+/// drafted tokens.
+pub fn verify_greedy(draft: &[i32], target_logits: &[f32], vocab: usize) -> VerifyResult {
+    debug_assert!(target_logits.len() >= (draft.len() + 1) * vocab);
+    let mut m = 0;
+    for (j, &d) in draft.iter().enumerate() {
+        let row = &target_logits[j * vocab..(j + 1) * vocab];
+        if argmax(row) as i32 == d {
+            m += 1;
+        } else {
+            break;
+        }
+    }
+    let row = &target_logits[m * vocab..(m + 1) * vocab];
+    VerifyResult { accepted: m, next_token: argmax(row) as i32 }
+}
+
+/// Stochastic (rejection-sampling) verification. `draft_probs` holds k rows
+/// of the *draft* distribution each token was sampled from.
+pub fn verify_stochastic(
+    draft: &[i32],
+    draft_probs: &[f32],
+    target_logits: &[f32],
+    vocab: usize,
+    temp: f32,
+    rng: &mut Xoshiro256,
+) -> VerifyResult {
+    debug_assert!(draft_probs.len() >= draft.len() * vocab);
+    for (j, &d) in draft.iter().enumerate() {
+        let p = softmax(&target_logits[j * vocab..(j + 1) * vocab], temp);
+        let q = &draft_probs[j * vocab..(j + 1) * vocab];
+        let (px, qx) = (p[d as usize], q[d as usize].max(1e-30));
+        if (rng.unit() as f32) < (px / qx).min(1.0) {
+            continue; // accepted
+        }
+        // Rejected: resample from norm(max(p - q, 0)).
+        let mut res: Vec<f32> = p
+            .iter()
+            .zip(q.iter())
+            .map(|(&pi, &qi)| (pi - qi).max(0.0))
+            .collect();
+        let s: f32 = res.iter().sum();
+        let tok = if s <= 1e-12 {
+            sample_cat(&p, rng)
+        } else {
+            for x in &mut res {
+                *x /= s;
+            }
+            sample_cat(&res, rng)
+        };
+        return VerifyResult { accepted: j, next_token: tok as i32 };
+    }
+    // All accepted: bonus token from the (k+1)-th target row.
+    let j = draft.len();
+    let p = softmax(&target_logits[j * vocab..(j + 1) * vocab], temp);
+    VerifyResult { accepted: j, next_token: sample_cat(&p, rng) as i32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest;
+
+    #[test]
+    fn softmax_normalises() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temp_zero_is_argmax() {
+        let p = softmax(&[0.1, 5.0, 2.0], 0.0);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn greedy_accepts_matching_prefix() {
+        let vocab = 4;
+        // Target argmaxes: 2, 1, 3 (rows), draft proposes [2, 1].
+        let mut logits = vec![0.0f32; 3 * vocab];
+        logits[2] = 1.0;
+        logits[vocab + 1] = 1.0;
+        logits[2 * vocab + 3] = 1.0;
+        let r = verify_greedy(&[2, 1], &logits, vocab);
+        assert_eq!(r, VerifyResult { accepted: 2, next_token: 3 });
+    }
+
+    #[test]
+    fn greedy_stops_at_first_mismatch() {
+        let vocab = 4;
+        let mut logits = vec![0.0f32; 3 * vocab];
+        logits[2] = 1.0; // target wants 2
+        logits[vocab + 1] = 1.0;
+        let r = verify_greedy(&[0, 1], &logits, vocab);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.next_token, 2); // correction = target argmax at row 0
+    }
+
+    ptest!(stochastic_accepts_identical_distributions, |g| {
+        // Property: if draft dist == target dist, acceptance rate ~ 1.
+        let vocab = 8;
+        let mut rng = Xoshiro256::new(g.u64(0, u64::MAX / 2));
+        let logits: Vec<f32> = (0..vocab).map(|_| g.f64(-2.0, 2.0) as f32).collect();
+        let p = softmax(&logits, 1.0);
+        let k = g.usize(1, 6);
+        let mut target = Vec::new();
+        let mut qs = Vec::new();
+        let mut draft = Vec::new();
+        for _ in 0..k {
+            target.extend_from_slice(&logits);
+            qs.extend_from_slice(&p);
+            draft.push(sample_cat(&p, &mut rng) as i32);
+        }
+        target.extend_from_slice(&logits); // bonus row
+        let r = verify_stochastic(&draft, &qs, &target, vocab, 1.0, &mut rng);
+        assert_eq!(r.accepted, k, "identical dists must always accept");
+    });
+
+    ptest!(stochastic_result_in_vocab, |g| {
+        let vocab = 16;
+        let mut rng = Xoshiro256::new(g.u64(0, u64::MAX / 2));
+        let k = g.usize(1, 8);
+        let target: Vec<f32> = (0..(k + 1) * vocab).map(|_| g.f64(-3.0, 3.0) as f32).collect();
+        let mut qs = Vec::new();
+        let mut draft = Vec::new();
+        for _ in 0..k {
+            let ql: Vec<f32> = (0..vocab).map(|_| g.f64(-3.0, 3.0) as f32).collect();
+            let q = softmax(&ql, 1.0);
+            draft.push(sample_cat(&q, &mut rng) as i32);
+            qs.extend(q);
+        }
+        let r = verify_stochastic(&draft, &qs, &target, vocab, 0.8, &mut rng);
+        assert!(r.accepted <= k);
+        assert!((0..vocab as i32).contains(&r.next_token));
+    });
+
+    /// Distribution-preservation test (the losslessness claim): the
+    /// marginal of the *first* emitted token under speculative sampling
+    /// must equal direct sampling from the target.
+    #[test]
+    fn stochastic_preserves_target_marginal() {
+        let vocab = 4;
+        let t_logits = vec![0.0f32, 1.0, 2.0, -1.0];
+        let q_logits = vec![2.0f32, 0.0, 0.5, 0.0]; // deliberately different
+        let p = softmax(&t_logits, 1.0);
+        let q = softmax(&q_logits, 1.0);
+        let mut rng = Xoshiro256::new(99);
+        let n = 200_000;
+        let mut counts = vec![0usize; vocab];
+        for _ in 0..n {
+            let d = sample_cat(&q, &mut rng) as i32;
+            // one-step verify: target rows = [t_logits, t_logits]
+            let mut target = t_logits.clone();
+            target.extend_from_slice(&t_logits);
+            let r = verify_stochastic(&[d], &q, &target, vocab, 1.0, &mut rng);
+            let first = if r.accepted >= 1 { d } else { r.next_token };
+            counts[first as usize] += 1;
+        }
+        for i in 0..vocab {
+            let emp = counts[i] as f32 / n as f32;
+            assert!(
+                (emp - p[i]).abs() < 0.01,
+                "token {i}: empirical {emp} vs target {}",
+                p[i]
+            );
+        }
+    }
+}

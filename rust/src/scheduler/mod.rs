@@ -1,0 +1,217 @@
+//! Unified batch scheduler (§4.2).
+//!
+//! Self-speculation lets draft and verify phases share one pipeline (the
+//! uniform page-size-1 abstraction lives in the kernels); what remains on
+//! the coordinator is *when* each request drafts vs verifies:
+//!
+//! * `Lockstep` — all requests share a global phase: k draft iterations,
+//!   then one verification iteration (the "naive" schedule of §3.3 and
+//!   what MagicDec/TriForce-style systems do).  Workload per iteration
+//!   fluctuates: GEMM rows spike by (k+1)× at verification.
+//! * `Unified` — requests are staggered across k+1 *buckets* by greedy
+//!   least-loaded bin-packing at admission (Fig. 8); every iteration mixes
+//!   ~B/(k+1) verifying requests with drafting ones, so GEMM rows stay
+//!   flat (Fig. 14) and delayed verification (§4.3) has something to
+//!   overlap every iteration.
+//!
+//! The scheduler is pure bookkeeping (no device calls) so its invariants
+//! are property-tested heavily; the engine consumes `phase_of` + the
+//! per-iteration composition.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Lockstep,
+    Unified,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "lockstep" | "naive" | "sync" => Some(Schedule::Lockstep),
+            "unified" | "staggered" => Some(Schedule::Unified),
+            _ => None,
+        }
+    }
+}
+
+/// Greedy least-loaded bucket assignment (Fig. 8): bucket b means "this
+/// request verifies when `iter ≡ b (mod k+1)`".  A request admitted
+/// mid-cycle gets a shortened first draft run so it lands in its bucket.
+#[derive(Clone, Debug)]
+pub struct BucketScheduler {
+    pub k: usize,
+    counts: Vec<usize>,
+}
+
+impl BucketScheduler {
+    pub fn new(k: usize) -> Self {
+        BucketScheduler { k, counts: vec![0; k + 1] }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.k + 1
+    }
+
+    /// Assign a new request to the least-loaded bucket (ties → lowest id).
+    pub fn assign(&mut self) -> usize {
+        let mut best = 0;
+        for b in 1..self.counts.len() {
+            if self.counts[b] < self.counts[best] {
+                best = b;
+            }
+        }
+        self.counts[best] += 1;
+        best
+    }
+
+    pub fn release(&mut self, bucket: usize) {
+        debug_assert!(self.counts[bucket] > 0, "release of empty bucket");
+        self.counts[bucket] -= 1;
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn imbalance(&self) -> usize {
+        let mx = self.counts.iter().max().copied().unwrap_or(0);
+        let mn = self.counts.iter().min().copied().unwrap_or(0);
+        mx - mn
+    }
+
+    /// Number of draft steps a request admitted at global iteration `iter`
+    /// into bucket `b` should run before its first verification, so that
+    /// its verification lands on an iteration ≡ b (mod k+1).
+    pub fn first_draft_len(&self, iter: u64, bucket: usize) -> usize {
+        let phase_now = (iter % (self.k as u64 + 1)) as usize;
+        // We verify at the iteration where phase == bucket; draft until then.
+        (bucket + self.k + 1 - phase_now) % (self.k + 1)
+    }
+}
+
+/// Per-iteration batch composition — the Fig. 14 trace record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IterComposition {
+    pub drafting: usize,
+    pub verifying: usize,
+    pub prefilling: usize,
+    /// GEMM input rows this iteration: drafting×1 + verifying×(k+1) +
+    /// prefilling×P.
+    pub gemm_rows: usize,
+    /// KV bytes attention must touch this iteration.
+    pub attn_bytes: usize,
+}
+
+/// Trace of compositions over a run; feeds Fig. 14 and the simulated-time
+/// accounting of Fig. 13.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleTrace {
+    pub iters: Vec<IterComposition>,
+}
+
+impl ScheduleTrace {
+    pub fn push(&mut self, c: IterComposition) {
+        self.iters.push(c);
+    }
+
+    pub fn gemm_rows_stddev(&self) -> f64 {
+        let n = self.iters.len() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let mean = self.iters.iter().map(|c| c.gemm_rows as f64).sum::<f64>() / n;
+        (self
+            .iters
+            .iter()
+            .map(|c| (c.gemm_rows as f64 - mean).powi(2))
+            .sum::<f64>()
+            / (n - 1.0))
+            .sqrt()
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("iter,drafting,verifying,prefilling,gemm_rows,attn_bytes\n");
+        for (i, c) in self.iters.iter().enumerate() {
+            s.push_str(&format!(
+                "{i},{},{},{},{},{}\n",
+                c.drafting, c.verifying, c.prefilling, c.gemm_rows, c.attn_bytes
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest;
+
+    #[test]
+    fn assignment_balances() {
+        let mut s = BucketScheduler::new(8);
+        for _ in 0..27 {
+            s.assign();
+        }
+        assert!(s.imbalance() <= 1, "counts={:?}", s.counts());
+    }
+
+    #[test]
+    fn first_draft_len_aligns_verification() {
+        let s = {
+            let mut s = BucketScheduler::new(8);
+            s.assign();
+            s
+        };
+        // Admitted at iter 0 into bucket 3: draft 3 steps, verify at iter 3.
+        assert_eq!(s.first_draft_len(0, 3), 3);
+        // Admitted at iter 5 into bucket 3: verify at iter 12 (3 mod 9).
+        assert_eq!(s.first_draft_len(5, 3), 7);
+        // Admitted exactly on its bucket: verify immediately next cycle.
+        assert_eq!(s.first_draft_len(3, 3), 0);
+    }
+
+    ptest!(greedy_always_picks_least_loaded, |g| {
+        let k = g.usize(1, 16);
+        let mut s = BucketScheduler::new(k);
+        let mut live: Vec<usize> = Vec::new();
+        for _ in 0..g.usize(1, 300) {
+            if !live.is_empty() && g.bool(0.4) {
+                let i = g.usize(0, live.len() - 1);
+                let b = live.swap_remove(i);
+                s.release(b);
+            } else {
+                let min_before = *s.counts().iter().min().unwrap();
+                let b = s.assign();
+                // invariant: the chosen bucket had the minimum count
+                assert_eq!(s.counts()[b] - 1, min_before);
+                live.push(b);
+            }
+            let total: usize = s.counts().iter().sum();
+            assert_eq!(total, live.len(), "count conservation");
+        }
+    });
+
+    ptest!(pure_arrivals_keep_imbalance_at_most_one, |g| {
+        let k = g.usize(1, 12);
+        let mut s = BucketScheduler::new(k);
+        for _ in 0..g.usize(1, 200) {
+            s.assign();
+        }
+        assert!(s.imbalance() <= 1);
+    });
+
+    #[test]
+    fn trace_stddev_flat_vs_spiky() {
+        let mut flat = ScheduleTrace::default();
+        let mut spiky = ScheduleTrace::default();
+        for i in 0..90 {
+            flat.push(IterComposition { gemm_rows: 24, ..Default::default() });
+            spiky.push(IterComposition {
+                gemm_rows: if i % 9 == 8 { 108 } else { 12 },
+                ..Default::default()
+            });
+        }
+        assert!(flat.gemm_rows_stddev() < 1e-9);
+        assert!(spiky.gemm_rows_stddev() > 20.0);
+    }
+}

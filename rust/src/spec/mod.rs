@@ -1,0 +1,173 @@
+//! Speculative decoding core: drafter taxonomy, PillarAttn critical-token
+//! state, N-gram matcher, and acceptance accounting.
+//!
+//! All drafters run inside the same engine and are verified by the same
+//! dense verification artifact, so acceptance-rate comparisons (Fig. 12)
+//! isolate exactly the drafting algorithm.
+
+pub mod ngram;
+pub mod pillar;
+
+pub use ngram::NGramIndex;
+pub use pillar::{topk_indices, IndexPolicy, PillarState};
+
+/// Which draft model the engine runs (paper system + every baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrafterKind {
+    /// No speculation: dense autoregressive decode (vLLM baseline).
+    Vanilla,
+    /// SparseSpec: PillarAttn — critical tokens re-identified from the
+    /// verification score dump every stride (§4.1).
+    Pillar { w: usize },
+    /// MagicDec / StreamingLLM-style: attention sinks + sliding window.
+    Window { w: usize },
+    /// Oracle top-k (Fig. 3): critical tokens refreshed from exact scores
+    /// after *every* step — upper bound for dynamic sparse selection.
+    OracleTopK { w: usize },
+    /// vLLM-NGram: longest-suffix n-gram proposals, no draft-model pass.
+    NGram { n: usize },
+    /// EAGLE-like trained draft head (Fig. 11).
+    Eagle,
+    /// TriForce-like hierarchy: NGram -> sliding-window model -> full.
+    TriForce { w: usize },
+}
+
+impl DrafterKind {
+    pub fn parse(s: &str, w: usize, n: usize) -> Option<DrafterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "vanilla" | "vllm" | "baseline" => Some(DrafterKind::Vanilla),
+            "pillar" | "sparsespec" | "ours" => Some(DrafterKind::Pillar { w }),
+            "window" | "magicdec" | "streaming" => Some(DrafterKind::Window { w }),
+            "oracle" | "oracletopk" => Some(DrafterKind::OracleTopK { w }),
+            "ngram" => Some(DrafterKind::NGram { n }),
+            "eagle" | "eagle3" => Some(DrafterKind::Eagle),
+            "triforce" => Some(DrafterKind::TriForce { w }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            DrafterKind::Vanilla => "vanilla".into(),
+            DrafterKind::Pillar { w } => format!("pillar_w{w}"),
+            DrafterKind::Window { w } => format!("window_w{w}"),
+            DrafterKind::OracleTopK { w } => format!("oracle_w{w}"),
+            DrafterKind::NGram { n } => format!("ngram_n{n}"),
+            DrafterKind::Eagle => "eagle".into(),
+            DrafterKind::TriForce { w } => format!("triforce_w{w}"),
+        }
+    }
+
+    /// Does this drafter run sparse-attention draft steps on the target
+    /// model (self-speculation)?
+    pub fn is_self_spec(&self) -> bool {
+        matches!(
+            self,
+            DrafterKind::Pillar { .. }
+                | DrafterKind::Window { .. }
+                | DrafterKind::OracleTopK { .. }
+        )
+    }
+
+    /// Sparse budget (W artifact variant), if applicable.
+    pub fn budget(&self) -> Option<usize> {
+        match self {
+            DrafterKind::Pillar { w }
+            | DrafterKind::Window { w }
+            | DrafterKind::OracleTopK { w }
+            | DrafterKind::TriForce { w } => Some(*w),
+            _ => None,
+        }
+    }
+}
+
+/// Cumulative acceptance accounting (Fig. 12 left).
+#[derive(Clone, Debug, Default)]
+pub struct AcceptStats {
+    /// Verification rounds.
+    pub rounds: u64,
+    /// Tokens drafted in total.
+    pub drafted: u64,
+    /// Drafted tokens accepted (bonus token NOT counted, per §5.3).
+    pub accepted: u64,
+    /// Histogram over accepted-prefix length m ∈ [0, k].
+    pub accept_hist: Vec<u64>,
+}
+
+impl AcceptStats {
+    pub fn new(k: usize) -> Self {
+        AcceptStats { accept_hist: vec![0; k + 1], ..Default::default() }
+    }
+
+    pub fn record(&mut self, drafted: usize, accepted: usize) {
+        self.rounds += 1;
+        self.drafted += drafted as u64;
+        self.accepted += accepted as u64;
+        if accepted < self.accept_hist.len() {
+            self.accept_hist[accepted] += 1;
+        }
+    }
+
+    /// Average accepted tokens per round (the Fig. 12 bar height).
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64
+        }
+    }
+
+    /// Per-token acceptance rate α.
+    pub fn alpha(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, w, n) in [
+            ("vanilla", 64, 3),
+            ("pillar", 64, 3),
+            ("magicdec", 128, 3),
+            ("oracle", 32, 3),
+            ("ngram", 64, 4),
+            ("eagle", 64, 3),
+            ("triforce", 64, 3),
+        ] {
+            let k = DrafterKind::parse(s, w, n).unwrap();
+            assert!(DrafterKind::parse(&k.name().split('_').next().unwrap(), w, n).is_some());
+        }
+        assert!(DrafterKind::parse("bogus", 0, 0).is_none());
+    }
+
+    #[test]
+    fn accept_stats_math() {
+        let mut a = AcceptStats::new(8);
+        a.record(8, 5);
+        a.record(8, 8);
+        a.record(8, 0);
+        assert_eq!(a.rounds, 3);
+        assert!((a.mean_accepted() - 13.0 / 3.0).abs() < 1e-9);
+        assert!((a.alpha() - 13.0 / 24.0).abs() < 1e-9);
+        assert_eq!(a.accept_hist[5], 1);
+        assert_eq!(a.accept_hist[8], 1);
+        assert_eq!(a.accept_hist[0], 1);
+    }
+
+    #[test]
+    fn self_spec_classification() {
+        assert!(DrafterKind::Pillar { w: 64 }.is_self_spec());
+        assert!(DrafterKind::Window { w: 64 }.is_self_spec());
+        assert!(!DrafterKind::NGram { n: 3 }.is_self_spec());
+        assert!(!DrafterKind::Vanilla.is_self_spec());
+        assert!(!DrafterKind::TriForce { w: 64 }.is_self_spec());
+    }
+}

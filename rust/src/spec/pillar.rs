@@ -1,0 +1,276 @@
+//! PillarAttn critical-token selection (§4.1).
+//!
+//! The verification kernel dumps, per (layer, kv-head), the attention mass
+//! each cache position received from the verified queries (averaged over
+//! the query-head group) — at zero extra memory passes, since the dense
+//! kernel computes those probabilities anyway.  This module turns one dump
+//! into the index sets the next k draft steps attend to:
+//!
+//!   indices(l, h) = sinks ∪ recent-window ∪ Top-K(dump[l, h], rest)
+//!
+//! mirroring `python/compile/kernels/ref.py::topk_ids_ref` exactly (the
+//! cross-language golden test lives in python/tests/test_pillar.py).
+
+/// How a drafter composes its per-(layer, head) index set.
+#[derive(Clone, Copy, Debug)]
+pub struct IndexPolicy {
+    /// Total entries per (layer, head) — must equal the artifact's W.
+    pub budget: usize,
+    /// Leading positions always kept (attention sinks).
+    pub sinks: usize,
+    /// Trailing window always kept (needed so freshly drafted tokens are
+    /// attendable; also the entire mechanism of the MagicDec baseline).
+    pub recent: usize,
+}
+
+impl IndexPolicy {
+    pub fn pillar(budget: usize) -> Self {
+        // Paper-style split: a few sinks, a modest local window, the bulk
+        // of the budget to dump-selected critical tokens.  (recent=W/2 was
+        // tried during the perf pass and measured *worse* — α 0.45 → 0.33
+        // — the dump top-k carries more predictive mass than extra window;
+        // see EXPERIMENTS.md §Perf.)
+        let sinks = 4.min(budget / 8);
+        let recent = (budget / 4).max(8).min(budget - sinks);
+        IndexPolicy { budget, sinks, recent }
+    }
+
+    /// Sliding-window policy (MagicDec / StreamingLLM): no score-selected
+    /// tokens at all — everything after the sinks is the recent window.
+    pub fn window(budget: usize) -> Self {
+        let sinks = 4.min(budget / 8);
+        IndexPolicy { budget, sinks, recent: budget - sinks }
+    }
+}
+
+/// Build one (layer, head) index set.  `scores[t]` is the dumped attention
+/// mass for position t (ignored for the slots covered by sinks/recent);
+/// `len` is the current valid context length.  Returns exactly
+/// `policy.budget` entries, ascending, -1-padded.
+pub fn topk_indices(scores: &[f32], len: usize, policy: &IndexPolicy) -> Vec<i32> {
+    let budget = policy.budget;
+    let mut chosen: Vec<i32> = Vec::with_capacity(budget);
+    // sinks
+    for t in 0..policy.sinks.min(len) {
+        chosen.push(t as i32);
+    }
+    // recent window
+    let lo = len.saturating_sub(policy.recent);
+    for t in lo..len {
+        if (t as i32) >= policy.sinks as i32 {
+            chosen.push(t as i32);
+        }
+    }
+    chosen.truncate(budget);
+    // top-k among the rest
+    let rest = budget - chosen.len();
+    if rest > 0 && len > 0 {
+        let taken: std::collections::HashSet<i32> = chosen.iter().copied().collect();
+        let mut cand: Vec<i32> = (0..len as i32).filter(|t| !taken.contains(t)).collect();
+        cand.sort_by(|&a, &b| {
+            let (sa, sb) = (scores[a as usize], scores[b as usize]);
+            sb.partial_cmp(&sa)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        chosen.extend(cand.into_iter().take(rest));
+    }
+    chosen.sort_unstable();
+    chosen.resize(budget, -1); // -1 padding sits at the tail
+    chosen
+}
+
+/// Per-request PillarAttn state: the frozen critical sets from the last
+/// verification, refreshed every stride (= every verify).
+#[derive(Clone, Debug)]
+pub struct PillarState {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub policy: IndexPolicy,
+    /// Frozen critical tokens per (layer, head) — only the Top-K part;
+    /// sinks+recent are recomputed per step so new tokens enter the window.
+    critical: Vec<Vec<i32>>,
+}
+
+impl PillarState {
+    pub fn new(layers: usize, kv_heads: usize, policy: IndexPolicy) -> Self {
+        PillarState {
+            layers,
+            kv_heads,
+            policy,
+            critical: vec![Vec::new(); layers * kv_heads],
+        }
+    }
+
+    /// Refresh from a verification dump slice for this request:
+    /// `dump` is [L, Hkv, T] flattened; positions >= `len` are stale
+    /// (rejected drafts / old garbage) and are excluded.
+    pub fn refresh(&mut self, dump: &[f32], t_dim: usize, len: usize) {
+        let rest_budget = self.policy.budget;
+        for l in 0..self.layers {
+            for h in 0..self.kv_heads {
+                let off = (l * self.kv_heads + h) * t_dim;
+                let scores = &dump[off..off + t_dim];
+                // Keep a full budget's worth of candidates; composition at
+                // draft time fills sinks/recent first.
+                let ids = topk_indices(scores, len.min(t_dim), &self.policy);
+                let slot = &mut self.critical[l * self.kv_heads + h];
+                slot.clear();
+                slot.extend(ids.iter().copied().filter(|&x| x >= 0));
+                let _ = rest_budget;
+            }
+        }
+    }
+
+    /// Compose the index set for a draft step at current length `len`
+    /// (the drafted token sits at position len-1 after its KV write; the
+    /// engine passes pos = len-1 and we must include it).
+    /// Output: [L, Hkv, W] flattened, -1 padded, each ascending.
+    pub fn compose(&self, len: usize) -> Vec<i32> {
+        let w = self.policy.budget;
+        let mut out = Vec::with_capacity(self.layers * self.kv_heads * w);
+        for l in 0..self.layers {
+            for h in 0..self.kv_heads {
+                let crit = &self.critical[l * self.kv_heads + h];
+                let mut set: Vec<i32> = Vec::with_capacity(w);
+                // sinks
+                for t in 0..self.policy.sinks.min(len) {
+                    set.push(t as i32);
+                }
+                // recent window (always includes the newest positions, so
+                // tokens drafted since the last verification are visible)
+                let lo = len.saturating_sub(self.policy.recent);
+                for t in lo..len {
+                    if t >= self.policy.sinks {
+                        set.push(t as i32);
+                    }
+                }
+                // frozen critical tokens (dedup, in-range)
+                let have: std::collections::HashSet<i32> = set.iter().copied().collect();
+                for &c in crit {
+                    if set.len() >= w {
+                        break;
+                    }
+                    if (c as usize) < len && !have.contains(&c) {
+                        set.push(c);
+                    }
+                }
+                set.truncate(w);
+                set.sort_unstable();
+                set.resize(w, -1); // -1 padding at the tail
+                out.extend(set);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest;
+
+    fn policy() -> IndexPolicy {
+        IndexPolicy { budget: 16, sinks: 2, recent: 4 }
+    }
+
+    #[test]
+    fn topk_selects_highest_scores() {
+        let mut scores = vec![0.0f32; 64];
+        scores[30] = 0.9;
+        scores[45] = 0.8;
+        scores[10] = 0.7;
+        let ids = topk_indices(&scores, 64, &policy());
+        assert_eq!(ids.len(), 16);
+        // sinks 0,1; recent 60..64; top includes 30, 45, 10
+        assert!(ids.contains(&0) && ids.contains(&1));
+        for t in 60..64 {
+            assert!(ids.contains(&(t as i32)), "recent {t} missing");
+        }
+        for t in [30, 45, 10] {
+            assert!(ids.contains(&(t as i32)), "critical {t} missing");
+        }
+    }
+
+    #[test]
+    fn short_context_pads_with_holes() {
+        let scores = vec![0.1f32; 8];
+        let ids = topk_indices(&scores, 5, &policy());
+        let valid: Vec<i32> = ids.iter().copied().filter(|&x| x >= 0).collect();
+        assert_eq!(valid, vec![0, 1, 2, 3, 4]);
+        assert!(ids[5..].iter().all(|&x| x == -1));
+    }
+
+    ptest!(topk_invariants, |g| {
+        let len = g.usize(0, 256);
+        let budget = g.usize(4, 64);
+        let sinks = g.usize(0, budget / 4);
+        let recent = g.usize(1, budget - sinks);
+        let policy = IndexPolicy { budget, sinks, recent };
+        let scores: Vec<f32> = (0..256).map(|_| g.f64(0.0, 1.0) as f32).collect();
+        let ids = topk_indices(&scores, len, &policy);
+        assert_eq!(ids.len(), budget);
+        // valid prefix, -1 suffix
+        let valid: Vec<i32> = ids.iter().copied().filter(|&x| x >= 0).collect();
+        let n_valid = valid.len();
+        assert!(ids[..n_valid].iter().all(|&x| x >= 0));
+        assert!(ids[n_valid..].iter().all(|&x| x == -1));
+        // ascending, unique, in range
+        for w in valid.windows(2) {
+            assert!(w[0] < w[1], "not strictly ascending: {ids:?}");
+        }
+        assert!(valid.iter().all(|&x| (x as usize) < len.max(1)));
+        // count = min(budget, len)
+        assert_eq!(n_valid, budget.min(len));
+        // newest token always present when len > 0
+        if len > 0 && budget > 0 {
+            assert!(valid.contains(&(len as i32 - 1)));
+        }
+    });
+
+    #[test]
+    fn state_refresh_and_compose() {
+        let mut st = PillarState::new(2, 2, policy());
+        let t = 64;
+        let mut dump = vec![0.0f32; 2 * 2 * t];
+        // layer 0 head 0: position 33 is critical
+        dump[33] = 1.0;
+        // layer 1 head 1: position 7 is critical
+        dump[(1 * 2 + 1) * t + 7] = 1.0;
+        st.refresh(&dump, t, 50);
+        let idx = st.compose(50);
+        assert_eq!(idx.len(), 2 * 2 * 16);
+        let l0h0 = &idx[0..16];
+        assert!(l0h0.contains(&33), "l0h0={l0h0:?}");
+        let l1h1 = &idx[3 * 16..4 * 16];
+        assert!(l1h1.contains(&7), "l1h1={l1h1:?}");
+        // stale positions beyond len excluded
+        assert!(idx.iter().all(|&x| x < 50));
+    }
+
+    #[test]
+    fn compose_includes_new_positions_between_refreshes() {
+        let mut st = PillarState::new(1, 1, policy());
+        let t = 64;
+        let dump = vec![0.0f32; t];
+        st.refresh(&dump, t, 20);
+        // context grew to 24 since the refresh (4 drafted tokens)
+        let idx = st.compose(24);
+        for p in 20..24 {
+            assert!(idx.contains(&(p as i32)), "drafted position {p} missing");
+        }
+    }
+
+    #[test]
+    fn window_policy_is_pure_window() {
+        let p = IndexPolicy::window(16);
+        let mut scores = vec![0.0f32; 128];
+        scores[50] = 100.0; // huge score must be IGNORED by window policy
+        let ids = topk_indices(&scores, 100, &p);
+        let valid: Vec<i32> = ids.iter().copied().filter(|&x| x >= 0).collect();
+        assert_eq!(valid.len(), 16);
+        // sinks + last 12: position 50 not included
+        assert!(!valid.contains(&50));
+        assert!(valid.contains(&99));
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for this environment (the offline
+//! registry only carries the `xla` closure — no tokio / clap / serde / rand /
+//! proptest / criterion; DESIGN.md §1 documents the substitution).
+
+pub mod cli;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod threadpool;

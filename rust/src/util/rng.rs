@@ -1,0 +1,203 @@
+//! Deterministic PRNGs, re-implemented because no `rand` crate is available
+//! in this environment (see DESIGN.md §1 "Crate availability").
+//!
+//! `SplitMix64` is bit-for-bit identical to `python/compile/data.py` —
+//! golden tests on both sides pin the two implementations together so the
+//! Rust workload generator samples from the model's training distribution.
+
+/// SplitMix64: tiny, fast, language-portable. Used wherever cross-language
+/// reproducibility matters (grammar traces, workload seeds).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Draw in [0, n). Modulo bias < 2^-32 for n << 2^64 (documented, fine
+    /// for workload generation; matches the Python side exactly).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// xoshiro256++ — the general-purpose engine for sampling and property
+/// tests (better equidistribution for long streams than SplitMix64).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        // Seed the state through SplitMix64, per Vigna's recommendation.
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let out = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        out
+    }
+
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless unbiased bounded draw.
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.unit().max(1e-300);
+        let u2 = self.unit();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Log-normal with the given *arithmetic* mean and std.
+    /// (Used to mimic the paper's Table 1 output-length distributions.)
+    pub fn lognormal_mean_std(&mut self, mean: f64, std: f64) -> f64 {
+        let cv2 = (std / mean).powi(2);
+        let sigma2 = (1.0 + cv2).ln();
+        let mu = mean.ln() - sigma2 / 2.0;
+        (mu + sigma2.sqrt() * self.normal()).exp()
+    }
+
+    /// Poisson draw (Knuth for small lambda, normal approx for large).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.unit();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.normal();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Exponential inter-arrival time with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.unit().max(1e-300).ln() / rate
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden() {
+        // Golden values mirrored in python/tests/test_data.py.
+        let mut r = SplitMix64::new(7);
+        let vals: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        let mut p = SplitMix64::new(7);
+        assert_eq!(vals[0], p.next_u64());
+        // Known first output of SplitMix64(0):
+        let mut z = SplitMix64::new(0);
+        assert_eq!(z.next_u64(), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn xoshiro_bounds() {
+        let mut r = Xoshiro256::new(42);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn lognormal_moments() {
+        let mut r = Xoshiro256::new(1);
+        let (mean, std) = (200.0, 80.0);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.lognormal_mean_std(mean, std)).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n as f64;
+        assert!((m - mean).abs() < mean * 0.05, "mean {m}");
+        assert!((v.sqrt() - std).abs() < std * 0.15, "std {}", v.sqrt());
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Xoshiro256::new(3);
+        let lambda = 6.5;
+        let n = 20_000;
+        let s: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+        let m = s as f64 / n as f64;
+        assert!((m - lambda).abs() < 0.2, "mean {m}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal thread pool + channel-based async executor (no `tokio` in this
+//! environment — see DESIGN.md §1).
+//!
+//! The engine uses this for everything that the paper overlaps with GPU
+//! execution: the delayed-verification CPU metadata preparation, the
+//! KV-offload copier, and the workload's request arrival process.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    jobs: std::collections::VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// Fixed-size worker pool with `spawn` + `wait_idle` semantics.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    idle_cv: Arc<(Mutex<()>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                jobs: Default::default(),
+                shutdown: false,
+                in_flight: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        let idle_cv = Arc::new((Mutex::new(()), Condvar::new()));
+        let workers = (0..n.max(1))
+            .map(|_| {
+                let sh = shared.clone();
+                let idle = idle_cv.clone();
+                thread::spawn(move || loop {
+                    let job = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.jobs.pop_front() {
+                                q.in_flight += 1;
+                                break Some(j);
+                            }
+                            if q.shutdown {
+                                break None;
+                            }
+                            q = sh.cv.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        None => return,
+                        Some(j) => {
+                            j();
+                            let mut q = sh.queue.lock().unwrap();
+                            q.in_flight -= 1;
+                            let idle_now = q.in_flight == 0 && q.jobs.is_empty();
+                            drop(q);
+                            if idle_now {
+                                idle.1.notify_all();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self { shared, workers, idle_cv }
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until the queue is drained and no job is running.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.idle_cv;
+        let mut g = lock.lock().unwrap();
+        loop {
+            {
+                let q = self.shared.queue.lock().unwrap();
+                if q.jobs.is_empty() && q.in_flight == 0 {
+                    return;
+                }
+            }
+            let (g2, _timeout) = cv
+                .wait_timeout(g, std::time::Duration::from_millis(50))
+                .unwrap();
+            g = g2;
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A one-shot future-like cell: spawn work, fetch the result later.
+/// This is the overlap primitive used by delayed verification (§4.3): the
+/// consumer calls `get()` only one iteration later, so the producer runs
+/// concurrently with the current GPU step.
+pub struct Promise<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T: Send + 'static> Promise<T> {
+    pub fn spawn_on<F: FnOnce() -> T + Send + 'static>(pool: &ThreadPool, f: F) -> Self {
+        let (tx, rx) = mpsc::channel();
+        pool.spawn(move || {
+            let _ = tx.send(f());
+        });
+        Promise { rx }
+    }
+
+    /// Blocks until the value is ready.
+    pub fn get(self) -> T {
+        self.rx.recv().expect("promise producer dropped")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn promise_roundtrip() {
+        let pool = ThreadPool::new(2);
+        let p = Promise::spawn_on(&pool, || 21 * 2);
+        assert_eq!(p.get(), 42);
+    }
+
+    #[test]
+    fn promises_overlap() {
+        let pool = ThreadPool::new(2);
+        let t0 = std::time::Instant::now();
+        let a = Promise::spawn_on(&pool, || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            1
+        });
+        let b = Promise::spawn_on(&pool, || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            2
+        });
+        assert_eq!(a.get() + b.get(), 3);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(95));
+    }
+}

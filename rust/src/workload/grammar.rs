@@ -1,0 +1,327 @@
+//! Rust port of the synthetic reasoning-trace grammar
+//! (`python/compile/data.py`) — MUST stay bit-identical to the Python
+//! generator; `python/tests/test_data.py` and `grammar_golden` below pin
+//! both sides to the same token stream for the same seed.
+
+use crate::model::GrammarConfig;
+use crate::util::rng::SplitMix64;
+use std::collections::BTreeMap;
+
+/// Stateful generator of one reasoning trace (header of definitions, then
+/// query / redefinition / filler blocks).
+pub struct TraceGen {
+    pub g: GrammarConfig,
+    rng: SplitMix64,
+    slots: BTreeMap<i32, i32>,
+    focus: Option<i32>,
+    buf: std::collections::VecDeque<i32>,
+}
+
+impl TraceGen {
+    pub fn new(seed: u64, g: GrammarConfig) -> Self {
+        let mut t = TraceGen {
+            g,
+            rng: SplitMix64::new(seed),
+            slots: BTreeMap::new(),
+            focus: None,
+            buf: Default::default(),
+        };
+        t.emit_header();
+        t
+    }
+
+    fn slot_tok(&self, i: i32) -> i32 {
+        self.g.slot_base + i
+    }
+
+    fn val_tok(&self, i: i32) -> i32 {
+        self.g.value_base + i
+    }
+
+    /// Successor of filler `t` at position `j` inside a mode-`mode` run.
+    /// The j-dependence forces a local (mode + run-start) circuit rather
+    /// than induction-style copying — see python GrammarConfig.filler_next.
+    pub fn filler_next(g: &GrammarConfig, t: i32, mode: usize, j: i32) -> i32 {
+        let i = t - g.filler_base;
+        g.filler_base + (i + g.mode_mul[mode] + j).rem_euclid(g.n_filler)
+    }
+
+    fn pick_focus(&mut self) {
+        let keys: Vec<i32> = self.slots.keys().copied().collect();
+        self.focus = Some(keys[self.rng.below(keys.len() as u64) as usize]);
+    }
+
+    fn emit_header(&mut self) {
+        self.buf.push_back(self.g.bos);
+        for _ in 0..self.g.n_defs {
+            let s = self.rng.below(self.g.n_slots as u64) as i32;
+            let v = self.rng.below(self.g.n_values as u64) as i32;
+            self.slots.insert(s, v);
+            let (st, vt) = (self.slot_tok(s), self.val_tok(v));
+            self.buf.extend([self.g.def_tok, st, vt, self.g.sep]);
+        }
+    }
+
+    fn emit_block(&mut self) {
+        let r = self.rng.unit();
+        if r < self.g.query_prob && !self.slots.is_empty() {
+            // Queries dwell on the focus slot (temporal locality of the
+            // critical definition), occasionally probing another slot.
+            // Python iterates sorted(slots.keys()); BTreeMap is sorted too.
+            if self.focus.map(|f| !self.slots.contains_key(&f)).unwrap_or(true) {
+                self.pick_focus();
+            }
+            let s = if self.rng.unit() < self.g.focus_query_prob {
+                self.focus.unwrap()
+            } else {
+                let keys: Vec<i32> = self.slots.keys().copied().collect();
+                keys[self.rng.below(keys.len() as u64) as usize]
+            };
+            let v = self.slots[&s];
+            let (qt, st, et, vt, sep) = (
+                self.g.qry,
+                self.slot_tok(s),
+                self.g.eq,
+                self.val_tok(v),
+                self.g.sep,
+            );
+            self.buf.extend([qt, st, et, vt, sep]);
+            if self.rng.unit() < self.g.focus_switch_prob {
+                self.pick_focus();
+            }
+        } else if r < self.g.query_prob + self.g.redefine_prob {
+            let s = self.rng.below(self.g.n_slots as u64) as i32;
+            let v = self.rng.below(self.g.n_values as u64) as i32;
+            self.slots.insert(s, v);
+            let (dt, st, vt, sep) =
+                (self.g.def_tok, self.slot_tok(s), self.val_tok(v), self.g.sep);
+            self.buf.extend([dt, st, vt, sep]);
+        } else {
+            let m = self.rng.below(self.g.n_modes as u64) as usize;
+            let mut f = self.g.filler_base + self.rng.below(self.g.n_filler as u64) as i32;
+            let run = 3 + self.rng.below(6);
+            self.buf.push_back(self.g.mode_base + m as i32);
+            for j in 0..run {
+                self.buf.push_back(f);
+                f = Self::filler_next(&self.g, f, m, j as i32);
+            }
+        }
+    }
+
+    /// Next `n` tokens of the trace.
+    pub fn take(&mut self, n: usize) -> Vec<i32> {
+        while self.buf.len() < n {
+            self.emit_block();
+        }
+        self.buf.drain(..n).collect()
+    }
+
+    /// A serving prompt (definition header + a couple of body blocks),
+    /// capped at 32 tokens.  Mirrors python `data.prompt`.
+    pub fn prompt(seed: u64, g: GrammarConfig) -> Vec<i32> {
+        let mut gen = TraceGen::new(seed, g);
+        let n = (1 + 4 * gen.g.n_defs) as usize;
+        while gen.buf.len() < n + 8 {
+            gen.emit_block();
+        }
+        let take = gen.buf.len().min(32);
+        gen.take(take)
+    }
+}
+
+/// Grammar-aware next-token predictability classes, used by analysis
+/// benches (Fig. 4 companion) to label positions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenClass {
+    /// Deterministic given local context (filler chain, EQ after slot, ...).
+    Local,
+    /// Requires a long-range lookup (value after `QRY slot EQ`).
+    Lookup,
+    /// Genuinely random (new slot choices, new values, block starts).
+    Random,
+}
+
+/// Classify the next-token prediction problem at position i of `toks`
+/// (predicting toks[i+1]) — a grammar-level oracle used in tests/benches.
+pub fn classify_next(g: &GrammarConfig, toks: &[i32], i: usize) -> TokenClass {
+    let t = toks[i];
+    let is_filler = |x: i32| x >= g.filler_base && x < g.filler_base + g.n_filler;
+    if t >= g.mode_base && t < g.mode_base + g.n_modes {
+        return TokenClass::Random; // chain start is a free choice
+    }
+    if t == g.eq {
+        // value after EQ: if preceding is QRY slot -> lookup; DEF -> random
+        if i >= 2 && toks[i - 2] == g.qry {
+            return TokenClass::Lookup;
+        }
+        return TokenClass::Random;
+    }
+    if is_filler(t) {
+        return TokenClass::Local; // chain step is deterministic given mode
+    }
+    if t == g.qry || t == g.def_tok {
+        return TokenClass::Random; // which slot — random
+    }
+    if t >= g.slot_base && t < g.slot_base + g.n_slots {
+        return TokenClass::Local; // after slot comes EQ (qry) or value (def)
+    }
+    TokenClass::Random
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> GrammarConfig {
+        GrammarConfig {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            def_tok: 3,
+            qry: 4,
+            eq: 5,
+            sep: 6,
+            slot_base: 16,
+            n_slots: 48,
+            value_base: 80,
+            n_values: 256,
+            filler_base: 336,
+            n_filler: 120,
+            mode_base: 456,
+            n_modes: 12,
+            n_defs: 8,
+            redefine_prob: 0.08,
+            query_prob: 0.30,
+            focus_query_prob: 0.85,
+            focus_switch_prob: 0.18,
+            mode_mul: vec![1, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43],
+            mode_add: vec![3, 8, 1, 14, 5, 11, 2, 7, 9, 4, 13, 6],
+        }
+    }
+
+    #[test]
+    fn header_shape() {
+        let mut t = TraceGen::new(7, grammar());
+        let toks = t.take(33);
+        assert_eq!(toks[0], 1); // BOS
+        // 8 defs of the form DEF slot value SEP
+        for d in 0..8 {
+            let b = 1 + d * 4;
+            assert_eq!(toks[b], 3, "def tok at block {d}");
+            assert!(toks[b + 1] >= 16 && toks[b + 1] < 64);
+            assert!(toks[b + 2] >= 80 && toks[b + 2] < 336);
+            assert_eq!(toks[b + 3], 6);
+        }
+    }
+
+    /// Golden traces pinned against python/compile/data.py (see
+    /// python/tests/test_data.py which asserts the same values).
+    #[test]
+    fn grammar_golden_cross_language() {
+        let mut t = TraceGen::new(7, grammar());
+        assert_eq!(
+            t.take(24),
+            vec![
+                1, 3, 55, 108, 6, 3, 34, 283, 6, 3, 26, 97, 6, 3, 38, 334, 6, 3,
+                33, 185, 6, 3, 59, 124
+            ]
+        );
+        let mut t = TraceGen::new(123, grammar());
+        assert_eq!(
+            t.take(12),
+            vec![1, 3, 59, 204, 6, 3, 56, 335, 6, 3, 18, 96]
+        );
+    }
+
+    #[test]
+    fn queries_reference_defined_values() {
+        let g = grammar();
+        let mut t = TraceGen::new(123, g.clone());
+        let toks = t.take(400);
+        // Scan QRY slot EQ value SEP patterns; the value must equal the
+        // most recent definition of that slot.
+        let mut defs = std::collections::HashMap::new();
+        let mut i = 0;
+        let mut queries = 0;
+        while i + 4 < toks.len() {
+            if toks[i] == g.def_tok {
+                defs.insert(toks[i + 1], toks[i + 2]);
+                i += 4;
+            } else if toks[i] == g.qry {
+                let (slot, val) = (toks[i + 1], toks[i + 3]);
+                assert_eq!(toks[i + 2], g.eq);
+                if let Some(&v) = defs.get(&slot) {
+                    assert_eq!(val, v, "query must return latest definition");
+                    queries += 1;
+                }
+                i += 5;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(queries >= 3, "trace should contain several queries");
+    }
+
+    #[test]
+    fn filler_chain_deterministic_per_mode_and_position() {
+        let g = grammar();
+        let f0 = 336;
+        assert_eq!(TraceGen::filler_next(&g, f0, 0, 0), 336 + 1);
+        // different modes give different successors
+        let succ: std::collections::HashSet<i32> = (0..g.n_modes as usize)
+            .map(|m| TraceGen::filler_next(&g, f0 + 5, m, 0))
+            .collect();
+        assert!(succ.len() > 8, "modes should induce distinct chains");
+        // the position inside the run matters (anti-induction property)
+        assert_ne!(
+            TraceGen::filler_next(&g, f0, 0, 0),
+            TraceGen::filler_next(&g, f0, 0, 1)
+        );
+        for &f in &succ {
+            assert!(f >= g.filler_base && f < g.filler_base + g.n_filler);
+        }
+    }
+
+    #[test]
+    fn prompt_is_bounded_and_deterministic() {
+        let g = grammar();
+        let p1 = TraceGen::prompt(5, g.clone());
+        let p2 = TraceGen::prompt(5, g.clone());
+        assert_eq!(p1, p2);
+        assert!(p1.len() <= 32 && p1.len() >= 16);
+        assert_eq!(p1[0], g.bos);
+    }
+
+    #[test]
+    fn classifier_labels_filler_local() {
+        let g = grammar();
+        let toks = vec![336, TraceGen::filler_next(&g, 336, 0, 0)];
+        assert_eq!(classify_next(&g, &toks, 0), TokenClass::Local);
+        let toks2 = vec![g.mode_base + 2, 340];
+        assert_eq!(classify_next(&g, &toks2, 0), TokenClass::Random);
+    }
+
+    #[test]
+    fn queries_dwell_on_focus() {
+        // With focus_query_prob=0.85, consecutive queries should mostly
+        // target the same slot (the temporal-locality property PillarAttn
+        // relies on).
+        let g = grammar();
+        let mut t = TraceGen::new(5, g.clone());
+        let toks = t.take(3000);
+        let mut qslots = Vec::new();
+        let mut i = 0;
+        while i + 4 < toks.len() {
+            if toks[i] == g.qry {
+                qslots.push(toks[i + 1]);
+                i += 5;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(qslots.len() > 20);
+        let same: usize = qslots.windows(2).filter(|w| w[0] == w[1]).count();
+        let frac = same as f64 / (qslots.len() - 1) as f64;
+        assert!(frac > 0.5, "focus locality too weak: {frac}");
+    }
+}

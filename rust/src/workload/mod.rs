@@ -1,0 +1,239 @@
+//! Workload generation: the reasoning-trace grammar (shared with training),
+//! dataset profiles mirroring the paper's Table 1 length statistics, and
+//! request traces (batch/offline and Poisson online arrivals).
+
+pub mod grammar;
+pub mod trace;
+
+pub use grammar::{classify_next, TokenClass, TraceGen};
+
+use crate::model::{GrammarConfig, ModelConfig};
+use crate::util::rng::Xoshiro256;
+
+/// One serving request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Generation budget for this request (the "output length" the paper's
+    /// datasets induce; unknown to admission policies unless oracle).
+    pub max_new: usize,
+    /// Arrival time in seconds from trace start (0 for offline batches).
+    pub arrival_s: f64,
+    /// Grammar seed — continuation of the prompt's trace, used by the
+    /// N-gram-style drafters for *their* view of history only.
+    pub seed: u64,
+}
+
+/// Dataset profiles: the paper's Table 1 (Qwen3-14B outputs), linearly
+/// scaled by 1/50 to our 512-token context window.  Input lengths scale to
+/// our 32-token prompt pad.  `scale_note` documents the mapping in reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    /// AIME: 13185 ± 7626 out  ->  264 ± 152
+    Aime,
+    /// OlympiadBench: 10233 ± 7889  ->  205 ± 158
+    OlympiadBench,
+    /// LiveCodeBench: 10254 ± 7458  ->  205 ± 149
+    LiveCodeBench,
+    /// Non-reasoning reference (Qwen2.5-32B column of Table 1, AIME row):
+    /// 1732 ± 997 -> 35 ± 20.  Used for the Table 1 contrast.
+    NonReasoningAime,
+    /// The long-generation *steady-state* slice of AIME (400 ± 60): the
+    /// paper's 10K+-token regime, where resident contexts dwarf the draft
+    /// budget.  Uniform 1/50 scaling of the whole AIME distribution keeps
+    /// many short requests whose contexts are comparable to W (s_eff ~ 0.4,
+    /// a regime the paper never operates in); this slice restores the
+    /// paper's context-to-budget ratio as far as the 512-token window
+    /// allows (s_eff ~ 0.16).
+    AimeLong,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "aime" => Some(Dataset::Aime),
+            "olympiad" | "olympiadbench" => Some(Dataset::OlympiadBench),
+            "livecode" | "livecodebench" | "lcb" => Some(Dataset::LiveCodeBench),
+            "nonreasoning" | "short" => Some(Dataset::NonReasoningAime),
+            "aimelong" | "aime-long" | "long" => Some(Dataset::AimeLong),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Aime => "AIME",
+            Dataset::OlympiadBench => "OlympiadBench",
+            Dataset::LiveCodeBench => "LiveCodeBench",
+            Dataset::NonReasoningAime => "NonReasoning",
+            Dataset::AimeLong => "AIME-long",
+        }
+    }
+
+    /// (mean, std) of the scaled output-length distribution.
+    pub fn out_profile(&self) -> (f64, f64) {
+        match self {
+            Dataset::Aime => (264.0, 152.0),
+            Dataset::OlympiadBench => (205.0, 158.0),
+            Dataset::LiveCodeBench => (205.0, 149.0),
+            Dataset::NonReasoningAime => (35.0, 20.0),
+            Dataset::AimeLong => (400.0, 60.0),
+        }
+    }
+
+    /// Paper-scale (unscaled) statistics, for the Table 1 report.
+    pub fn paper_profile(&self) -> (f64, f64) {
+        match self {
+            Dataset::Aime => (13185.0, 7626.0),
+            Dataset::OlympiadBench => (10233.0, 7889.0),
+            Dataset::LiveCodeBench => (10254.0, 7458.0),
+            Dataset::NonReasoningAime => (1732.0, 997.0),
+            Dataset::AimeLong => (13185.0, 7626.0),
+        }
+    }
+
+    pub fn all() -> [Dataset; 3] {
+        [Dataset::Aime, Dataset::OlympiadBench, Dataset::LiveCodeBench]
+    }
+}
+
+/// Generates request traces for a dataset profile.
+pub struct WorkloadGen {
+    pub grammar: GrammarConfig,
+    pub model: ModelConfig,
+    pub dataset: Dataset,
+    rng: Xoshiro256,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(grammar: GrammarConfig, model: ModelConfig, dataset: Dataset, seed: u64) -> Self {
+        WorkloadGen {
+            grammar,
+            model,
+            dataset,
+            rng: Xoshiro256::new(seed ^ 0xDA7A_5E7),
+            next_id: 0,
+        }
+    }
+
+    /// Clamp generation budget so prompt + output (+ draft overshoot k)
+    /// always fits the KV window.
+    fn clamp_new(&self, n: f64) -> usize {
+        let hi = self.model.max_seq - self.model.prompt_pad - self.model.spec_k - 2;
+        (n.round() as usize).clamp(8, hi)
+    }
+
+    pub fn next_request(&mut self, arrival_s: f64) -> Request {
+        let (mean, std) = self.dataset.out_profile();
+        let raw = self.rng.lognormal_mean_std(mean, std);
+        let max_new = self.clamp_new(raw);
+        let seed = self.rng.next_u64();
+        let prompt = TraceGen::prompt(seed, self.grammar.clone());
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, prompt, max_new, arrival_s, seed }
+    }
+
+    /// Offline batch: `n` requests, all available at t=0 (the RL-rollout /
+    /// throughput-oriented setting of §2.2).
+    pub fn offline_batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request(0.0)).collect()
+    }
+
+    /// Online trace: Poisson arrivals at `rate` req/s for `horizon_s`.
+    pub fn online_trace(&mut self, rate: f64, horizon_s: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += self.rng.exponential(rate);
+            if t > horizon_s {
+                return out;
+            }
+            let r = self.next_request(t);
+            out.push(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfgs() -> (GrammarConfig, ModelConfig) {
+        let g = GrammarConfig {
+            pad: 0, bos: 1, eos: 2, def_tok: 3, qry: 4, eq: 5, sep: 6,
+            slot_base: 16, n_slots: 48, value_base: 80, n_values: 256,
+            filler_base: 336, n_filler: 120, mode_base: 456, n_modes: 12,
+            n_defs: 8, redefine_prob: 0.08, query_prob: 0.30,
+            focus_query_prob: 0.85, focus_switch_prob: 0.18,
+            mode_mul: vec![1, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43],
+            mode_add: vec![3, 8, 1, 14, 5, 11, 2, 7, 9, 4, 13, 6],
+        };
+        let m = ModelConfig {
+            vocab: 512, hidden: 128, layers: 4, q_heads: 4, kv_heads: 2,
+            head_dim: 32, ffn: 256, max_seq: 512, slots: 12, prompt_pad: 32,
+            spec_k: 8, draft_budget: 64,
+            verify_q_variants: vec![1, 5, 9, 13, 17, 21],
+            draft_w_variants: vec![16, 32, 64, 128, 256],
+        };
+        (g, m)
+    }
+
+    #[test]
+    fn lengths_match_profile() {
+        let (g, m) = cfgs();
+        let mut w = WorkloadGen::new(g, m, Dataset::Aime, 1);
+        let reqs = w.offline_batch(2000);
+        let mean: f64 =
+            reqs.iter().map(|r| r.max_new as f64).sum::<f64>() / reqs.len() as f64;
+        // Clamping truncates the log-normal tail, so the mean lands below
+        // the raw profile mean; it must stay in a sane band.
+        assert!(mean > 150.0 && mean < 290.0, "mean={mean}");
+        let max = reqs.iter().map(|r| r.max_new).max().unwrap();
+        assert!(max <= 512 - 32 - 8 - 2);
+    }
+
+    #[test]
+    fn nonreasoning_is_much_shorter() {
+        let (g, m) = cfgs();
+        let mut a = WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 1);
+        let mut b = WorkloadGen::new(g, m, Dataset::NonReasoningAime, 1);
+        let la: usize = a.offline_batch(500).iter().map(|r| r.max_new).sum();
+        let lb: usize = b.offline_batch(500).iter().map(|r| r.max_new).sum();
+        // Table 1's ~7x reasoning-vs-non-reasoning gap (clamped somewhat).
+        assert!(la as f64 / lb as f64 > 4.0, "ratio={}", la as f64 / lb as f64);
+    }
+
+    #[test]
+    fn prompts_are_valid_grammar() {
+        let (g, m) = cfgs();
+        let mut w = WorkloadGen::new(g.clone(), m, Dataset::LiveCodeBench, 9);
+        for r in w.offline_batch(20) {
+            assert!(!r.prompt.is_empty() && r.prompt.len() <= 32);
+            assert_eq!(r.prompt[0], g.bos);
+            assert!(r.prompt.iter().all(|&t| t >= 0 && t < 512));
+        }
+    }
+
+    #[test]
+    fn online_arrivals_sorted_and_rate_plausible() {
+        let (g, m) = cfgs();
+        let mut w = WorkloadGen::new(g, m, Dataset::Aime, 4);
+        let trace = w.online_trace(10.0, 50.0);
+        assert!(trace.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        let n = trace.len() as f64;
+        assert!((n / 50.0 - 10.0).abs() < 2.0, "rate={}", n / 50.0);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let (g, m) = cfgs();
+        let mut w = WorkloadGen::new(g, m, Dataset::Aime, 4);
+        let reqs = w.offline_batch(100);
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+    }
+}

@@ -1,0 +1,109 @@
+//! Request-trace record/replay: serialise a workload to JSON so a run can
+//! be reproduced exactly across machines (and so failing benchmark
+//! configurations can be shared as artefacts).
+
+use super::Request;
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::{anyhow, Result};
+
+/// Serialise a request trace.
+pub fn to_json(reqs: &[Request]) -> String {
+    arr(reqs.iter().map(|r| {
+        obj(vec![
+            ("id", num(r.id as f64)),
+            ("prompt", arr(r.prompt.iter().map(|&t| num(t as f64)))),
+            ("max_new", num(r.max_new as f64)),
+            ("arrival_s", num(r.arrival_s)),
+            ("seed", s(&r.seed.to_string())), // u64-safe as string
+        ])
+    }))
+    .to_string()
+}
+
+/// Parse a request trace back.
+pub fn from_json(text: &str) -> Result<Vec<Request>> {
+    let j = Json::parse(text).map_err(|e| anyhow!("trace parse: {e}"))?;
+    let items = j.as_arr().ok_or_else(|| anyhow!("trace must be an array"))?;
+    items
+        .iter()
+        .map(|it| {
+            let id = it
+                .get("id")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("missing id"))? as u64;
+            let prompt = it
+                .get("prompt")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing prompt"))?
+                .iter()
+                .filter_map(|t| t.as_i64().map(|x| x as i32))
+                .collect();
+            let max_new = it
+                .get("max_new")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("missing max_new"))?;
+            let arrival_s = it.get("arrival_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let seed = it
+                .get("seed")
+                .and_then(|v| v.as_str())
+                .and_then(|x| x.parse().ok())
+                .unwrap_or(0);
+            Ok(Request { id, prompt, max_new, arrival_s, seed })
+        })
+        .collect()
+}
+
+pub fn save(path: &str, reqs: &[Request]) -> Result<()> {
+    std::fs::write(path, to_json(reqs))?;
+    Ok(())
+}
+
+pub fn load(path: &str) -> Result<Vec<Request>> {
+    from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Request> {
+        vec![
+            Request {
+                id: 3,
+                prompt: vec![1, 3, 55, 108, 6],
+                max_new: 120,
+                arrival_s: 0.5,
+                seed: u64::MAX - 7,
+            },
+            Request {
+                id: 4,
+                prompt: vec![1],
+                max_new: 8,
+                arrival_s: 1.25,
+                seed: 42,
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let reqs = sample();
+        let text = to_json(&reqs);
+        let back = from_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new, b.max_new);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.seed, b.seed); // u64::MAX survives (string-coded)
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json(r#"[{"id": 1}]"#).is_err());
+        assert!(from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full stack: PJRT runtime, engine rounds, every
+//! drafter, KV policies, schedules — and the paper's core *losslessness*
+//! invariant: greedy speculative decoding reproduces vanilla outputs
+//! token-for-token, for every drafter.
+
+use std::rc::Rc;
+
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::kv_cache::KvPolicy;
+use sparsespec::runtime::{ModelRunner, Runtime};
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
+use sparsespec::workload::{Dataset, WorkloadGen};
+
+fn artifacts_dir() -> String {
+    std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load(&artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+fn requests(rt: &Runtime, ds: Dataset, n: usize, seed: u64) -> Vec<sparsespec::workload::Request> {
+    WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), ds, seed).offline_batch(n)
+}
+
+/// Shorten request budgets so integration tests stay fast.
+fn small_requests(rt: &Runtime, n: usize, cap: usize) -> Vec<sparsespec::workload::Request> {
+    let mut reqs = requests(rt, Dataset::Aime, n, 99);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+#[test]
+fn runtime_loads_and_executes_verify() {
+    let rt = runtime();
+    let m = rt.cfg.model.clone();
+    let mut runner = ModelRunner::new(rt.clone()).unwrap();
+    let logits = runner
+        .prefill(
+            &vec![5i32; m.slots * m.prompt_pad],
+            &vec![4i32; m.slots],
+            &vec![1i32; m.slots],
+        )
+        .unwrap();
+    assert_eq!(logits.len(), m.slots * m.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn vanilla_decode_is_deterministic() {
+    let rt = runtime();
+    let run = |seed| {
+        let mut eng = Engine::new(rt.clone(), EngineConfig::new(DrafterKind::Vanilla)).unwrap();
+        let mut reqs = small_requests(&rt, 3, 40);
+        for r in &mut reqs {
+            r.id += seed;
+        }
+        eng.run(reqs).unwrap()
+    };
+    let a = run(0);
+    let b = run(0);
+    assert_eq!(a.tokens_generated, b.tokens_generated);
+    for (x, y) in a.outputs.values().zip(b.outputs.values()) {
+        assert_eq!(x, y);
+    }
+}
+
+/// THE paper invariant: every speculative drafter is lossless under greedy
+/// decoding — outputs must equal the vanilla outputs exactly.
+#[test]
+fn all_drafters_are_lossless() {
+    let rt = runtime();
+    let reqs = small_requests(&rt, 4, 48);
+    let mut vanilla = Engine::new(rt.clone(), EngineConfig::new(DrafterKind::Vanilla)).unwrap();
+    let base = vanilla.run(reqs.clone()).unwrap();
+    for drafter in [
+        DrafterKind::Pillar { w: 64 },
+        DrafterKind::Window { w: 64 },
+        DrafterKind::NGram { n: 3 },
+        DrafterKind::Eagle,
+        DrafterKind::TriForce { w: 64 },
+    ] {
+        let mut eng = Engine::new(rt.clone(), EngineConfig::new(drafter).with_k(8)).unwrap();
+        let r = eng.run(reqs.clone()).unwrap();
+        for (id, out) in &base.outputs {
+            assert_eq!(
+                out,
+                &r.outputs[id],
+                "drafter {} diverged from vanilla on request {id}",
+                drafter.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn unified_schedule_lossless_and_flatter() {
+    let rt = runtime();
+    let reqs = small_requests(&rt, 6, 40);
+    let mut lock = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_schedule(Schedule::Lockstep, false),
+    )
+    .unwrap();
+    let rl = lock.run(reqs.clone()).unwrap();
+    let mut uni = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_schedule(Schedule::Unified, false),
+    )
+    .unwrap();
+    let ru = uni.run(reqs.clone()).unwrap();
+    for (id, out) in &rl.outputs {
+        assert_eq!(out, &ru.outputs[id], "unified schedule changed output {id}");
+    }
+    // The point of unified scheduling: a flatter GEMM-row trace.
+    assert!(
+        ru.trace.gemm_rows_stddev() < rl.trace.gemm_rows_stddev(),
+        "unified {} !< lockstep {}",
+        ru.trace.gemm_rows_stddev(),
+        rl.trace.gemm_rows_stddev()
+    );
+}
+
+#[test]
+fn delayed_verification_lossless() {
+    let rt = runtime();
+    let reqs = small_requests(&rt, 4, 40);
+    let mut sync = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_schedule(Schedule::Unified, false),
+    )
+    .unwrap();
+    let rs = sync.run(reqs.clone()).unwrap();
+    let mut delayed = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_schedule(Schedule::Unified, true),
+    )
+    .unwrap();
+    let rd = delayed.run(reqs.clone()).unwrap();
+    for (id, out) in &rs.outputs {
+        assert_eq!(out, &rd.outputs[id], "delayed verification changed output {id}");
+    }
+    // Overlap must not increase the simulated CPU critical path.
+    assert!(rd.sim_cpu_s <= rs.sim_cpu_s + 1e-6);
+}
+
+#[test]
+fn kv_offload_roundtrip_preserves_output() {
+    let rt = runtime();
+    let m = &rt.cfg.model;
+    let reqs = small_requests(&rt, 8, 56);
+    // Unbounded budget reference.
+    let mut free = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8),
+    )
+    .unwrap();
+    let rf = free.run(reqs.clone()).unwrap();
+    // Tight budget forces offloads mid-run.
+    let budget = m.slots * m.max_seq / 16;
+    let mut tight = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_kv(KvPolicy::Dynamic, budget),
+    )
+    .unwrap();
+    let rt_ = tight.run(reqs.clone()).unwrap();
+    assert!(rt_.kv.offload_events > 0, "budget never pressured — test is vacuous");
+    assert_eq!(rt_.kv.recomputed_tokens, 0, "dynamic policy must never recompute");
+    assert_eq!(rf.requests_done, rt_.requests_done);
+    for (id, out) in &rf.outputs {
+        assert_eq!(out, &rt_.outputs[id], "offload roundtrip corrupted request {id}");
+    }
+}
+
+#[test]
+fn preempt_policy_recomputes_but_stays_correct() {
+    let rt = runtime();
+    let m = &rt.cfg.model;
+    let reqs = small_requests(&rt, 8, 48);
+    let mut free = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8),
+    )
+    .unwrap();
+    let rf = free.run(reqs.clone()).unwrap();
+    let budget = m.slots * m.max_seq / 16;
+    let mut eng = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_kv(KvPolicy::Preempt, budget),
+    )
+    .unwrap();
+    let r = eng.run(reqs.clone()).unwrap();
+    assert!(r.kv.recomputed_tokens > 0, "budget never pressured — test is vacuous");
+    assert_eq!(r.requests_done, rf.requests_done);
+    for (id, out) in &rf.outputs {
+        assert_eq!(out, &r.outputs[id], "preemption corrupted request {id}");
+    }
+}
+
+#[test]
+fn stochastic_mode_runs_and_accepts() {
+    let rt = runtime();
+    let mut cfg = EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+    cfg.temperature = 0.65; // the paper's sampling temperature
+    let mut eng = Engine::new(rt.clone(), cfg).unwrap();
+    let r = eng.run(small_requests(&rt, 3, 40)).unwrap();
+    assert_eq!(r.requests_done, 3);
+    assert!(r.accept.alpha() > 0.05, "stochastic acceptance collapsed");
+    for out in r.outputs.values() {
+        assert!(out.iter().all(|&t| t >= 0 && (t as usize) < rt.cfg.model.vocab));
+    }
+}
+
+#[test]
+fn sensitivity_variants_load() {
+    // Every artifact variant referenced by the Fig. 12 sweeps must load
+    // and execute.
+    let rt = runtime();
+    for q in rt.cfg.model.verify_q_variants.clone() {
+        rt.executable(&format!("verify_q{q}")).unwrap();
+    }
+    for w in rt.cfg.model.draft_w_variants.clone() {
+        rt.executable(&format!("draft_w{w}")).unwrap();
+    }
+}
+
+#[test]
+fn pallas_compose_proof_artifacts_match_ref_path() {
+    // The pallas-lowered artifacts must produce the same numerics as the
+    // ref-path artifacts the engine serves with (compose proof).
+    let rt = runtime();
+    let m = rt.cfg.model.clone();
+    let mut runner = ModelRunner::new(rt.clone()).unwrap();
+    let s = m.slots;
+    // Build a tiny context then compare one draft step on both paths.
+    let prompt: Vec<i32> = (0..8).map(|i| 16 + i as i32).collect();
+    let mut tokens = vec![0i32; s * m.prompt_pad];
+    for (j, &t) in prompt.iter().enumerate() {
+        tokens[j] = t;
+    }
+    let mut plen = vec![1i32; s];
+    plen[0] = prompt.len() as i32;
+    let active: Vec<i32> = (0..s).map(|i| if i == 0 { 1 } else { 0 }).collect();
+    runner.prefill(&tokens, &plen, &active).unwrap();
+
+    let w = m.draft_budget;
+    let mut idx = vec![-1i32; s * m.layers * m.kv_heads * w];
+    for lh in 0..(m.layers * m.kv_heads) {
+        for j in 0..9 {
+            idx[lh * w + j] = j as i32;
+        }
+    }
+    let token = vec![7i32; s];
+    let pos = vec![8i32; s];
+    // ref path artifact
+    let a = runner.draft(w, &token, &pos, &idx, &active).unwrap();
+    // pallas path artifact — same inputs, direct execute
+    let rtc = runner.rt.clone();
+    let weights = {
+        let dirp = std::path::Path::new(&rtc.cfg.dir).join("weights.bin");
+        Runtime::read_f32_file(&dirp).unwrap()
+    };
+    let wbuf = rtc.upload_f32(&weights, &[weights.len()]).unwrap();
+    let dims = [m.layers, m.slots, m.max_seq, m.kv_heads, m.head_dim];
+    let zeros = vec![0f32; m.kv_pool_elems()];
+    let kvk = rtc.upload_f32(&zeros, &dims).unwrap();
+    let kvv = rtc.upload_f32(&zeros, &dims).unwrap();
+    // replay prefill on the fresh pools via the pallas prefill? prefill has
+    // no pallas variant; reuse ref prefill then pallas draft.
+    let tok_b = rtc.upload_i32(&tokens, &[s, m.prompt_pad]).unwrap();
+    let plen_b = rtc.upload_i32(&plen, &[s]).unwrap();
+    let act_b = rtc.upload_i32(&active, &[s]).unwrap();
+    let out = rtc
+        .execute("prefill", &[&wbuf, &kvk, &kvv, &tok_b, &plen_b, &act_b])
+        .unwrap();
+    let (kvk, kvv) = (&out[1], &out[2]);
+    let tok_b = rtc.upload_i32(&token, &[s]).unwrap();
+    let pos_b = rtc.upload_i32(&pos, &[s]).unwrap();
+    let idx_b = rtc
+        .upload_i32(&idx, &[s, m.layers, m.kv_heads, w])
+        .unwrap();
+    let out2 = rtc
+        .execute("draft_pallas", &[&wbuf, kvk, kvv, &tok_b, &pos_b, &idx_b, &act_b])
+        .unwrap();
+    let logits_pallas = rtc.fetch_f32(&out2[0]).unwrap();
+    let max_diff = a
+        .logits
+        .iter()
+        .zip(logits_pallas.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas vs ref artifact diverged: {max_diff}");
+}

@@ -1,0 +1,277 @@
+//! Property tests over the public API (no artifacts needed).
+//!
+//! Complements the per-module #[cfg(test)] suites: these exercise
+//! cross-module invariants the coordinator depends on.  Run with
+//! PTEST_CASES=N to scale case counts; failures print a reproducing seed.
+
+use sparsespec::kv_cache::{HostKv, KvManager, KvPolicy, PressureAction};
+use sparsespec::metrics::Histogram;
+use sparsespec::sampling::{sample_cat, softmax, verify_greedy, verify_stochastic};
+use sparsespec::scheduler::BucketScheduler;
+use sparsespec::spec::{topk_indices, IndexPolicy, NGramIndex};
+use sparsespec::util::json::{arr, num, obj, Json};
+use sparsespec::util::ptest::{run_named, Gen};
+use sparsespec::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------
+// json
+// ---------------------------------------------------------------------
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 || g.bool(0.4) {
+        match g.usize(0, 3) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => num((g.i64(-1_000_000, 1_000_000)) as f64),
+            _ => Json::Str(
+                (0..g.usize(0, 12))
+                    .map(|_| char::from(g.usize(32, 126) as u8))
+                    .collect(),
+            ),
+        }
+    } else if g.bool(0.5) {
+        arr((0..g.usize(0, 5)).map(|_| random_json(g, depth - 1)))
+    } else {
+        let n = g.usize(0, 5);
+        obj((0..n)
+            .map(|i| {
+                let key: &str = Box::leak(format!("k{i}").into_boxed_str());
+                (key, random_json(g, depth - 1))
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn json_roundtrip_property() {
+    run_named("json_roundtrip", |g| {
+        let v = random_json(g, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).expect("serialised json must parse");
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// histogram
+// ---------------------------------------------------------------------
+
+#[test]
+fn histogram_percentiles_bracket_samples() {
+    run_named("hist_pct", |g| {
+        let n = g.usize(1, 500);
+        let mut h = Histogram::default();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..n {
+            let x = g.f64(-100.0, 100.0);
+            lo = lo.min(x);
+            hi = hi.max(x);
+            h.record(x);
+        }
+        let p0 = h.percentile(0.0);
+        let p50 = h.percentile(50.0);
+        let p100 = h.percentile(100.0);
+        assert!(p0 >= lo - 1e-9 && p100 <= hi + 1e-9);
+        assert!(p0 <= p50 && p50 <= p100);
+        assert!(h.mean() >= lo - 1e-9 && h.mean() <= hi + 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------
+// scheduler
+// ---------------------------------------------------------------------
+
+#[test]
+fn bucket_first_draft_len_lands_on_bucket() {
+    run_named("bucket_align", |g| {
+        let k = g.usize(1, 16);
+        let s = BucketScheduler::new(k);
+        let iter = g.u64(0, 10_000);
+        let bucket = g.usize(0, k);
+        let d = s.first_draft_len(iter, bucket);
+        assert!(d <= k);
+        // After d draft iterations, the verify iteration index ≡ bucket.
+        let verify_iter = iter + d as u64;
+        assert_eq!(
+            (verify_iter % (k as u64 + 1)) as usize,
+            bucket,
+            "iter={iter} bucket={bucket} d={d}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// pillar index selection
+// ---------------------------------------------------------------------
+
+#[test]
+fn topk_respects_budget_split_property() {
+    run_named("topk_budget", |g| {
+        let budget = g.usize(8, 96);
+        let policy = IndexPolicy::pillar(budget);
+        assert!(policy.sinks + policy.recent <= policy.budget);
+        let len = g.usize(0, 400);
+        let scores: Vec<f32> = (0..512).map(|_| g.f64(0.0, 1.0) as f32).collect();
+        let ids = topk_indices(&scores, len, &policy);
+        let valid: Vec<i32> = ids.iter().copied().filter(|&x| x >= 0).collect();
+        // sinks present
+        for t in 0..policy.sinks.min(len) {
+            assert!(valid.contains(&(t as i32)));
+        }
+        // full recent window present when budget allows
+        let lo = len.saturating_sub(policy.recent);
+        for t in lo..len {
+            assert!(valid.contains(&(t as i32)), "recent {t} missing");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// kv manager + offload interplay
+// ---------------------------------------------------------------------
+
+#[test]
+fn dynamic_policy_never_recomputes_property() {
+    run_named("kv_no_recompute", |g| {
+        let budget = g.usize(200, 1500);
+        let mut kv = KvManager::new(KvPolicy::Dynamic, budget, budget);
+        let mut next_id = 0u64;
+        for _ in 0..g.usize(20, 120) {
+            if kv.can_admit(32) && g.bool(0.5) {
+                kv.admit(next_id, g.usize(8, 64));
+                next_id += 1;
+            }
+            // random growth on a random resident
+            if next_id > 0 {
+                let id = g.u64(0, next_id - 1);
+                if kv.resident_len(id).is_some() {
+                    kv.grow(id, g.usize(1, 24));
+                }
+            }
+            for act in kv.check_pressure(&[]) {
+                match act {
+                    PressureAction::Offload { req_id } => {
+                        let len = kv.resident_len(req_id).unwrap();
+                        kv.complete_offload(req_id, HostKv { k: vec![], v: vec![], len });
+                    }
+                    PressureAction::Preempt { .. } => {
+                        panic!("dynamic policy must never preempt");
+                    }
+                }
+            }
+            assert!(kv.used_tokens() <= budget + 64 + 24);
+        }
+        assert_eq!(kv.stats.recomputed_tokens, 0);
+    });
+}
+
+#[test]
+fn reload_order_is_fifo_property() {
+    run_named("kv_fifo", |g| {
+        let mut kv = KvManager::new(KvPolicy::Dynamic, 10_000, 100);
+        let n = g.usize(2, 10);
+        // offload n requests in order, then reload: order must match.
+        for id in 0..n as u64 {
+            kv.admit(id, 10);
+        }
+        for id in (0..n as u64).rev() {
+            // emulate pressure victims arriving in some order
+            kv.complete_offload(id, HostKv { k: vec![], v: vec![], len: 10 });
+        }
+        let mut seen = Vec::new();
+        while let Some((id, _)) = kv.try_reload() {
+            seen.push(id);
+        }
+        let mut expect: Vec<u64> = (0..n as u64).rev().collect();
+        assert_eq!(seen, expect.drain(..).collect::<Vec<_>>());
+    });
+}
+
+// ---------------------------------------------------------------------
+// sampling: chained losslessness
+// ---------------------------------------------------------------------
+
+#[test]
+fn greedy_verify_prefix_property() {
+    run_named("greedy_prefix", |g| {
+        // Accepted prefix length equals the longest match with target argmax.
+        let vocab = 8;
+        let k = g.usize(1, 8);
+        let mut logits = vec![0.0f32; (k + 1) * vocab];
+        let mut want: Vec<i32> = Vec::new();
+        for j in 0..=k {
+            let t = g.usize(0, vocab - 1);
+            logits[j * vocab + t] = 5.0;
+            if j < k {
+                want.push(t as i32);
+            }
+        }
+        // draft = target prefix of length m, then a guaranteed mismatch
+        let m = g.usize(0, k);
+        let mut draft = want.clone();
+        if m < k {
+            draft[m] = (want[m] + 1) % vocab as i32;
+        }
+        let r = verify_greedy(&draft, &logits, vocab);
+        assert_eq!(r.accepted, m.min(k));
+    });
+}
+
+#[test]
+fn stochastic_never_accepts_zero_prob_token() {
+    run_named("stoch_zero", |g| {
+        let vocab = 6;
+        let mut rng = Xoshiro256::new(g.u64(0, u64::MAX / 2));
+        // target puts ~zero mass on token 0
+        let mut t_logits = vec![0.0f32; 2 * vocab];
+        t_logits[0] = -40.0;
+        t_logits[vocab] = 0.0;
+        // draft proposes token 0 with high prob
+        let mut q = vec![0.01f32; vocab];
+        q[0] = 0.95;
+        let r = verify_stochastic(&[0], &q, &t_logits, vocab, 1.0, &mut rng);
+        if r.accepted == 1 {
+            panic!("accepted a ~zero-probability token");
+        }
+        assert_ne!(r.next_token, 0);
+    });
+}
+
+#[test]
+fn softmax_sampling_matches_distribution() {
+    // chi-square-ish sanity: empirical freq tracks softmax probs
+    let logits = vec![0.0f32, 1.0, 2.0, 0.5];
+    let p = softmax(&logits, 0.8);
+    let mut rng = Xoshiro256::new(11);
+    let n = 100_000;
+    let mut c = vec![0usize; 4];
+    for _ in 0..n {
+        c[sample_cat(&p, &mut rng)] += 1;
+    }
+    for i in 0..4 {
+        let emp = c[i] as f32 / n as f32;
+        assert!((emp - p[i]).abs() < 0.01, "tok {i}: {emp} vs {}", p[i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// ngram drafting on grammar-like streams
+// ---------------------------------------------------------------------
+
+#[test]
+fn ngram_never_panics_on_random_streams() {
+    run_named("ngram_fuzz", |g| {
+        let mut ix = NGramIndex::new(g.usize(1, 4));
+        for _ in 0..g.usize(1, 30) {
+            let chunk: Vec<i32> = (0..g.usize(1, 20))
+                .map(|_| g.i64(0, 511) as i32)
+                .collect();
+            ix.extend(&chunk);
+            let k = g.usize(1, 10);
+            let p = ix.propose(k);
+            assert!(p.len() <= k);
+            assert!(p.iter().all(|&t| (0..512).contains(&t)));
+        }
+    });
+}
