@@ -1,0 +1,124 @@
+# Cross-check of the rust/src/spec/pillar.rs selection rewrite (PR 1).
+#
+# Two 1:1 Python ports of the Rust code are fuzzed against each other:
+#   * `legacy_*`  — the seed pipeline (full sort + set dedup, per-call
+#     lists), identical to `spec::pillar::reference` on the Rust side and
+#     to `ref.py::topk_ids_ref`'s semantics;
+#   * `new_*`     — the rewritten pipeline (contiguous-range candidate
+#     pool, partial-select top-k, range-check dedup in compose).
+#
+# This is the committed form of the 200k-case fuzz cited in
+# EXPERIMENTS.md §Perf; it checks algorithm semantics (set equality,
+# ordering, -1 padding, tie rule) — compiling the Rust is the tier-1
+# gate's job.  Case count scales via PILLAR_PORT_CASES (default 5000).
+import os
+import random
+
+
+def legacy_topk(scores, length, budget, sinks, recent):
+    chosen = list(range(min(sinks, length)))
+    lo = max(length - recent, 0)
+    chosen += [t for t in range(lo, length) if t >= sinks]
+    chosen = chosen[:budget]
+    rest = budget - len(chosen)
+    if rest > 0 and length > 0:
+        taken = set(chosen)
+        cand = [t for t in range(length) if t not in taken]
+        cand.sort(key=lambda t: (-scores[t], t))
+        chosen += cand[:rest]
+    chosen.sort()
+    return chosen + [-1] * (budget - len(chosen))
+
+
+def new_select(scores, length, budget, sinks, recent):
+    # mirrors select_into: sinks [0, s_eff) and recent [lo, len) are
+    # contiguous, the top-k pool is exactly the gap [s_eff, lo)
+    out = []
+    s_eff = min(sinks, length)
+    lo = max(max(length - recent, 0), s_eff)
+    n_fixed = s_eff + (length - lo)
+    out += list(range(min(s_eff, budget)))
+    if n_fixed >= budget:
+        for t in range(lo, length):
+            if len(out) >= budget:
+                break
+            out.append(t)
+        return out + [-1] * (budget - len(out))
+    rest = budget - n_fixed
+    pool = lo - s_eff
+    if rest > 0 and pool > 0:
+        k = min(rest, pool)
+        cand = sorted(range(s_eff, lo), key=lambda t: (-scores[t], t))
+        out += cand[:k]  # partial select picks the same set: total order
+    out += list(range(lo, length))
+    out.sort()
+    return out + [-1] * (budget - len(out))
+
+
+def legacy_compose_row(crit, length, budget, sinks, recent):
+    s = list(range(min(sinks, length)))
+    lo = max(length - recent, 0)
+    s += [t for t in range(lo, length) if t >= sinks]
+    have = set(s)
+    for c in crit:
+        if len(s) >= budget:
+            break
+        if 0 <= c < length and c not in have:
+            s.append(c)
+    s = s[:budget]
+    s.sort()
+    return s + [-1] * (budget - len(s))
+
+
+def new_compose_row(crit_row, length, budget, sinks, recent):
+    # mirrors compose_into: membership == two range checks
+    s_eff = min(sinks, length)
+    lo = max(max(length - recent, 0), s_eff)
+    out = list(range(min(s_eff, budget)))
+    for t in range(lo, length):
+        if len(out) >= budget:
+            break
+        out.append(t)
+    for c in crit_row:
+        if len(out) >= budget or c < 0:
+            break
+        if s_eff <= c < lo:
+            out.append(c)
+    out.sort()
+    return out + [-1] * (budget - len(out))
+
+
+def test_rewrite_matches_seed_semantics_fuzz():
+    cases = int(os.environ.get("PILLAR_PORT_CASES", "5000"))
+    rng = random.Random(0x5EED)
+    for case in range(cases):
+        budget = rng.randint(1, 40)
+        sinks = rng.randint(0, budget)          # beyond pillar() invariants
+        recent = rng.randint(0, budget + 4)     # sinks+recent may exceed budget
+        t_dim = rng.randint(1, 120)
+        length = rng.randint(0, t_dim)
+        tie_levels = rng.choice([1, 2, 4, 1000])
+        scores = [rng.randint(0, tie_levels) / tie_levels for _ in range(t_dim)]
+
+        a = legacy_topk(scores, length, budget, sinks, recent)
+        b = new_select(scores, length, budget, sinks, recent)
+        assert a == b, f"select mismatch case={case}: {(budget, sinks, recent, length)}"
+
+        # refresh stores the selection; compose at a grown context
+        crit_legacy = [x for x in a if x >= 0]
+        len2 = length + rng.randint(0, 6)
+        ca = legacy_compose_row(crit_legacy, len2, budget, sinks, recent)
+        cb = new_compose_row(b, len2, budget, sinks, recent)
+        assert ca == cb, f"compose mismatch case={case}: {(budget, sinks, recent, length, len2)}"
+
+
+def test_tie_rule_is_lowest_index_wins():
+    # all-equal scores: top-k must be the lowest candidate indices
+    budget, sinks, recent, length = 12, 2, 3, 40
+    scores = [0.5] * length
+    ids = new_select(scores, length, budget, sinks, recent)
+    valid = [x for x in ids if x >= 0]
+    lo = length - recent
+    expected = list(range(sinks)) + list(range(sinks, sinks + budget - sinks - recent)) + list(range(lo, length))
+    assert valid == sorted(expected)
+    assert ids == legacy_topk(scores, length, budget, sinks, recent)

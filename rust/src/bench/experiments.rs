@@ -10,14 +10,22 @@ use crate::workload::{Dataset, WorkloadGen};
 use anyhow::Result;
 use std::fmt::Write as _;
 
-fn mk_requests(ctx: &BenchCtx, ds: Dataset, n: usize) -> Vec<crate::workload::Request> {
-    WorkloadGen::new(ctx.rt.cfg.grammar.clone(), ctx.rt.cfg.model.clone(), ds, ctx.seed)
-        .offline_batch(n)
+fn mk_requests(
+    ctx: &mut BenchCtx,
+    ds: Dataset,
+    n: usize,
+) -> Result<Vec<crate::workload::Request>> {
+    let rt = ctx.rt()?;
+    Ok(
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), ds, ctx.seed)
+            .offline_batch(n),
+    )
 }
 
-fn run_engine(ctx: &BenchCtx, cfg: EngineConfig, ds: Dataset, n: usize) -> Result<RunReport> {
-    let reqs = mk_requests(ctx, ds, n);
-    let mut eng = Engine::new(ctx.rt.clone(), cfg)?;
+fn run_engine(ctx: &mut BenchCtx, cfg: EngineConfig, ds: Dataset, n: usize) -> Result<RunReport> {
+    let reqs = mk_requests(ctx, ds, n)?;
+    let rt = ctx.rt()?;
+    let mut eng = Engine::new(rt, cfg)?;
     let r = eng.run(reqs)?;
     println!("  {}", r.summary());
     Ok(r)
@@ -39,7 +47,7 @@ pub fn table1_dataset_stats(ctx: &mut BenchCtx) -> Result<()> {
         Dataset::LiveCodeBench,
         Dataset::NonReasoningAime,
     ] {
-        let reqs = mk_requests(ctx, ds, 2048);
+        let reqs = mk_requests(ctx, ds, 2048)?;
         let n = reqs.len() as f64;
         let im = reqs.iter().map(|r| r.prompt.len() as f64).sum::<f64>() / n;
         let om = reqs.iter().map(|r| r.max_new as f64).sum::<f64>() / n;
@@ -83,7 +91,8 @@ pub fn fig2_utilization(ctx: &mut BenchCtx) -> Result<()> {
     let mut bw_sum = 0.0;
     let mut cu_sum = 0.0;
     // Scale the engine's real schedule to the paper's operating point.
-    let m = &ctx.rt.cfg.model;
+    let rt = ctx.rt()?;
+    let m = &rt.cfg.model;
     let sc = crate::perfmodel::SimScale::paper_scale(m.slots, m.kv_bytes_per_token());
     for (i, c) in r.trace.iters.iter().enumerate() {
         if c.gemm_rows == 0 {
@@ -124,7 +133,8 @@ pub fn fig3_theory_vs_achieved(ctx: &mut BenchCtx) -> Result<()> {
     println!("Fig 3: theoretical & achieved speedup over vanilla (k=8, s=0.5)");
     let n = ctx.n_requests;
     let base = run_engine(ctx, EngineConfig::new(DrafterKind::Vanilla), Dataset::Aime, n)?;
-    let m = &ctx.rt.cfg.model;
+    let rt = ctx.rt()?;
+    let m = &rt.cfg.model;
     // s = 0.5 of the *mean resident context* (~260 tokens on the AIME
     // profile), matching the paper's definition of the sparsity ratio.
     let w_half = 128;
@@ -183,9 +193,10 @@ pub fn fig3_theory_vs_achieved(ctx: &mut BenchCtx) -> Result<()> {
 pub fn fig4_attention_dynamics(ctx: &mut BenchCtx) -> Result<()> {
     println!("Fig 4: attention-score dynamics (verify dumps across decode steps)");
     use crate::runtime::ModelRunner;
-    let m = ctx.rt.cfg.model.clone();
-    let mut runner = ModelRunner::new(ctx.rt.clone())?;
-    let g = ctx.rt.cfg.grammar.clone();
+    let rt = ctx.rt()?;
+    let m = rt.cfg.model.clone();
+    let mut runner = ModelRunner::new(rt.clone())?;
+    let g = rt.cfg.grammar.clone();
     let prompt = crate::workload::TraceGen::prompt(ctx.seed, g);
     let s = m.slots;
     let p = m.prompt_pad;
@@ -258,8 +269,8 @@ pub fn fig4_attention_dynamics(ctx: &mut BenchCtx) -> Result<()> {
 // ---------------------------------------------------------------------
 pub fn fig5_memory_policies(ctx: &mut BenchCtx) -> Result<()> {
     println!("Fig 5: KV utilisation & recomputation (device budget = 25% of pool)");
-    let m = &ctx.rt.cfg.model;
-    let budget = m.slots * m.max_seq / 4;
+    let rt = ctx.rt()?;
+    let budget = rt.cfg.model.slots * rt.cfg.model.max_seq / 4;
     let n = ctx.n_requests * 3; // oversubscribe to create pressure
     let mut csv = String::from("policy,iter,utilization\n");
     let mut summary = String::from("policy,mean_util,peak_util,recomputed_tokens,offload_events,stall_s\n");
@@ -325,7 +336,8 @@ pub fn table2_breakdown(ctx: &mut BenchCtx) -> Result<()> {
     ] {
         let r = run_engine(ctx, cfg, Dataset::AimeLong, ctx.n_requests)?;
         let iters = r.trace.iters.len().max(1) as f64;
-        let m = &ctx.rt.cfg.model;
+        let rt = ctx.rt()?;
+        let m = &rt.cfg.model;
         let sc = crate::perfmodel::SimScale::paper_scale(m.slots, m.kv_bytes_per_token());
         let attn: f64 = r
             .trace
@@ -491,8 +503,9 @@ pub fn fig12_acceptance(ctx: &mut BenchCtx) -> Result<()> {
 pub fn fig12_sensitivity(ctx: &mut BenchCtx) -> Result<()> {
     println!("Fig 12 (right): PillarAttn acceptance sensitivity");
     let mut csv = String::from("axis,value,alpha,mean_accepted\n");
+    let rt = ctx.rt()?;
     println!("  budget sweep (k=8):");
-    for w in ctx.rt.cfg.model.draft_w_variants.clone() {
+    for w in rt.cfg.model.draft_w_variants.clone() {
         let r = run_engine(
             ctx,
             EngineConfig::new(DrafterKind::Pillar { w }).with_k(8),
@@ -501,14 +514,14 @@ pub fn fig12_sensitivity(ctx: &mut BenchCtx) -> Result<()> {
         )?;
         println!(
             "    W={w:<4} (s={:.3}) alpha={:.2} accepted={:.2}",
-            w as f64 / ctx.rt.cfg.model.max_seq as f64,
+            w as f64 / rt.cfg.model.max_seq as f64,
             r.accept.alpha(),
             r.accept.mean_accepted()
         );
         let _ = writeln!(csv, "budget,{w},{:.4},{:.3}", r.accept.alpha(), r.accept.mean_accepted());
     }
     println!("  stride sweep (W=64):");
-    for q in ctx.rt.cfg.model.verify_q_variants.clone() {
+    for q in rt.cfg.model.verify_q_variants.clone() {
         let k = q - 1;
         if k == 0 {
             continue;
@@ -535,8 +548,8 @@ pub fn fig12_sensitivity(ctx: &mut BenchCtx) -> Result<()> {
 // ---------------------------------------------------------------------
 pub fn fig13_ablation(ctx: &mut BenchCtx) -> Result<()> {
     println!("Fig 13: ablation (simulated-H100 throughput, AIME)");
-    let m = &ctx.rt.cfg.model;
-    let budget = m.slots * m.max_seq / 4;
+    let rt = ctx.rt()?;
+    let budget = rt.cfg.model.slots * rt.cfg.model.max_seq / 4;
     let n = ctx.n_requests * 2;
     let steps: Vec<(&str, EngineConfig)> = vec![
         (

@@ -9,13 +9,16 @@ mod experiments;
 mod kernels;
 
 pub use experiments::*;
-pub use kernels::fig15_fused_kernel;
+pub use kernels::{fig15_fused_kernel, pillar_select};
 
 use crate::runtime::Runtime;
 use std::rc::Rc;
 
 pub struct BenchCtx {
-    pub rt: Rc<Runtime>,
+    artifacts_dir: String,
+    /// Loaded on first use: CPU-only experiments (e.g. `pillar_select`)
+    /// run without any compiled artifacts on disk.
+    rt_cell: Option<Rc<Runtime>>,
     pub out_dir: String,
     /// Requests per engine run (scaled-down stand-in for the paper's 2048).
     pub n_requests: usize,
@@ -26,11 +29,20 @@ impl BenchCtx {
     pub fn new(artifacts_dir: &str, out_dir: &str) -> anyhow::Result<Self> {
         std::fs::create_dir_all(out_dir)?;
         Ok(BenchCtx {
-            rt: Rc::new(Runtime::load(artifacts_dir)?),
+            artifacts_dir: artifacts_dir.to_string(),
+            rt_cell: None,
             out_dir: out_dir.to_string(),
             n_requests: 12,
             seed: 42,
         })
+    }
+
+    /// The artifact runtime, loaded lazily and shared across experiments.
+    pub fn rt(&mut self) -> anyhow::Result<Rc<Runtime>> {
+        if self.rt_cell.is_none() {
+            self.rt_cell = Some(Rc::new(Runtime::load(&self.artifacts_dir)?));
+        }
+        Ok(self.rt_cell.as_ref().unwrap().clone())
     }
 
     pub fn save(&self, name: &str, contents: &str) -> anyhow::Result<()> {
@@ -57,10 +69,11 @@ pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
         "fig13" => fig13_ablation(ctx),
         "fig14" => fig14_schedule_trace(ctx),
         "fig15" => fig15_fused_kernel(ctx),
+        "pillar_select" => pillar_select(ctx),
         "all" => {
             for n in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
-                "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15",
+                "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15", "pillar_select",
             ] {
                 println!("\n================ {n} ================");
                 run_named(ctx, n)?;

@@ -28,7 +28,7 @@ fn usage() -> ! {
          \x20            --dataset aime|olympiad|livecode|short  --requests N  --k K  --w W\n\
          \x20            --schedule lockstep|unified  --delayed  --kv-policy conservative|preempt|dynamic\n\
          \x20            --kv-budget TOKENS  --temp T  --seed S  --online-rate R --horizon SECS\n\
-         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 all\n\
+         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select all\n\
          common: --artifacts DIR (default ./artifacts)  --out DIR (default ./reports)"
     );
     std::process::exit(2)

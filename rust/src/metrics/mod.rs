@@ -115,6 +115,16 @@ impl Metrics {
         self.histograms.entry(name.to_string()).or_default()
     }
 
+    /// Run `f`, recording its wallclock (seconds) into histogram `name`.
+    /// The phase-timer idiom used by the bench harness for hot-path
+    /// accounting (e.g. PillarAttn selection).
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
     /// Render a compact markdown report.
     pub fn to_markdown(&mut self) -> String {
         let mut out = String::new();
@@ -219,6 +229,15 @@ mod tests {
         let md = m.to_markdown();
         assert!(md.contains("| a | 1.0000 |"));
         assert!(md.contains("| lat | 2 |"));
+    }
+
+    #[test]
+    fn time_records_and_returns() {
+        let mut m = Metrics::new();
+        let v = m.time("scope", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(m.histograms["scope"].len(), 1);
+        assert!(m.histograms["scope"].max() >= 0.0);
     }
 
     #[test]

@@ -39,6 +39,13 @@ impl StepStats {
         e.fetch_s += fetch;
     }
 
+    /// Attribute host-side CPU work to a named pseudo-artifact (e.g.
+    /// `pillar_select` for critical-token selection), so Table-2 style
+    /// phase breakdowns and the delayed-verify overlap model see it.
+    pub fn note_host(&mut self, name: &str, secs: f64) {
+        self.add(name, secs, 0.0, 0.0);
+    }
+
     pub fn total_exec(&self) -> f64 {
         self.per_artifact.values().map(|p| p.exec_s).sum()
     }

@@ -9,7 +9,7 @@ pub mod ngram;
 pub mod pillar;
 
 pub use ngram::NGramIndex;
-pub use pillar::{topk_indices, IndexPolicy, PillarState};
+pub use pillar::{select_into, topk_indices, IndexPolicy, PillarState, SelectScratch};
 
 /// Which draft model the engine runs (paper system + every baseline).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -10,6 +10,26 @@
 //!
 //! mirroring `python/compile/kernels/ref.py::topk_ids_ref` exactly (the
 //! cross-language golden test lives in python/tests/test_pillar.py).
+//!
+//! Selection sits on the drafting critical path — it runs once per
+//! (layer, kv-head) on every verification and every draft composition —
+//! so the implementation is zero-allocation in steady state:
+//!
+//! * `select_into` partial-selects the top-k with `select_nth_unstable_by`
+//!   (O(T) expected) instead of a full sort, and needs no membership test:
+//!   the sinks `[0, s)` and the recent window `[lo, len)` are contiguous
+//!   ranges, so the top-k candidate pool is exactly the gap `[s, lo)`.
+//! * `PillarState` owns reusable scratch buffers and writes straight into
+//!   the engine's flattened index buffer via `refresh_from`/`compose_into`;
+//!   `compose`/`topk_indices` remain as allocating thin wrappers for tests.
+//! * `refresh_parallel` fans the per-(layer, head) selections out over the
+//!   engine's `util::threadpool`.
+//!
+//! Throughput numbers for the rewrite are tracked by the `pillar_select`
+//! bench (`cargo bench -- pillar_select`) and recorded in
+//! EXPERIMENTS.md §Perf.
+
+use crate::util::threadpool::ThreadPool;
 
 /// How a drafter composes its per-(layer, head) index set.
 #[derive(Clone, Copy, Debug)]
@@ -43,41 +63,105 @@ impl IndexPolicy {
     }
 }
 
-/// Build one (layer, head) index set.  `scores[t]` is the dumped attention
-/// mass for position t (ignored for the slots covered by sinks/recent);
-/// `len` is the current valid context length.  Returns exactly
-/// `policy.budget` entries, ascending, -1-padded.
-pub fn topk_indices(scores: &[f32], len: usize, policy: &IndexPolicy) -> Vec<i32> {
+/// Reusable candidate buffer for `select_into`.  After warm-up no call
+/// allocates: the buffer's capacity converges to the largest candidate
+/// pool seen so far.
+#[derive(Clone, Debug, Default)]
+pub struct SelectScratch {
+    cand: Vec<i32>,
+}
+
+impl SelectScratch {
+    /// Current capacity of the candidate buffer (steady-state alloc tests).
+    pub fn capacity(&self) -> usize {
+        self.cand.capacity()
+    }
+}
+
+/// Build one (layer, head) index set into `out` (length `policy.budget`):
+/// exactly `policy.budget` entries, ascending, -1-padded at the tail.
+/// Returns the number of valid (non-negative) entries.
+///
+/// `scores[t]` is the dumped attention mass for position t (ignored for
+/// the slots covered by sinks/recent); `len` is the current valid context
+/// length (`len <= scores.len()`).
+pub fn select_into(
+    scores: &[f32],
+    len: usize,
+    policy: &IndexPolicy,
+    scratch: &mut SelectScratch,
+    out: &mut [i32],
+) -> usize {
     let budget = policy.budget;
-    let mut chosen: Vec<i32> = Vec::with_capacity(budget);
-    // sinks
-    for t in 0..policy.sinks.min(len) {
-        chosen.push(t as i32);
+    debug_assert_eq!(out.len(), budget);
+    debug_assert!(len <= scores.len());
+    // The always-kept set is two contiguous ranges: sinks [0, s_eff) and
+    // the recent window [lo, len).  Everything strictly between them is a
+    // top-k candidate — no membership test needed.
+    let s_eff = policy.sinks.min(len);
+    let lo = len.saturating_sub(policy.recent).max(s_eff);
+    let n_fixed = s_eff + (len - lo);
+    let mut n = 0usize;
+    for t in 0..s_eff.min(budget) {
+        out[n] = t as i32;
+        n += 1;
     }
-    // recent window
-    let lo = len.saturating_sub(policy.recent);
-    for t in lo..len {
-        if (t as i32) >= policy.sinks as i32 {
-            chosen.push(t as i32);
+    if n_fixed >= budget {
+        // The fixed set alone fills the budget; the window tail is dropped
+        // (ascending order is already established, so no sort needed).
+        for t in lo..len {
+            if n >= budget {
+                break;
+            }
+            out[n] = t as i32;
+            n += 1;
         }
+        for o in out[n..].iter_mut() {
+            *o = -1;
+        }
+        return n;
     }
-    chosen.truncate(budget);
-    // top-k among the rest
-    let rest = budget - chosen.len();
-    if rest > 0 && len > 0 {
-        let taken: std::collections::HashSet<i32> = chosen.iter().copied().collect();
-        let mut cand: Vec<i32> = (0..len as i32).filter(|t| !taken.contains(t)).collect();
-        cand.sort_by(|&a, &b| {
-            let (sa, sb) = (scores[a as usize], scores[b as usize]);
+    let rest = budget - n_fixed;
+    let pool = lo - s_eff;
+    if rest > 0 && pool > 0 {
+        let k = rest.min(pool);
+        let cand = &mut scratch.cand;
+        cand.clear();
+        cand.extend(s_eff as i32..lo as i32);
+        // Score-descending with stable lowest-index-wins tie rule — the
+        // same total order ref.py::topk_ids_ref sorts by, so the partial
+        // selection picks an identical top-k set.
+        let by_score = |a: &i32, b: &i32| {
+            let (sa, sb) = (scores[*a as usize], scores[*b as usize]);
             sb.partial_cmp(&sa)
                 .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        chosen.extend(cand.into_iter().take(rest));
+                .then(a.cmp(b))
+        };
+        if k < pool {
+            cand.select_nth_unstable_by(k, by_score);
+        }
+        for &c in &cand[..k] {
+            out[n] = c;
+            n += 1;
+        }
     }
-    chosen.sort_unstable();
-    chosen.resize(budget, -1); // -1 padding sits at the tail
-    chosen
+    for t in lo..len {
+        out[n] = t as i32;
+        n += 1;
+    }
+    out[..n].sort_unstable();
+    for o in out[n..].iter_mut() {
+        *o = -1;
+    }
+    n
+}
+
+/// Allocating wrapper around `select_into` (tests / one-off callers).
+pub fn topk_indices(scores: &[f32], len: usize, policy: &IndexPolicy) -> Vec<i32> {
+    let mut out = vec![0i32; policy.budget];
+    let mut scratch = SelectScratch::default();
+    select_into(scores, len, policy, &mut scratch, &mut out);
+    out
 }
 
 /// Per-request PillarAttn state: the frozen critical sets from the last
@@ -87,9 +171,15 @@ pub struct PillarState {
     pub layers: usize,
     pub kv_heads: usize,
     pub policy: IndexPolicy,
-    /// Frozen critical tokens per (layer, head) — only the Top-K part;
-    /// sinks+recent are recomputed per step so new tokens enter the window.
-    critical: Vec<Vec<i32>>,
+    /// Frozen critical tokens, flattened [layers * kv_heads, budget]: each
+    /// row is an ascending valid prefix with a -1 tail.  Only the last
+    /// refresh's selection lives here; sinks+recent are recomputed per
+    /// compose so new tokens enter the window.
+    critical: Vec<i32>,
+    /// Selection scratch for the serial paths.
+    scratch: SelectScratch,
+    /// One scratch per worker chunk for `refresh_parallel`.
+    par_scratch: Vec<SelectScratch>,
 }
 
 impl PillarState {
@@ -98,70 +188,247 @@ impl PillarState {
             layers,
             kv_heads,
             policy,
-            critical: vec![Vec::new(); layers * kv_heads],
+            critical: vec![-1; layers * kv_heads * policy.budget],
+            scratch: SelectScratch::default(),
+            par_scratch: Vec::new(),
         }
+    }
+
+    fn heads(&self) -> usize {
+        self.layers * self.kv_heads
     }
 
     /// Refresh from a verification dump slice for this request:
     /// `dump` is [L, Hkv, T] flattened; positions >= `len` are stale
     /// (rejected drafts / old garbage) and are excluded.
+    ///
+    /// Zero heap allocation in steady state: selections land in the
+    /// flattened `critical` rows through the reused scratch buffer.
+    pub fn refresh_from(&mut self, dump: &[f32], t_dim: usize, len: usize) {
+        let w = self.policy.budget;
+        let policy = self.policy;
+        let len = len.min(t_dim);
+        for lh in 0..self.heads() {
+            let scores = &dump[lh * t_dim..(lh + 1) * t_dim];
+            select_into(
+                scores,
+                len,
+                &policy,
+                &mut self.scratch,
+                &mut self.critical[lh * w..(lh + 1) * w],
+            );
+        }
+    }
+
+    /// Back-compat name for `refresh_from` (tests, oracle paths).
     pub fn refresh(&mut self, dump: &[f32], t_dim: usize, len: usize) {
-        let rest_budget = self.policy.budget;
-        for l in 0..self.layers {
-            for h in 0..self.kv_heads {
-                let off = (l * self.kv_heads + h) * t_dim;
-                let scores = &dump[off..off + t_dim];
-                // Keep a full budget's worth of candidates; composition at
-                // draft time fills sinks/recent first.
-                let ids = topk_indices(scores, len.min(t_dim), &self.policy);
-                let slot = &mut self.critical[l * self.kv_heads + h];
-                slot.clear();
-                slot.extend(ids.iter().copied().filter(|&x| x >= 0));
-                let _ = rest_budget;
+        self.refresh_from(dump, t_dim, len);
+    }
+
+    /// `refresh_from`, fanned out across (layer, head) chunks on `pool`.
+    /// Must be called from outside the pool's own workers (the barrier
+    /// would otherwise self-deadlock).  Results are identical to the
+    /// serial path — every row's selection is independent.
+    ///
+    /// Note: the fan-out boxes `n_chunks` closures per call, so unlike
+    /// `refresh_from` this path is small-allocation, not zero-allocation.
+    /// It is used where wallclock dominates that cost (many-head
+    /// refreshes in the oracle drafter and the bench), while the per-slot
+    /// verify jobs — already parallel across slots — use `refresh_from`.
+    pub fn refresh_parallel(
+        &mut self,
+        dump: &[f32],
+        t_dim: usize,
+        len: usize,
+        pool: &ThreadPool,
+    ) {
+        let heads = self.heads();
+        let n_chunks = pool.workers().min(heads);
+        if n_chunks <= 1 {
+            return self.refresh_from(dump, t_dim, len);
+        }
+        let w = self.policy.budget;
+        let policy = self.policy;
+        let len = len.min(t_dim);
+        if self.par_scratch.len() < n_chunks {
+            self.par_scratch.resize_with(n_chunks, SelectScratch::default);
+        }
+        let rows_per = (heads + n_chunks - 1) / n_chunks;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_chunks);
+        for (ci, (chunk, scratch)) in self
+            .critical
+            .chunks_mut(rows_per * w)
+            .zip(self.par_scratch.iter_mut())
+            .enumerate()
+        {
+            let base = ci * rows_per;
+            jobs.push(Box::new(move || {
+                for (r, row) in chunk.chunks_mut(w).enumerate() {
+                    let lh = base + r;
+                    let scores = &dump[lh * t_dim..(lh + 1) * t_dim];
+                    select_into(scores, len, &policy, scratch, row);
+                }
+            }));
+        }
+        pool.scope(jobs);
+    }
+
+    /// Compose the index sets for a draft step at current length `len`
+    /// directly into `out` — the engine's flattened [L, Hkv, W] index
+    /// buffer — with no intermediate allocation.  Each (layer, head) row
+    /// is exactly `budget` entries, ascending, -1-padded.
+    ///
+    /// (The drafted token sits at position len-1 after its KV write; the
+    /// engine passes len and the recent window must include it.)
+    pub fn compose_into(&self, out: &mut [i32], len: usize) {
+        let w = self.policy.budget;
+        debug_assert_eq!(out.len(), self.heads() * w);
+        let s_eff = self.policy.sinks.min(len);
+        let lo = len.saturating_sub(self.policy.recent).max(s_eff);
+        for lh in 0..self.heads() {
+            let crit = &self.critical[lh * w..(lh + 1) * w];
+            let set = &mut out[lh * w..(lh + 1) * w];
+            let mut n = 0usize;
+            // sinks
+            for t in 0..s_eff.min(w) {
+                set[n] = t as i32;
+                n += 1;
+            }
+            // recent window (always includes the newest positions, so
+            // tokens drafted since the last verification are visible)
+            for t in lo..len {
+                if n >= w {
+                    break;
+                }
+                set[n] = t as i32;
+                n += 1;
+            }
+            // frozen critical tokens: already-present entries are exactly
+            // those in the sink range [0, s_eff) or the window [lo, len),
+            // so two range checks replace a hash-set membership test.
+            for &c in crit {
+                if n >= w || c < 0 {
+                    break;
+                }
+                let cu = c as usize;
+                if cu >= s_eff && cu < lo {
+                    set[n] = c;
+                    n += 1;
+                }
+            }
+            set[..n].sort_unstable();
+            for o in set[n..].iter_mut() {
+                *o = -1;
             }
         }
     }
 
-    /// Compose the index set for a draft step at current length `len`
-    /// (the drafted token sits at position len-1 after its KV write; the
-    /// engine passes pos = len-1 and we must include it).
+    /// Allocating wrapper around `compose_into` (tests / one-off callers).
     /// Output: [L, Hkv, W] flattened, -1 padded, each ascending.
     pub fn compose(&self, len: usize) -> Vec<i32> {
-        let w = self.policy.budget;
-        let mut out = Vec::with_capacity(self.layers * self.kv_heads * w);
-        for l in 0..self.layers {
-            for h in 0..self.kv_heads {
-                let crit = &self.critical[l * self.kv_heads + h];
-                let mut set: Vec<i32> = Vec::with_capacity(w);
-                // sinks
-                for t in 0..self.policy.sinks.min(len) {
-                    set.push(t as i32);
-                }
-                // recent window (always includes the newest positions, so
-                // tokens drafted since the last verification are visible)
-                let lo = len.saturating_sub(self.policy.recent);
-                for t in lo..len {
-                    if t >= self.policy.sinks {
-                        set.push(t as i32);
-                    }
-                }
-                // frozen critical tokens (dedup, in-range)
-                let have: std::collections::HashSet<i32> = set.iter().copied().collect();
-                for &c in crit {
-                    if set.len() >= w {
-                        break;
-                    }
-                    if (c as usize) < len && !have.contains(&c) {
-                        set.push(c);
-                    }
-                }
-                set.truncate(w);
-                set.sort_unstable();
-                set.resize(w, -1); // -1 padding at the tail
-                out.extend(set);
+        let mut out = vec![0i32; self.heads() * self.policy.budget];
+        self.compose_into(&mut out, len);
+        out
+    }
+}
+
+/// Seed-era selection pipeline (full O(T log T) sort, `HashSet` dedup,
+/// per-call `Vec`s), kept verbatim as the *executable specification*: the
+/// `pillar_select` bench baseline and the equivalence property tests both
+/// use this single copy, so the two can't drift apart.  Mirrors
+/// `ref.py::topk_ids_ref`.  Not for production use.
+#[doc(hidden)]
+pub mod reference {
+    use super::IndexPolicy;
+
+    pub fn topk_indices(scores: &[f32], len: usize, policy: &IndexPolicy) -> Vec<i32> {
+        let budget = policy.budget;
+        let mut chosen: Vec<i32> = Vec::with_capacity(budget);
+        for t in 0..policy.sinks.min(len) {
+            chosen.push(t as i32);
+        }
+        let lo = len.saturating_sub(policy.recent);
+        for t in lo..len {
+            if t >= policy.sinks {
+                chosen.push(t as i32);
             }
         }
-        out
+        chosen.truncate(budget);
+        let rest = budget - chosen.len();
+        if rest > 0 && len > 0 {
+            let taken: std::collections::HashSet<i32> = chosen.iter().copied().collect();
+            let mut cand: Vec<i32> = (0..len as i32).filter(|t| !taken.contains(t)).collect();
+            cand.sort_by(|&a, &b| {
+                let (sa, sb) = (scores[a as usize], scores[b as usize]);
+                sb.partial_cmp(&sa)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            chosen.extend(cand.into_iter().take(rest));
+        }
+        chosen.sort_unstable();
+        chosen.resize(budget, -1);
+        chosen
+    }
+
+    pub struct Pillar {
+        pub layers: usize,
+        pub kv_heads: usize,
+        pub policy: IndexPolicy,
+        critical: Vec<Vec<i32>>,
+    }
+
+    impl Pillar {
+        pub fn new(layers: usize, kv_heads: usize, policy: IndexPolicy) -> Self {
+            Pillar { layers, kv_heads, policy, critical: vec![Vec::new(); layers * kv_heads] }
+        }
+
+        pub fn refresh(&mut self, dump: &[f32], t_dim: usize, len: usize) {
+            for l in 0..self.layers {
+                for h in 0..self.kv_heads {
+                    let off = (l * self.kv_heads + h) * t_dim;
+                    let scores = &dump[off..off + t_dim];
+                    let ids = topk_indices(scores, len.min(t_dim), &self.policy);
+                    let slot = &mut self.critical[l * self.kv_heads + h];
+                    slot.clear();
+                    slot.extend(ids.iter().copied().filter(|&x| x >= 0));
+                }
+            }
+        }
+
+        pub fn compose(&self, len: usize) -> Vec<i32> {
+            let w = self.policy.budget;
+            let mut out = Vec::with_capacity(self.layers * self.kv_heads * w);
+            for l in 0..self.layers {
+                for h in 0..self.kv_heads {
+                    let crit = &self.critical[l * self.kv_heads + h];
+                    let mut set: Vec<i32> = Vec::with_capacity(w);
+                    for t in 0..self.policy.sinks.min(len) {
+                        set.push(t as i32);
+                    }
+                    let lo = len.saturating_sub(self.policy.recent);
+                    for t in lo..len {
+                        if t >= self.policy.sinks {
+                            set.push(t as i32);
+                        }
+                    }
+                    let have: std::collections::HashSet<i32> = set.iter().copied().collect();
+                    for &c in crit {
+                        if set.len() >= w {
+                            break;
+                        }
+                        if (c as usize) < len && !have.contains(&c) {
+                            set.push(c);
+                        }
+                    }
+                    set.truncate(w);
+                    set.sort_unstable();
+                    set.resize(w, -1);
+                    out.extend(set);
+                }
+            }
+            out
+        }
     }
 }
 
@@ -272,5 +539,64 @@ mod tests {
         // sinks + last 12: position 50 not included
         assert!(!valid.contains(&50));
         assert!(valid.contains(&99));
+    }
+
+    #[test]
+    fn compose_into_matches_compose() {
+        let mut st = PillarState::new(2, 3, policy());
+        let t = 96;
+        let dump: Vec<f32> = (0..2 * 3 * t).map(|i| ((i * 37) % 101) as f32).collect();
+        st.refresh_from(&dump, t, 80);
+        for len in [5usize, 20, 80, 84] {
+            let via_vec = st.compose(len);
+            let mut direct = vec![7i32; 2 * 3 * 16];
+            st.compose_into(&mut direct, len);
+            assert_eq!(via_vec, direct, "len={len}");
+        }
+    }
+
+    /// Acceptance gate: after warm-up, repeated refresh/compose cycles
+    /// must not reallocate — capacities stay frozen across calls.
+    #[test]
+    fn steady_state_capacities_are_stable() {
+        let layers = 2;
+        let kv_heads = 2;
+        let t = 512;
+        let mut st = PillarState::new(layers, kv_heads, policy());
+        let dump: Vec<f32> = (0..layers * kv_heads * t)
+            .map(|i| ((i * 13) % 251) as f32)
+            .collect();
+        let mut out = vec![0i32; layers * kv_heads * 16];
+        // Warm up at the largest length this test will ever use.
+        st.refresh_from(&dump, t, t);
+        st.compose_into(&mut out, t);
+        let crit_cap = st.critical.capacity();
+        let scratch_cap = st.scratch.capacity();
+        for i in 0..64 {
+            let len = 1 + (i * 41) % t;
+            st.refresh_from(&dump, t, len);
+            st.compose_into(&mut out, len + 2);
+            assert_eq!(st.critical.capacity(), crit_cap, "critical realloc at {i}");
+            assert_eq!(st.scratch.capacity(), scratch_cap, "scratch realloc at {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_refresh_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let layers = 4;
+        let kv_heads = 3;
+        let t = 128;
+        let pol = IndexPolicy::pillar(32);
+        let dump: Vec<f32> = (0..layers * kv_heads * t)
+            .map(|i| ((i * 29) % 97) as f32 / 97.0)
+            .collect();
+        let mut serial = PillarState::new(layers, kv_heads, pol);
+        let mut parallel = PillarState::new(layers, kv_heads, pol);
+        for len in [3usize, 40, 100, 128] {
+            serial.refresh_from(&dump, t, len);
+            parallel.refresh_parallel(&dump, t, len, &pool);
+            assert_eq!(serial.critical, parallel.critical, "len={len}");
+        }
     }
 }

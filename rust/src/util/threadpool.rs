@@ -61,7 +61,21 @@ impl ThreadPool {
                     match job {
                         None => return,
                         Some(j) => {
-                            j();
+                            // A panicking job must not kill the worker or
+                            // leak in_flight (wait_idle would hang);
+                            // scoped jobs re-raise at the scope barrier,
+                            // Promise consumers see a dropped producer.
+                            // (The default panic hook has already printed
+                            // the payload + location; add pool context.)
+                            if std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(j),
+                            )
+                            .is_err()
+                            {
+                                eprintln!(
+                                    "threadpool: worker job panicked (see panic message above); pool continues"
+                                );
+                            }
                             let mut q = sh.queue.lock().unwrap();
                             q.in_flight -= 1;
                             let idle_now = q.in_flight == 0 && q.jobs.is_empty();
@@ -75,6 +89,51 @@ impl ThreadPool {
             })
             .collect();
         Self { shared, workers, idle_cv }
+    }
+
+    /// Number of worker threads (sizing hint for scoped fan-out).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `jobs` on the pool and block until every one has finished.
+    /// Unlike `spawn`, the closures may borrow from the caller's stack
+    /// frame: the borrow is sound because this function does not return
+    /// until all jobs have completed (the latch counts down even if a job
+    /// panics, via the drop guard).
+    ///
+    /// Must NOT be called from inside a pool worker: with every worker
+    /// blocked in a nested `scope`, the queued jobs could never run.
+    pub fn scope<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        for job in jobs {
+            // SAFETY: the latch wait below keeps this stack frame — and
+            // every borrow captured by `job` — alive until the job has
+            // run, so widening the closure's lifetime cannot be observed.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            let guard = ScopeGuard { latch: latch.clone(), panicked: panicked.clone() };
+            self.spawn(move || {
+                let _guard = guard;
+                job();
+            });
+        }
+        let (m, cv) = &*latch;
+        let mut left = m.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+        drop(left);
+        // Re-raise on the caller's thread so a failed scoped job is as
+        // loud as its serial equivalent would have been.
+        if panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool::scope: a scoped job panicked");
+        }
     }
 
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -99,6 +158,29 @@ impl ThreadPool {
                 .wait_timeout(g, std::time::Duration::from_millis(50))
                 .unwrap();
             g = g2;
+        }
+    }
+}
+
+/// Counts a scoped job as finished on drop, so a panicking job still
+/// releases the `scope` barrier instead of deadlocking the caller — and
+/// records the panic so `scope` can re-raise it.
+struct ScopeGuard {
+    latch: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.panicked
+                .store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+        let (m, cv) = &*self.latch;
+        let mut left = m.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            cv.notify_all();
         }
     }
 }
@@ -161,6 +243,54 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_runs_borrowing_jobs() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 64];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(16)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    Box::new(move || {
+                        for (i, x) in chunk.iter_mut().enumerate() {
+                            *x = (ci * 16 + i) as u64;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+        // pool stays usable afterwards
+        let p = Promise::spawn_on(&pool, || 7);
+        assert_eq!(p.get(), 7);
+    }
+
+    #[test]
+    fn scope_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope(Vec::new());
+    }
+
+    #[test]
+    fn scope_propagates_job_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| panic!("scoped job boom")), Box::new(|| {})];
+            pool.scope(jobs);
+        }));
+        assert!(res.is_err(), "scope must re-raise a scoped job panic");
+        // the worker survived (catch_unwind in the worker loop), in_flight
+        // did not leak, and the pool keeps serving
+        let p = Promise::spawn_on(&pool, || 5);
+        assert_eq!(p.get(), 5);
+        pool.wait_idle();
     }
 
     #[test]

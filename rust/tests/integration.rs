@@ -308,3 +308,51 @@ fn pallas_compose_proof_artifacts_match_ref_path() {
         .fold(0.0f32, f32::max);
     assert!(max_diff < 1e-3, "pallas vs ref artifact diverged: {max_diff}");
 }
+
+// ---------------------------------------------------------------------
+// PillarAttn selection pipeline (artifact-free: pure CPU cross-module)
+// ---------------------------------------------------------------------
+
+/// The engine-shaped selection flow — refresh from a multi-head dump
+/// (serial and threadpool-parallel), then compose straight into a
+/// flattened [L, Hkv, W] index buffer — must be deterministic, identical
+/// across the two refresh paths, and -1-disciplined like the artifacts
+/// expect.
+#[test]
+fn pillar_selection_pipeline_parallel_and_flat_buffer() {
+    use sparsespec::spec::{IndexPolicy, PillarState};
+    use sparsespec::util::rng::Xoshiro256;
+    use sparsespec::util::threadpool::ThreadPool;
+
+    let (layers, kv_heads, w, t_dim) = (4usize, 2usize, 32usize, 256usize);
+    let pol = IndexPolicy::pillar(w);
+    let mut rng = Xoshiro256::new(1234);
+    let dump: Vec<f32> = (0..layers * kv_heads * t_dim)
+        .map(|_| rng.unit() as f32)
+        .collect();
+    let pool = ThreadPool::new(3);
+
+    let mut serial = PillarState::new(layers, kv_heads, pol);
+    let mut par = PillarState::new(layers, kv_heads, pol);
+    let per_slot = layers * kv_heads * w;
+    let mut idxs_a = vec![0i32; per_slot];
+    let mut idxs_b = vec![0i32; per_slot];
+    for round in 0..8usize {
+        let len = 32 + round * 28;
+        serial.refresh_from(&dump, t_dim, len);
+        par.refresh_parallel(&dump, t_dim, len, &pool);
+        // compose at len+1 like draft_step does after the KV write
+        serial.compose_into(&mut idxs_a, len + 1);
+        par.compose_into(&mut idxs_b, len + 1);
+        assert_eq!(idxs_a, idxs_b, "round {round}");
+        for lh in 0..layers * kv_heads {
+            let row = &idxs_a[lh * w..(lh + 1) * w];
+            let n_valid = row.iter().filter(|&&x| x >= 0).count();
+            // valid ascending prefix, -1 tail, newest position present
+            assert!(row[..n_valid].windows(2).all(|p| p[0] < p[1]), "{row:?}");
+            assert!(row[n_valid..].iter().all(|&x| x == -1));
+            assert!(row[..n_valid].contains(&(len as i32)), "newest missing: {row:?}");
+            assert_eq!(n_valid, w.min(len + 1));
+        }
+    }
+}

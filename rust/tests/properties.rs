@@ -8,10 +8,11 @@ use sparsespec::kv_cache::{HostKv, KvManager, KvPolicy, PressureAction};
 use sparsespec::metrics::Histogram;
 use sparsespec::sampling::{sample_cat, softmax, verify_greedy, verify_stochastic};
 use sparsespec::scheduler::BucketScheduler;
-use sparsespec::spec::{topk_indices, IndexPolicy, NGramIndex};
+use sparsespec::spec::{select_into, topk_indices, IndexPolicy, NGramIndex, PillarState, SelectScratch};
 use sparsespec::util::json::{arr, num, obj, Json};
 use sparsespec::util::ptest::{run_named, Gen};
 use sparsespec::util::rng::Xoshiro256;
+use sparsespec::util::threadpool::ThreadPool;
 
 // ---------------------------------------------------------------------
 // json
@@ -125,6 +126,98 @@ fn topk_respects_budget_split_property() {
             assert!(valid.contains(&(t as i32)), "recent {t} missing");
         }
     });
+}
+
+/// The seed-era selection + compose pipeline (full sort, HashSet dedup,
+/// per-call Vecs): the single shared transcription lives in
+/// `spec::pillar::reference` and doubles as the `pillar_select` bench
+/// baseline, so oracle and baseline can't drift apart.
+use sparsespec::spec::pillar::reference as legacy;
+
+#[test]
+fn select_into_matches_legacy_topk_property() {
+    run_named("select_vs_legacy", |g| {
+        let budget = g.usize(1, 48);
+        // stress beyond the IndexPolicy constructors' invariants
+        let sinks = g.usize(0, budget);
+        let recent = g.usize(0, budget + 4);
+        let policy = IndexPolicy { budget, sinks, recent };
+        let t_dim = g.usize(1, 300);
+        let len = g.usize(0, t_dim);
+        // heavy ties exercise the lowest-index-wins rule
+        let levels = *g.pick(&[1usize, 2, 4, 1024]);
+        let scores: Vec<f32> = (0..t_dim)
+            .map(|_| (g.usize(0, levels) as f32) / levels as f32)
+            .collect();
+        let want = legacy::topk_indices(&scores, len, &policy);
+        let mut scratch = SelectScratch::default();
+        let mut got = vec![0i32; budget];
+        let n = select_into(&scores, len, &policy, &mut scratch, &mut got);
+        assert_eq!(got, want, "b={budget} s={sinks} r={recent} len={len}");
+        assert_eq!(n, got.iter().filter(|&&x| x >= 0).count());
+        assert_eq!(got, topk_indices(&scores, len, &policy));
+        // determinism: a second run over the same inputs is bit-identical
+        // (tie rule is stable lowest-index-wins, as in ref.py::topk_ids_ref)
+        let mut again = vec![0i32; budget];
+        select_into(&scores, len, &policy, &mut scratch, &mut again);
+        assert_eq!(got, again);
+    });
+}
+
+#[test]
+fn compose_into_matches_legacy_compose_property() {
+    run_named("compose_vs_legacy", |g| {
+        let layers = g.usize(1, 3);
+        let kv_heads = g.usize(1, 2);
+        let budget = g.usize(4, 32);
+        let sinks = g.usize(0, budget / 4);
+        let recent = g.usize(1, budget - sinks);
+        let policy = IndexPolicy { budget, sinks, recent };
+        let t_dim = g.usize(8, 160);
+        let len = g.usize(0, t_dim);
+        let dump: Vec<f32> = (0..layers * kv_heads * t_dim)
+            .map(|_| g.f64(0.0, 1.0) as f32)
+            .collect();
+        let mut legacy_st = legacy::Pillar::new(layers, kv_heads, policy);
+        legacy_st.refresh(&dump, t_dim, len);
+        let mut st = PillarState::new(layers, kv_heads, policy);
+        st.refresh_from(&dump, t_dim, len);
+        // compose at the refresh length and at a grown context (drafted
+        // tokens append between refreshes)
+        for dlen in [0usize, 1, 5] {
+            let at = len + dlen;
+            let want = legacy_st.compose(at);
+            let mut got = vec![7i32; layers * kv_heads * budget];
+            st.compose_into(&mut got, at);
+            assert_eq!(got, want, "layers={layers} heads={kv_heads} at={at}");
+            assert_eq!(st.compose(at), want);
+        }
+    });
+}
+
+#[test]
+fn parallel_refresh_matches_serial_property() {
+    // Plain seeded loop (not run_named): the pool's JoinHandles would make
+    // the closure's unwind-safety hinge on std internals.
+    let pool = ThreadPool::new(3);
+    for case in 0..64u64 {
+        let g = &mut Gen::new(0x9A11_E7 + case);
+        let layers = g.usize(1, 4);
+        let kv_heads = g.usize(1, 3);
+        let budget = g.usize(4, 24);
+        let policy = IndexPolicy::pillar(budget);
+        let t_dim = g.usize(4, 96);
+        let len = g.usize(0, t_dim);
+        let dump: Vec<f32> = (0..layers * kv_heads * t_dim)
+            .map(|_| g.f64(0.0, 1.0) as f32)
+            .collect();
+        let mut serial = PillarState::new(layers, kv_heads, policy);
+        serial.refresh_from(&dump, t_dim, len);
+        let mut par = PillarState::new(layers, kv_heads, policy);
+        par.refresh_parallel(&dump, t_dim, len, &pool);
+        assert_eq!(serial.compose(len), par.compose(len), "case {case}");
+        assert_eq!(serial.compose(len + 3), par.compose(len + 3), "case {case}");
+    }
 }
 
 // ---------------------------------------------------------------------
