@@ -1,11 +1,20 @@
-//! Latency-oriented online serving (§2.2): Poisson arrivals, per-request
-//! latency percentiles, with the unified scheduler + delayed verification.
+//! Latency-oriented online serving (§2.2), session-style: Poisson arrivals
+//! stream in on the serving clock, tokens stream out as verification
+//! accepts them, and one unlucky request is cancelled mid-generation.
+//!
+//! Demonstrates the full session API: `EngineDriver` + `online_arrivals`
+//! (no pre-materialised trace), incremental `SessionHandle::drain`,
+//! per-session TTFT / inter-token stats, and `cancel()` isolation (the
+//! cancelled request releases its slot + KV without disturbing anyone
+//! else — checked against a batch reference run of the same trace).
 //!
 //!   cargo run --release --example online_chat [-- --rate 1.5 --horizon 20]
 
 use std::rc::Rc;
 
-use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::engine::{
+    Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason,
+};
 use sparsespec::runtime::Runtime;
 use sparsespec::scheduler::Schedule;
 use sparsespec::spec::DrafterKind;
@@ -17,37 +26,116 @@ fn main() -> anyhow::Result<()> {
     let rt = Rc::new(Runtime::load(&args.str("artifacts", "artifacts"))?);
     let rate = args.f64("rate", 1.5);
     let horizon = args.f64("horizon", 20.0);
-
-    for (name, drafter, sched, delayed) in [
-        ("vanilla", DrafterKind::Vanilla, Schedule::Lockstep, false),
-        (
-            "sparsespec(unified+delayed)",
-            DrafterKind::Pillar { w: 128 },
-            Schedule::Unified,
-            true,
-        ),
-    ] {
-        let mut gen = WorkloadGen::new(
+    let mk_gen = || {
+        WorkloadGen::new(
             rt.cfg.grammar.clone(),
             rt.cfg.model.clone(),
             Dataset::LiveCodeBench,
             17,
+        )
+    };
+    let mk_cfg = || {
+        EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+            .k(8)
+            .schedule(Schedule::Unified)
+            .delayed_verify(true)
+            .build(&rt.cfg.model)
+    };
+
+    // Batch reference over the identical trace (greedy decoding, so
+    // per-request outputs are schedule-independent): the oracle for the
+    // cancellation-isolation check below.
+    let reference = {
+        let reqs = mk_gen().online_trace(rate, horizon);
+        println!(
+            "trace: {} arrivals over {horizon}s at {rate}/s (LiveCodeBench profile)",
+            reqs.len()
         );
-        let reqs = gen.online_trace(rate, horizon);
-        println!("{name}: {} arrivals over {horizon}s at {rate}/s", reqs.len());
-        let cfg = EngineConfig::new(drafter).with_k(8).with_schedule(sched, delayed);
-        let mut eng = Engine::new(rt.clone(), cfg)?;
-        let r = eng.run(reqs)?;
-        println!("  {}", r.summary());
-        let mut lat = r.request_latency_s.clone();
-        if lat.len() > 0 {
-            println!(
-                "  latency: p50={:.2}s p99={:.2}s max={:.2}s",
-                lat.percentile(50.0),
-                lat.percentile(99.0),
-                lat.max()
-            );
+        let mut eng = Engine::new(rt.clone(), mk_cfg()?)?;
+        eng.run(reqs)?
+    };
+
+    // Live serving: requests are admitted when they arrive on the serving
+    // clock; tokens are pulled incrementally from each session.
+    let mut driver = EngineDriver::with_arrivals(
+        EngineHandle::new(rt.clone(), mk_cfg()?)?,
+        mk_gen().online_arrivals(rate, horizon),
+    );
+    let mut streamed = 0usize;
+    let mut cancelled_id: Option<u64> = None;
+    while driver.step()? {
+        for s in driver.sessions() {
+            streamed += s.drain().len();
         }
+        // Cancel the third admitted request once it is visibly mid-
+        // generation (a few tokens out, more to come).
+        if cancelled_id.is_none() && driver.sessions().len() >= 3 {
+            let victim = driver.sessions()[2].clone();
+            if !victim.is_finished() && victim.tokens_delivered() >= 4 {
+                victim.cancel();
+                cancelled_id = Some(victim.id());
+            }
+        }
+    }
+    let report = driver.report();
+    println!("  {}", report.summary());
+    println!(
+        "  streamed {} tokens incrementally across {} sessions ({} cancelled)",
+        streamed,
+        driver.sessions().len(),
+        report.requests_cancelled,
+    );
+
+    // Streaming latency metrics (wallclock), from per-session stats.
+    let m = driver.session_metrics();
+    if let Some(ttft) = m.histograms.get("ttft_s") {
+        println!(
+            "  TTFT:        p50={:.4}s p99={:.4}s max={:.4}s (n={})",
+            ttft.percentile(50.0),
+            ttft.percentile(99.0),
+            ttft.max(),
+            ttft.len()
+        );
+    }
+    if let Some(itl) = m.histograms.get("inter_token_s") {
+        println!(
+            "  inter-token: p50={:.5}s p99={:.5}s (n={})",
+            itl.percentile(50.0),
+            itl.percentile(99.0),
+            itl.len()
+        );
+    }
+
+    // Cancellation isolation: every non-cancelled session's output must be
+    // bit-identical to the batch reference; the cancelled one kept its
+    // partial stream and released slot + KV.
+    if let Some(vid) = cancelled_id {
+        let mut intact = 0usize;
+        for (id, out) in &reference.outputs {
+            if *id == vid {
+                continue;
+            }
+            assert_eq!(
+                Some(out),
+                report.outputs.get(id),
+                "cancelling {vid} disturbed request {id}"
+            );
+            intact += 1;
+        }
+        let victim = driver
+            .sessions()
+            .iter()
+            .find(|s| s.id() == vid)
+            .expect("victim session");
+        assert_eq!(victim.finish_reason(), Some(FinishReason::Cancelled));
+        println!(
+            "  cancelled session {vid} after {} tokens ({} expected); \
+             {intact} other outputs bit-identical to the batch reference",
+            victim.tokens_delivered(),
+            reference.outputs.get(&vid).map(|o| o.len()).unwrap_or(0),
+        );
+    } else {
+        println!("  (trace too short to stage a cancellation demo)");
     }
     Ok(())
 }

@@ -1,11 +1,14 @@
 //! Quickstart: serve a small batch of reasoning requests with SparseSpec
-//! (PillarAttn self-speculation) and compare against vanilla decoding.
+//! (PillarAttn self-speculation), compare against vanilla decoding, then
+//! stream one session token-by-token through the serving API.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!   (add `make artifacts` + `--features pjrt` for the real XLA path; the
+//!    default build serves on the deterministic CPU fallback runtime)
 
 use std::rc::Rc;
 
-use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::engine::{Engine, EngineConfig, EngineHandle};
 use sparsespec::runtime::Runtime;
 use sparsespec::spec::DrafterKind;
 use sparsespec::workload::{Dataset, WorkloadGen};
@@ -16,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "loaded {} artifacts on {} (model: {} params, trained={})",
         rt.cfg.artifacts.len(),
-        rt.client.platform_name(),
+        rt.platform_name(),
         rt.cfg.n_params,
         rt.cfg.trained
     );
@@ -58,6 +61,36 @@ fn main() -> anyhow::Result<()> {
         "wallclock speedup: {:.2}x | simulated-H100 speedup: {:.2}x",
         rv.wall_s / ro.wall_s,
         rv.sim_s / ro.sim_s
+    );
+
+    // ------------------------------------------------------------------
+    // Streaming quickstart: submit one session and consume its tokens as
+    // verification accepts them (see engine::api for the full surface —
+    // EngineDriver adds live arrival processes, TokenSink adds push-style
+    // delivery, SessionHandle::cancel stops a generation mid-flight).
+    // ------------------------------------------------------------------
+    let cfg = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+        .k(8)
+        .build(&rt.cfg.model)?;
+    let mut handle = EngineHandle::new(rt.clone(), cfg)?;
+    let req = mk_reqs().remove(0);
+    let expect = req.max_new;
+    let session = handle.submit(req);
+    print!("streaming session {} ({expect} tokens):", session.id());
+    let mut chunks = 0usize;
+    while handle.step()? {
+        let batch = session.drain();
+        if !batch.is_empty() {
+            chunks += 1;
+            print!(" +{}", batch.len());
+        }
+    }
+    let stats = session.stats();
+    println!(
+        "\n  done: {} tokens in {chunks} increments, ttft={:.4}s, {:.2} accepted/round",
+        stats.tokens,
+        stats.ttft_s.unwrap_or(0.0),
+        stats.mean_accepted_per_round()
     );
     Ok(())
 }

@@ -1,12 +1,17 @@
 //! The paper's headline experiment in miniature: serve all three reasoning
 //! datasets with every training-free system and print the Fig. 10-style
-//! comparison table.
+//! comparison table — driven through the session API (submit + drive),
+//! with a per-system median TTFT column read off the live session stats.
+//!
+//! The speedup column divides by the vanilla ("vllm") baseline row; if
+//! that row is renamed or reordered away the column prints `n/a` instead
+//! of inf/garbage.
 //!
 //!   cargo run --release --example reasoning_serve [-- --requests 12]
 
 use std::rc::Rc;
 
-use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle};
 use sparsespec::runtime::Runtime;
 use sparsespec::spec::DrafterKind;
 use sparsespec::util::cli::Args;
@@ -24,11 +29,11 @@ fn main() -> anyhow::Result<()> {
         ("sparsespec", DrafterKind::Pillar { w: 128 }),
     ];
     println!(
-        "{:<14} {:<14} {:>10} {:>12} {:>8} {:>8}",
-        "dataset", "system", "wall tok/s", "sim tok/s", "alpha", "acc/rnd"
+        "{:<14} {:<14} {:>10} {:>12} {:>8} {:>8} {:>12}",
+        "dataset", "system", "wall tok/s", "sim tok/s", "alpha", "acc/rnd", "ttft p50(s)"
     );
     for ds in Dataset::all() {
-        let mut base = 0.0;
+        let mut base: Option<f64> = None;
         for (name, d) in &systems {
             let reqs = WorkloadGen::new(
                 rt.cfg.grammar.clone(),
@@ -37,18 +42,34 @@ fn main() -> anyhow::Result<()> {
                 42,
             )
             .offline_batch(n);
-            let mut eng = Engine::new(rt.clone(), EngineConfig::new(*d).with_k(8))?;
-            let r = eng.run(reqs)?;
-            if *name == "vllm" {
-                base = r.sim_tok_s();
+            let mut driver =
+                EngineDriver::new(EngineHandle::new(rt.clone(), EngineConfig::new(*d).with_k(8))?);
+            for req in reqs {
+                driver.submit(req);
             }
+            driver.drive()?;
+            let r = driver.report();
+            if *name == "vllm" {
+                base = Some(r.sim_tok_s());
+            }
+            // Guarded: a reordered/renamed baseline row must not yield
+            // inf/garbage speedups.
+            let speedup = match base {
+                Some(b) if b > 0.0 => format!("{:4.2}x", r.sim_tok_s() / b),
+                _ => " n/a".to_string(),
+            };
+            let ttft = driver.session_metrics();
+            let ttft_p50 = ttft
+                .histograms
+                .get("ttft_s")
+                .map(|h| format!("{:12.4}", h.percentile(50.0)))
+                .unwrap_or_else(|| format!("{:>12}", "n/a"));
             println!(
-                "{:<14} {:<14} {:>10.1} {:>9.1} ({:>4.2}x) {:>8.2} {:>8.2}",
+                "{:<14} {:<14} {:>10.1} {:>5.1} ({speedup}) {:>8.2} {:>8.2} {ttft_p50}",
                 ds.name(),
                 name,
                 r.wall_tok_s(),
                 r.sim_tok_s(),
-                r.sim_tok_s() / base,
                 r.accept.alpha(),
                 r.accept.mean_accepted()
             );

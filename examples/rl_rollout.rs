@@ -3,13 +3,15 @@
 //! Rollout generation can take >90% of RL post-training time; this driver
 //! oversubscribes the device KV budget with a large offline batch so the
 //! dynamic KV manager (offload, FIFO reload) is exercised, and reports
-//! rollouts/s for vanilla vs SparseSpec.
+//! rollouts/s for vanilla vs SparseSpec.  Driven through the session API
+//! so the KV budget is validated up front and completions are observable
+//! as they land.
 //!
 //!   cargo run --release --example rl_rollout [-- --requests 32 --budget-frac 45]
 
 use std::rc::Rc;
 
-use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle, FinishReason};
 use sparsespec::kv_cache::KvPolicy;
 use sparsespec::runtime::Runtime;
 use sparsespec::spec::DrafterKind;
@@ -37,12 +39,24 @@ fn main() -> anyhow::Result<()> {
             9,
         )
         .offline_batch(n);
-        let cfg = EngineConfig::new(drafter).with_k(8).with_kv(policy, budget);
-        let mut eng = Engine::new(rt.clone(), cfg)?;
-        let r = eng.run(reqs)?;
+        let cfg = EngineConfig::builder(drafter)
+            .k(8)
+            .kv(policy, budget)
+            .build(&rt.cfg.model)?;
+        let mut driver = EngineDriver::new(EngineHandle::new(rt.clone(), cfg)?);
+        for req in reqs {
+            driver.submit(req);
+        }
+        driver.drive()?;
+        let done = driver
+            .sessions()
+            .iter()
+            .filter(|s| s.finish_reason() == Some(FinishReason::Completed))
+            .count();
+        let r = driver.report();
         println!("{name:<20} {}", r.summary());
         println!(
-            "    rollouts/s (wall): {:.2}   offloaded {} times, recomputed {} tokens",
+            "    rollouts/s (wall): {:.2}   completed {done}/{n}, offloaded {} times, recomputed {} tokens",
             r.requests_done as f64 / r.wall_s,
             r.kv.offload_events,
             r.kv.recomputed_tokens

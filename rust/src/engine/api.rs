@@ -1,0 +1,536 @@
+//! Session-based streaming serving API — the engine's public surface.
+//!
+//! The paper's system is an *online* server: requests arrive continuously,
+//! tokens matter the moment verification accepts them, and a request can
+//! be abandoned mid-generation.  This module exposes that shape:
+//!
+//! * [`EngineHandle::submit`] admits a [`Request`] mid-run and returns a
+//!   [`SessionHandle`] — a cheap, clonable view of that request's live
+//!   token stream, per-session [`SessionStats`] (TTFT, inter-token
+//!   latency, accepted-per-round) and cancellation switch.
+//! * Tokens are delivered **incrementally**, the same iteration
+//!   verification accepts them: pull them with [`SessionHandle::drain`] /
+//!   [`SessionHandle::try_recv`], or push-style by registering a
+//!   [`TokenSink`] at submit time — both views observe the same stream.
+//! * [`SessionHandle::cancel`] marks the session; the engine applies it at
+//!   the next iteration boundary, releasing the slot, its bucket and its
+//!   KV pages (device *and* host tier) through the same paths retirement
+//!   uses.  Other sessions are unaffected.
+//! * [`EngineDriver`] interleaves an **arrival process** (any
+//!   `Iterator<Item = Request>`, e.g. `WorkloadGen::online_arrivals`) with
+//!   decode iterations on the simulated serving clock, so online traces no
+//!   longer need to be materialised up front.
+//!
+//! `Engine::run` remains as a thin batch-compatibility wrapper over
+//! submit + drive: identical queue order, identical iteration loop,
+//! bit-identical `RunReport.outputs`.
+//!
+//! Everything here is single-threaded by design (the engine owns `Rc`
+//! runtime state); sessions are `Rc<RefCell<…>>` views, not channels
+//! across threads.
+
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::core::Engine;
+use super::{EngineConfig, RunReport};
+use crate::metrics::{Histogram, Metrics};
+use crate::runtime::Runtime;
+use crate::workload::Request;
+
+/// Why a session stopped producing tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generation budget reached; the stream holds the full output.
+    Completed,
+    /// Cancelled by the consumer; the stream holds a partial output.
+    Cancelled,
+}
+
+/// One element of a session's event stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TokenEvent {
+    /// `index` is the 0-based position in the session's output.
+    Token { token: i32, index: usize },
+    Finished { reason: FinishReason },
+}
+
+/// Push-style consumer of a session's event stream.  Registered at submit
+/// time; invoked synchronously inside the engine iteration that produced
+/// the event (keep it cheap).  Closures `FnMut(u64, &TokenEvent)` qualify.
+pub trait TokenSink {
+    fn on_event(&mut self, session: u64, ev: &TokenEvent);
+}
+
+impl<F: FnMut(u64, &TokenEvent)> TokenSink for F {
+    fn on_event(&mut self, session: u64, ev: &TokenEvent) {
+        self(session, ev)
+    }
+}
+
+/// Per-session serving statistics, updated as the engine runs.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// Simulated-clock submit time.
+    pub submitted_sim_s: f64,
+    /// Simulated-clock time of the first delivered token.
+    pub first_token_sim_s: Option<f64>,
+    /// Simulated-clock time the session finished (completed or cancelled).
+    pub finished_sim_s: Option<f64>,
+    /// Wallclock time-to-first-token.
+    pub ttft_s: Option<f64>,
+    /// Wallclock inter-token latencies (one sample per token after the
+    /// first).
+    pub inter_token_s: Histogram,
+    /// Tokens delivered so far.
+    pub tokens: usize,
+    /// Verification rounds this session went through.
+    pub rounds: u64,
+    /// Drafted tokens accepted across those rounds (bonus not counted).
+    pub accepted: u64,
+    submitted_at: Instant,
+    last_token_at: Option<Instant>,
+}
+
+impl SessionStats {
+    fn new(sim_s: f64) -> Self {
+        SessionStats {
+            submitted_sim_s: sim_s,
+            first_token_sim_s: None,
+            finished_sim_s: None,
+            ttft_s: None,
+            inter_token_s: Histogram::default(),
+            tokens: 0,
+            rounds: 0,
+            accepted: 0,
+            submitted_at: Instant::now(),
+            last_token_at: None,
+        }
+    }
+
+    /// Simulated-clock TTFT (first-token time minus submit time).
+    pub fn ttft_sim_s(&self) -> Option<f64> {
+        self.first_token_sim_s.map(|t| t - self.submitted_sim_s)
+    }
+
+    /// Mean accepted drafts per verification round.
+    pub fn mean_accepted_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64
+        }
+    }
+
+    fn on_token(&mut self) {
+        let now = Instant::now();
+        if self.tokens == 0 {
+            self.ttft_s = Some(now.duration_since(self.submitted_at).as_secs_f64());
+        } else if let Some(prev) = self.last_token_at {
+            self.inter_token_s
+                .record(now.duration_since(prev).as_secs_f64());
+        }
+        self.last_token_at = Some(now);
+        self.tokens += 1;
+    }
+}
+
+/// Engine-side session state, shared with every [`SessionHandle`] clone.
+pub(crate) struct SessionShared {
+    pub(crate) id: u64,
+    /// Tokens delivered but not yet consumed by the pull side.
+    pending: std::collections::VecDeque<i32>,
+    /// How many of the slot's output tokens have been delivered — the
+    /// watermark that makes delivery idempotent across preempt/restart.
+    delivered: usize,
+    finished: Option<FinishReason>,
+    cancel_requested: bool,
+    sink: Option<Box<dyn TokenSink>>,
+    stats: SessionStats,
+}
+
+impl SessionShared {
+    pub(crate) fn new(id: u64, sim_s: f64) -> Self {
+        SessionShared {
+            id,
+            pending: std::collections::VecDeque::new(),
+            delivered: 0,
+            finished: None,
+            cancel_requested: false,
+            sink: None,
+            stats: SessionStats::new(sim_s),
+        }
+    }
+
+    pub(crate) fn set_sink(&mut self, sink: Box<dyn TokenSink>) {
+        self.sink = Some(sink);
+    }
+
+    pub(crate) fn has_sink(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// True when the consumer asked for cancellation and the engine has
+    /// not retired the session yet.
+    pub(crate) fn wants_cancel(&self) -> bool {
+        self.cancel_requested && self.finished.is_none()
+    }
+
+    /// Deliver every output token past the watermark, then record the
+    /// round's acceptance.  Called by the engine after prefill and after
+    /// each verification that touched this session's slot — only for
+    /// *observed* sessions (a live consumer handle or a sink); unobserved
+    /// ones take the cheap `note_round` path instead, so batch
+    /// `Engine::run` pays no per-token clock reads or double-buffering.
+    pub(crate) fn on_progress(&mut self, output: &[i32], round_accept: Option<usize>) {
+        while self.delivered < output.len() {
+            let tok = output[self.delivered];
+            let index = self.delivered;
+            self.delivered += 1;
+            self.stats.on_token();
+            self.pending.push_back(tok);
+            if let Some(sink) = self.sink.as_mut() {
+                sink.on_event(self.id, &TokenEvent::Token { token: tok, index });
+            }
+        }
+        self.note_round(round_accept);
+    }
+
+    /// Acceptance accounting only (two integer adds).
+    pub(crate) fn note_round(&mut self, round_accept: Option<usize>) {
+        if let Some(acc) = round_accept {
+            self.stats.rounds += 1;
+            self.stats.accepted += acc as u64;
+        }
+    }
+
+    pub(crate) fn finish(&mut self, reason: FinishReason) {
+        if self.finished.is_some() {
+            return;
+        }
+        self.finished = Some(reason);
+        if let Some(sink) = self.sink.as_mut() {
+            sink.on_event(self.id, &TokenEvent::Finished { reason });
+        }
+    }
+
+    /// Apply the end-of-iteration simulated clock to any event from this
+    /// iteration that still lacks a sim timestamp.  Idempotent: the first
+    /// stamp after the first token / the finish wins, so TTFT includes
+    /// the generating iteration's own cost (the engine advances `sim_s`
+    /// only at the end of a step).
+    pub(crate) fn stamp_sim(&mut self, sim_s: f64) {
+        if self.stats.tokens > 0 && self.stats.first_token_sim_s.is_none() {
+            self.stats.first_token_sim_s = Some(sim_s);
+        }
+        if self.finished.is_some() && self.stats.finished_sim_s.is_none() {
+            self.stats.finished_sim_s = Some(sim_s);
+        }
+    }
+}
+
+/// Consumer view of one submitted request: incremental tokens, stats,
+/// finish state, cancellation.  Clones observe the same stream.
+#[derive(Clone)]
+pub struct SessionHandle {
+    shared: Rc<RefCell<SessionShared>>,
+}
+
+impl SessionHandle {
+    pub(crate) fn new(shared: Rc<RefCell<SessionShared>>) -> Self {
+        SessionHandle { shared }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.shared.borrow().id
+    }
+
+    /// Pull one undelivered token, if any (pull-style streaming).
+    pub fn try_recv(&self) -> Option<i32> {
+        self.shared.borrow_mut().pending.pop_front()
+    }
+
+    /// Pull every undelivered token (empty when none arrived since the
+    /// last poll).
+    pub fn drain(&self) -> Vec<i32> {
+        self.shared.borrow_mut().pending.drain(..).collect()
+    }
+
+    /// Tokens delivered so far (consumed or not).
+    pub fn tokens_delivered(&self) -> usize {
+        self.shared.borrow().delivered
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.shared.borrow().finished.is_some()
+    }
+
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        self.shared.borrow().finished
+    }
+
+    /// Request cancellation.  Applied by the engine at the next iteration
+    /// boundary: the slot, its scheduler bucket and its KV pages (device
+    /// and host tier) are released through the regular retirement paths;
+    /// tokens already delivered stay readable.
+    pub fn cancel(&self) {
+        self.shared.borrow_mut().cancel_requested = true;
+    }
+
+    /// Snapshot of the session's serving statistics.
+    pub fn stats(&self) -> SessionStats {
+        self.shared.borrow().stats.clone()
+    }
+}
+
+/// Owning, session-first wrapper around an [`Engine`]: submit requests,
+/// step the serving loop, read the final [`RunReport`].
+pub struct EngineHandle {
+    engine: Engine,
+    started: Option<Instant>,
+}
+
+impl EngineHandle {
+    pub fn new(rt: Rc<Runtime>, cfg: EngineConfig) -> Result<Self> {
+        Ok(EngineHandle { engine: Engine::new(rt, cfg)?, started: None })
+    }
+
+    pub fn from_engine(engine: Engine) -> Self {
+        EngineHandle { engine, started: None }
+    }
+
+    /// Admit a request (effective at the next `step`); returns its live
+    /// session.
+    pub fn submit(&mut self, req: Request) -> SessionHandle {
+        self.engine.submit(req)
+    }
+
+    /// `submit` with a push-style sink receiving every `TokenEvent`.
+    pub fn submit_with_sink(&mut self, req: Request, sink: Box<dyn TokenSink>) -> SessionHandle {
+        self.engine.submit_with_sink(req, sink)
+    }
+
+    /// One engine iteration.  Returns `false` once fully idle (or the
+    /// configured iteration cap is reached — see `iteration_cap_reached`
+    /// to distinguish the two).
+    pub fn step(&mut self) -> Result<bool> {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        if self.iteration_cap_reached() {
+            return Ok(false);
+        }
+        self.engine.step()
+    }
+
+    /// True when the `max_iterations` safety valve stopped the loop (the
+    /// engine may still hold unserved work).
+    pub fn iteration_cap_reached(&self) -> bool {
+        self.engine.iterations() >= self.engine.cfg.max_iterations
+    }
+
+    /// Step until idle.
+    pub fn drive(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// The simulated serving clock (seconds).
+    pub fn clock_s(&self) -> f64 {
+        self.engine.clock_s()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Assemble the run report (drains per-run aggregates; call once at
+    /// the end, exactly like `Engine::run`'s return value).
+    pub fn report(&mut self) -> RunReport {
+        let wall = self
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        self.engine.take_report(wall)
+    }
+}
+
+/// Serving loop that interleaves an arrival process with decode
+/// iterations: each `step` first admits every request whose `arrival_s`
+/// is due on the simulated clock, then runs one engine iteration.  When
+/// the engine goes idle with arrivals still pending, the clock jumps to
+/// the next arrival (we simulate the wait, we don't sleep through it).
+pub struct EngineDriver {
+    handle: EngineHandle,
+    arrivals: Option<Box<dyn Iterator<Item = Request>>>,
+    /// Next arrival, not yet due.
+    staged: Option<Request>,
+    handles: Vec<SessionHandle>,
+    /// Stats folded out of pruned (finished) sessions — see
+    /// `prune_finished`.
+    retired: Metrics,
+}
+
+impl EngineDriver {
+    pub fn new(handle: EngineHandle) -> Self {
+        EngineDriver {
+            handle,
+            arrivals: None,
+            staged: None,
+            handles: Vec::new(),
+            retired: Metrics::new(),
+        }
+    }
+
+    pub fn with_arrivals(
+        handle: EngineHandle,
+        arrivals: impl Iterator<Item = Request> + 'static,
+    ) -> Self {
+        EngineDriver {
+            handle,
+            arrivals: Some(Box::new(arrivals)),
+            staged: None,
+            handles: Vec::new(),
+            retired: Metrics::new(),
+        }
+    }
+
+    /// Submit immediately (in addition to whatever the arrival process
+    /// produces).
+    pub fn submit(&mut self, req: Request) -> SessionHandle {
+        let h = self.handle.submit(req);
+        self.handles.push(h.clone());
+        h
+    }
+
+    /// Sessions admitted so far (submission order).
+    pub fn sessions(&self) -> &[SessionHandle] {
+        &self.handles
+    }
+
+    pub fn handle(&self) -> &EngineHandle {
+        &self.handle
+    }
+
+    pub fn handle_mut(&mut self) -> &mut EngineHandle {
+        &mut self.handle
+    }
+
+    fn refill_staged(&mut self) {
+        if self.staged.is_none() {
+            self.staged = self.arrivals.as_mut().and_then(|it| it.next());
+        }
+    }
+
+    fn inject_due(&mut self) {
+        loop {
+            self.refill_staged();
+            let due = match &self.staged {
+                Some(r) => r.arrival_s <= self.handle.clock_s(),
+                None => false,
+            };
+            if !due {
+                return;
+            }
+            let r = self.staged.take().unwrap();
+            let h = self.handle.submit(r);
+            self.handles.push(h);
+        }
+    }
+
+    /// One driver iteration: admit due arrivals, run one engine step.
+    /// Returns `false` when the engine is idle *and* the arrival process
+    /// is exhausted — or when the `max_iterations` safety valve tripped
+    /// (remaining arrivals are left unconsumed rather than admitted into
+    /// a loop that will never serve them).
+    pub fn step(&mut self) -> Result<bool> {
+        if self.handle.iteration_cap_reached() {
+            return Ok(false);
+        }
+        self.inject_due();
+        if self.handle.step()? {
+            return Ok(true);
+        }
+        if self.handle.iteration_cap_reached() {
+            return Ok(false);
+        }
+        // Idle: fast-forward the serving clock to the next arrival.
+        self.refill_staged();
+        if let Some(r) = self.staged.take() {
+            self.handle.engine_mut().advance_clock(r.arrival_s);
+            let h = self.handle.submit(r);
+            self.handles.push(h);
+            self.inject_due();
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Run until every arrival has been served (or cancelled).
+    pub fn drive(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    fn fold_session(m: &mut Metrics, h: &SessionHandle) {
+        let st = h.stats();
+        if let Some(t) = st.ttft_s {
+            m.observe("ttft_s", t);
+        }
+        if let Some(t) = st.ttft_sim_s() {
+            m.observe("ttft_sim_s", t);
+        }
+        m.hist("inter_token_s").merge(&st.inter_token_s);
+        if st.rounds > 0 {
+            m.observe("accepted_per_round", st.mean_accepted_per_round());
+        }
+        match h.finish_reason() {
+            Some(FinishReason::Completed) => m.inc("sessions_completed", 1.0),
+            Some(FinishReason::Cancelled) => m.inc("sessions_cancelled", 1.0),
+            None => m.inc("sessions_live", 1.0),
+        }
+    }
+
+    /// Drop finished sessions (their stats are folded into the running
+    /// aggregate first, so `session_metrics` stays complete) and release
+    /// their undrained token backlogs.  A long-lived serving loop should
+    /// call this periodically; without it the driver retains every
+    /// session for the trace's lifetime.  Returns how many were pruned.
+    pub fn prune_finished(&mut self) -> usize {
+        let before = self.handles.len();
+        let mut kept = Vec::with_capacity(before);
+        for h in self.handles.drain(..) {
+            if h.is_finished() {
+                Self::fold_session(&mut self.retired, &h);
+            } else {
+                kept.push(h);
+            }
+        }
+        self.handles = kept;
+        before - self.handles.len()
+    }
+
+    /// Aggregate per-session statistics into serving metrics: `ttft_s`,
+    /// `ttft_sim_s`, `inter_token_s` and `accepted_per_round` histograms
+    /// plus `sessions_{completed,cancelled,live}` counters.  Includes
+    /// sessions already dropped by `prune_finished`.
+    pub fn session_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.merge_from(&self.retired);
+        for h in &self.handles {
+            Self::fold_session(&mut m, h);
+        }
+        m
+    }
+
+    /// Final run report (see [`EngineHandle::report`]).
+    pub fn report(&mut self) -> RunReport {
+        self.handle.report()
+    }
+}

@@ -1,10 +1,12 @@
 //! Engine implementation: the per-iteration serving loop.
 
 use anyhow::Result;
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::api::{FinishReason, SessionHandle, SessionShared, TokenSink};
 use super::slot::{Phase, Slot};
 use super::{EngineConfig, RunReport};
 use crate::kv_cache::{HostKv, KvManager, OffloadEngine, OffloadJob, PressureAction};
@@ -69,6 +71,15 @@ pub struct Engine {
     outputs: BTreeMap<u64, Vec<i32>>,
     latency: Histogram,
     requests_done: usize,
+    requests_cancelled: usize,
+    /// Live session state per request id (submit-created; `run` goes
+    /// through the same path, so streaming is uniform).  Entries are
+    /// removed at finish (complete/cancel), so the map only ever holds
+    /// in-flight work — a long-lived server does not accumulate history.
+    sessions: BTreeMap<u64, Rc<RefCell<SessionShared>>>,
+    /// Sessions that produced events this iteration; their sim timestamps
+    /// are stamped with the *end-of-iteration* clock in `step`.
+    stamp_pending: Vec<Rc<RefCell<SessionShared>>>,
 }
 
 impl Engine {
@@ -136,6 +147,9 @@ impl Engine {
             outputs: BTreeMap::new(),
             latency: Histogram::default(),
             requests_done: 0,
+            requests_cancelled: 0,
+            sessions: BTreeMap::new(),
+            stamp_pending: Vec::new(),
             rt,
             cfg,
         })
@@ -153,11 +167,13 @@ impl Engine {
         }
     }
 
-    /// Run a request set to completion; the entry point for examples and
-    /// benches.
+    /// Batch-compatibility wrapper over the session API: submits every
+    /// request (same queue order as the pre-session engine), drives the
+    /// loop to idle and assembles the report — `RunReport.outputs` is
+    /// bit-identical to the historical behaviour on a fixed seed.
     pub fn run(&mut self, requests: Vec<Request>) -> Result<RunReport> {
         for r in requests {
-            self.queue.push_back(r);
+            self.submit(r);
         }
         let t0 = Instant::now();
         while self.iter < self.cfg.max_iterations {
@@ -166,18 +182,155 @@ impl Engine {
                 break;
             }
         }
+        Ok(self.take_report(t0.elapsed().as_secs_f64()))
+    }
+
+    // ------------------------------------------------------------------
+    // session API (consumed through engine::api)
+    // ------------------------------------------------------------------
+
+    /// Admit a request into the serving queue mid-run; returns its live
+    /// session.  Latest submission wins: if the same id is already in
+    /// flight, the old request is cancelled first (through the normal
+    /// cancellation path), so two generations never feed one stream.
+    pub fn submit(&mut self, req: Request) -> SessionHandle {
+        self.submit_inner(req, None)
+    }
+
+    /// `submit` with a push-style sink receiving every token event.
+    pub fn submit_with_sink(&mut self, req: Request, sink: Box<dyn TokenSink>) -> SessionHandle {
+        self.submit_inner(req, Some(sink))
+    }
+
+    fn submit_inner(&mut self, req: Request, sink: Option<Box<dyn TokenSink>>) -> SessionHandle {
+        if self.sessions.contains_key(&req.id) {
+            self.cancel_session(req.id);
+        }
+        let mut shared = SessionShared::new(req.id, self.sim_s);
+        if let Some(s) = sink {
+            shared.set_sink(s);
+        }
+        let rc = Rc::new(RefCell::new(shared));
+        self.sessions.insert(req.id, rc.clone());
+        self.queue.push_back(req);
+        SessionHandle::new(rc)
+    }
+
+    /// The live session for a request id (finished sessions are dropped
+    /// from the engine; their handles stay readable on the consumer side).
+    pub fn session(&self, id: u64) -> Option<SessionHandle> {
+        self.sessions.get(&id).map(|rc| SessionHandle::new(rc.clone()))
+    }
+
+    /// Iterations executed so far.
+    pub fn iterations(&self) -> u64 {
+        self.iter
+    }
+
+    /// The simulated serving clock (seconds).
+    pub fn clock_s(&self) -> f64 {
+        self.sim_s
+    }
+
+    /// Jump the simulated clock forward (the driver uses this to model
+    /// idle waiting for the next arrival; never moves backwards).
+    pub fn advance_clock(&mut self, t: f64) {
+        if t > self.sim_s {
+            self.sim_s = t;
+        }
+    }
+
+    /// Device-tier KV tokens currently accounted (introspection/tests).
+    pub fn kv_used_tokens(&self) -> usize {
+        self.kv.used_tokens()
+    }
+
+    /// Deliver any new output tokens of `slot` to its session.  Sessions
+    /// with no observer — no consumer handle alive (the engine's map Rc
+    /// is the only one) and no sink — skip token delivery and per-token
+    /// wallclock reads; only the two-integer acceptance accounting runs,
+    /// so batch `Engine::run` keeps its pre-session cost profile.
+    fn notify_session(
+        sessions: &BTreeMap<u64, Rc<RefCell<SessionShared>>>,
+        stamp_pending: &mut Vec<Rc<RefCell<SessionShared>>>,
+        slot: &Slot,
+        round_accept: Option<usize>,
+    ) {
+        if let Some(sess) = sessions.get(&slot.req.id) {
+            let observed = Rc::strong_count(sess) > 1 || sess.borrow().has_sink();
+            if observed {
+                sess.borrow_mut().on_progress(&slot.output, round_accept);
+                stamp_pending.push(sess.clone());
+            } else {
+                sess.borrow_mut().note_round(round_accept);
+            }
+        }
+    }
+
+    /// Mark a session finished and drop it from the live map (consumer
+    /// handles keep the shared state readable).
+    fn finish_session(&mut self, id: u64, reason: FinishReason) {
+        if let Some(sess) = self.sessions.remove(&id) {
+            sess.borrow_mut().finish(reason);
+            self.stamp_pending.push(sess);
+        }
+    }
+
+    /// Apply pending cancellations.  Runs right after the delayed-verify
+    /// drain, so no in-flight work can target a freed slot; releases go
+    /// through the same bucket/KV paths retirement uses.  The map only
+    /// holds in-flight sessions, so this scan is bounded by live work.
+    fn process_cancellations(&mut self) {
+        if self.sessions.is_empty() {
+            return;
+        }
+        let ids: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.borrow().wants_cancel())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            self.cancel_session(id);
+        }
+    }
+
+    /// Cancel one session wherever its request currently lives: the
+    /// admission queue, a device slot, or the suspended/offloaded tier.
+    fn cancel_session(&mut self, id: u64) {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(pos);
+        } else if let Some(idx) = self.slot_of(id) {
+            let slot = self.slots[idx].take().unwrap();
+            self.buckets
+                .release(slot.bucket.min(self.buckets.n_buckets() - 1));
+            self.kv.release(id);
+        } else if self.suspended.remove(&id).is_some() {
+            // Covers both host-resident KV and rows still in offload
+            // transit (the orphaned transfer is dropped at harvest time).
+            self.kv.forget(id);
+        }
+        self.requests_cancelled += 1;
+        self.finish_session(id, FinishReason::Cancelled);
+    }
+
+    /// Assemble the run report and drain per-run aggregates (`outputs`
+    /// moves out; in-flight offload transfers are drained first).
+    pub(crate) fn take_report(&mut self, wall_s: f64) -> RunReport {
         // Drain any in-flight offloads (their requests will never resume).
         for (id, kv) in self.offload.drain() {
-            self.kv.host.insert(id, kv);
+            if self.suspended.contains_key(&id) {
+                self.kv.host.insert(id, kv);
+            }
         }
-        let wall_s = t0.elapsed().as_secs_f64();
-        Ok(RunReport {
+        RunReport {
             name: self.cfg.drafter.name(),
             iterations: self.iter,
             wall_s,
             sim_s: self.sim_s,
             sim_cpu_s: self.sim_cpu_s,
             requests_done: self.requests_done,
+            requests_cancelled: self.requests_cancelled,
             tokens_generated: self.tokens_generated,
             accept: self.accept.clone(),
             kv: self.kv.stats.clone(),
@@ -187,7 +340,7 @@ impl Engine {
             mean_kv_util: self.kv_util_sum / self.iter.max(1) as f64,
             outputs: std::mem::take(&mut self.outputs),
             request_latency_s: self.latency.clone(),
-        })
+        }
     }
 
     /// One engine iteration.  Returns false when fully idle.
@@ -207,6 +360,11 @@ impl Engine {
 
         // 0. consume delayed verification results from the previous iter.
         cpu_s += self.collect_delayed()?;
+
+        // 0b. apply session cancellations (after the delayed drain, so no
+        //     pending verify work can land in a slot freed here; before
+        //     admission, so the freed capacity is reusable this iteration).
+        self.process_cancellations();
 
         // 1. reload offloaded requests when capacity allows.
         self.try_reloads()?;
@@ -242,6 +400,13 @@ impl Engine {
         };
         self.sim_s += t_dev + cpu_charge;
         self.sim_cpu_s += cpu_charge;
+        // Stamp this iteration's session events with the clock *including*
+        // the iteration that produced them (idempotent per session).
+        if !self.stamp_pending.is_empty() {
+            for sess in self.stamp_pending.drain(..) {
+                sess.borrow_mut().stamp_sim(self.sim_s);
+            }
+        }
         self.trace.push(comp);
         Ok(true)
     }
@@ -283,13 +448,9 @@ impl Engine {
             let idx = self.free_slot().unwrap();
             let bucket = match self.cfg.schedule {
                 Schedule::Unified => self.buckets.assign(),
-                Schedule::Lockstep => {
-                    // Everyone lives in one bucket; still tracked so
-                    // release() stays balanced.
-                    let b = self.buckets.assign();
-                    let _ = b;
-                    0
-                }
+                // Everyone lives in bucket 0; counted there so release()
+                // stays balanced.
+                Schedule::Lockstep => self.buckets.assign_to(0),
             };
             for (j, &t) in req.prompt.iter().take(p).enumerate() {
                 tokens[idx * m.prompt_pad + j] = t;
@@ -342,6 +503,13 @@ impl Engine {
             // Begin the first round, aligned to the slot's bucket.
             let target = self.first_round_target(idx);
             self.slots[idx].as_mut().unwrap().begin_round(target);
+            // The sampled first token streams out immediately (TTFT).
+            Self::notify_session(
+                &self.sessions,
+                &mut self.stamp_pending,
+                self.slots[idx].as_ref().unwrap(),
+                None,
+            );
         }
         Ok(newly.len())
     }
@@ -373,8 +541,12 @@ impl Engine {
                 return Ok(());
             }
             // harvest finished offload transfers into the host tier
+            // (transfers whose request was cancelled mid-flight are
+            // orphans — drop them instead of stranding host KV)
             for (id, kv) in self.offload.poll() {
-                self.kv.host.insert(id, kv);
+                if self.suspended.contains_key(&id) {
+                    self.kv.host.insert(id, kv);
+                }
             }
             let Some((id, host_kv)) = self.kv.try_reload() else {
                 return Ok(());
@@ -385,8 +557,10 @@ impl Engine {
             let idx = self.free_slot().unwrap();
             self.runner.kv_load(idx, &host_kv.k, &host_kv.v)?;
             self.kv.admit(id, sus.len);
-            let bucket = self.buckets.assign();
-            let bucket = if self.cfg.schedule == Schedule::Unified { bucket } else { 0 };
+            let bucket = match self.cfg.schedule {
+                Schedule::Unified => self.buckets.assign(),
+                Schedule::Lockstep => self.buckets.assign_to(0),
+            };
             let mut ngram = NGramIndex::new(3);
             ngram.extend(&sus.ngram_hist);
             let slot = Slot {
@@ -479,6 +653,14 @@ impl Engine {
                     self.kv.complete_preempt(req_id);
                     // Restart from scratch (greedy decode regenerates the
                     // same tokens; they count as recomputed, not new).
+                    // CAVEAT at temperature > 0: the engine RNG has
+                    // advanced, so the regenerated prefix can differ from
+                    // what an observed session already streamed (the
+                    // delivered watermark cannot retract tokens).
+                    // RunReport.outputs always holds the final generation;
+                    // prefer KvPolicy::Dynamic when streaming
+                    // stochastically.  (Per-request reseeding would fix
+                    // this but change legacy bit-compat outputs.)
                     self.tokens_generated -= slot.gen_count.min(slot.output.len()) as u64;
                     self.queue.push_back(slot.req);
                 }
@@ -593,7 +775,6 @@ impl Engine {
             for &i in &participating {
                 let slot = self.slots[i].as_ref().unwrap();
                 // re-feed the token we just wrote, at its own position
-                toks[i] = slot.drafts[slot.drafts.len() - 1 - 0]; // == pending
                 toks[i] = slot.pending;
                 opos[i] = (slot.len - 1) as i32;
                 act[i] = 1;
@@ -952,6 +1133,13 @@ impl Engine {
         } else {
             self.kv.shrink(id, old_len - new_len);
         }
+        // Stream the accepted tokens out before retirement/pressure run.
+        Self::notify_session(
+            &self.sessions,
+            &mut self.stamp_pending,
+            self.slots[w.slot_idx].as_ref().unwrap(),
+            Some(w.accepted),
+        );
         Ok(())
     }
 
@@ -970,6 +1158,7 @@ impl Engine {
                 self.latency
                     .record(slot.admitted_at.elapsed().as_secs_f64());
                 self.requests_done += 1;
+                self.finish_session(slot.req.id, FinishReason::Completed);
             }
         }
         self.handle_pressure(indices)?;

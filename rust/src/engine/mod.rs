@@ -1,28 +1,56 @@
 //! The SparseSpec serving engine (Layer 3).
 //!
-//! One `Engine` drives one drafter configuration over a request trace:
-//! admission → (draft* → verify) rounds → acceptance/rollback → retire,
+//! The engine is an **online, session-based server**: requests are
+//! submitted while it runs, tokens stream out the iteration verification
+//! accepts them, and sessions can be cancelled mid-generation.  Internally
+//! one `Engine` drives one drafter configuration through per-iteration
+//! rounds — admission → (draft* → verify) → acceptance/rollback → retire —
 //! with the unified batch scheduler (§4.2), delayed verification (§4.3)
 //! and the dynamic KV manager (§4.4) wired in.  Every baseline of the
 //! paper's evaluation runs through this same engine with a different
 //! `DrafterKind`, so comparisons isolate the drafting/scheduling policy.
 //!
+//! Two ways to drive it:
+//!
+//! * **Sessions** (the serving API, [`api`]): build an [`EngineHandle`],
+//!   `submit` requests (optionally with a [`TokenSink`]), consume
+//!   incremental tokens through each [`SessionHandle`], `cancel` the ones
+//!   you no longer need.  Wrap it in an [`EngineDriver`] to feed a live
+//!   arrival process (`WorkloadGen::online_arrivals`) on the serving
+//!   clock instead of a pre-materialised trace.
+//! * **Batch compatibility**: [`Engine::run`] takes a `Vec<Request>` and
+//!   returns a [`RunReport`] exactly as before — it is a thin wrapper
+//!   over submit + drive, with bit-identical `outputs` on a fixed seed.
+//!
+//! Configurations come from [`EngineConfig::new`] (permissive, for
+//! experiments that know what they are doing) or the validating
+//! [`EngineConfig::builder`], which cross-checks the draft length against
+//! compiled verify variants, drafter budgets against draft variants, the
+//! KV budget against admissibility, and schedule/delayed combinations —
+//! at construction time rather than as a mid-run artifact error.
+//!
 //! Timing is accounted twice (DESIGN.md §1):
-//! * **wallclock** — real time on this CPU testbed (PJRT executes the AOT
-//!   artifacts; shapes are static, so inactive batch rows cost as much as
-//!   active ones), and
+//! * **wallclock** — real time on this testbed, and
 //! * **simulated** — the calibrated H100 `DeviceModel` applied to the
 //!   engine's *real* per-iteration schedule (rows drafted/verified, KV
-//!   bytes actually touched).  Scheduling experiments (Figs. 13/14) read
-//!   the simulated clock; acceptance and correctness are identical.
+//!   bytes actually touched).  Scheduling experiments (Figs. 13/14) and
+//!   the arrival clock of `EngineDriver` read the simulated clock;
+//!   acceptance and correctness are identical.
 
+mod api;
 mod core;
 mod slot;
 
+pub use self::api::{
+    EngineDriver, EngineHandle, FinishReason, SessionHandle, SessionStats, TokenEvent, TokenSink,
+};
 pub use self::core::Engine;
 pub use slot::{Phase, Slot};
 
+use anyhow::{bail, Result};
+
 use crate::kv_cache::KvPolicy;
+use crate::model::ModelConfig;
 use crate::scheduler::Schedule;
 use crate::spec::{AcceptStats, DrafterKind};
 
@@ -65,6 +93,13 @@ impl EngineConfig {
         }
     }
 
+    /// Validating construction: the returned builder checks the assembled
+    /// configuration against a `ModelConfig` (artifact variants, KV
+    /// admissibility, schedule combinations) in `build`.
+    pub fn builder(drafter: DrafterKind) -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::new(drafter) }
+    }
+
     pub fn with_k(mut self, k: usize) -> Self {
         self.k = k;
         self
@@ -83,6 +118,136 @@ impl EngineConfig {
     }
 }
 
+/// Builder with construction-time validation (`EngineConfig::builder`).
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn k(mut self, k: usize) -> Self {
+        self.cfg.k = k;
+        self
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.cfg.schedule = s;
+        self
+    }
+
+    pub fn delayed_verify(mut self, on: bool) -> Self {
+        self.cfg.delayed_verify = on;
+        self
+    }
+
+    pub fn kv(mut self, policy: KvPolicy, budget: usize) -> Self {
+        self.cfg.kv_policy = policy;
+        self.cfg.kv_budget = budget;
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.cfg.temperature = t;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    pub fn max_iterations(mut self, n: u64) -> Self {
+        self.cfg.max_iterations = n;
+        self
+    }
+
+    pub fn sim_scale(mut self, s: crate::perfmodel::SimScale) -> Self {
+        self.cfg.sim_scale = Some(s);
+        self
+    }
+
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.cfg.verbose = on;
+        self
+    }
+
+    /// Validate against the model/artifact shape and return the config.
+    /// Catches at construction time what would otherwise surface as a
+    /// mid-run artifact-lookup error (or silent mis-serving).
+    pub fn build(self, m: &ModelConfig) -> Result<EngineConfig> {
+        let cfg = self.cfg;
+        if !cfg.temperature.is_finite() || cfg.temperature < 0.0 {
+            bail!("temperature must be finite and >= 0 (got {})", cfg.temperature);
+        }
+        if cfg.max_iterations == 0 {
+            bail!("max_iterations must be > 0");
+        }
+        // Vanilla forces k = 0 inside the engine; everything else verifies
+        // with the verify_q{k+1} artifact.
+        let k_eff = if cfg.drafter == DrafterKind::Vanilla { 0 } else { cfg.k };
+        if !m.verify_q_variants.contains(&(k_eff + 1)) {
+            bail!(
+                "k={} needs a verify_q{} artifact; compiled variants {:?} \
+                 support k in {:?}",
+                k_eff,
+                k_eff + 1,
+                m.verify_q_variants,
+                m.verify_q_variants.iter().map(|q| q - 1).collect::<Vec<_>>()
+            );
+        }
+        match cfg.drafter {
+            DrafterKind::Pillar { w } | DrafterKind::Window { w } | DrafterKind::OracleTopK { w } => {
+                if !m.draft_w_variants.contains(&w) {
+                    bail!(
+                        "draft budget W={w} has no draft_w{w} artifact (variants: {:?})",
+                        m.draft_w_variants
+                    );
+                }
+            }
+            DrafterKind::TriForce { w } => {
+                // sparse_verify is compiled for exactly (draft_budget, spec_k).
+                if w != m.draft_budget {
+                    bail!(
+                        "TriForce W={w} must match the sparse_verify artifact's W={}",
+                        m.draft_budget
+                    );
+                }
+                if k_eff != m.spec_k {
+                    bail!(
+                        "TriForce k={k_eff} must match the sparse_verify artifact's k={}",
+                        m.spec_k
+                    );
+                }
+            }
+            DrafterKind::Vanilla | DrafterKind::NGram { .. } | DrafterKind::Eagle => {}
+        }
+        // KV budget: at least one prompt + a full draft round must fit, or
+        // nothing can ever be admitted.
+        let min_budget = m.prompt_pad + k_eff + 2;
+        if cfg.kv_budget < min_budget {
+            bail!(
+                "kv_budget={} cannot admit a single request (needs >= {min_budget})",
+                cfg.kv_budget
+            );
+        }
+        if cfg.kv_policy == KvPolicy::Conservative && cfg.kv_budget < m.max_seq {
+            bail!(
+                "Conservative policy reserves worst-case {} tokens per request; \
+                 kv_budget={} would never admit anything",
+                m.max_seq,
+                cfg.kv_budget
+            );
+        }
+        if cfg.delayed_verify && !cfg.schedule.supports_delayed_verify() {
+            bail!(
+                "delayed verification (§4.3) requires the Unified schedule: under \
+                 Lockstep there is no next-iteration draft work to overlap with"
+            );
+        }
+        Ok(cfg)
+    }
+}
+
 /// Everything a run produces (one row of the paper's figures).
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -93,6 +258,8 @@ pub struct RunReport {
     pub sim_s: f64,
     pub sim_cpu_s: f64,
     pub requests_done: usize,
+    /// Sessions cancelled mid-run (always 0 for batch `Engine::run` use).
+    pub requests_cancelled: usize,
     pub tokens_generated: u64,
     pub accept: AcceptStats,
     pub kv: crate::kv_cache::KvStats,
@@ -134,5 +301,65 @@ impl RunReport {
             self.kv.offload_events,
             self.kv.recomputed_tokens,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelConfig {
+        crate::model::SystemConfig::synthetic("artifacts").model
+    }
+
+    #[test]
+    fn builder_accepts_valid_configs() {
+        let m = model();
+        let cfg = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+            .k(8)
+            .schedule(Schedule::Unified)
+            .delayed_verify(true)
+            .build(&m)
+            .unwrap();
+        assert_eq!(cfg.k, 8);
+        assert!(cfg.delayed_verify);
+        // vanilla ignores k (engine forces 0), so any k validates via q=1
+        assert!(EngineConfig::builder(DrafterKind::Vanilla).k(999).build(&m).is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_uncompiled_variants() {
+        let m = model();
+        // k=7 -> verify_q8 not compiled
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 64 }).k(7).build(&m).is_err());
+        // W=100 not a draft variant
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 100 }).k(8).build(&m).is_err());
+        // TriForce must match the sparse_verify artifact shape
+        assert!(EngineConfig::builder(DrafterKind::TriForce { w: 128 }).k(8).build(&m).is_err());
+        assert!(EngineConfig::builder(DrafterKind::TriForce { w: 64 }).k(4).build(&m).is_err());
+        assert!(EngineConfig::builder(DrafterKind::TriForce { w: 64 }).k(8).build(&m).is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_bad_kv_and_schedule_combos() {
+        let m = model();
+        assert!(EngineConfig::builder(DrafterKind::Vanilla)
+            .kv(KvPolicy::Dynamic, 8)
+            .build(&m)
+            .is_err());
+        assert!(EngineConfig::builder(DrafterKind::Vanilla)
+            .kv(KvPolicy::Conservative, 256)
+            .build(&m)
+            .is_err());
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+            .k(8)
+            .schedule(Schedule::Lockstep)
+            .delayed_verify(true)
+            .build(&m)
+            .is_err());
+        assert!(EngineConfig::builder(DrafterKind::Vanilla)
+            .temperature(-0.5)
+            .build(&m)
+            .is_err());
     }
 }

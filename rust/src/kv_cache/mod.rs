@@ -223,6 +223,22 @@ impl KvManager {
         }
     }
 
+    /// Drop every trace of a request across both tiers — device
+    /// accounting, host copies, and the reload queue.  The cancellation
+    /// path uses this for requests that will never resume (a plain
+    /// `release` only covers the device tier).
+    pub fn forget(&mut self, req_id: u64) {
+        if let Some(len) = self.resident.remove(&req_id) {
+            self.used -= len;
+            self.admission_order.retain(|&id| id != req_id);
+            if self.policy == KvPolicy::Conservative {
+                self.reserved -= self.worst_case;
+            }
+        }
+        self.host.remove(&req_id);
+        self.reload_queue.retain(|&id| id != req_id);
+    }
+
     /// If capacity allows, pop the next offloaded request to reload
     /// (§4.4: "prioritizes scheduling the offloaded requests whenever GPU
     /// has available memory").
@@ -312,6 +328,24 @@ mod tests {
         kv.release(1);
         let (id, _) = kv.try_reload().expect("reload after release");
         assert_eq!(id, 3); // FIFO: 3 was offloaded first
+    }
+
+    #[test]
+    fn forget_clears_both_tiers_and_reload_queue() {
+        let mut kv = KvManager::new(KvPolicy::Dynamic, 300, 400);
+        kv.admit(1, 100);
+        kv.admit(2, 100);
+        // 2 offloaded to host, then forgotten (cancelled)
+        kv.complete_offload(2, HostKv { k: vec![], v: vec![], len: 100 });
+        assert!(kv.has_offloaded());
+        kv.forget(2);
+        assert!(!kv.has_offloaded());
+        assert!(kv.try_reload().is_none(), "forgotten id must not reload");
+        // resident forget releases device accounting too
+        kv.forget(1);
+        assert_eq!(kv.used_tokens(), 0);
+        // idempotent on unknown ids
+        kv.forget(99);
     }
 
     #[test]

@@ -9,12 +9,73 @@
 //!   fused draft+verify kernel — Pallas, with pure-jnp oracles.
 //! * **Layer 2** (`python/compile/model.py`): Qwen3-shaped decoder step
 //!   functions, AOT-lowered once to HLO text (`make artifacts`).
-//! * **Layer 3** (this crate): the serving coordinator — unified batch
-//!   scheduler, delayed verification, dynamic two-tier KV-cache manager,
-//!   PillarAttn critical-token state, all baselines, the benchmark harness.
+//! * **Layer 3** (this crate): the serving coordinator — a **session-based
+//!   streaming server** wrapping the unified batch scheduler, delayed
+//!   verification, the dynamic two-tier KV-cache manager, PillarAttn
+//!   critical-token state, all baselines, and the benchmark harness.
 //!
-//! Python never runs on the request path: the Rust binary loads the HLO
-//! artifacts through PJRT (`runtime`) and owns the entire serving loop.
+//! ## Serving API (the front door)
+//!
+//! ```no_run
+//! use std::rc::Rc;
+//! use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle};
+//! use sparsespec::runtime::Runtime;
+//! use sparsespec::spec::DrafterKind;
+//! use sparsespec::workload::{Dataset, WorkloadGen};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let rt = Rc::new(Runtime::load("artifacts")?);
+//! let cfg = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+//!     .k(8)
+//!     .build(&rt.cfg.model)?;                       // validated up front
+//! let gen = WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(),
+//!                            Dataset::Aime, 42);
+//! let mut driver = EngineDriver::with_arrivals(
+//!     EngineHandle::new(rt, cfg)?,
+//!     gen.online_arrivals(2.0, 30.0),               // live Poisson arrivals
+//! );
+//! while driver.step()? {
+//!     for sess in driver.sessions() {
+//!         for tok in sess.drain() {                  // incremental tokens
+//!             let _ = tok;
+//!         }
+//!     }
+//! }
+//! let report = driver.report();
+//! # let _ = report; Ok(())
+//! # }
+//! ```
+//!
+//! Sessions stream tokens as verification accepts them, expose TTFT /
+//! inter-token / acceptance stats, and can be cancelled mid-generation;
+//! `Engine::run(Vec<Request>)` survives as a batch-compatibility wrapper
+//! with bit-identical outputs.  See `engine::api` for the full surface.
+//!
+//! ## Execution backends
+//!
+//! The default build serves through a **deterministic CPU fallback
+//! runtime** (`runtime::sim`) — no artifacts, no native deps, bit-stable
+//! across machines — so a fresh checkout builds, tests and demos with
+//! plain `cargo build && cargo test`.  Enable `--features pjrt` (with the
+//! patched `xla` crate vendored under `rust/vendor/xla` and `make
+//! artifacts` run) for the real path: the Rust binary loads the HLO
+//! artifacts through PJRT and owns the entire serving loop — Python never
+//! runs on the request path.
+
+// The crate predates the CI clippy gate; these style lints fire on
+// long-standing idioms (index loops over slot arrays, artifact call
+// signatures) that are clearer here than their "fixed" forms.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::type_complexity,
+    clippy::new_without_default,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::comparison_chain,
+    clippy::manual_range_contains
+)]
 
 pub mod bench;
 pub mod engine;

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "info" => {
             let rt = Runtime::load(&artifacts)?;
-            println!("platform: {}", rt.client.platform_name());
+            println!("platform: {}", rt.platform_name());
             println!("model: {:?}", rt.cfg.model);
             println!("params: {} (trained: {})", rt.cfg.n_params, rt.cfg.trained);
             println!("artifacts ({}):", rt.cfg.artifacts.len());
@@ -96,8 +96,8 @@ fn main() -> anyhow::Result<()> {
             let mut engine = Engine::new(rt, cfg)?;
             let report = engine.run(reqs)?;
             println!("{}", report.summary());
-            let mut lat = report.request_latency_s.clone();
-            if lat.len() > 0 {
+            let lat = &report.request_latency_s;
+            if !lat.is_empty() {
                 println!(
                     "request latency: p50={:.2}s p99={:.2}s",
                     lat.percentile(50.0),

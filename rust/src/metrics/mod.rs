@@ -1,6 +1,7 @@
 //! Metrics: counters, streaming histograms, per-phase timers, and report
 //! emission (markdown + CSV).  Built from scratch (no external crates).
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -8,71 +9,102 @@ use std::time::Instant;
 /// Reservoir-less exact histogram: keeps all samples (our runs are at most
 /// a few hundred thousand samples, so exactness is cheaper than HDR-style
 /// bucketing and gives exact p50/p99 for the reports).
+///
+/// Reads — including `percentile`/`max` — take `&self`: the lazy sort
+/// happens behind interior mutability, so report readers (examples, the
+/// session-metrics aggregator) no longer clone whole histograms just to
+/// look at p50/p99.  Single-threaded by design (like the engine).
 #[derive(Clone, Debug, Default)]
 pub struct Histogram {
-    samples: Vec<f64>,
-    sorted: bool,
+    samples: RefCell<Vec<f64>>,
+    sorted: Cell<bool>,
 }
 
 impl Histogram {
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        self.samples.get_mut().push(v);
+        self.sorted.set(false);
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.is_empty() {
+            return;
+        }
+        self.samples
+            .get_mut()
+            .extend_from_slice(&other.samples.borrow());
+        self.sorted.set(false);
+    }
+
+    /// Copy of the raw samples (ascending iff a sorted read happened).
+    pub fn samples(&self) -> Vec<f64> {
+        self.samples.borrow().clone()
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.samples.borrow().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.samples.borrow().is_empty()
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        let s = self.samples.borrow();
+        if s.is_empty() {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        s.iter().sum::<f64>() / s.len() as f64
     }
 
     pub fn std(&self) -> f64 {
-        if self.samples.len() < 2 {
+        let s = self.samples.borrow();
+        if s.len() < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
-            / (self.samples.len() - 1) as f64)
-            .sqrt()
+        let m = s.iter().sum::<f64>() / s.len() as f64;
+        (s.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (s.len() - 1) as f64).sqrt()
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.samples
+            .borrow()
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.samples
+            .borrow()
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max)
     }
 
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
+    fn ensure_sorted(&self) {
+        if !self.sorted.get() {
             self.samples
+                .borrow_mut()
                 .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
+            self.sorted.set(true);
         }
     }
 
     /// Exact percentile (nearest-rank). `p` in [0, 100].
-    pub fn percentile(&mut self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.samples.borrow().len();
+        if n == 0 {
             return 0.0;
         }
         self.ensure_sorted();
-        let rank = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
-        self.samples[rank.min(self.samples.len() - 1)]
+        let rank = ((p / 100.0) * (n - 1) as f64).round() as usize;
+        self.samples.borrow()[rank.min(n - 1)]
     }
 
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.samples.borrow().iter().sum()
     }
 }
 
@@ -115,6 +147,20 @@ impl Metrics {
         self.histograms.entry(name.to_string()).or_default()
     }
 
+    /// Fold another `Metrics` into this one: counters add, histograms
+    /// merge samples, traces concatenate.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+        for (k, t) in &other.traces {
+            self.traces.entry(k.clone()).or_default().extend_from_slice(t);
+        }
+    }
+
     /// Run `f`, recording its wallclock (seconds) into histogram `name`.
     /// The phase-timer idiom used by the bench harness for hot-path
     /// accounting (e.g. PillarAttn selection).
@@ -126,7 +172,7 @@ impl Metrics {
     }
 
     /// Render a compact markdown report.
-    pub fn to_markdown(&mut self) -> String {
+    pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         if !self.counters.is_empty() {
             let _ = writeln!(out, "| counter | value |\n|---|---|");
@@ -139,9 +185,7 @@ impl Metrics {
                 out,
                 "\n| histogram | n | mean | p50 | p99 | max |\n|---|---|---|---|---|---|"
             );
-            let names: Vec<String> = self.histograms.keys().cloned().collect();
-            for k in names {
-                let h = self.histograms.get_mut(&k).unwrap();
+            for (k, h) in &self.histograms {
                 let (n, mean, max) = (h.len(), h.mean(), h.max());
                 let p50 = h.percentile(50.0);
                 let p99 = h.percentile(99.0);
@@ -242,8 +286,51 @@ mod tests {
 
     #[test]
     fn empty_histogram_safe() {
-        let mut h = Histogram::default();
+        let h = Histogram::default();
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_takes_shared_ref_and_interleaves_with_record() {
+        let mut h = Histogram::default();
+        for i in 0..10 {
+            h.record((9 - i) as f64);
+        }
+        let r = &h; // shared reads only
+        assert_eq!(r.percentile(0.0), 0.0);
+        assert_eq!(r.percentile(100.0), 9.0);
+        // recording after a sorted read invalidates and re-sorts lazily
+        h.record(100.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.len(), 11);
+    }
+
+    #[test]
+    fn metrics_merge_from_accumulates() {
+        let mut a = Metrics::new();
+        a.inc("n", 2.0);
+        a.observe("lat", 1.0);
+        let mut b = Metrics::new();
+        b.inc("n", 3.0);
+        b.observe("lat", 5.0);
+        b.trace("t", 7.0);
+        a.merge_from(&b);
+        assert_eq!(a.get("n"), 5.0);
+        assert_eq!(a.histograms["lat"].len(), 2);
+        assert_eq!(a.traces["t"], vec![7.0]);
+    }
+
+    #[test]
+    fn merge_folds_samples() {
+        let mut a = Histogram::default();
+        a.record(1.0);
+        let mut b = Histogram::default();
+        b.record(3.0);
+        b.record(5.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.max(), 5.0);
+        assert_eq!(b.len(), 2, "merge must not drain the source");
     }
 }

@@ -122,6 +122,62 @@ fn i32_list(j: &Json, path: &[&str]) -> Result<Vec<i32>> {
 }
 
 impl SystemConfig {
+    /// The built-in testbed configuration — the exact shape
+    /// `python/compile/config.py` emits for this environment.  Used by the
+    /// deterministic fallback runtime when no `artifacts/config.json`
+    /// exists, so the crate serves from a fresh checkout; when artifacts
+    /// *are* present their config takes precedence.
+    pub fn synthetic(dir: &str) -> SystemConfig {
+        SystemConfig {
+            model: ModelConfig {
+                vocab: 512,
+                hidden: 128,
+                layers: 4,
+                q_heads: 4,
+                kv_heads: 2,
+                head_dim: 32,
+                ffn: 256,
+                max_seq: 512,
+                slots: 12,
+                prompt_pad: 32,
+                spec_k: 8,
+                draft_budget: 64,
+                verify_q_variants: vec![1, 5, 9, 13, 17, 21],
+                draft_w_variants: vec![16, 32, 64, 128, 256],
+            },
+            grammar: GrammarConfig {
+                pad: 0,
+                bos: 1,
+                eos: 2,
+                def_tok: 3,
+                qry: 4,
+                eq: 5,
+                sep: 6,
+                slot_base: 16,
+                n_slots: 48,
+                value_base: 80,
+                n_values: 256,
+                filler_base: 336,
+                n_filler: 120,
+                mode_base: 456,
+                n_modes: 12,
+                n_defs: 8,
+                redefine_prob: 0.08,
+                query_prob: 0.30,
+                focus_query_prob: 0.85,
+                focus_switch_prob: 0.18,
+                mode_mul: vec![1, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43],
+                mode_add: vec![3, 8, 1, 14, 5, 11, 2, 7, 9, 4, 13, 6],
+            },
+            eagle: EagleConfig { ctx: 4, embed: 32, hidden: 128 },
+            n_params: 656_512,
+            eagle_n_params: 82_432,
+            trained: false,
+            artifacts: BTreeMap::new(),
+            dir: dir.to_string(),
+        }
+    }
+
     pub fn load(dir: &str) -> Result<SystemConfig> {
         let path = Path::new(dir).join("config.json");
         let text = std::fs::read_to_string(&path)
@@ -261,6 +317,18 @@ mod tests {
         assert_eq!(c.artifacts["prefill"].args[1], vec![4, 12, 512, 2, 32]);
         // KV math: 4 layers * 2 * 2 heads * 32 dim * 4 B = 2 KiB per token
         assert_eq!(c.model.kv_bytes_per_token(), 2048);
+    }
+
+    #[test]
+    fn synthetic_is_self_consistent() {
+        let c = SystemConfig::synthetic("artifacts");
+        assert_eq!(c.model.kv_bytes_per_token(), 2048);
+        // the engine's default k and every drafter budget must have a
+        // matching artifact variant, or the fallback runtime rejects them
+        assert!(c.model.verify_q_variants.contains(&(c.model.spec_k + 1)));
+        assert!(c.model.verify_q_variants.contains(&1));
+        assert!(c.model.draft_w_variants.contains(&c.model.draft_budget));
+        assert!(c.artifacts.is_empty());
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! PJRT/XLA backend (`--features pjrt`): loads the AOT artifacts produced
+//! by `python/compile/aot.py` and executes them on the PJRT CPU client
+//! with device-resident weights and KV pools.
+//!
+//! Interchange format is HLO *text* (`HloModuleProto::from_text_file`) —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+//!
+//! The vendored `xla` crate is patched (vendor/xla/xla_rs/xla_rs.cc) to set
+//! `ExecuteOptions::untuple_result = true`, so multi-output step functions
+//! come back as one `PjRtBuffer` per output and the KV pools can be fed
+//! into the next step via `execute_b` without ever leaving the device —
+//! the request path does no host↔device KV copies except for offloading.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::model::SystemConfig;
+
+/// PJRT client + lazily-compiled executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub cfg: SystemConfig,
+    exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// (artifact name, compile seconds) log — surfaced in metrics reports.
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let cfg = SystemConfig::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime {
+            client,
+            cfg,
+            exes: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Human-readable backend/platform identifier (for banners and `info`).
+    pub fn platform_name(&self) -> String {
+        format!("pjrt:{}", self.client.platform_name())
+    }
+
+    /// Fetch (compiling on first use) the named artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .cfg
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (not in config.json)"))?;
+        let path = Path::new(&self.cfg.dir).join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(wrap)
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp).map_err(wrap)?);
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((name.to_string(), dt));
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    // ---- host <-> device marshalling ---------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(wrap)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(wrap)
+    }
+
+    pub fn fetch_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(wrap)?;
+        lit.to_vec::<f32>().map_err(wrap)
+    }
+
+    pub fn fetch_i32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync().map_err(wrap)?;
+        lit.to_vec::<i32>().map_err(wrap)
+    }
+
+    pub fn execute(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.executable(name)?;
+        let mut out = exe.execute_b(args).map_err(wrap)?;
+        if out.is_empty() || out[0].is_empty() {
+            return Err(anyhow!("artifact '{name}' produced no outputs"));
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Read a raw little-endian f32 file (weights.bin / eagle.bin).
+    pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{path:?} is not a multiple of 4 bytes"));
+        }
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+}
+
+/// The `xla` crate has its own error type; fold it into anyhow.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

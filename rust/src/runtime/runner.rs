@@ -8,67 +8,11 @@
 //! bandwidth-modelled host transfer).
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
-use super::Runtime;
-
-/// Per-artifact cumulative timing, split into the three phases the paper's
-/// Table 2 cares about: CPU marshalling (upload), device execution, fetch.
-#[derive(Clone, Debug, Default)]
-pub struct StepStats {
-    pub per_artifact: BTreeMap<String, PhaseTimes>,
-}
-
-#[derive(Clone, Debug, Default)]
-pub struct PhaseTimes {
-    pub calls: u64,
-    pub upload_s: f64,
-    pub exec_s: f64,
-    pub fetch_s: f64,
-}
-
-impl StepStats {
-    fn add(&mut self, name: &str, upload: f64, exec: f64, fetch: f64) {
-        let e = self.per_artifact.entry(name.to_string()).or_default();
-        e.calls += 1;
-        e.upload_s += upload;
-        e.exec_s += exec;
-        e.fetch_s += fetch;
-    }
-
-    /// Attribute host-side CPU work to a named pseudo-artifact (e.g.
-    /// `pillar_select` for critical-token selection), so Table-2 style
-    /// phase breakdowns and the delayed-verify overlap model see it.
-    pub fn note_host(&mut self, name: &str, secs: f64) {
-        self.add(name, secs, 0.0, 0.0);
-    }
-
-    pub fn total_exec(&self) -> f64 {
-        self.per_artifact.values().map(|p| p.exec_s).sum()
-    }
-
-    pub fn total_cpu(&self) -> f64 {
-        self.per_artifact
-            .values()
-            .map(|p| p.upload_s + p.fetch_s)
-            .sum()
-    }
-}
-
-pub struct VerifyOut {
-    /// [S, Q, V] flattened.
-    pub logits: Vec<f32>,
-    /// [S, L, Hkv, T] flattened attention-mass dump (PillarAttn input).
-    pub dump: Vec<f32>,
-}
-
-pub struct DraftOut {
-    /// [S, V] flattened.
-    pub logits: Vec<f32>,
-}
+use super::{DraftOut, Runtime, StepStats, VerifyOut};
 
 pub struct ModelRunner {
     pub rt: Rc<Runtime>,

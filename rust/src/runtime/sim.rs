@@ -1,0 +1,645 @@
+//! Deterministic CPU fallback runtime (the default backend).
+//!
+//! Replaces the PJRT artifact executor with a seeded **hash surrogate
+//! model** while preserving every contract the serving layer depends on,
+//! so engine, scheduler, KV-manager and session logic are exercised
+//! end-to-end with zero native dependencies:
+//!
+//! * **KV pool layout** `[L, S, T, Hkv, D]` is identical to the artifacts,
+//!   so offload row extraction (`Engine::extract_slot_rows`), `kv_dump` /
+//!   `kv_load` round-trips and slot reuse behave exactly like the real
+//!   path.  A token write stores `token + 1` at `d = 0` of every (layer,
+//!   head) row; `0.0` means "empty".
+//! * **Causal visibility**: the logits for a query at position `p` are a
+//!   deterministic hash of the tokens at the last [`CTX`] positions
+//!   `(p-CTX, p]` — read back *from the KV pool*, not from any shadow
+//!   state — plus, for `p >= LONG_MIN`, the token at the long-range
+//!   position `p/2`.  Rollback correctness therefore falls out the same
+//!   way it does on device: stale rows beyond the frontier are rewritten
+//!   before they are ever read.
+//! * **Sparse visibility**: draft / sparse-verify steps only see positions
+//!   present in their `[L, Hkv, W]` index sets, so drafter quality is
+//!   real: a policy whose window covers the last `CTX` positions *and*
+//!   whose selected pillars cover `p/2` reproduces the dense logits
+//!   (high acceptance); one that misses them diverges (rejections).
+//! * **Score dumps**: dense verification emits an attention-mass dump
+//!   peaked at the sinks, the recent window, and a band around the
+//!   long-range position `len/2` — exactly the signal PillarAttn selection
+//!   needs to beat a pure sliding window, mirroring the paper's Fig. 3
+//!   oracle-vs-window gap in miniature.
+//! * **Greedy losslessness**: logits depend only on the visible token
+//!   sequence, so speculative decoding reproduces vanilla outputs
+//!   token-for-token for every drafter — the paper's core invariant stays
+//!   testable without artifacts.
+//!
+//! Everything is integer hashing (`f32` values are exact 24-bit scaled
+//! ints), so runs are bit-identical across platforms and runs.  The Python
+//! cross-check of this model lives in
+//! `python/tests/test_sim_runtime_port.py`.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::{DraftOut, StepStats, VerifyOut};
+use crate::model::{ModelConfig, SystemConfig};
+
+/// Tokens of trailing causal context each logit row depends on.
+pub const CTX: usize = 8;
+/// Query positions `p >= LONG_MIN` additionally depend on the token at
+/// position `p / 2` (the "long-range pillar" the dump advertises).
+pub const LONG_MIN: usize = 24;
+/// Half-width of the dump's high-mass band around `len / 2`.
+pub const LONG_BAND: usize = 5;
+
+#[inline]
+fn mix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fill one vocab row of logits from a context hash.  Each value is a
+/// 24-bit integer scaled by 2^-21 (exact in f32), spread over [0, 8).
+fn fill_logits(h: u64, out: &mut [f32]) {
+    for (v, o) in out.iter_mut().enumerate() {
+        let x = mix64(h ^ (v as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        *o = (x >> 40) as f32 * (8.0 / (1u64 << 24) as f32);
+    }
+}
+
+#[inline]
+fn pool_off(m: &ModelConfig, l: usize, s: usize, t: usize, h: usize, d: usize) -> usize {
+    (((l * m.slots + s) * m.max_seq + t) * m.kv_heads + h) * m.head_dim + d
+}
+
+/// Write `token` into slot `s` position `t` of both pools (every layer and
+/// head carries it, so any row subset survives offload round-trips).
+fn write_token(kv_k: &mut [f32], kv_v: &mut [f32], m: &ModelConfig, s: usize, t: usize, token: i32) {
+    let enc = (token + 1) as f32;
+    for l in 0..m.layers {
+        for h in 0..m.kv_heads {
+            let off = pool_off(m, l, s, t, h, 0);
+            kv_k[off] = enc;
+            kv_v[off] = enc;
+        }
+    }
+}
+
+/// Read the token stored at slot `s` position `t` (-1 when empty).
+#[inline]
+fn read_token(kv_k: &[f32], m: &ModelConfig, s: usize, t: usize) -> i32 {
+    kv_k[pool_off(m, 0, s, t, 0, 0)] as i32 - 1
+}
+
+/// Dense context hash for a query at position `p`: folds the long-range
+/// token (if any) then the trailing window, in position order.
+fn ctx_hash(kv_k: &[f32], m: &ModelConfig, s: usize, p: usize) -> u64 {
+    let mut h = 0xC0FF_EE00_5EED_1234u64;
+    if p >= LONG_MIN {
+        let lp = p / 2;
+        h = mix64(h ^ (read_token(kv_k, m, s, lp) + 1) as u64);
+    }
+    let start = (p + 1).saturating_sub(CTX);
+    for t in start..=p {
+        h = mix64(h ^ (read_token(kv_k, m, s, t) + 1) as u64);
+    }
+    h
+}
+
+/// Sparse context hash: identical fold, but a position contributes only if
+/// it appears in `idx_row` (one (layer, head) row of the `[L, Hkv, W]`
+/// index sets: ascending valid prefix, -1 tail).  All heads receive the
+/// same dump in this backend, so row (0, 0) is representative.
+fn sparse_ctx_hash(kv_k: &[f32], m: &ModelConfig, s: usize, p: usize, idx_row: &[i32]) -> u64 {
+    let visible = |t: usize| -> bool {
+        idx_row
+            .iter()
+            .take_while(|&&x| x >= 0)
+            .any(|&x| x == t as i32)
+    };
+    let mut h = 0xC0FF_EE00_5EED_1234u64;
+    if p >= LONG_MIN {
+        let lp = p / 2;
+        if visible(lp) {
+            h = mix64(h ^ (read_token(kv_k, m, s, lp) + 1) as u64);
+        }
+    }
+    let start = (p + 1).saturating_sub(CTX);
+    for t in start..=p {
+        if visible(t) {
+            h = mix64(h ^ (read_token(kv_k, m, s, t) + 1) as u64);
+        }
+    }
+    h
+}
+
+/// The attention-mass dump row for a context of length `len`: recency
+/// decay + sink boost + a band around the long-range position `len/2`.
+fn dump_mass(t: usize, len: usize) -> f32 {
+    let mut mass = 1.0 / (1.0 + (len - 1 - t) as f32);
+    if t < 4 {
+        mass += 3.0;
+    }
+    if t.abs_diff(len / 2) <= LONG_BAND {
+        mass += 2.0;
+    }
+    mass
+}
+
+/// What an artifact name resolves to in this backend (validation only —
+/// there is nothing to compile).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+}
+
+fn validate_artifact(m: &ModelConfig, name: &str) -> Result<()> {
+    if let Some(q) = name.strip_prefix("verify_q") {
+        let q: usize = q.parse().map_err(|_| anyhow!("bad artifact name '{name}'"))?;
+        if m.verify_q_variants.contains(&q) {
+            return Ok(());
+        }
+        return Err(anyhow!(
+            "no verify_q{q} variant (have {:?}) — pick k so that k+1 is compiled",
+            m.verify_q_variants
+        ));
+    }
+    if let Some(w) = name.strip_prefix("draft_w") {
+        let w: usize = w.parse().map_err(|_| anyhow!("bad artifact name '{name}'"))?;
+        if m.draft_w_variants.contains(&w) {
+            return Ok(());
+        }
+        return Err(anyhow!(
+            "no draft_w{w} variant (have {:?})",
+            m.draft_w_variants
+        ));
+    }
+    match name {
+        "prefill" | "sparse_verify" | "eagle" | "kv_load" | "draft_pallas" => Ok(()),
+        other => Err(anyhow!("unknown artifact '{other}'")),
+    }
+}
+
+/// Host buffer stand-in for `xla::PjRtBuffer` (API parity for upload/fetch
+/// call sites; raw `execute` is a `pjrt`-only capability).
+#[derive(Clone, Debug)]
+pub enum Buffer {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+/// Deterministic fallback `Runtime`: carries the system configuration and
+/// validates artifact names; the actual step math lives in `ModelRunner`.
+pub struct Runtime {
+    pub cfg: SystemConfig,
+    /// (artifact name, "compile" seconds) log — kept for API parity with
+    /// the PJRT backend (entries are all ~0 here).
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    /// Load `config.json` from `artifacts_dir` when present; otherwise fall
+    /// back to the built-in testbed configuration so a fresh checkout
+    /// serves without running `make artifacts`.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let cfg = if Path::new(artifacts_dir).join("config.json").exists() {
+            SystemConfig::load(artifacts_dir)?
+        } else {
+            SystemConfig::synthetic(artifacts_dir)
+        };
+        Ok(Runtime { cfg, compile_log: RefCell::new(Vec::new()) })
+    }
+
+    /// Human-readable backend identifier (for banners and `info`).
+    pub fn platform_name(&self) -> String {
+        "sim-cpu (deterministic fallback; build with --features pjrt for XLA artifacts)".into()
+    }
+
+    /// Validate that `name` is an artifact this configuration could serve.
+    pub fn executable(&self, name: &str) -> Result<Artifact> {
+        validate_artifact(&self.cfg.model, name)?;
+        self.compile_log.borrow_mut().push((name.to_string(), 0.0));
+        Ok(Artifact { name: name.to_string() })
+    }
+
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    // ---- host <-> "device" marshalling (API parity) -------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::F32(data.to_vec(), dims.to_vec()))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::I32(data.to_vec(), dims.to_vec()))
+    }
+
+    pub fn fetch_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        match buf {
+            Buffer::F32(d, _) => Ok(d.clone()),
+            Buffer::I32(..) => Err(anyhow!("buffer holds i32, asked for f32")),
+        }
+    }
+
+    pub fn fetch_i32(&self, buf: &Buffer) -> Result<Vec<i32>> {
+        match buf {
+            Buffer::I32(d, _) => Ok(d.clone()),
+            Buffer::F32(..) => Err(anyhow!("buffer holds f32, asked for i32")),
+        }
+    }
+
+    /// Raw artifact execution is a PJRT capability (the compose-proof and
+    /// Pallas comparison paths); the fallback serves only through
+    /// `ModelRunner`'s typed step functions.
+    pub fn execute(&self, name: &str, _args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        Err(anyhow!(
+            "raw execution of artifact '{name}' requires the `pjrt` feature \
+             (the deterministic fallback serves via ModelRunner only)"
+        ))
+    }
+
+    /// Read a raw little-endian f32 file (weights.bin / eagle.bin).
+    pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{path:?} is not a multiple of 4 bytes"));
+        }
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+}
+
+/// Typed step-function runner over the hash surrogate model.  Signatures
+/// and KV semantics mirror the PJRT `ModelRunner` exactly.
+pub struct ModelRunner {
+    pub rt: Rc<Runtime>,
+    /// Copied out of `rt.cfg` once: step methods borrow this field
+    /// directly so the hot loop never clones the config (the Vec-bearing
+    /// `ModelConfig` clone per call would otherwise churn the allocator).
+    mcfg: ModelConfig,
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
+    pub stats: StepStats,
+}
+
+impl ModelRunner {
+    pub fn new(rt: Rc<Runtime>) -> Result<Self> {
+        let mcfg = rt.cfg.model.clone();
+        let n = mcfg.kv_pool_elems();
+        Ok(Self {
+            rt,
+            mcfg,
+            kv_k: vec![0.0; n],
+            kv_v: vec![0.0; n],
+            stats: StepStats::default(),
+        })
+    }
+
+    /// Owned config snapshot (cold paths / tests).
+    fn m(&self) -> ModelConfig {
+        self.mcfg.clone()
+    }
+
+    /// Zero both KV pools (between benchmark phases).
+    pub fn reset_kv(&mut self) -> Result<()> {
+        self.kv_k.fill(0.0);
+        self.kv_v.fill(0.0);
+        Ok(())
+    }
+
+    /// Prefill the prompt chunk for newly-admitted slots.
+    /// tokens: [S*P], plen/active: [S].  Returns last-token logits [S*V].
+    pub fn prefill(&mut self, tokens: &[i32], plen: &[i32], active: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.mcfg;
+        let (s_n, pad, v) = (m.slots, m.prompt_pad, m.vocab);
+        debug_assert_eq!(tokens.len(), s_n * pad);
+        let t0 = Instant::now();
+        let mut logits = vec![0.0f32; s_n * v];
+        for s in 0..s_n {
+            if active[s] == 0 {
+                continue;
+            }
+            let p = (plen[s].max(1) as usize).min(pad);
+            for (j, &t) in tokens[s * pad..s * pad + p].iter().enumerate() {
+                write_token(&mut self.kv_k, &mut self.kv_v, m, s, j, t);
+            }
+            let h = ctx_hash(&self.kv_k, m, s, p - 1);
+            fill_logits(h, &mut logits[s * v..(s + 1) * v]);
+        }
+        self.stats.add("prefill", 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(logits)
+    }
+
+    /// One sparse draft step (budget `w` must be a compiled variant).
+    /// token/pos/active: [S]; idx: [S*L*Hkv*w] (-1 holes).
+    pub fn draft(
+        &mut self,
+        w: usize,
+        token: &[i32],
+        pos: &[i32],
+        idx: &[i32],
+        active: &[i32],
+    ) -> Result<DraftOut> {
+        let m = &self.mcfg;
+        let name = format!("draft_w{w}");
+        validate_artifact(m, &name)?;
+        let (s_n, v) = (m.slots, m.vocab);
+        let per_slot = m.layers * m.kv_heads * w;
+        debug_assert_eq!(idx.len(), s_n * per_slot);
+        let t0 = Instant::now();
+        let mut logits = vec![0.0f32; s_n * v];
+        for s in 0..s_n {
+            if active[s] == 0 {
+                continue;
+            }
+            let p = pos[s].max(0) as usize;
+            if p >= m.max_seq {
+                continue;
+            }
+            write_token(&mut self.kv_k, &mut self.kv_v, m, s, p, token[s]);
+            let idx_row = &idx[s * per_slot..s * per_slot + w];
+            let h = sparse_ctx_hash(&self.kv_k, m, s, p, idx_row);
+            fill_logits(h, &mut logits[s * v..(s + 1) * v]);
+        }
+        self.stats.add(&name, 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(DraftOut { logits })
+    }
+
+    /// One dense verification step over q query tokens (compiled variant).
+    /// tokens: [S*q]; pos/q_valid/active: [S].
+    pub fn verify(
+        &mut self,
+        q: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        q_valid: &[i32],
+        active: &[i32],
+    ) -> Result<VerifyOut> {
+        let m = &self.mcfg;
+        let name = format!("verify_q{q}");
+        validate_artifact(m, &name)?;
+        let (s_n, v, t_dim) = (m.slots, m.vocab, m.max_seq);
+        debug_assert_eq!(tokens.len(), s_n * q);
+        let per_dump = m.layers * m.kv_heads * t_dim;
+        let t0 = Instant::now();
+        let mut logits = vec![0.0f32; s_n * q * v];
+        let mut dump = vec![0.0f32; s_n * per_dump];
+        for s in 0..s_n {
+            if active[s] == 0 {
+                continue;
+            }
+            let qv = (q_valid[s].max(1) as usize).min(q);
+            let base = pos[s].max(0) as usize;
+            for j in 0..qv {
+                let p = base + j;
+                if p >= t_dim {
+                    break;
+                }
+                write_token(&mut self.kv_k, &mut self.kv_v, m, s, p, tokens[s * q + j]);
+                let h = ctx_hash(&self.kv_k, m, s, p);
+                fill_logits(h, &mut logits[(s * q + j) * v..(s * q + j + 1) * v]);
+            }
+            let end = (base + qv).min(t_dim);
+            for lh in 0..m.layers * m.kv_heads {
+                let row = &mut dump[s * per_dump + lh * t_dim..s * per_dump + (lh + 1) * t_dim];
+                for (t, x) in row.iter_mut().enumerate().take(end) {
+                    *x = dump_mass(t, end);
+                }
+            }
+        }
+        self.stats.add(&name, 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(VerifyOut { logits, dump })
+    }
+
+    /// TriForce middle layer: verify q tokens under the sparse draft model.
+    pub fn sparse_verify(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        q_valid: &[i32],
+        idx: &[i32],
+        active: &[i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.mcfg;
+        let (s_n, v, w) = (m.slots, m.vocab, m.draft_budget);
+        let q = m.spec_k + 1;
+        let per_slot = m.layers * m.kv_heads * w;
+        debug_assert_eq!(tokens.len(), s_n * q);
+        debug_assert_eq!(idx.len(), s_n * per_slot);
+        let t0 = Instant::now();
+        let mut logits = vec![0.0f32; s_n * q * v];
+        for s in 0..s_n {
+            if active[s] == 0 {
+                continue;
+            }
+            let qv = (q_valid[s].max(1) as usize).min(q);
+            let base = pos[s].max(0) as usize;
+            let idx_row = &idx[s * per_slot..s * per_slot + w];
+            for j in 0..qv {
+                let p = base + j;
+                if p >= m.max_seq {
+                    break;
+                }
+                write_token(&mut self.kv_k, &mut self.kv_v, m, s, p, tokens[s * q + j]);
+                let h = sparse_ctx_hash(&self.kv_k, m, s, p, idx_row);
+                fill_logits(h, &mut logits[(s * q + j) * v..(s * q + j + 1) * v]);
+            }
+        }
+        self.stats
+            .add("sparse_verify", 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(logits)
+    }
+
+    /// EAGLE-like draft head: ctx [S*ECTX] -> logits [S*V].  The head sees
+    /// only its short context window, so (as with an untrained head on the
+    /// real path) its proposals are weaker than self-speculation.
+    pub fn eagle(&mut self, ctx: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.mcfg;
+        let ectx = self.rt.cfg.eagle.ctx;
+        let (s_n, v) = (m.slots, m.vocab);
+        debug_assert_eq!(ctx.len(), s_n * ectx);
+        let t0 = Instant::now();
+        let mut logits = vec![0.0f32; s_n * v];
+        for s in 0..s_n {
+            let mut h = 0xEA91_E000_0000_0001u64;
+            for &t in &ctx[s * ectx..(s + 1) * ectx] {
+                h = mix64(h ^ (t + 1) as u64);
+            }
+            fill_logits(h, &mut logits[s * v..(s + 1) * v]);
+        }
+        self.stats.add("eagle", 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(logits)
+    }
+
+    /// Pull both KV pools to the host (offload path).
+    /// Returns (k, v) each [L*S*T*Hkv*D].
+    pub fn kv_dump(&mut self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let t0 = Instant::now();
+        let out = (self.kv_k.clone(), self.kv_v.clone());
+        self.stats
+            .add("kv_dump", 0.0, 0.0, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Write one slot's KV rows back into the device pools (onload path).
+    /// rows_k/rows_v: [L*T*Hkv*D].
+    pub fn kv_load(&mut self, slot: usize, rows_k: &[f32], rows_v: &[f32]) -> Result<()> {
+        let m = &self.mcfg;
+        debug_assert_eq!(rows_k.len(), m.kv_slot_elems());
+        let t0 = Instant::now();
+        let row = m.max_seq * m.kv_heads * m.head_dim;
+        let per_l = m.slots * row;
+        for l in 0..m.layers {
+            let dst = l * per_l + slot * row;
+            self.kv_k[dst..dst + row].copy_from_slice(&rows_k[l * row..(l + 1) * row]);
+            self.kv_v[dst..dst + row].copy_from_slice(&rows_v[l * row..(l + 1) * row]);
+        }
+        self.stats
+            .add("kv_load", 0.0, t0.elapsed().as_secs_f64(), 0.0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runner() -> ModelRunner {
+        let rt = Rc::new(Runtime {
+            cfg: SystemConfig::synthetic("artifacts"),
+            compile_log: RefCell::new(Vec::new()),
+        });
+        ModelRunner::new(rt).unwrap()
+    }
+
+    #[test]
+    fn logits_are_deterministic_and_in_range() {
+        let mut row = vec![0.0f32; 64];
+        fill_logits(1234, &mut row);
+        let mut row2 = vec![0.0f32; 64];
+        fill_logits(1234, &mut row2);
+        assert_eq!(row, row2);
+        assert!(row.iter().all(|&x| (0.0..8.0).contains(&x)));
+        let mut row3 = vec![0.0f32; 64];
+        fill_logits(1235, &mut row3);
+        assert_ne!(row, row3);
+    }
+
+    #[test]
+    fn prefill_then_verify_chain_is_causal() {
+        let mut r = runner();
+        let m = r.m();
+        let mut tokens = vec![0i32; m.slots * m.prompt_pad];
+        for j in 0..6 {
+            tokens[j] = 16 + j as i32;
+        }
+        let mut plen = vec![1i32; m.slots];
+        plen[0] = 6;
+        let mut active = vec![0i32; m.slots];
+        active[0] = 1;
+        let l0 = r.prefill(&tokens, &plen, &active).unwrap();
+        assert_eq!(l0.len(), m.slots * m.vocab);
+        // one greedy verify step: writes position 6, logits differ from
+        // the prefill row (context changed)
+        let mut tok = vec![0i32; m.slots];
+        tok[0] = 99;
+        let mut pos = vec![0i32; m.slots];
+        pos[0] = 6;
+        let qv = vec![1i32; m.slots];
+        let out = r.verify(1, &tok, &pos, &qv, &active).unwrap();
+        assert_ne!(&out.logits[..m.vocab], &l0[..m.vocab]);
+        // and the dump covers exactly [0, 7)
+        assert!(out.dump[6] > 0.0);
+        assert_eq!(out.dump[7], 0.0);
+    }
+
+    #[test]
+    fn sparse_draft_matches_dense_when_window_covered() {
+        let mut r = runner();
+        let m = r.m();
+        let mut tokens = vec![0i32; m.slots * m.prompt_pad];
+        for j in 0..10 {
+            tokens[j] = 20 + j as i32;
+        }
+        let mut plen = vec![1i32; m.slots];
+        plen[0] = 10;
+        let mut active = vec![0i32; m.slots];
+        active[0] = 1;
+        r.prefill(&tokens, &plen, &active).unwrap();
+
+        // dense reference at position 10
+        let mut tok = vec![0i32; m.slots];
+        tok[0] = 7;
+        let mut pos = vec![0i32; m.slots];
+        pos[0] = 10;
+        let qv = vec![1i32; m.slots];
+        let dense = r.verify(1, &tok, &pos, &qv, &active).unwrap();
+
+        // sparse with an index set covering every position <= 10
+        let w = 16usize;
+        let per_slot = m.layers * m.kv_heads * w;
+        let mut idx = vec![-1i32; m.slots * per_slot];
+        for lh in 0..m.layers * m.kv_heads {
+            for j in 0..11 {
+                idx[lh * w + j] = j as i32;
+            }
+        }
+        let sparse = r.draft(w, &tok, &pos, &idx, &active).unwrap();
+        assert_eq!(&sparse.logits[..m.vocab], &dense.logits[..m.vocab]);
+
+        // drop position 10 (the fed token) from the set: logits diverge
+        let mut idx2 = vec![-1i32; m.slots * per_slot];
+        for lh in 0..m.layers * m.kv_heads {
+            for j in 0..10 {
+                idx2[lh * w + j] = j as i32;
+            }
+        }
+        let sparse2 = r.draft(w, &tok, &pos, &idx2, &active).unwrap();
+        assert_ne!(&sparse2.logits[..m.vocab], &dense.logits[..m.vocab]);
+    }
+
+    #[test]
+    fn kv_roundtrip_preserves_tokens() {
+        let mut r = runner();
+        let m = r.m();
+        write_token(&mut r.kv_k, &mut r.kv_v, &m, 3, 17, 123);
+        let (k, v) = r.kv_dump().unwrap();
+        // extract slot 3 rows the way the engine does
+        let row = m.max_seq * m.kv_heads * m.head_dim;
+        let per_l = m.slots * row;
+        let mut rows_k = Vec::new();
+        let mut rows_v = Vec::new();
+        for l in 0..m.layers {
+            let off = l * per_l + 3 * row;
+            rows_k.extend_from_slice(&k[off..off + row]);
+            rows_v.extend_from_slice(&v[off..off + row]);
+        }
+        r.reset_kv().unwrap();
+        assert_eq!(read_token(&r.kv_k, &m, 3, 17), -1);
+        r.kv_load(5, &rows_k, &rows_v).unwrap();
+        assert_eq!(read_token(&r.kv_k, &m, 5, 17), 123);
+    }
+
+    #[test]
+    fn artifact_validation() {
+        let m = SystemConfig::synthetic("a").model;
+        assert!(validate_artifact(&m, "prefill").is_ok());
+        assert!(validate_artifact(&m, "verify_q9").is_ok());
+        assert!(validate_artifact(&m, "verify_q7").is_err());
+        assert!(validate_artifact(&m, "draft_w64").is_ok());
+        assert!(validate_artifact(&m, "draft_w63").is_err());
+        assert!(validate_artifact(&m, "bogus").is_err());
+    }
+}

@@ -32,6 +32,14 @@ impl Schedule {
             _ => None,
         }
     }
+
+    /// Delayed verification (§4.3) overlaps verify CPU work with the
+    /// *next* iteration's draft launches — only Unified guarantees every
+    /// iteration carries draft work, so only it supports the overlap.
+    /// (`EngineConfig::builder` enforces this at construction.)
+    pub fn supports_delayed_verify(&self) -> bool {
+        matches!(self, Schedule::Unified)
+    }
 }
 
 /// Greedy least-loaded bucket assignment (Fig. 8): bucket b means "this
@@ -62,6 +70,16 @@ impl BucketScheduler {
         }
         self.counts[best] += 1;
         best
+    }
+
+    /// Assign a request to a *specific* bucket (the Lockstep schedule puts
+    /// everyone in bucket 0).  Keeps the count it increments and the count
+    /// `release()` later decrements on the same bucket — assigning via
+    /// least-loaded `assign()` and then storing a different bucket id
+    /// would underflow the release accounting.
+    pub fn assign_to(&mut self, bucket: usize) -> usize {
+        self.counts[bucket] += 1;
+        bucket
     }
 
     pub fn release(&mut self, bucket: usize) {
@@ -153,6 +171,21 @@ mod tests {
             s.assign();
         }
         assert!(s.imbalance() <= 1, "counts={:?}", s.counts());
+    }
+
+    #[test]
+    fn assign_to_keeps_release_balanced() {
+        // The Lockstep engine path: everyone assigned to bucket 0, every
+        // release on bucket 0 — no underflow no matter how many retire.
+        let mut s = BucketScheduler::new(8);
+        for _ in 0..20 {
+            assert_eq!(s.assign_to(0), 0);
+        }
+        assert_eq!(s.counts()[0], 20);
+        for _ in 0..20 {
+            s.release(0);
+        }
+        assert_eq!(s.counts().iter().sum::<usize>(), 0);
     }
 
     #[test]

@@ -142,7 +142,10 @@ impl WorkloadGen {
         (0..n).map(|_| self.next_request(0.0)).collect()
     }
 
-    /// Online trace: Poisson arrivals at `rate` req/s for `horizon_s`.
+    /// Online trace: Poisson arrivals at `rate` req/s for `horizon_s`,
+    /// fully materialised (batch/replay use).  `online_arrivals` is the
+    /// streaming equivalent for the session-serving driver and yields the
+    /// identical sequence for the same generator state.
     pub fn online_trace(&mut self, rate: f64, horizon_s: f64) -> Vec<Request> {
         let mut out = Vec::new();
         let mut t = 0.0;
@@ -154,6 +157,41 @@ impl WorkloadGen {
             let r = self.next_request(t);
             out.push(r);
         }
+    }
+
+    /// Streaming Poisson arrival process: consumes the generator and
+    /// yields requests one at a time with increasing `arrival_s`, so an
+    /// `EngineDriver` can interleave admission with decode iterations
+    /// instead of materialising the whole trace upfront.
+    pub fn online_arrivals(self, rate: f64, horizon_s: f64) -> OnlineArrivals {
+        OnlineArrivals { gen: self, rate, horizon_s, t: 0.0, done: false }
+    }
+}
+
+/// Iterator form of the Poisson online trace (see
+/// `WorkloadGen::online_arrivals`).  Bit-identical to `online_trace` for
+/// the same generator state and parameters.
+pub struct OnlineArrivals {
+    gen: WorkloadGen,
+    rate: f64,
+    horizon_s: f64,
+    t: f64,
+    done: bool,
+}
+
+impl Iterator for OnlineArrivals {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        self.t += self.gen.rng.exponential(self.rate);
+        if self.t > self.horizon_s {
+            self.done = true;
+            return None;
+        }
+        Some(self.gen.next_request(self.t))
     }
 }
 
@@ -225,6 +263,28 @@ mod tests {
         assert!(trace.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
         let n = trace.len() as f64;
         assert!((n / 50.0 - 10.0).abs() < 2.0, "rate={}", n / 50.0);
+    }
+
+    #[test]
+    fn online_arrivals_iterator_matches_trace() {
+        let (g, m) = cfgs();
+        let trace =
+            WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 11).online_trace(5.0, 20.0);
+        let streamed: Vec<Request> =
+            WorkloadGen::new(g, m, Dataset::Aime, 11).online_arrivals(5.0, 20.0).collect();
+        assert_eq!(trace.len(), streamed.len());
+        for (a, b) in trace.iter().zip(streamed.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new, b.max_new);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.seed, b.seed);
+        }
+        // exhausted iterators stay exhausted
+        let mut it = WorkloadGen::new(cfgs().0, cfgs().1, Dataset::Aime, 11)
+            .online_arrivals(5.0, 0.0);
+        assert!(it.next().is_none());
+        assert!(it.next().is_none());
     }
 
     #[test]

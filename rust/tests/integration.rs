@@ -1,9 +1,13 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
-//!
-//! These exercise the full stack: PJRT runtime, engine rounds, every
+//! Integration tests over the full stack: runtime, engine rounds, every
 //! drafter, KV policies, schedules — and the paper's core *losslessness*
 //! invariant: greedy speculative decoding reproduces vanilla outputs
 //! token-for-token, for every drafter.
+//!
+//! They run against whichever backend the build selected: the default
+//! deterministic CPU fallback needs no artifacts at all; with
+//! `--features pjrt` the same tests exercise the real AOT artifacts
+//! (requires `make artifacts`).  The Pallas compose-proof at the bottom is
+//! pjrt-only.
 
 use std::rc::Rc;
 
@@ -19,7 +23,7 @@ fn artifacts_dir() -> String {
 }
 
 fn runtime() -> Rc<Runtime> {
-    Rc::new(Runtime::load(&artifacts_dir()).expect("run `make artifacts` first"))
+    Rc::new(Runtime::load(&artifacts_dir()).expect("runtime loads (pjrt builds need `make artifacts`)"))
 }
 
 fn requests(rt: &Runtime, ds: Dataset, n: usize, seed: u64) -> Vec<sparsespec::workload::Request> {
@@ -241,6 +245,7 @@ fn sensitivity_variants_load() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pallas_compose_proof_artifacts_match_ref_path() {
     // The pallas-lowered artifacts must produce the same numerics as the

@@ -1,0 +1,260 @@
+//! Session-API integration tests: the tentpole contract of the streaming
+//! redesign.
+//!
+//! * `Engine::run` is a thin wrapper over submit + drive — bit-identical
+//!   `RunReport.outputs` on a fixed seed (pinned across several seeds and
+//!   drafters, and against the arrival-interleaved driver under greedy
+//!   decoding).
+//! * Tokens arrive incrementally: sessions observe partial outputs while
+//!   the engine is still busy (TTFT strictly precedes completion).
+//! * `cancel()` mid-generation releases the slot and KV pages and leaves
+//!   every other session's output untouched.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use sparsespec::engine::{
+    Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason, TokenEvent,
+};
+use sparsespec::runtime::Runtime;
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
+use sparsespec::workload::{Dataset, Request, WorkloadGen};
+
+fn artifacts_dir() -> String {
+    std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load(&artifacts_dir()).expect("runtime loads"))
+}
+
+fn small_requests(rt: &Runtime, n: usize, cap: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, seed)
+        .offline_batch(n);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+/// The acceptance-criterion pin: legacy `Engine::run` and the session API
+/// produce bit-identical outputs on the same trace and seed — across
+/// seeds, and for both the vanilla and self-speculative drafters.
+#[test]
+fn run_is_a_bit_identical_wrapper_over_submit_drive() {
+    let rt = runtime();
+    for seed in [1u64, 42, 1337] {
+        for drafter in [DrafterKind::Vanilla, DrafterKind::Pillar { w: 64 }] {
+            let reqs = small_requests(&rt, 5, 40, seed);
+            let mut legacy = Engine::new(rt.clone(), EngineConfig::new(drafter).with_k(8)).unwrap();
+            let rl = legacy.run(reqs.clone()).unwrap();
+
+            let mut handle =
+                EngineHandle::new(rt.clone(), EngineConfig::new(drafter).with_k(8)).unwrap();
+            let sessions: Vec<_> = reqs.iter().cloned().map(|r| handle.submit(r)).collect();
+            handle.drive().unwrap();
+            let rs = handle.report();
+
+            assert_eq!(rl.outputs, rs.outputs, "seed={seed} {drafter:?}");
+            assert_eq!(rl.tokens_generated, rs.tokens_generated);
+            assert_eq!(rl.iterations, rs.iterations);
+            assert_eq!(rl.requests_done, rs.requests_done);
+            // and each session's incremental stream equals the batch output
+            for (sess, req) in sessions.iter().zip(&reqs) {
+                assert_eq!(sess.finish_reason(), Some(FinishReason::Completed));
+                assert_eq!(&sess.drain(), &rl.outputs[&req.id], "stream != output");
+                let st = sess.stats();
+                assert_eq!(st.tokens, rl.outputs[&req.id].len());
+                assert!(st.rounds > 0 || st.tokens <= 1);
+            }
+        }
+    }
+}
+
+/// Arrival-interleaved driving (requests admitted on the serving clock)
+/// must still produce the batch outputs under greedy decoding.
+#[test]
+fn arrival_interleaved_driver_matches_batch_outputs() {
+    let rt = runtime();
+    let mk_gen = || {
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::NonReasoningAime, 5)
+    };
+    let trace = mk_gen().online_trace(3.0, 8.0);
+    assert!(trace.len() >= 4, "trace too small to be meaningful");
+
+    let cfg = || EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+    let mut legacy = Engine::new(rt.clone(), cfg()).unwrap();
+    let rl = legacy.run(trace.clone()).unwrap();
+
+    let mut driver = EngineDriver::with_arrivals(
+        EngineHandle::new(rt.clone(), cfg()).unwrap(),
+        mk_gen().online_arrivals(3.0, 8.0),
+    );
+    driver.drive().unwrap();
+    assert_eq!(driver.sessions().len(), trace.len());
+    let rs = driver.report();
+    assert_eq!(rl.outputs, rs.outputs);
+    // the driver advanced the serving clock at least to the last arrival
+    let last = trace.last().unwrap().arrival_s;
+    assert!(rs.sim_s >= last, "clock {} never reached arrival {last}", rs.sim_s);
+    // pruning drops finished sessions but keeps their stats aggregated
+    let before = driver.session_metrics();
+    assert_eq!(driver.prune_finished(), trace.len());
+    assert!(driver.sessions().is_empty());
+    let after = driver.session_metrics();
+    assert_eq!(
+        after.get("sessions_completed") as usize,
+        trace.len(),
+        "pruned stats lost"
+    );
+    assert_eq!(before.get("sessions_completed"), after.get("sessions_completed"));
+}
+
+/// Streaming is incremental: under the unified schedule a session's first
+/// token lands while the engine is still busy, and strictly before the
+/// session (and the run) completes.
+#[test]
+fn ttft_strictly_precedes_completion_under_unified() {
+    let rt = runtime();
+    let cfg = EngineConfig::new(DrafterKind::Pillar { w: 64 })
+        .with_k(8)
+        .with_schedule(Schedule::Unified, false);
+    let mut handle = EngineHandle::new(rt.clone(), cfg).unwrap();
+    let sessions: Vec<_> = small_requests(&rt, 6, 48, 7)
+        .into_iter()
+        .map(|r| handle.submit(r))
+        .collect();
+    let mut saw_partial_while_busy = false;
+    loop {
+        let busy = handle.step().unwrap();
+        if !busy {
+            break;
+        }
+        // some session mid-stream: tokens out, not finished
+        if sessions.iter().any(|s| s.tokens_delivered() > 0 && !s.is_finished()) {
+            saw_partial_while_busy = true;
+        }
+    }
+    assert!(saw_partial_while_busy, "no incremental delivery observed");
+    for s in &sessions {
+        let st = s.stats();
+        let first = st.first_token_sim_s.expect("first token recorded");
+        let fin = st.finished_sim_s.expect("finish recorded");
+        assert!(first < fin, "ttft {first} !< completion {fin}");
+        assert!(st.ttft_s.is_some());
+        assert!(st.mean_accepted_per_round() >= 0.0);
+    }
+}
+
+/// Mid-generation cancellation releases the slot and KV pages through the
+/// retire path, later work proceeds in the freed capacity, and no other
+/// session's output changes.
+#[test]
+fn cancel_mid_generation_releases_capacity_and_isolates() {
+    let rt = runtime();
+    let cfg = || EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+    let mut reqs = small_requests(&rt, 6, 56, 21);
+    // pin the victim to a long generation so "mid-generation" is
+    // unambiguous (a round delivers at most k+1 tokens, so the cancel
+    // lands far from completion)
+    reqs[2].max_new = 56;
+
+    // reference without any cancellation
+    let mut reference = Engine::new(rt.clone(), cfg()).unwrap();
+    let rr = reference.run(reqs.clone()).unwrap();
+
+    let mut handle = EngineHandle::new(rt.clone(), cfg()).unwrap();
+    let sessions: Vec<_> = reqs.iter().cloned().map(|r| handle.submit(r)).collect();
+    let victim = sessions[2].clone();
+    // step until the victim is visibly mid-generation, then cancel
+    while victim.tokens_delivered() < 4 {
+        assert!(handle.step().unwrap(), "victim never got 4 tokens");
+    }
+    assert!(!victim.is_finished());
+    victim.cancel();
+    handle.drive().unwrap();
+
+    assert_eq!(victim.finish_reason(), Some(FinishReason::Cancelled));
+    let delivered = victim.tokens_delivered();
+    assert!(delivered >= 4 && delivered < rr.outputs[&victim.id()].len());
+    // all KV accounting returned to zero once everyone retired
+    assert_eq!(handle.engine().kv_used_tokens(), 0);
+
+    // a session submitted after the cancel still completes (freed slot
+    // is reusable)
+    let mut late = small_requests(&rt, 1, 24, 99);
+    late[0].id = 1000;
+    let late_sess = handle.submit(late.remove(0));
+    handle.drive().unwrap();
+    assert_eq!(late_sess.finish_reason(), Some(FinishReason::Completed));
+
+    let report = handle.report();
+    assert_eq!(report.requests_cancelled, 1);
+    assert!(!report.outputs.contains_key(&victim.id()));
+    for (id, out) in &rr.outputs {
+        if *id == victim.id() {
+            continue;
+        }
+        assert_eq!(out, &report.outputs[id], "cancel disturbed request {id}");
+    }
+}
+
+/// Cancelling a request that is still queued (never admitted) finishes the
+/// session with zero tokens and leaves the rest untouched.
+#[test]
+fn cancel_queued_request_before_admission() {
+    let rt = runtime();
+    let slots = rt.cfg.model.slots;
+    // more requests than slots so the tail stays queued at step 1
+    let reqs = small_requests(&rt, slots + 3, 24, 31);
+    let mut handle =
+        EngineHandle::new(rt.clone(), EngineConfig::new(DrafterKind::Vanilla)).unwrap();
+    let sessions: Vec<_> = reqs.iter().cloned().map(|r| handle.submit(r)).collect();
+    let queued = sessions.last().unwrap().clone();
+    queued.cancel(); // before any step: still in the admission queue
+    handle.drive().unwrap();
+    assert_eq!(queued.finish_reason(), Some(FinishReason::Cancelled));
+    assert_eq!(queued.tokens_delivered(), 0);
+    let report = handle.report();
+    assert_eq!(report.requests_cancelled, 1);
+    assert_eq!(report.requests_done, reqs.len() - 1);
+    assert_eq!(handle.engine().kv_used_tokens(), 0);
+}
+
+/// Push-style delivery: a TokenSink observes the same stream the pull side
+/// drains, terminated by a Finished event.
+#[test]
+fn token_sink_sees_full_stream_and_finish() {
+    let rt = runtime();
+    let mut handle =
+        EngineHandle::new(rt.clone(), EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8))
+            .unwrap();
+    let mut reqs = small_requests(&rt, 1, 32, 3);
+    let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink_events = events.clone();
+    let session = handle.submit_with_sink(
+        reqs.remove(0),
+        Box::new(move |_id: u64, ev: &TokenEvent| sink_events.borrow_mut().push(*ev)),
+    );
+    handle.drive().unwrap();
+    let evs = events.borrow();
+    let toks: Vec<i32> = evs
+        .iter()
+        .filter_map(|e| match e {
+            TokenEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(toks, session.drain(), "push and pull streams differ");
+    assert!(matches!(
+        evs.last(),
+        Some(TokenEvent::Finished { reason: FinishReason::Completed })
+    ));
+    // indices are the 0-based output positions, in order
+    for (i, e) in evs.iter().filter(|e| matches!(e, TokenEvent::Token { .. })).enumerate() {
+        if let TokenEvent::Token { index, .. } = e {
+            assert_eq!(*index, i);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+// Placeholder crate: the `pjrt` feature needs the real patched `xla`
+// sources vendored at rust/vendor/xla (xla_extension 0.5.1 with the
+// untuple_result patch applied to xla_rs/xla_rs.cc).  See
+// rust/src/runtime/pjrt.rs for the API surface the runtime consumes.
+compile_error!(
+    "rust/vendor/xla is a placeholder. Vendor the patched xla crate here \
+     (see rust/vendor/xla/Cargo.toml) before building with --features pjrt; \
+     the default (no-feature) build uses the deterministic CPU fallback \
+     runtime and does not need it."
+);
