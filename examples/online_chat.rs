@@ -4,17 +4,22 @@
 //!
 //! Demonstrates the full session API: `EngineDriver` + `online_arrivals`
 //! (no pre-materialised trace), incremental `SessionHandle::drain`,
-//! per-session TTFT / inter-token stats, and `cancel()` isolation (the
+//! per-session TTFT / inter-token stats, `cancel()` isolation (the
 //! cancelled request releases its slot + KV without disturbing anyone
-//! else — checked against a batch reference run of the same trace).
+//! else — checked against a batch reference run of the same trace), and a
+//! **mixed-drafter session pool**: per-session drafter overrides serve
+//! pillar + ngram + vanilla sessions through ONE engine with per-drafter
+//! acceptance/TTFT columns.
 //!
 //!   cargo run --release --example online_chat [-- --rate 1.5 --horizon 20]
+
 
 use std::rc::Rc;
 
 use sparsespec::engine::{
     Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason,
 };
+use sparsespec::metrics;
 use sparsespec::runtime::Runtime;
 use sparsespec::scheduler::Schedule;
 use sparsespec::spec::DrafterKind;
@@ -137,5 +142,56 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("  (trace too short to stage a cancellation demo)");
     }
+
+    // ------------------------------------------------------------------
+    // Mixed-drafter session pool: the same engine serves pillar (the
+    // engine default), ngram and vanilla sessions concurrently via
+    // per-session overrides; columns missing a sample print `n/a`
+    // (vanilla never drafts, so it has no alpha).
+    // ------------------------------------------------------------------
+    println!("\nmixed-drafter session pool (per-session override):");
+    let pool_cfg = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+        .k(8)
+        .allow_drafter(DrafterKind::NGram { n: 3 })
+        .allow_drafter(DrafterKind::Vanilla)
+        .build(&rt.cfg.model)?;
+    let mut pool = EngineDriver::new(EngineHandle::new(rt.clone(), pool_cfg)?);
+    let kinds = [None, Some(DrafterKind::NGram { n: 3 }), Some(DrafterKind::Vanilla)];
+    let mut gen = mk_gen();
+    for i in 0..9u64 {
+        let mut r = gen.next_request(0.0);
+        r.id = 10_000 + i;
+        r.max_new = r.max_new.min(48);
+        r.drafter = kinds[i as usize % kinds.len()];
+        pool.submit(r);
+    }
+    pool.drive()?;
+    let pr = pool.report();
+    println!("  {}", pr.summary());
+    let pm = pool.session_metrics();
+    println!(
+        "  {:<14} {:>9} {:>8} {:>8} {:>12}",
+        "drafter", "sessions", "acc/rnd", "alpha", "ttft p50(s)"
+    );
+    for (name, acc) in &pr.accept_by {
+        let sessions = pm.get(&metrics::keyed("sessions_completed", name));
+        let acc_rnd = if acc.rounds > 0 {
+            format!("{:>8.2}", acc.mean_accepted())
+        } else {
+            format!("{:>8}", "n/a")
+        };
+        let alpha = if acc.drafted > 0 {
+            format!("{:>8.2}", acc.alpha())
+        } else {
+            format!("{:>8}", "n/a")
+        };
+        let ttft = pm
+            .histograms
+            .get(&metrics::keyed("ttft_s", name))
+            .map(|h| format!("{:>12.4}", h.percentile(50.0)))
+            .unwrap_or_else(|| format!("{:>12}", "n/a"));
+        println!("  {name:<14} {sessions:>9} {acc_rnd} {alpha} {ttft}");
+    }
+    assert_eq!(pr.requests_done, 9, "mixed pool must serve every session");
     Ok(())
 }

@@ -6,6 +6,7 @@
 //!   (add `make artifacts` + `--features pjrt` for the real XLA path; the
 //!    default build serves on the deterministic CPU fallback runtime)
 
+
 use std::rc::Rc;
 
 use sparsespec::engine::{Engine, EngineConfig, EngineHandle};

@@ -9,6 +9,7 @@
 //!
 //!   cargo run --release --example reasoning_serve [-- --requests 12]
 
+
 use std::rc::Rc;
 
 use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle};

@@ -9,6 +9,7 @@
 //!
 //!   cargo run --release --example rl_rollout [-- --requests 32 --budget-frac 45]
 
+
 use std::rc::Rc;
 
 use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle, FinishReason};

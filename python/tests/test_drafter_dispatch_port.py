@@ -1,0 +1,212 @@
+# Cross-check of the PR-5 Drafter-trait redesign (rust/src/spec/drafter.rs,
+# rust/src/spec/adaptive.rs, engine/core.rs trait dispatch), per the
+# no-Rust-toolchain verify flow: 1:1 Python ports of the dispatch and
+# AdaptiveK logic are driven through the miniature engine from
+# test_sim_runtime_port.py (the committed port of runtime/sim.rs).
+#
+# Pins, mirroring rust/tests/drafter_trait.rs:
+#   1. dispatch equivalence — resolving a drafter through a name->ctor
+#      registry (the DrafterRegistry shape) produces bit-identical outputs
+#      to calling the policy directly (trait dispatch == enum interpreter);
+#   2. per-session mixed dispatch stays lossless — sessions with different
+#      policies each reproduce the dense chain token-for-token;
+#   3. AdaptiveK (AIMD over a windowed acceptance estimate; start k_max,
+#      widen +1 at alpha >= 0.8, halve below 0.4, bounds [1, k_max]) —
+#      convergence both directions, in-engine losslessness at any k trace,
+#      and the scheduling claim: on a low-acceptance drafter the adaptive
+#      controller wastes fewer rejected draft steps per accepted token
+#      than static k.
+#
+# Constants MUST stay in lockstep with spec/adaptive.rs (AdaptiveKCfg).
+
+from test_sim_runtime_port import (
+    compose,
+    dense_next,
+    pillar_policy,
+    prompt_for,
+    refresh,
+    sparse_next,
+    speculative,
+    vanilla,
+    window_policy,
+)
+
+K_MIN = 1
+WINDOW = 8
+WIDEN_AT = 0.8
+NARROW_AT = 0.4
+
+
+class AdaptiveK:
+    """1:1 port of spec::adaptive::AdaptiveK (AIMD controller)."""
+
+    def __init__(self, k_max):
+        self.k_max = max(k_max, 1)
+        self.k = self.k_max
+        self.hist = []
+
+    def rate(self):
+        drafted = sum(d for d, _ in self.hist)
+        accepted = sum(a for _, a in self.hist)
+        return None if drafted == 0 else accepted / drafted
+
+    def observe(self, drafted, accepted):
+        self.hist.append((drafted, accepted))
+        if len(self.hist) > WINDOW:
+            self.hist = self.hist[-WINDOW:]
+        r = self.rate()
+        if r is None:
+            return
+        if r >= WIDEN_AT:
+            self.k = min(self.k + 1, self.k_max)
+        elif r < NARROW_AT:
+            self.k = max(self.k // 2, K_MIN)
+
+
+def speculative_stats(prompt, max_new, k, policy, controller=None):
+    """The mini engine round loop with an optional AdaptiveK clamp.
+
+    Mirrors engine/core.rs: start_round asks plan() for the round size
+    (static drafters: k; adaptive: min(k, controller.k)), drafts, verifies
+    densely, rolls back, feeds on_verify.  Returns (out, drafted, accepted,
+    rounds, k_trace).
+    """
+    kv = list(prompt)
+    pending = dense_next(kv, len(kv) - 1)
+    out = [pending]
+    crit = []
+    drafted_total, accepted_total, rounds = 0, 0, 0
+    k_trace = []
+    while len(out) < max_new:
+        rsl = len(kv)
+        anchor = pending
+        cap = k if controller is None else min(k, controller.k)
+        k_trace.append(cap)
+        kk = min(cap, max(max_new - len(out), 1))
+        kv_d = list(kv)
+        drafts = []
+        cur = anchor
+        for _ in range(kk):
+            p = len(kv_d)
+            kv_d.append(cur)
+            idx = compose(crit, p + 1, policy)
+            d = sparse_next(kv_d, p, idx)
+            drafts.append(d)
+            cur = d
+        kv_v = list(kv) + [anchor] + drafts
+        acc = 0
+        next_tok = None
+        for j, d in enumerate(drafts):
+            tgt = dense_next(kv_v, rsl + j)
+            if tgt == d:
+                acc += 1
+            else:
+                next_tok = tgt
+                break
+        if next_tok is None:
+            next_tok = dense_next(kv_v, rsl + len(drafts))
+        rounds += 1
+        drafted_total += len(drafts)
+        accepted_total += acc
+        if controller is not None:
+            controller.observe(len(drafts), acc)
+        take = min(acc, max_new - len(out))
+        out += drafts[:take]
+        if len(out) < max_new:
+            out.append(next_tok)
+        kv = list(kv) + [anchor] + drafts[:acc]
+        pending = next_tok
+        crit = refresh(len(kv), policy)
+    return out, drafted_total, accepted_total, rounds, k_trace
+
+
+# --- registry-shaped dispatch (DrafterRegistry port) --------------------
+
+REGISTRY = {
+    "pillar": pillar_policy,
+    "window": window_policy,
+}
+
+
+def run_via_registry(name, w, prompt, max_new, k):
+    policy = REGISTRY[name](w)
+    got, _ = speculative(prompt, max_new, k, policy)
+    return got
+
+
+def test_registry_dispatch_equals_direct_call():
+    # trait-dispatch equivalence: name->ctor resolution must be invisible
+    # in the outputs, for every registered drafter
+    for seed in range(4):
+        p = prompt_for(seed)
+        for name, w in [("pillar", 64), ("pillar", 16), ("window", 64)]:
+            direct, _ = speculative(p, 100, 8, REGISTRY[name](w))
+            assert run_via_registry(name, w, p, 100, 8) == direct
+
+
+def test_mixed_per_session_dispatch_is_lossless():
+    # sessions cycling pillar / window / vanilla policies (the engine's
+    # per-session override) each reproduce the dense chain exactly
+    for seed in range(6):
+        p = prompt_for(seed + 50)
+        base = vanilla(p, 120)
+        policy = [pillar_policy(64), window_policy(64), None][seed % 3]
+        if policy is None:
+            got = vanilla(p, 120)  # vanilla override: no speculation
+        else:
+            got, _ = speculative(p, 120, 8, policy)
+        assert got == base, f"seed={seed} mixed dispatch diverged"
+
+
+def test_adaptive_k_converges_both_directions():
+    c = AdaptiveK(8)
+    assert c.k == 8, "starts optimistic at k_max"
+    for _ in range(12):
+        c.observe(c.k, 0)
+    assert c.k == K_MIN, "zero acceptance must collapse to k_min"
+    for _ in range(40):
+        c.observe(c.k, c.k)
+    assert c.k == 8, "full acceptance must recover k_max"
+    # bounds hold on any stream
+    c = AdaptiveK(8)
+    for i in range(300):
+        c.observe(c.k, c.k if i % 3 else 0)
+        assert K_MIN <= c.k <= 8
+
+
+def test_adaptive_k_stays_lossless():
+    for seed in range(4):
+        p = prompt_for(seed + 200)
+        base = vanilla(p, 150)
+        for policy in [pillar_policy(64), window_policy(16)]:
+            out, _, _, _, ks = speculative_stats(p, 150, 8, policy, AdaptiveK(8))
+            assert out == base, f"seed={seed} adaptive diverged"
+            assert all(K_MIN <= k <= 8 for k in ks)
+
+
+def test_adaptive_narrows_on_low_acceptance_drafter():
+    # The Vegas claim in miniature: on the weak window drafter over long
+    # generations (acceptance well under the widen threshold), AdaptiveK
+    # must (a) actually narrow, and (b) waste fewer rejected draft steps
+    # per generated token than static k, without losing losslessness.
+    waste_static, waste_adapt = 0.0, 0.0
+    narrowed = False
+    for seed in range(4):
+        p = prompt_for(seed + 300)
+        base = vanilla(p, 300)
+        out_s, drafted_s, accepted_s, _, _ = speculative_stats(
+            p, 300, 8, window_policy(16)
+        )
+        ctl = AdaptiveK(8)
+        out_a, drafted_a, accepted_a, _, ks = speculative_stats(
+            p, 300, 8, window_policy(16), ctl
+        )
+        assert out_s == base and out_a == base
+        waste_static += (drafted_s - accepted_s) / len(out_s)
+        waste_adapt += (drafted_a - accepted_a) / len(out_a)
+        narrowed = narrowed or min(ks) < 8
+    assert narrowed, "controller never narrowed on a weak drafter"
+    assert waste_adapt < waste_static, (
+        f"adaptive wasted {waste_adapt:.3f} rejected drafts/token vs "
+        f"static {waste_static:.3f}"
+    )

@@ -4,6 +4,7 @@
 //!
 //! Select experiments: `cargo bench -- fig10 fig13` (default: all).
 
+
 use sparsespec::bench::{run_named, BenchCtx};
 
 fn main() -> anyhow::Result<()> {

@@ -1,0 +1,145 @@
+//! `drafter_dispatch` — trait-dispatch overhead vs the enum interpreter.
+//!
+//! PR motivation guard: replacing the engine's `match cfg.drafter` sites
+//! with `Box<dyn Drafter>` calls must not put measurable cost on the
+//! per-step path.  Two measurements:
+//!
+//! 1. **Micro**: per-call latency of `Drafter::plan` through a rotating
+//!    `Vec<Box<dyn Drafter>>` (defeats devirtualisation, exercises the
+//!    real vtable) vs the equivalent enum-match sizing decision the old
+//!    engine hardwired.  The difference is the dispatch overhead.
+//! 2. **End-to-end**: a real engine run (PillarAttn, default workload) to
+//!    put that overhead in per-iteration context — the engine makes at
+//!    most ~(slots + drafter-count) trait calls per iteration.
+//!
+//! Gate (enforced, like `pillar_select`): dispatch overhead extrapolated
+//! to a full iteration must stay under 1% of the measured per-iteration
+//! wallclock.  Emits `reports/BENCH_drafter_dispatch.json`.
+
+use super::BenchCtx;
+use crate::engine::{Engine, EngineConfig};
+use crate::spec::{DraftCtx, Drafter, DrafterKind, DrafterRegistry};
+use crate::util::json::{arr, num, obj, s as jstr, Json};
+use crate::workload::{Dataset, WorkloadGen};
+use anyhow::Result;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// The pre-trait engine's per-round sizing decision (`first_round_target`
+/// in the enum-interpreter core), kept as the dispatch baseline.
+fn enum_plan_target(kind: &DrafterKind, k: usize) -> usize {
+    if kind.is_self_spec() {
+        k
+    } else {
+        0
+    }
+}
+
+pub fn drafter_dispatch(ctx: &mut BenchCtx) -> Result<()> {
+    println!("drafter_dispatch: Box<dyn Drafter> vs enum-interpreter per-step cost");
+    let rt = ctx.rt()?;
+    let m = rt.cfg.model.clone();
+    let kinds = [
+        DrafterKind::Vanilla,
+        DrafterKind::Pillar { w: 64 },
+        DrafterKind::Window { w: 64 },
+        DrafterKind::OracleTopK { w: 64 },
+        DrafterKind::NGram { n: 3 },
+        DrafterKind::Eagle,
+        DrafterKind::TriForce { w: 64 },
+    ];
+    let reg = DrafterRegistry::with_builtins();
+    let mut drafters: Vec<Box<dyn Drafter>> = kinds
+        .iter()
+        .map(|k| reg.create(k, &m))
+        .collect::<Result<_>>()?;
+
+    let mk_ctx = |i: usize| DraftCtx {
+        req_id: i as u64,
+        slot_idx: i % m.slots,
+        k: 8,
+        sched_cap: 8,
+        len: 64 + i % 128,
+        remaining: 100,
+        pending: (i % m.vocab) as i32,
+        first_round: false,
+        ngram: None,
+    };
+
+    // Warm both paths, then measure.
+    let reps = 200_000 * ctx.n_requests.max(1);
+    for i in 0..1_000 {
+        let d = &mut drafters[i % kinds.len()];
+        black_box(d.plan(&mk_ctx(i)).target);
+        black_box(enum_plan_target(&kinds[i % kinds.len()], 8));
+    }
+    let t0 = Instant::now();
+    let mut acc = 0usize;
+    for i in 0..reps {
+        let d = &mut drafters[black_box(i % kinds.len())];
+        acc = acc.wrapping_add(d.plan(black_box(&mk_ctx(i))).target);
+    }
+    black_box(acc);
+    let dyn_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+
+    let t0 = Instant::now();
+    let mut acc = 0usize;
+    for i in 0..reps {
+        let kind = &kinds[black_box(i % kinds.len())];
+        acc = acc.wrapping_add(enum_plan_target(kind, black_box(8)));
+    }
+    black_box(acc);
+    let enum_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    let overhead_ns = (dyn_ns - enum_ns).max(0.0);
+    println!(
+        "  plan() per call: dyn {dyn_ns:.1}ns, enum {enum_ns:.1}ns \
+         (dispatch overhead {overhead_ns:.1}ns)"
+    );
+
+    // End-to-end context: one engine run, per-iteration wallclock.
+    let reqs = WorkloadGen::new(rt.cfg.grammar.clone(), m.clone(), Dataset::Aime, ctx.seed)
+        .offline_batch(ctx.n_requests.max(2));
+    let mut eng = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8),
+    )?;
+    let r = eng.run(reqs)?;
+    println!("  {}", r.summary());
+    let iter_us = r.wall_s * 1e6 / r.iterations.max(1) as f64;
+    // Upper bound on trait calls an iteration makes: per verified slot
+    // one `plan` (round restart) + one `on_verify`, per drafter one
+    // `propose_batch`/`after_draft` hook pair, plus per-slot capability
+    // reads at admission (bounded by slots) — ~2·(slots + drafters).
+    let calls_per_iter = (2 * (m.slots + kinds.len())) as f64;
+    let overhead_us_per_iter = overhead_ns * calls_per_iter / 1e3;
+    let ratio = overhead_us_per_iter / iter_us.max(1e-9);
+    println!(
+        "  per-iteration: engine {iter_us:.1}us, dispatch bound {overhead_us_per_iter:.4}us \
+         ({:.4}% — gate < 1%)",
+        ratio * 100.0
+    );
+
+    let json = obj(vec![
+        ("experiment", jstr("drafter_dispatch")),
+        ("harness", jstr("cargo bench -- drafter_dispatch")),
+        ("plan_dyn_ns", num(dyn_ns)),
+        ("plan_enum_ns", num(enum_ns)),
+        ("dispatch_overhead_ns", num(overhead_ns)),
+        ("engine_iter_us", num(iter_us)),
+        ("calls_per_iter_bound", num(calls_per_iter)),
+        ("overhead_ratio", num(ratio)),
+        (
+            "drafters",
+            arr(kinds.iter().map(|k| jstr(&k.name())).collect::<Vec<Json>>()),
+        ),
+    ]);
+    ctx.save("BENCH_drafter_dispatch.json", &json.to_string())?;
+    // Enforced after saving, so a regression still leaves evidence.
+    anyhow::ensure!(
+        ratio < 0.01,
+        "drafter_dispatch gate failed: dispatch overhead is {:.3}% of an \
+         engine iteration (need < 1%)",
+        ratio * 100.0
+    );
+    Ok(())
+}

@@ -5,9 +5,11 @@
 //! Every function prints the regenerated rows/series and writes raw CSVs
 //! under `reports/` so the markdown in EXPERIMENTS.md can cite them.
 
+mod dispatch;
 mod experiments;
 mod kernels;
 
+pub use dispatch::drafter_dispatch;
 pub use experiments::*;
 pub use kernels::{fig15_fused_kernel, pillar_select};
 
@@ -70,10 +72,12 @@ pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
         "fig14" => fig14_schedule_trace(ctx),
         "fig15" => fig15_fused_kernel(ctx),
         "pillar_select" => pillar_select(ctx),
+        "drafter_dispatch" => drafter_dispatch(ctx),
         "all" => {
             for n in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
                 "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15", "pillar_select",
+                "drafter_dispatch",
             ] {
                 println!("\n================ {n} ================");
                 run_named(ctx, n)?;

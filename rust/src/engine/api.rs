@@ -47,6 +47,11 @@ pub enum FinishReason {
     Completed,
     /// Cancelled by the consumer; the stream holds a partial output.
     Cancelled,
+    /// Rejected at submit time: the request named a drafter the engine
+    /// could not resolve (unknown registry name, degenerate parameters,
+    /// missing artifact variant).  Nothing was queued; the reason is
+    /// readable via [`SessionHandle::reject_reason`].
+    Rejected,
 }
 
 /// One element of a session's event stream.
@@ -73,6 +78,10 @@ impl<F: FnMut(u64, &TokenEvent)> TokenSink for F {
 /// Per-session serving statistics, updated as the engine runs.
 #[derive(Clone, Debug)]
 pub struct SessionStats {
+    /// Resolved drafter name serving this session (the engine default or
+    /// the per-request override) — keys the per-drafter breakdowns in
+    /// [`EngineDriver::session_metrics`].
+    pub drafter: String,
     /// Simulated-clock submit time.
     pub submitted_sim_s: f64,
     /// Simulated-clock time of the first delivered token.
@@ -95,8 +104,9 @@ pub struct SessionStats {
 }
 
 impl SessionStats {
-    fn new(sim_s: f64) -> Self {
+    fn new(sim_s: f64, drafter: String) -> Self {
         SessionStats {
+            drafter,
             submitted_sim_s: sim_s,
             first_token_sim_s: None,
             finished_sim_s: None,
@@ -148,11 +158,12 @@ pub(crate) struct SessionShared {
     finished: Option<FinishReason>,
     cancel_requested: bool,
     sink: Option<Box<dyn TokenSink>>,
+    reject_reason: Option<String>,
     stats: SessionStats,
 }
 
 impl SessionShared {
-    pub(crate) fn new(id: u64, sim_s: f64) -> Self {
+    pub(crate) fn new(id: u64, sim_s: f64, drafter: String) -> Self {
         SessionShared {
             id,
             pending: std::collections::VecDeque::new(),
@@ -160,8 +171,13 @@ impl SessionShared {
             finished: None,
             cancel_requested: false,
             sink: None,
-            stats: SessionStats::new(sim_s),
+            reject_reason: None,
+            stats: SessionStats::new(sim_s, drafter),
         }
+    }
+
+    pub(crate) fn set_reject_reason(&mut self, reason: String) {
+        self.reject_reason = Some(reason);
     }
 
     pub(crate) fn set_sink(&mut self, sink: Box<dyn TokenSink>) {
@@ -269,6 +285,12 @@ impl SessionHandle {
 
     pub fn finish_reason(&self) -> Option<FinishReason> {
         self.shared.borrow().finished
+    }
+
+    /// Why the submit was rejected (only set for
+    /// [`FinishReason::Rejected`] sessions).
+    pub fn reject_reason(&self) -> Option<String> {
+        self.shared.borrow().reject_reason.clone()
     }
 
     /// Request cancellation.  Applied by the engine at the next iteration
@@ -480,8 +502,14 @@ impl EngineDriver {
 
     fn fold_session(m: &mut Metrics, h: &SessionHandle) {
         let st = h.stats();
+        // Per-drafter breakdown keys ("ttft_s[pillar_w64]", …) ride next
+        // to the aggregate so mixed-drafter pools compare policies.
+        let tag = st.drafter.clone();
         if let Some(t) = st.ttft_s {
             m.observe("ttft_s", t);
+            if !tag.is_empty() {
+                m.observe_keyed("ttft_s", &tag, t);
+            }
         }
         if let Some(t) = st.ttft_sim_s() {
             m.observe("ttft_sim_s", t);
@@ -489,10 +517,19 @@ impl EngineDriver {
         m.hist("inter_token_s").merge(&st.inter_token_s);
         if st.rounds > 0 {
             m.observe("accepted_per_round", st.mean_accepted_per_round());
+            if !tag.is_empty() {
+                m.observe_keyed("accepted_per_round", &tag, st.mean_accepted_per_round());
+            }
         }
         match h.finish_reason() {
-            Some(FinishReason::Completed) => m.inc("sessions_completed", 1.0),
+            Some(FinishReason::Completed) => {
+                m.inc("sessions_completed", 1.0);
+                if !tag.is_empty() {
+                    m.inc_keyed("sessions_completed", &tag, 1.0);
+                }
+            }
             Some(FinishReason::Cancelled) => m.inc("sessions_cancelled", 1.0),
+            Some(FinishReason::Rejected) => m.inc("sessions_rejected", 1.0),
             None => m.inc("sessions_live", 1.0),
         }
     }
@@ -518,8 +555,11 @@ impl EngineDriver {
 
     /// Aggregate per-session statistics into serving metrics: `ttft_s`,
     /// `ttft_sim_s`, `inter_token_s` and `accepted_per_round` histograms
-    /// plus `sessions_{completed,cancelled,live}` counters.  Includes
-    /// sessions already dropped by `prune_finished`.
+    /// plus `sessions_{completed,cancelled,rejected,live}` counters.
+    /// Sessions carry their resolved drafter name, so `ttft_s[<drafter>]`,
+    /// `accepted_per_round[<drafter>]` and `sessions_completed[<drafter>]`
+    /// breakdowns land alongside the aggregates (mixed-drafter pools).
+    /// Includes sessions already dropped by `prune_finished`.
     pub fn session_metrics(&self) -> Metrics {
         let mut m = Metrics::new();
         m.merge_from(&self.retired);

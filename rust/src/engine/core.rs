@@ -1,4 +1,13 @@
 //! Engine implementation: the per-iteration serving loop.
+//!
+//! The engine is a **plugin host**: it owns batching, scheduling,
+//! verification and the KV tiers, while every draft policy lives behind
+//! the object-safe [`Drafter`] trait (`spec::drafter`), resolved by name
+//! through a [`DrafterRegistry`].  Slots carry their own drafter index, so
+//! sessions with different policies (per-session override via
+//! `Request::drafter`) share one batch: draft steps are grouped by sparse
+//! budget W, proposal generation is grouped per drafter (one batched hook
+//! call each), and a single dense verification serves everyone.
 
 use anyhow::Result;
 use std::cell::RefCell;
@@ -15,7 +24,10 @@ use crate::perfmodel::{DeviceModel, SimScale};
 use crate::runtime::{ModelRunner, Runtime};
 use crate::sampling;
 use crate::scheduler::{BucketScheduler, IterComposition, Schedule, ScheduleTrace};
-use crate::spec::{AcceptStats, DrafterKind, IndexPolicy, NGramIndex, PillarState};
+use crate::spec::{
+    AcceptStats, AdaptiveDrafter, DraftCtx, DraftHost, DraftMode, Drafter, DrafterKind,
+    DrafterRegistry, NGramIndex, PillarState, VerifyFeedback,
+};
 use crate::util::rng::Xoshiro256;
 use crate::util::threadpool::{Promise, ThreadPool};
 use crate::workload::Request;
@@ -29,6 +41,8 @@ struct Suspended {
     output: Vec<i32>,
     pillar: PillarState,
     ngram_hist: Vec<i32>,
+    /// Drafter-table index (per-session policy survives suspension).
+    drafter: usize,
     admitted_at: Instant,
     sim_admitted_at: f64,
 }
@@ -60,6 +74,18 @@ pub struct Engine {
     rng: Xoshiro256,
     device: DeviceModel,
     sim_scale: SimScale,
+    /// Name → constructor table every drafter resolves through.
+    registry: DrafterRegistry,
+    /// Resolved drafter instances; index 0 is the engine default, the
+    /// rest arrive through `EngineConfig::extra_drafters` or per-session
+    /// overrides.  Slots reference entries by index.
+    drafters: Vec<Box<dyn Drafter>>,
+    /// Parse-layer kind per table entry (submit-time resolution key).
+    drafter_kinds: Vec<DrafterKind>,
+    /// Display name per table entry (reports/metrics keys).
+    drafter_names: Vec<String>,
+    /// Per-drafter acceptance accounting (RunReport::accept_by).
+    accept_by: Vec<AcceptStats>,
     // accounting
     iter: u64,
     sim_s: f64,
@@ -72,6 +98,7 @@ pub struct Engine {
     latency: Histogram,
     requests_done: usize,
     requests_cancelled: usize,
+    requests_rejected: usize,
     /// Live session state per request id (submit-created; `run` goes
     /// through the same path, so streaming is uniform).  Entries are
     /// removed at finish (complete/cancel), so the map only ever holds
@@ -84,40 +111,55 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(rt: Rc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
+        Self::with_registry(rt, cfg, DrafterRegistry::with_builtins())
+    }
+
+    /// Build an engine whose drafters resolve through `registry` — the
+    /// out-of-crate extension point: register a constructor, submit
+    /// requests naming it (`DrafterKind::Custom`), never touch this file.
+    pub fn with_registry(
+        rt: Rc<Runtime>,
+        cfg: EngineConfig,
+        registry: DrafterRegistry,
+    ) -> Result<Engine> {
         let runner = ModelRunner::new(rt.clone())?;
-        let m = &rt.cfg.model;
-        let k = if cfg.drafter == DrafterKind::Vanilla { 0 } else { cfg.k };
+        let m = rt.cfg.model.clone();
+        let default_drafter = registry.create(&cfg.drafter, &m)?;
+        // A no-speculation default forces k = 0 (verify_q1, no drafting).
+        let k = if default_drafter.mode() == DraftMode::Off { 0 } else { cfg.k };
         let mut cfg = cfg;
         cfg.k = k;
+        let default_drafter: Box<dyn Drafter> =
+            if cfg.adaptive_k && default_drafter.mode() != DraftMode::Off {
+                Box::new(AdaptiveDrafter::new(default_drafter, k))
+            } else {
+                default_drafter
+            };
+        default_drafter.validate_engine(&m, k)?;
         let worst_case = m.max_seq;
         let device = DeviceModel::default();
         let sim_scale = cfg
             .sim_scale
             .unwrap_or_else(|| SimScale::paper_scale(m.slots, m.kv_bytes_per_token()));
         let chunk = 256 * 1024;
-        // Precompile every artifact this configuration can touch, so
-        // first-call XLA compilation (~2 s each) never lands inside the
-        // serving loop's wallclock.
+        // Precompile every artifact the default configuration can touch,
+        // so first-call XLA compilation (~2 s each) never lands inside the
+        // serving loop's wallclock.  Statically declared extras precompile
+        // right below; an UNdeclared per-session override instead pays its
+        // first-call compilation synchronously inside the `submit` that
+        // introduces it, stalling in-flight sessions on the real PJRT
+        // backend — latency-sensitive servers should declare the drafters
+        // they serve via `EngineConfig::extra_drafters`/`allow_drafter`.
         {
             let mut names: Vec<String> = vec!["prefill".into()];
             names.push(format!("verify_q{}", k + 1));
-            match cfg.drafter {
-                DrafterKind::Pillar { w }
-                | DrafterKind::Window { w }
-                | DrafterKind::OracleTopK { w } => {
-                    names.push(format!("draft_w{w}"));
-                    if matches!(cfg.drafter, DrafterKind::OracleTopK { .. }) {
-                        names.push("verify_q1".into());
-                    }
-                }
-                DrafterKind::TriForce { .. } => names.push("sparse_verify".into()),
-                DrafterKind::Eagle => names.push("eagle".into()),
-                DrafterKind::Vanilla | DrafterKind::NGram { .. } => {}
-            }
+            names.extend(default_drafter.artifacts(k));
             let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
             rt.precompile(&refs)?;
         }
-        Ok(Engine {
+        let drafter_names = vec![default_drafter.name()];
+        let drafter_kinds = vec![cfg.drafter];
+        let mut eng = Engine {
             runner,
             queue: VecDeque::new(),
             slots: (0..m.slots).map(|_| None).collect(),
@@ -137,6 +179,11 @@ impl Engine {
             rng: Xoshiro256::new(cfg.seed),
             device,
             sim_scale,
+            registry,
+            drafters: vec![default_drafter],
+            drafter_kinds,
+            drafter_names,
+            accept_by: vec![AcceptStats::new(k.max(1))],
             iter: 0,
             sim_s: 0.0,
             sim_cpu_s: 0.0,
@@ -148,23 +195,71 @@ impl Engine {
             latency: Histogram::default(),
             requests_done: 0,
             requests_cancelled: 0,
+            requests_rejected: 0,
             sessions: BTreeMap::new(),
             stamp_pending: Vec::new(),
             rt,
             cfg,
-        })
+        };
+        // Statically declared extra drafters resolve (and precompile) up
+        // front, exactly like the default.
+        let extras = eng.cfg.extra_drafters.clone();
+        for kind in extras {
+            eng.drafter_index(kind)?;
+        }
+        Ok(eng)
     }
 
     fn mcfg(&self) -> &crate::model::ModelConfig {
         &self.rt.cfg.model
     }
 
-    fn index_policy(&self) -> IndexPolicy {
-        let w = self.cfg.drafter.budget().unwrap_or(self.mcfg().draft_budget);
-        match self.cfg.drafter {
-            DrafterKind::Window { .. } | DrafterKind::TriForce { .. } => IndexPolicy::window(w),
-            _ => IndexPolicy::pillar(w),
+    // ------------------------------------------------------------------
+    // drafter table
+    // ------------------------------------------------------------------
+
+    /// Resolve a kind to a drafter-table index, instantiating (and
+    /// precompiling) it through the registry on first use.
+    fn drafter_index(&mut self, kind: DrafterKind) -> Result<usize> {
+        if let Some(i) = self.drafter_kinds.iter().position(|x| *x == kind) {
+            return Ok(i);
         }
+        let m = self.rt.cfg.model.clone();
+        let d = self.registry.create(&kind, &m)?;
+        let d: Box<dyn Drafter> = if self.cfg.adaptive_k && d.mode() != DraftMode::Off {
+            Box::new(AdaptiveDrafter::new(d, self.cfg.k))
+        } else {
+            d
+        };
+        d.validate_engine(&m, self.cfg.k)?;
+        let arts = d.artifacts(self.cfg.k);
+        if !arts.is_empty() {
+            let refs: Vec<&str> = arts.iter().map(|s| s.as_str()).collect();
+            self.rt.precompile(&refs)?;
+        }
+        self.drafter_names.push(d.name());
+        self.drafter_kinds.push(kind);
+        self.drafters.push(d);
+        self.accept_by.push(AcceptStats::new(self.cfg.k.max(1)));
+        Ok(self.drafters.len() - 1)
+    }
+
+    /// Read-only resolution for requests already validated at submit
+    /// time; unknown kinds fall back to the engine default.
+    fn lookup_drafter(&self, kind: Option<DrafterKind>) -> usize {
+        match kind {
+            None => 0,
+            Some(k) => self
+                .drafter_kinds
+                .iter()
+                .position(|x| *x == k)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Resolved drafter names, in table order (index 0 = engine default).
+    pub fn drafter_names(&self) -> &[String] {
+        &self.drafter_names
     }
 
     /// Batch-compatibility wrapper over the session API: submits every
@@ -193,6 +288,13 @@ impl Engine {
     /// session.  Latest submission wins: if the same id is already in
     /// flight, the old request is cancelled first (through the normal
     /// cancellation path), so two generations never feed one stream.
+    ///
+    /// A request naming a drafter (`Request::drafter`) that fails to
+    /// resolve — unknown registry name, degenerate parameters, missing
+    /// artifact variant — is **rejected**: the returned session finishes
+    /// immediately with [`FinishReason::Rejected`] (the reason readable
+    /// via `SessionHandle::reject_reason`) and nothing enters the queue,
+    /// so one bad submission never disturbs service.
     pub fn submit(&mut self, req: Request) -> SessionHandle {
         self.submit_inner(req, None)
     }
@@ -206,13 +308,35 @@ impl Engine {
         if self.sessions.contains_key(&req.id) {
             self.cancel_session(req.id);
         }
-        let mut shared = SessionShared::new(req.id, self.sim_s);
+        let resolved = match req.drafter {
+            None => Ok(0usize),
+            Some(kind) => self.drafter_index(kind),
+        };
+        let name = match &resolved {
+            Ok(i) => self.drafter_names[*i].clone(),
+            Err(_) => req.drafter.map(|k| k.name()).unwrap_or_default(),
+        };
+        let mut shared = SessionShared::new(req.id, self.sim_s, name);
         if let Some(s) = sink {
             shared.set_sink(s);
         }
         let rc = Rc::new(RefCell::new(shared));
-        self.sessions.insert(req.id, rc.clone());
-        self.queue.push_back(req);
+        match resolved {
+            Ok(_) => {
+                self.sessions.insert(req.id, rc.clone());
+                self.queue.push_back(req);
+            }
+            Err(e) => {
+                self.requests_rejected += 1;
+                if self.cfg.verbose {
+                    eprintln!("rejected request {}: {e:#}", req.id);
+                }
+                let mut s = rc.borrow_mut();
+                s.set_reject_reason(format!("{e:#}"));
+                s.finish(FinishReason::Rejected);
+                s.stamp_sim(self.sim_s);
+            }
+        }
         SessionHandle::new(rc)
     }
 
@@ -299,16 +423,21 @@ impl Engine {
     /// admission queue, a device slot, or the suspended/offloaded tier.
     fn cancel_session(&mut self, id: u64) {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
-            self.queue.remove(pos);
+            if let Some(req) = self.queue.remove(pos) {
+                let di = self.lookup_drafter(req.drafter);
+                self.drafters[di].on_finish(id);
+            }
         } else if let Some(idx) = self.slot_of(id) {
             let slot = self.slots[idx].take().unwrap();
             self.buckets
                 .release(slot.bucket.min(self.buckets.n_buckets() - 1));
             self.kv.release(id);
-        } else if self.suspended.remove(&id).is_some() {
+            self.drafters[slot.drafter].on_finish(id);
+        } else if let Some(sus) = self.suspended.remove(&id) {
             // Covers both host-resident KV and rows still in offload
             // transit (the orphaned transfer is dropped at harvest time).
             self.kv.forget(id);
+            self.drafters[sus.drafter].on_finish(id);
         }
         self.requests_cancelled += 1;
         self.finish_session(id, FinishReason::Cancelled);
@@ -323,16 +452,24 @@ impl Engine {
                 self.kv.host.insert(id, kv);
             }
         }
+        let accept_by: BTreeMap<String, AcceptStats> = self
+            .drafter_names
+            .iter()
+            .cloned()
+            .zip(self.accept_by.iter().cloned())
+            .collect();
         RunReport {
-            name: self.cfg.drafter.name(),
+            name: self.drafter_names[0].clone(),
             iterations: self.iter,
             wall_s,
             sim_s: self.sim_s,
             sim_cpu_s: self.sim_cpu_s,
             requests_done: self.requests_done,
             requests_cancelled: self.requests_cancelled,
+            requests_rejected: self.requests_rejected,
             tokens_generated: self.tokens_generated,
             accept: self.accept.clone(),
+            accept_by,
             kv: self.kv.stats.clone(),
             offload: self.offload.stats(),
             trace: self.trace.clone(),
@@ -375,11 +512,13 @@ impl Engine {
             launches += 1;
         }
 
-        // 3. proposal generation for drafters that need it (ngram/eagle/
-        //    triforce): fills `drafts` and moves slots to ReadyVerify.
+        // 3. proposal generation, grouped per proposal drafter (ngram/
+        //    eagle/triforce/custom): fills `drafts`, slots stay
+        //    ReadyVerify.
         launches += self.generate_proposals(&mut comp, &mut cpu_s)?;
 
-        // 4. sparse draft step for self-spec slots in Drafting phase.
+        // 4. sparse draft step for self-spec slots in Drafting phase,
+        //    grouped by draft budget W (one artifact launch per group).
         launches += self.draft_step(&mut comp, &mut cpu_s)?;
 
         // 5. verification for ReadyVerify slots.
@@ -445,6 +584,8 @@ impl Engine {
                 break;
             }
             let req = self.queue.pop_front().unwrap();
+            let rid = req.id;
+            let di = self.lookup_drafter(req.drafter);
             let idx = self.free_slot().unwrap();
             let bucket = match self.cfg.schedule {
                 Schedule::Unified => self.buckets.assign(),
@@ -457,8 +598,12 @@ impl Engine {
             }
             plen[idx] = p as i32;
             active[idx] = 1;
-            self.kv.admit(req.id, p);
-            let pol = self.index_policy();
+            self.kv.admit(rid, p);
+            let pol = self.drafters[di].index_policy(&m);
+            let mode = self.drafters[di].mode();
+            let draft_w = self.drafters[di].draft_budget(&m);
+            let refresh_dump = self.drafters[di].wants_dump_refresh();
+            let nord = self.drafters[di].ngram_order();
             let slot = Slot {
                 len: p,
                 gen_count: 0,
@@ -470,14 +615,19 @@ impl Engine {
                 draft_target: 0,
                 phase: Phase::ReadyVerify,
                 bucket,
+                drafter: di,
+                mode,
+                draft_w,
+                refresh_dump,
                 pillar: PillarState::new(m.layers, m.kv_heads, pol),
-                ngram: NGramIndex::new(3),
+                ngram: NGramIndex::new(nord),
                 output: Vec::new(),
                 admitted_at: Instant::now(),
                 sim_admitted_at: self.sim_s,
                 req,
             };
             self.slots[idx] = Some(slot);
+            self.drafters[di].on_admit(rid, false);
             newly.push(idx);
         }
         if newly.is_empty() {
@@ -501,8 +651,7 @@ impl Engine {
             hist.push(t0);
             slot.ngram.extend(&hist);
             // Begin the first round, aligned to the slot's bucket.
-            let target = self.first_round_target(idx);
-            self.slots[idx].as_mut().unwrap().begin_round(target);
+            self.start_round(idx, true);
             // The sampled first token streams out immediately (TTFT).
             Self::notify_session(
                 &self.sessions,
@@ -514,28 +663,47 @@ impl Engine {
         Ok(newly.len())
     }
 
-    fn first_round_target(&self, idx: usize) -> usize {
-        let slot = self.slots[idx].as_ref().unwrap();
-        if !self.cfg.drafter.is_self_spec() {
-            return 0; // proposal drafters fill drafts outside draft steps
+    /// Start a speculation round on slot `idx`: ask the slot's drafter to
+    /// size it (`Drafter::plan`), clamp to the scheduler's cap (bucket
+    /// alignment can shorten a first round — Fig. 8) and the remaining
+    /// generation budget, then arm the slot.
+    fn start_round(&mut self, idx: usize, first: bool) {
+        let (di, mode, bucket, remaining, len, pending, req_id) = {
+            let s = self.slots[idx].as_ref().unwrap();
+            (s.drafter, s.mode, s.bucket, s.remaining(), s.len, s.pending, s.req.id)
+        };
+        if mode != DraftMode::SelfSpec {
+            // Proposal drafters fill drafts through their batch hook;
+            // no-speculation slots go straight to verification.
+            self.slots[idx].as_mut().unwrap().begin_round(0);
+            return;
         }
-        match self.cfg.schedule {
-            Schedule::Lockstep => self.cfg.k.min(slot.remaining().max(1)),
-            Schedule::Unified => self
-                .buckets
-                .first_draft_len(self.iter, slot.bucket)
-                .min(slot.remaining().max(1)),
-        }
-    }
-
-    fn next_round_target(&self, slot: &Slot) -> usize {
-        if !self.cfg.drafter.is_self_spec() {
-            return 0;
-        }
-        self.cfg.k.min(slot.remaining().max(1))
+        let sched_cap = if first {
+            match self.cfg.schedule {
+                Schedule::Lockstep => self.cfg.k,
+                Schedule::Unified => self.buckets.first_draft_len(self.iter, bucket),
+            }
+        } else {
+            self.cfg.k
+        };
+        let ctx = DraftCtx {
+            req_id,
+            slot_idx: idx,
+            k: self.cfg.k,
+            sched_cap,
+            len,
+            remaining,
+            pending,
+            first_round: first,
+            ngram: None,
+        };
+        let plan = self.drafters[di].plan(&ctx);
+        let target = plan.target.min(sched_cap).min(remaining.max(1));
+        self.slots[idx].as_mut().unwrap().begin_round(target);
     }
 
     fn try_reloads(&mut self) -> Result<()> {
+        let m = self.mcfg().clone();
         loop {
             if self.free_slot().is_none() {
                 return Ok(());
@@ -561,7 +729,11 @@ impl Engine {
                 Schedule::Unified => self.buckets.assign(),
                 Schedule::Lockstep => self.buckets.assign_to(0),
             };
-            let mut ngram = NGramIndex::new(3);
+            let di = sus.drafter;
+            let mode = self.drafters[di].mode();
+            let draft_w = self.drafters[di].draft_budget(&m);
+            let refresh_dump = self.drafters[di].wants_dump_refresh();
+            let mut ngram = NGramIndex::new(self.drafters[di].ngram_order());
             ngram.extend(&sus.ngram_hist);
             let slot = Slot {
                 len: sus.len,
@@ -574,6 +746,10 @@ impl Engine {
                 draft_target: 0,
                 phase: Phase::ReadyVerify,
                 bucket,
+                drafter: di,
+                mode,
+                draft_w,
+                refresh_dump,
                 pillar: sus.pillar,
                 ngram,
                 output: sus.output,
@@ -582,8 +758,8 @@ impl Engine {
                 req: sus.req,
             };
             self.slots[idx] = Some(slot);
-            let target = self.first_round_target(idx);
-            self.slots[idx].as_mut().unwrap().begin_round(target);
+            self.drafters[di].on_admit(id, true);
+            self.start_round(idx, true);
         }
     }
 
@@ -629,6 +805,7 @@ impl Engine {
                             output: slot.output.clone(),
                             pillar: slot.pillar.clone(),
                             ngram_hist: slot.full_context(),
+                            drafter: slot.drafter,
                             admitted_at: slot.admitted_at,
                             sim_admitted_at: slot.sim_admitted_at,
                             req: slot.req,
@@ -694,272 +871,158 @@ impl Engine {
     // draft / proposal / verify phases
     // ------------------------------------------------------------------
 
-    /// One sparse draft step for all Drafting self-spec slots.
+    /// One sparse draft step for all Drafting self-spec slots, grouped by
+    /// draft budget W (each group is one `draft_w{W}` launch); then each
+    /// drafter's `after_draft` hook runs over its slots (the oracle's
+    /// exact-score refresh lives there).
     fn draft_step(&mut self, comp: &mut IterComposition, cpu_s: &mut f64) -> Result<u32> {
-        if !self.cfg.drafter.is_self_spec() {
+        // Group Drafting slots by artifact budget (only self-spec slots
+        // ever enter the Drafting phase).
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                if slot.phase == Phase::Drafting {
+                    groups.entry(slot.draft_w).or_default().push(i);
+                }
+            }
+        }
+        if groups.is_empty() {
             return Ok(0);
         }
         let m = self.mcfg().clone();
-        let w = self.cfg.drafter.budget().unwrap_or(m.draft_budget);
-        let t_cpu = Instant::now();
-        let mut token = vec![0i32; m.slots];
-        let mut pos = vec![0i32; m.slots];
-        let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
-        let mut active = vec![0i32; m.slots];
-        let mut participating = Vec::new();
-        let per_slot = m.layers * m.kv_heads * w;
-        let mut sel_s = 0.0;
-        for i in 0..m.slots {
-            let Some(slot) = self.slots[i].as_ref() else { continue };
-            if slot.phase != Phase::Drafting {
-                continue;
-            }
-            participating.push(i);
-            token[i] = slot.pending;
-            pos[i] = slot.len as i32;
-            // Compose straight into the flattened index buffer — no
-            // intermediate Vec + copy.
-            let base = i * per_slot;
-            let t_sel = Instant::now();
-            slot.pillar
-                .compose_into(&mut idxs[base..base + per_slot], slot.len + 1);
-            sel_s += t_sel.elapsed().as_secs_f64();
-            active[i] = 1;
-        }
-        if participating.is_empty() {
-            return Ok(0);
-        }
-        self.runner.stats.note_host("pillar_select", sel_s);
-        comp.drafting = participating.len();
-        comp.gemm_rows += participating.len();
-        comp.attn_bytes += participating.len() * w * m.kv_bytes_per_token();
-        *cpu_s += t_cpu.elapsed().as_secs_f64();
-
-        let out = self.runner.draft(w, &token, &pos, &idxs, &active)?;
-
-        let t_cpu = Instant::now();
-        let v = m.vocab;
-        let temp = self.cfg.temperature;
-        let oracle = matches!(self.cfg.drafter, DrafterKind::OracleTopK { .. });
-        for &i in &participating {
-            let row = out.logits[i * v..(i + 1) * v].to_vec();
-            let slot = self.slots[i].as_mut().unwrap();
-            let d = sampling::sample_logits(&row, temp, &mut self.rng) as i32;
-            slot.drafts.push(d);
-            if temp > 0.0 {
-                slot.draft_probs.extend(sampling::softmax(&row, temp));
-            } else {
-                let mut onehot = vec![0.0f32; v];
-                onehot[d as usize] = 1.0;
-                slot.draft_probs.extend(onehot);
-            }
-            slot.pending = d;
-            slot.len += 1; // the fed token's KV row was written
-            let id = slot.req.id;
-            let full = slot.drafts.len() >= slot.draft_target;
-            if full {
-                slot.phase = Phase::ReadyVerify;
-            }
-            self.kv.grow(id, 1);
-        }
-        *cpu_s += t_cpu.elapsed().as_secs_f64();
-
-        // Oracle drafter: refresh critical tokens from exact scores after
-        // every step (one dense q1 pass; Fig. 3 upper bound — acceptance
-        // comparisons only, not a wallclock-fair system).
-        if oracle {
-            let mut toks = vec![0i32; m.slots];
-            let mut opos = vec![0i32; m.slots];
-            let qv = vec![1i32; m.slots];
-            let mut act = vec![0i32; m.slots];
-            for &i in &participating {
+        let mut launches = 0u32;
+        let mut stepped: Vec<usize> = Vec::new();
+        for (&w, participating) in &groups {
+            let t_cpu = Instant::now();
+            let mut token = vec![0i32; m.slots];
+            let mut pos = vec![0i32; m.slots];
+            let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
+            let mut active = vec![0i32; m.slots];
+            let per_slot = m.layers * m.kv_heads * w;
+            let mut sel_s = 0.0;
+            for &i in participating {
                 let slot = self.slots[i].as_ref().unwrap();
-                // re-feed the token we just wrote, at its own position
-                toks[i] = slot.pending;
-                opos[i] = (slot.len - 1) as i32;
-                act[i] = 1;
+                token[i] = slot.pending;
+                pos[i] = slot.len as i32;
+                // Compose straight into the flattened index buffer — no
+                // intermediate Vec + copy.
+                let base = i * per_slot;
+                let t_sel = Instant::now();
+                slot.pillar
+                    .compose_into(&mut idxs[base..base + per_slot], slot.len + 1);
+                sel_s += t_sel.elapsed().as_secs_f64();
+                active[i] = 1;
             }
-            let vo = self.runner.verify(1, &toks, &opos, &qv, &act)?;
-            let t_dim = m.max_seq;
-            let per = m.layers * m.kv_heads * t_dim;
-            let t_sel = Instant::now();
-            let pool = &self.pool;
-            for &i in &participating {
+            self.runner.stats.note_host("pillar_select", sel_s);
+            comp.drafting += participating.len();
+            comp.gemm_rows += participating.len();
+            comp.attn_bytes += participating.len() * w * m.kv_bytes_per_token();
+            *cpu_s += t_cpu.elapsed().as_secs_f64();
+
+            let out = self.runner.draft(w, &token, &pos, &idxs, &active)?;
+            launches += 1;
+
+            let t_cpu = Instant::now();
+            let v = m.vocab;
+            let temp = self.cfg.temperature;
+            for &i in participating {
+                let row = out.logits[i * v..(i + 1) * v].to_vec();
                 let slot = self.slots[i].as_mut().unwrap();
-                let dump = &vo.dump[i * per..(i + 1) * per];
-                let len = slot.len;
-                slot.pillar.refresh_parallel(dump, t_dim, len, pool);
+                let d = sampling::sample_logits(&row, temp, &mut self.rng) as i32;
+                slot.drafts.push(d);
+                if temp > 0.0 {
+                    slot.draft_probs.extend(sampling::softmax(&row, temp));
+                } else {
+                    let mut onehot = vec![0.0f32; v];
+                    onehot[d as usize] = 1.0;
+                    slot.draft_probs.extend(onehot);
+                }
+                slot.pending = d;
+                slot.len += 1; // the fed token's KV row was written
+                let id = slot.req.id;
+                let full = slot.drafts.len() >= slot.draft_target;
+                if full {
+                    slot.phase = Phase::ReadyVerify;
+                }
+                self.kv.grow(id, 1);
             }
-            self.runner
-                .stats
-                .note_host("pillar_select", t_sel.elapsed().as_secs_f64());
-            comp.attn_bytes += participating.len()
-                * self.slots[participating[0]].as_ref().map(|s| s.len).unwrap_or(0)
-                * m.kv_bytes_per_token();
-            return Ok(2);
+            *cpu_s += t_cpu.elapsed().as_secs_f64();
+            stepped.extend_from_slice(participating);
         }
-        Ok(1)
+
+        // Per-drafter post-step hooks over the slots that just drafted
+        // (oracle: dense q=1 pass + exact-score refresh).
+        let mut by_drafter: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &i in &stepped {
+            if let Some(slot) = self.slots[i].as_ref() {
+                by_drafter.entry(slot.drafter).or_default().push(i);
+            }
+        }
+        let eagle_ctx = self.rt.cfg.eagle.ctx;
+        for (di, idxs) in by_drafter {
+            let mut host = DraftHost {
+                runner: &mut self.runner,
+                m: &m,
+                k: self.cfg.k,
+                temperature: self.cfg.temperature,
+                eagle_ctx,
+                rng: &mut self.rng,
+                comp: &mut *comp,
+                cpu_s: &mut *cpu_s,
+                pool: &self.pool,
+            };
+            launches += self.drafters[di].after_draft(&mut host, &mut self.slots, &idxs)?;
+        }
+        Ok(launches)
     }
 
-    /// Proposal generation for NGram / Eagle / TriForce slots.
+    /// Proposal generation, one batched `propose_batch` hook call per
+    /// proposal drafter over its empty-drafted ReadyVerify slots.
     fn generate_proposals(
         &mut self,
         comp: &mut IterComposition,
         cpu_s: &mut f64,
     ) -> Result<u32> {
-        let k = self.cfg.k;
         let m = self.mcfg().clone();
-        match self.cfg.drafter {
-            DrafterKind::NGram { .. } => {
-                let t = Instant::now();
-                for slot in self.slots.iter_mut().flatten() {
-                    if slot.phase == Phase::ReadyVerify && slot.drafts.is_empty() {
-                        let props = slot.ngram.propose(k.min(slot.remaining().max(1)));
-                        set_proposals(slot, props, m.vocab);
-                    }
-                }
-                *cpu_s += t.elapsed().as_secs_f64();
-                Ok(0)
+        let eagle_ctx = self.rt.cfg.eagle.ctx;
+        let mut launches = 0u32;
+        for di in 0..self.drafters.len() {
+            if self.drafters[di].mode() != DraftMode::Proposal {
+                continue;
             }
-            DrafterKind::Eagle => {
-                let ectx = self.rt.cfg.eagle.ctx;
-                let need: Vec<usize> = (0..m.slots)
-                    .filter(|&i| {
-                        self.slots[i]
-                            .as_ref()
-                            .map(|s| s.phase == Phase::ReadyVerify && s.drafts.is_empty())
-                            .unwrap_or(false)
-                    })
-                    .collect();
-                if need.is_empty() {
-                    return Ok(0);
-                }
-                // k sequential head calls, batched across slots.
-                let mut ctxs: Vec<Vec<i32>> = vec![vec![0; ectx]; m.slots];
-                for &i in &need {
-                    let slot = self.slots[i].as_ref().unwrap();
-                    let full = slot.full_context();
-                    let tail = &full[full.len().saturating_sub(ectx)..];
-                    let mut c = vec![0i32; ectx];
-                    c[ectx - tail.len()..].copy_from_slice(tail);
-                    ctxs[i] = c;
-                }
-                let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
-                let mut launches = 0;
-                for _ in 0..k {
-                    let flat: Vec<i32> = ctxs.iter().flatten().copied().collect();
-                    let logits = self.runner.eagle(&flat)?;
-                    launches += 1;
-                    for &i in &need {
-                        let row = &logits[i * m.vocab..(i + 1) * m.vocab];
-                        let t = sampling::argmax(row) as i32;
-                        proposals[i].push(t);
-                        ctxs[i].rotate_left(1);
-                        let last = ctxs[i].len() - 1;
-                        ctxs[i][last] = t;
-                    }
-                }
-                comp.gemm_rows += need.len(); // head rows are tiny
-                let t = Instant::now();
-                for &i in &need {
-                    let slot = self.slots[i].as_mut().unwrap();
-                    let kk = k.min(slot.remaining().max(1));
-                    let props = proposals[i][..kk].to_vec();
-                    set_proposals(slot, props, m.vocab);
-                }
-                *cpu_s += t.elapsed().as_secs_f64();
-                Ok(launches)
+            let idxs: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| {
+                    self.slots[i]
+                        .as_ref()
+                        .map(|s| {
+                            s.drafter == di
+                                && s.phase == Phase::ReadyVerify
+                                && s.drafts.is_empty()
+                        })
+                        .unwrap_or(false)
+                })
+                .collect();
+            if idxs.is_empty() {
+                continue;
             }
-            DrafterKind::TriForce { w } => {
-                let need: Vec<usize> = (0..m.slots)
-                    .filter(|&i| {
-                        self.slots[i]
-                            .as_ref()
-                            .map(|s| s.phase == Phase::ReadyVerify && s.drafts.is_empty())
-                            .unwrap_or(false)
-                    })
-                    .collect();
-                if need.is_empty() {
-                    return Ok(0);
-                }
-                let q = self.cfg.k + 1;
-                let t = Instant::now();
-                let mut tokens = vec![0i32; m.slots * q];
-                let mut pos = vec![0i32; m.slots];
-                let mut qv = vec![1i32; m.slots];
-                let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
-                let mut active = vec![0i32; m.slots];
-                let mut props: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
-                for &i in &need {
-                    let slot = self.slots[i].as_ref().unwrap();
-                    // level-1: n-gram chunk proposal
-                    let mut p = slot.ngram.propose(self.cfg.k);
-                    if p.is_empty() {
-                        // no match: degenerate to the window model's own
-                        // prediction chain (propose anchor continuation)
-                        p = vec![slot.pending; 1];
-                    }
-                    p.truncate(self.cfg.k);
-                    tokens[i * q] = slot.pending;
-                    for (j, &pt) in p.iter().enumerate() {
-                        tokens[i * q + 1 + j] = pt;
-                    }
-                    qv[i] = (1 + p.len()) as i32;
-                    pos[i] = slot.len as i32;
-                    let base = i * m.layers * m.kv_heads * w;
-                    slot.pillar
-                        .compose_into(&mut idxs[base..base + m.layers * m.kv_heads * w], slot.len + q);
-                    active[i] = 1;
-                    props[i] = p;
-                }
-                *cpu_s += t.elapsed().as_secs_f64();
-                comp.gemm_rows += need.len() * q;
-                comp.attn_bytes += need.len() * w * m.kv_bytes_per_token();
-                let logits = self.runner.sparse_verify(&tokens, &pos, &qv, &idxs, &active)?;
-
-                let t = Instant::now();
-                for &i in &need {
-                    let slot = self.slots[i].as_mut().unwrap();
-                    // middle layer: greedy-match proposals under the window
-                    // model; corrected draft = matched prefix + window pick.
-                    let v = m.vocab;
-                    let rows = &logits[i * q * v..(i + 1) * q * v];
-                    let mut mid: Vec<i32> = Vec::new();
-                    for (j, &pt) in props[i].iter().enumerate() {
-                        let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
-                        if e == pt {
-                            mid.push(pt);
-                        } else {
-                            mid.push(e);
-                            break;
-                        }
-                    }
-                    if mid.len() < self.cfg.k.min(slot.remaining().max(1)) {
-                        // window model's bonus guess extends the chain
-                        let j = mid.len();
-                        if j < q - 1 {
-                            let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
-                            if mid.last() != Some(&e) || j == 0 {
-                                // only if it continues the fed sequence
-                            }
-                            let _ = e;
-                        }
-                    }
-                    // KV frontier: the sparse_verify wrote qv rows; but only
-                    // the anchor row (and later the verified rows) matter —
-                    // verification overwrites everything it validates.
-                    let kk = self.cfg.k.min(slot.remaining().max(1));
-                    mid.truncate(kk);
-                    set_proposals(slot, mid, m.vocab);
-                }
-                *cpu_s += t.elapsed().as_secs_f64();
-                Ok(1)
-            }
-            _ => Ok(0),
+            let mut host = DraftHost {
+                runner: &mut self.runner,
+                m: &m,
+                k: self.cfg.k,
+                temperature: self.cfg.temperature,
+                eagle_ctx,
+                rng: &mut self.rng,
+                comp: &mut *comp,
+                cpu_s: &mut *cpu_s,
+                pool: &self.pool,
+            };
+            launches += self.drafters[di].propose_batch(&mut host, &mut self.slots, &idxs)?;
         }
+        Ok(launches)
     }
 
-    /// Dense verification for all ReadyVerify slots.
+    /// Dense verification for all ReadyVerify slots — one launch serves
+    /// every drafter (per-slot `qv` covers mixed speculation lengths).
     fn verify_step(&mut self, comp: &mut IterComposition, cpu_s: &mut f64) -> Result<u32> {
         let m = self.mcfg().clone();
         let q = self.cfg.k + 1;
@@ -1002,7 +1065,6 @@ impl Engine {
         let v = m.vocab;
         let t_dim = m.max_seq;
         let per_dump = m.layers * m.kv_heads * t_dim;
-        let is_pillar = matches!(self.cfg.drafter, DrafterKind::Pillar { .. });
         let temp = self.cfg.temperature;
 
         let mut inline: Vec<Promise<VerifyWork>> = Vec::new();
@@ -1011,7 +1073,9 @@ impl Engine {
             let drafts = slot.drafts.clone();
             let dprobs = slot.draft_probs.clone();
             let logits = out.logits[i * q * v..(i + 1) * q * v].to_vec();
-            let dump = if is_pillar {
+            // Whether the score dump feeds selection is the slot's
+            // drafter's call (PillarAttn: yes; windows/proposals: no).
+            let dump = if slot.refresh_dump {
                 Some(out.dump[i * per_dump..(i + 1) * per_dump].to_vec())
             } else {
                 None
@@ -1103,8 +1167,10 @@ impl Engine {
         let Some(slot) = self.slots[w.slot_idx].as_mut() else {
             return Ok(());
         };
+        let di = slot.drafter;
         let drafted = slot.drafts.len();
         self.accept.record(drafted, w.accepted);
+        self.accept_by[di].record(drafted, w.accepted);
         let old_len = slot.len;
         let new_len = slot.round_start_len + w.accepted + 1;
 
@@ -1133,6 +1199,16 @@ impl Engine {
         } else {
             self.kv.shrink(id, old_len - new_len);
         }
+        // Close the feedback loop: the drafter steers its next plan from
+        // this round's acceptance (AdaptiveK lives on exactly this hook).
+        self.drafters[di].on_verify(&VerifyFeedback {
+            req_id: id,
+            slot_idx: w.slot_idx,
+            drafted,
+            accepted: w.accepted,
+            bonus_token: w.next_token,
+            context_len: new_len,
+        });
         // Stream the accepted tokens out before retirement/pressure run.
         Self::notify_session(
             &self.sessions,
@@ -1152,6 +1228,7 @@ impl Engine {
                 let slot = self.slots[i].take().unwrap();
                 self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
                 self.kv.release(slot.req.id);
+                self.drafters[slot.drafter].on_finish(slot.req.id);
                 let mut out = slot.output;
                 out.truncate(slot.req.max_new);
                 self.outputs.insert(slot.req.id, out);
@@ -1163,26 +1240,14 @@ impl Engine {
         }
         self.handle_pressure(indices)?;
         for &i in indices {
-            if let Some(slot) = self.slots[i].as_mut() {
-                if slot.phase == Phase::ReadyVerify || slot.phase == Phase::AwaitVerify {
-                    let target = self.next_round_target(self.slots[i].as_ref().unwrap());
-                    self.slots[i].as_mut().unwrap().begin_round(target);
-                }
+            let restart = matches!(
+                self.slots[i].as_ref().map(|s| s.phase),
+                Some(Phase::ReadyVerify) | Some(Phase::AwaitVerify)
+            );
+            if restart {
+                self.start_round(i, false);
             }
         }
         Ok(())
     }
-}
-
-/// Install proposal tokens as the slot's drafts (with one-hot q for the
-/// stochastic verifier, since proposals are deterministic).
-fn set_proposals(slot: &mut Slot, props: Vec<i32>, vocab: usize) {
-    slot.draft_probs.clear();
-    for &p in &props {
-        let mut onehot = vec![0.0f32; vocab];
-        onehot[p as usize] = 1.0;
-        slot.draft_probs.extend(onehot);
-    }
-    slot.drafts = props;
-    slot.phase = Phase::ReadyVerify;
 }

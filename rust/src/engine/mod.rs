@@ -6,9 +6,16 @@
 //! one `Engine` drives one drafter configuration through per-iteration
 //! rounds — admission → (draft* → verify) → acceptance/rollback → retire —
 //! with the unified batch scheduler (§4.2), delayed verification (§4.3)
-//! and the dynamic KV manager (§4.4) wired in.  Every baseline of the
-//! paper's evaluation runs through this same engine with a different
-//! `DrafterKind`, so comparisons isolate the drafting/scheduling policy.
+//! and the dynamic KV manager (§4.4) wired in.  Draft policies are
+//! **plugins**: every baseline of the paper's evaluation implements the
+//! object-safe [`crate::spec::Drafter`] trait, resolves through a
+//! [`crate::spec::DrafterRegistry`] (out-of-crate drafters register
+//! without touching the engine — see `Engine::with_registry`), and can be
+//! selected *per session* via `Request::drafter`, so one engine serves a
+//! mixed-drafter batch with per-drafter acceptance breakdowns
+//! (`RunReport::accept_by`).  `EngineConfig::adaptive_k` layers the
+//! feedback-adaptive speculation-length controller (`spec::adaptive`) on
+//! any drafter.
 //!
 //! Two ways to drive it:
 //!
@@ -52,10 +59,11 @@ use anyhow::{bail, Result};
 use crate::kv_cache::KvPolicy;
 use crate::model::ModelConfig;
 use crate::scheduler::Schedule;
-use crate::spec::{AcceptStats, DrafterKind};
+use crate::spec::{validate_drafter, AcceptStats, DrafterKind};
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Default drafter: requests that don't name one resolve here.
     pub drafter: DrafterKind,
     /// Draft length k (verification uses the verify_q{k+1} artifact).
     pub k: usize,
@@ -74,6 +82,18 @@ pub struct EngineConfig {
     pub verbose: bool,
     /// Simulated-clock calibration (None => paper scale; see perfmodel).
     pub sim_scale: Option<crate::perfmodel::SimScale>,
+    /// Drafters sessions may select per-request (`Request::drafter`)
+    /// beyond the default — declared here so the builder validates their
+    /// parameters/artifact budgets up front and the engine precompiles
+    /// them at construction.  Overrides not declared here still work:
+    /// they are validated at submit time and rejected per-session on
+    /// failure.
+    pub extra_drafters: Vec<DrafterKind>,
+    /// Wrap every resolved drafter in the feedback-adaptive speculation
+    /// length controller (`spec::adaptive::AdaptiveK`): each slot
+    /// widens/narrows its per-round draft length from windowed
+    /// verification feedback, bounded above by `k`.
+    pub adaptive_k: bool,
 }
 
 impl EngineConfig {
@@ -90,6 +110,8 @@ impl EngineConfig {
             max_iterations: 1_000_000,
             verbose: false,
             sim_scale: None,
+            extra_drafters: Vec::new(),
+            adaptive_k: false,
         }
     }
 
@@ -171,6 +193,30 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Declare a drafter that sessions may select per-request
+    /// (`Request::drafter`).  Validated in `build` against the same
+    /// artifact/parameter rules as the default drafter, and precompiled
+    /// at engine construction.
+    pub fn allow_drafter(mut self, d: DrafterKind) -> Self {
+        self.cfg.extra_drafters.push(d);
+        self
+    }
+
+    /// Enable the feedback-adaptive speculation-length controller
+    /// (`spec::adaptive`): per-slot draft length follows a windowed
+    /// acceptance-rate estimate, bounded above by `k`.
+    ///
+    /// Interaction with [`Schedule::Unified`]: bucket alignment assumes a
+    /// round period of `k + 1` iterations, so once the controller narrows
+    /// a slot below `k` its verifications drift off the bucket phase and
+    /// verify launches fragment across iterations — adaptation trades
+    /// batching alignment for less rollback waste.  Use Lockstep (or
+    /// accept the fragmentation) when comparing schedules.
+    pub fn adaptive_k(mut self, on: bool) -> Self {
+        self.cfg.adaptive_k = on;
+        self
+    }
+
     /// Validate against the model/artifact shape and return the config.
     /// Catches at construction time what would otherwise surface as a
     /// mid-run artifact-lookup error (or silent mis-serving).
@@ -185,7 +231,7 @@ impl EngineConfigBuilder {
         // Vanilla forces k = 0 inside the engine; everything else verifies
         // with the verify_q{k+1} artifact.
         let k_eff = if cfg.drafter == DrafterKind::Vanilla { 0 } else { cfg.k };
-        if !m.verify_q_variants.contains(&(k_eff + 1)) {
+        if !m.has_verify_q(k_eff + 1) {
             bail!(
                 "k={} needs a verify_q{} artifact; compiled variants {:?} \
                  support k in {:?}",
@@ -195,23 +241,17 @@ impl EngineConfigBuilder {
                 m.verify_q_variants.iter().map(|q| q - 1).collect::<Vec<_>>()
             );
         }
-        match cfg.drafter {
-            DrafterKind::Pillar { w } | DrafterKind::Window { w } | DrafterKind::OracleTopK { w } => {
-                if !m.draft_w_variants.contains(&w) {
-                    bail!(
-                        "draft budget W={w} has no draft_w{w} artifact (variants: {:?})",
-                        m.draft_w_variants
-                    );
-                }
-            }
-            DrafterKind::TriForce { w } => {
-                // sparse_verify is compiled for exactly (draft_budget, spec_k).
-                if w != m.draft_budget {
-                    bail!(
-                        "TriForce W={w} must match the sparse_verify artifact's W={}",
-                        m.draft_budget
-                    );
-                }
+        // Per-drafter parameter/artifact validation: the default drafter
+        // plus every statically declared per-session override, through
+        // the same `spec::validate_drafter` the registry constructors
+        // use — degenerate parameters (NGram { n: 0 }, zero/tiny budgets)
+        // fail here with actionable errors instead of index-underflowing
+        // in draft composition mid-run.
+        for kind in std::iter::once(&cfg.drafter).chain(cfg.extra_drafters.iter()) {
+            validate_drafter(kind, m)?;
+            if let DrafterKind::TriForce { .. } = kind {
+                // sparse_verify is compiled for exactly (draft_budget,
+                // spec_k); the W side is checked by validate_drafter.
                 if k_eff != m.spec_k {
                     bail!(
                         "TriForce k={k_eff} must match the sparse_verify artifact's k={}",
@@ -219,7 +259,6 @@ impl EngineConfigBuilder {
                     );
                 }
             }
-            DrafterKind::Vanilla | DrafterKind::NGram { .. } | DrafterKind::Eagle => {}
         }
         // KV budget: at least one prompt + a full draft round must fit, or
         // nothing can ever be admitted.
@@ -260,8 +299,14 @@ pub struct RunReport {
     pub requests_done: usize,
     /// Sessions cancelled mid-run (always 0 for batch `Engine::run` use).
     pub requests_cancelled: usize,
+    /// Submissions rejected at resolve time (invalid per-session drafter).
+    pub requests_rejected: usize,
     pub tokens_generated: u64,
     pub accept: AcceptStats,
+    /// Acceptance accounting broken down by drafter name — one entry per
+    /// drafter the engine resolved (default + per-session overrides), so
+    /// mixed-drafter runs compare policies within a single batch.
+    pub accept_by: std::collections::BTreeMap<String, AcceptStats>,
     pub kv: crate::kv_cache::KvStats,
     pub offload: crate::kv_cache::OffloadStats,
     pub trace: crate::scheduler::ScheduleTrace,
@@ -361,5 +406,64 @@ mod tests {
             .temperature(-0.5)
             .build(&m)
             .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_drafter_params() {
+        let m = model();
+        // one case per rejection class (see spec::validate_drafter)
+        let e = EngineConfig::builder(DrafterKind::NGram { n: 0 }).build(&m).unwrap_err();
+        assert!(e.to_string().contains("n >= 1"), "{e}");
+        let e = EngineConfig::builder(DrafterKind::NGram { n: 7 }).build(&m).unwrap_err();
+        assert!(e.to_string().contains("<= 4"), "{e}");
+        let e = EngineConfig::builder(DrafterKind::Window { w: 0 })
+            .k(8)
+            .build(&m)
+            .unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+        let e = EngineConfig::builder(DrafterKind::Pillar { w: 4 })
+            .k(8)
+            .build(&m)
+            .unwrap_err();
+        assert!(e.to_string().contains("W >= 8"), "{e}");
+        let e = EngineConfig::builder(DrafterKind::OracleTopK { w: 0 })
+            .k(8)
+            .build(&m)
+            .unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+        // valid params still pass
+        assert!(EngineConfig::builder(DrafterKind::NGram { n: 3 }).k(8).build(&m).is_ok());
+    }
+
+    #[test]
+    fn builder_validates_declared_per_session_drafters() {
+        let m = model();
+        // a bad extra drafter fails the build even with a good default
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+            .k(8)
+            .allow_drafter(DrafterKind::NGram { n: 0 })
+            .build(&m)
+            .is_err());
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+            .k(8)
+            .allow_drafter(DrafterKind::Window { w: 100 })
+            .build(&m)
+            .is_err());
+        // TriForce extras must match the engine k too
+        assert!(EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+            .k(4)
+            .allow_drafter(DrafterKind::TriForce { w: 64 })
+            .build(&m)
+            .is_err());
+        // good extras pass and survive into the config
+        let cfg = EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+            .k(8)
+            .allow_drafter(DrafterKind::NGram { n: 3 })
+            .allow_drafter(DrafterKind::Vanilla)
+            .adaptive_k(true)
+            .build(&m)
+            .unwrap();
+        assert_eq!(cfg.extra_drafters.len(), 2);
+        assert!(cfg.adaptive_k);
     }
 }

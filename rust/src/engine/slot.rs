@@ -1,6 +1,6 @@
 //! Per-slot request state.
 
-use crate::spec::{NGramIndex, PillarState};
+use crate::spec::{DraftMode, NGramIndex, PillarState};
 use crate::workload::Request;
 
 /// Where a slot is inside its speculation round.
@@ -36,6 +36,17 @@ pub struct Slot {
     pub draft_target: usize,
     pub phase: Phase,
     pub bucket: usize,
+    /// Index into the engine's resolved drafter table (per-session
+    /// drafter selection: every slot carries its own policy).
+    pub drafter: usize,
+    /// Cached `Drafter::mode()` of this slot's drafter (hot-loop gate).
+    pub mode: DraftMode,
+    /// Cached sparse budget W — selects the `draft_w{W}` artifact group
+    /// this slot drafts in.
+    pub draft_w: usize,
+    /// Cached `Drafter::wants_dump_refresh()` — whether verification's
+    /// score dump refreshes this slot's critical-token state.
+    pub refresh_dump: bool,
     /// PillarAttn / window critical-token state.
     pub pillar: PillarState,
     /// N-gram history index (NGram + TriForce drafters).

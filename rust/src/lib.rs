@@ -51,6 +51,20 @@
 //! `Engine::run(Vec<Request>)` survives as a batch-compatibility wrapper
 //! with bit-identical outputs.  See `engine::api` for the full surface.
 //!
+//! ## Drafters are plugins
+//!
+//! Every draft policy — PillarAttn, sliding window, n-gram, EAGLE,
+//! TriForce, oracle, vanilla — implements the object-safe
+//! [`spec::Drafter`] trait and resolves through a
+//! [`spec::DrafterRegistry`]; out-of-crate drafters register a
+//! constructor and never touch the engine (`Engine::with_registry`).
+//! Sessions pick their drafter per request (`Request::drafter`), one
+//! engine serves the mixed batch with per-drafter acceptance breakdowns
+//! (`RunReport::accept_by`), and `EngineConfig::adaptive_k` layers the
+//! feedback-adaptive speculation-length controller ([`spec::adaptive`])
+//! on any of them.  See `spec::drafter` for a worked "write your own
+//! drafter" example.
+//!
 //! ## Execution backends
 //!
 //! The default build serves through a **deterministic CPU fallback
@@ -62,20 +76,8 @@
 //! artifacts through PJRT and owns the entire serving loop — Python never
 //! runs on the request path.
 
-// The crate predates the CI clippy gate; these style lints fire on
-// long-standing idioms (index loops over slot arrays, artifact call
-// signatures) that are clearer here than their "fixed" forms.
-#![allow(
-    clippy::needless_range_loop,
-    clippy::too_many_arguments,
-    clippy::manual_div_ceil,
-    clippy::type_complexity,
-    clippy::new_without_default,
-    clippy::collapsible_if,
-    clippy::collapsible_else_if,
-    clippy::comparison_chain,
-    clippy::manual_range_contains
-)]
+// Lint posture lives in Cargo.toml's [lints.clippy] table so it covers
+// every target (lib, bin, tests, examples, benches) from one place.
 
 pub mod bench;
 pub mod engine;

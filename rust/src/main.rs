@@ -28,7 +28,8 @@ fn usage() -> ! {
          \x20            --dataset aime|olympiad|livecode|short  --requests N  --k K  --w W\n\
          \x20            --schedule lockstep|unified  --delayed  --kv-policy conservative|preempt|dynamic\n\
          \x20            --kv-budget TOKENS  --temp T  --seed S  --online-rate R --horizon SECS\n\
-         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select all\n\
+         \x20            --adaptive-k  (feedback-adaptive speculation length, bounded by --k)\n\
+         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select drafter_dispatch all\n\
          common: --artifacts DIR (default ./artifacts)  --out DIR (default ./reports)"
     );
     std::process::exit(2)
@@ -69,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             cfg.temperature = args.f64("temp", 0.0) as f32;
             cfg.seed = args.u64("seed", 7);
             cfg.verbose = args.bool("verbose", false);
+            cfg.adaptive_k = args.bool("adaptive-k", false);
             let mut gen = WorkloadGen::new(
                 rt.cfg.grammar.clone(),
                 rt.cfg.model.clone(),

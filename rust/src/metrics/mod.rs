@@ -108,6 +108,12 @@ impl Histogram {
     }
 }
 
+/// Canonical `"name[tag]"` key for per-group metric breakdowns (e.g. the
+/// per-drafter acceptance/TTFT columns of a mixed-drafter pool).
+pub fn keyed(name: &str, tag: &str) -> String {
+    format!("{name}[{tag}]")
+}
+
 /// Named counters + histograms + monotonically-sampled traces.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -137,6 +143,16 @@ impl Metrics {
 
     pub fn observe(&mut self, name: &str, v: f64) {
         self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// `observe` into the `"name[tag]"` breakdown histogram (see [`keyed`]).
+    pub fn observe_keyed(&mut self, name: &str, tag: &str, v: f64) {
+        self.observe(&keyed(name, tag), v);
+    }
+
+    /// `inc` on the `"name[tag]"` breakdown counter (see [`keyed`]).
+    pub fn inc_keyed(&mut self, name: &str, tag: &str, by: f64) {
+        self.inc(&keyed(name, tag), by);
     }
 
     pub fn trace(&mut self, name: &str, v: f64) {
@@ -304,6 +320,17 @@ mod tests {
         h.record(100.0);
         assert_eq!(h.percentile(100.0), 100.0);
         assert_eq!(h.len(), 11);
+    }
+
+    #[test]
+    fn keyed_breakdowns_land_next_to_aggregates() {
+        let mut m = Metrics::new();
+        m.observe("ttft_s", 0.5);
+        m.observe_keyed("ttft_s", "pillar_w64", 0.5);
+        m.inc_keyed("sessions_completed", "ngram_n3", 1.0);
+        assert_eq!(keyed("ttft_s", "pillar_w64"), "ttft_s[pillar_w64]");
+        assert_eq!(m.histograms["ttft_s[pillar_w64]"].len(), 1);
+        assert_eq!(m.get("sessions_completed[ngram_n3]"), 1.0);
     }
 
     #[test]

@@ -39,6 +39,16 @@ impl ModelConfig {
     pub fn kv_pool_elems(&self) -> usize {
         self.kv_slot_elems() * self.slots
     }
+
+    /// Is a `verify_q{q}` artifact variant compiled?
+    pub fn has_verify_q(&self, q: usize) -> bool {
+        self.verify_q_variants.contains(&q)
+    }
+
+    /// Is a `draft_w{w}` artifact variant compiled?
+    pub fn has_draft_w(&self, w: usize) -> bool {
+        self.draft_w_variants.contains(&w)
+    }
 }
 
 /// Mirror of python/compile/config.py::GrammarConfig (the synthetic
@@ -317,6 +327,9 @@ mod tests {
         assert_eq!(c.artifacts["prefill"].args[1], vec![4, 12, 512, 2, 32]);
         // KV math: 4 layers * 2 * 2 heads * 32 dim * 4 B = 2 KiB per token
         assert_eq!(c.model.kv_bytes_per_token(), 2048);
+        // variant lookups used by drafter validation
+        assert!(c.model.has_verify_q(9) && !c.model.has_verify_q(8));
+        assert!(c.model.has_draft_w(64) && !c.model.has_draft_w(63));
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Feedback-adaptive speculation length (the Vegas-style controller).
+//!
+//! Static speculation wastes draft work whenever acceptance dips: a slot
+//! drafting k = 8 tokens at a 30% per-token acceptance rate burns ~5.6
+//! sparse steps per round that verification then rolls back.  The
+//! speculative-decoding survey (Xia et al.) calls dynamic draft-length
+//! control the main lever beyond drafter quality itself; Vegas shows the
+//! verifier's own feedback is enough signal to steer it online.
+//!
+//! [`AdaptiveK`] is that controller in its simplest robust form — AIMD
+//! over a windowed acceptance-rate estimate:
+//!
+//! * every verification round feeds `observe(drafted, accepted)`;
+//! * the estimate is `Σ accepted / Σ drafted` over the last
+//!   [`AdaptiveKCfg::window`] rounds (per-token acceptance α, the same
+//!   quantity Fig. 12 reports);
+//! * α ≥ `widen_at`  → k grows additively (+1, up to `k_max`);
+//! * α <  `narrow_at` → k halves (down to `k_min`) — rollback waste is
+//!   quadratic-ish in overshoot, so narrowing is multiplicative.
+//!
+//! [`AdaptiveDrafter`] lifts the controller onto any [`Drafter`]: it
+//! keeps one `AdaptiveK` per live request (created in `on_admit`, fed by
+//! `on_verify`, dropped in `on_finish`) and clamps the inner drafter's
+//! [`DraftPlan`] to the per-slot target.  Under greedy decoding the
+//! output tokens are invariant to k (losslessness), so adaptation changes
+//! *scheduling* — rounds, draft launches, wasted steps — never content.
+//!
+//! Note on the unified schedule: bucket alignment (Fig. 8) assumes every
+//! round spans `k + 1` iterations; a slot narrowed below `k` verifies
+//! early and drifts off its bucket phase, fragmenting verify launches.
+//! That trade is deliberate (see `EngineConfigBuilder::adaptive_k`).
+//!
+//! Methodology and measured behaviour: EXPERIMENTS.md §AdaptiveK.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use super::drafter::{DraftCtx, DraftHost, DraftMode, DraftPlan, Drafter, VerifyFeedback};
+use super::{DrafterKind, IndexPolicy};
+use crate::engine::Slot;
+use crate::model::ModelConfig;
+
+/// Controller tuning (defaults match the EXPERIMENTS.md methodology).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveKCfg {
+    /// Never narrow below this (1 keeps speculation alive so the
+    /// estimate can recover).
+    pub k_min: usize,
+    /// Rounds in the acceptance window.
+    pub window: usize,
+    /// Widen (+1) when the windowed α reaches this.
+    pub widen_at: f64,
+    /// Halve when the windowed α falls below this.
+    pub narrow_at: f64,
+}
+
+impl Default for AdaptiveKCfg {
+    fn default() -> Self {
+        AdaptiveKCfg { k_min: 1, window: 8, widen_at: 0.8, narrow_at: 0.4 }
+    }
+}
+
+/// Per-slot AIMD speculation-length controller (see module docs).
+#[derive(Clone, Debug)]
+pub struct AdaptiveK {
+    cfg: AdaptiveKCfg,
+    k_max: usize,
+    k: usize,
+    /// (drafted, accepted) per round, newest last.
+    hist: VecDeque<(u32, u32)>,
+}
+
+impl AdaptiveK {
+    /// Start optimistic at `k_max` (identical to the static drafter until
+    /// feedback says otherwise).
+    pub fn new(k_max: usize) -> AdaptiveK {
+        AdaptiveK::with_cfg(k_max, AdaptiveKCfg::default())
+    }
+
+    pub fn with_cfg(k_max: usize, cfg: AdaptiveKCfg) -> AdaptiveK {
+        let k_max = k_max.max(1);
+        AdaptiveK {
+            cfg: AdaptiveKCfg { k_min: cfg.k_min.clamp(1, k_max), ..cfg },
+            k_max,
+            k: k_max,
+            hist: VecDeque::new(),
+        }
+    }
+
+    /// Current speculation-length target, always in `[k_min, k_max]`.
+    pub fn target(&self) -> usize {
+        self.k
+    }
+
+    /// Windowed per-token acceptance rate α, if any tokens were drafted
+    /// in the window.
+    pub fn rate(&self) -> Option<f64> {
+        let (d, a) = self
+            .hist
+            .iter()
+            .fold((0u64, 0u64), |(d, a), &(dr, ac)| (d + dr as u64, a + ac as u64));
+        if d == 0 {
+            None
+        } else {
+            Some(a as f64 / d as f64)
+        }
+    }
+
+    /// Feed one verification round and adjust the target.
+    pub fn observe(&mut self, drafted: usize, accepted: usize) {
+        self.hist.push_back((drafted as u32, accepted as u32));
+        while self.hist.len() > self.cfg.window {
+            self.hist.pop_front();
+        }
+        let Some(rate) = self.rate() else { return };
+        if rate >= self.cfg.widen_at {
+            self.k = (self.k + 1).min(self.k_max);
+        } else if rate < self.cfg.narrow_at {
+            self.k = (self.k / 2).max(self.cfg.k_min);
+        }
+    }
+}
+
+/// Wrap any drafter with per-session adaptive speculation length.
+///
+/// Enabled engine-wide by `EngineConfig::adaptive_k` (every resolved
+/// drafter gets wrapped), or construct directly and register under a
+/// custom name.  Capabilities (mode, artifacts, index policy) delegate to
+/// the inner drafter; only the round-size decision is intercepted.
+pub struct AdaptiveDrafter {
+    inner: Box<dyn Drafter>,
+    k_max: usize,
+    cfg: AdaptiveKCfg,
+    ctl: HashMap<u64, AdaptiveK>,
+}
+
+impl AdaptiveDrafter {
+    pub fn new(inner: Box<dyn Drafter>, k_max: usize) -> AdaptiveDrafter {
+        AdaptiveDrafter::with_cfg(inner, k_max, AdaptiveKCfg::default())
+    }
+
+    pub fn with_cfg(inner: Box<dyn Drafter>, k_max: usize, cfg: AdaptiveKCfg) -> AdaptiveDrafter {
+        AdaptiveDrafter { inner, k_max, cfg, ctl: HashMap::new() }
+    }
+
+    fn target_for(&self, req_id: u64) -> usize {
+        self.ctl
+            .get(&req_id)
+            .map(|c| c.target())
+            .unwrap_or(self.k_max.max(1))
+    }
+
+    /// The live controller for a request (introspection/tests).
+    pub fn controller(&self, req_id: u64) -> Option<&AdaptiveK> {
+        self.ctl.get(&req_id)
+    }
+}
+
+impl Drafter for AdaptiveDrafter {
+    fn kind(&self) -> DrafterKind {
+        self.inner.kind()
+    }
+
+    fn name(&self) -> String {
+        format!("adaptive-{}", self.inner.name())
+    }
+
+    fn mode(&self) -> DraftMode {
+        self.inner.mode()
+    }
+
+    fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+        self.inner.index_policy(m)
+    }
+
+    fn draft_budget(&self, m: &ModelConfig) -> usize {
+        self.inner.draft_budget(m)
+    }
+
+    fn artifacts(&self, k: usize) -> Vec<String> {
+        self.inner.artifacts(k)
+    }
+
+    fn ngram_order(&self) -> usize {
+        self.inner.ngram_order()
+    }
+
+    fn wants_dump_refresh(&self) -> bool {
+        self.inner.wants_dump_refresh()
+    }
+
+    fn validate_engine(&self, m: &ModelConfig, k: usize) -> Result<()> {
+        self.inner.validate_engine(m, k)
+    }
+
+    fn on_admit(&mut self, req_id: u64, resumed: bool) {
+        // Fresh admissions (and preempt restarts) reset the controller;
+        // a host-tier reload keeps the learned estimate.
+        if !resumed || !self.ctl.contains_key(&req_id) {
+            self.ctl
+                .insert(req_id, AdaptiveK::with_cfg(self.k_max, self.cfg));
+        }
+        self.inner.on_admit(req_id, resumed);
+    }
+
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+        let cap = self.target_for(ctx.req_id);
+        let mut plan = self.inner.plan(ctx);
+        plan.target = plan.target.min(cap);
+        plan.tokens.truncate(cap.max(1));
+        plan
+    }
+
+    fn propose_batch(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        let launches = self.inner.propose_batch(host, slots, idxs)?;
+        // Inner drafters with custom batch hooks (EAGLE, TriForce) size
+        // proposals at host.k; clamp them to the per-slot target after
+        // the fact (draft_probs rows must stay in lockstep with drafts).
+        let vocab = host.m.vocab;
+        for &i in idxs {
+            let Some(slot) = slots[i].as_mut() else { continue };
+            let cap = self.target_for(slot.req.id).max(1);
+            if slot.drafts.len() > cap {
+                slot.drafts.truncate(cap);
+                slot.draft_probs.truncate(cap * vocab);
+            }
+        }
+        Ok(launches)
+    }
+
+    fn after_draft(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        self.inner.after_draft(host, slots, idxs)
+    }
+
+    fn on_verify(&mut self, fb: &VerifyFeedback) {
+        self.ctl
+            .entry(fb.req_id)
+            .or_insert_with(|| AdaptiveK::with_cfg(self.k_max, self.cfg))
+            .observe(fb.drafted, fb.accepted);
+        self.inner.on_verify(fb);
+    }
+
+    fn on_finish(&mut self, req_id: u64) {
+        self.ctl.remove(&req_id);
+        self.inner.on_finish(req_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::drafter::PillarDrafter;
+
+    #[test]
+    fn high_acceptance_converges_to_k_max() {
+        let mut c = AdaptiveK::new(8);
+        assert_eq!(c.target(), 8, "starts optimistic");
+        // knock it down first
+        for _ in 0..6 {
+            c.observe(8, 0);
+        }
+        assert!(c.target() < 8);
+        for _ in 0..32 {
+            let k = c.target();
+            c.observe(k, k); // perfect acceptance
+        }
+        assert_eq!(c.target(), 8, "full acceptance must recover k_max");
+    }
+
+    #[test]
+    fn low_acceptance_converges_to_k_min() {
+        let mut c = AdaptiveK::new(8);
+        for _ in 0..12 {
+            let k = c.target();
+            c.observe(k, 0);
+        }
+        assert_eq!(c.target(), 1, "zero acceptance must reach k_min");
+        // and it never leaves the bounds on any stream
+        let mut c = AdaptiveK::new(8);
+        for i in 0..200 {
+            let k = c.target();
+            c.observe(k, if i % 3 == 0 { k } else { 0 });
+            assert!(c.target() >= 1 && c.target() <= 8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn window_forgets_old_rounds() {
+        let mut c = AdaptiveK::with_cfg(
+            8,
+            AdaptiveKCfg { window: 4, ..AdaptiveKCfg::default() },
+        );
+        for _ in 0..8 {
+            c.observe(8, 0);
+        }
+        let low = c.rate().unwrap();
+        assert_eq!(low, 0.0);
+        for _ in 0..4 {
+            c.observe(8, 8);
+        }
+        assert_eq!(c.rate().unwrap(), 1.0, "window must have dropped the zeros");
+    }
+
+    #[test]
+    fn rate_is_windowed_alpha() {
+        let mut c = AdaptiveK::new(8);
+        assert!(c.rate().is_none());
+        c.observe(8, 4);
+        c.observe(8, 8);
+        assert!((c.rate().unwrap() - 12.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_wrapper_tracks_per_request_state() {
+        let mut d = AdaptiveDrafter::new(Box::new(PillarDrafter { w: 64 }), 8);
+        assert_eq!(d.name(), "adaptive-pillar_w64");
+        assert_eq!(d.mode(), DraftMode::SelfSpec);
+        assert!(d.wants_dump_refresh());
+        d.on_admit(1, false);
+        d.on_admit(2, false);
+        // request 1 collapses, request 2 stays perfect
+        for _ in 0..12 {
+            d.on_verify(&VerifyFeedback {
+                req_id: 1,
+                slot_idx: 0,
+                drafted: 8,
+                accepted: 0,
+                bonus_token: 0,
+                context_len: 10,
+            });
+            d.on_verify(&VerifyFeedback {
+                req_id: 2,
+                slot_idx: 1,
+                drafted: 8,
+                accepted: 8,
+                bonus_token: 0,
+                context_len: 10,
+            });
+        }
+        let ctx = |id| DraftCtx {
+            req_id: id,
+            slot_idx: 0,
+            k: 8,
+            sched_cap: 8,
+            len: 10,
+            remaining: 100,
+            pending: 0,
+            first_round: false,
+            ngram: None,
+        };
+        assert_eq!(d.plan(&ctx(1)).target, 1, "collapsed request narrows");
+        assert_eq!(d.plan(&ctx(2)).target, 8, "healthy request keeps k");
+        d.on_finish(1);
+        assert!(d.controller(1).is_none(), "state dropped at finish");
+        // unknown request falls back to k_max (defensive)
+        assert_eq!(d.plan(&ctx(99)).target, 8);
+    }
+}

@@ -1,0 +1,1034 @@
+//! The pluggable `Drafter` API — the engine as a plugin host.
+//!
+//! The paper's central systems claim is that *one* engine (dense
+//! verification, unified scheduling, dynamic KV) can host *many* draft
+//! policies: PillarAttn self-speculation, sliding windows, n-gram lookup,
+//! TriForce-style hierarchies, trained heads, oracles.  This module makes
+//! that claim an API instead of an enum interpreter: every draft policy is
+//! an object-safe [`Drafter`] the engine drives through lifecycle hooks,
+//! and a [`DrafterRegistry`] maps names to constructors so out-of-crate
+//! drafters plug in without touching `engine/core.rs`.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//!   admission            round start          draft phase        verification
+//!   on_admit(id)  ──►  plan(&DraftCtx)  ──►  (engine-run sparse  ──►  on_verify(
+//!                        -> DraftPlan          steps, or                &VerifyFeedback)
+//!                                              propose_batch /          ... next round
+//!   retire/cancel: on_finish(id)               after_draft hooks)
+//! ```
+//!
+//! * **Capabilities** ([`Drafter::mode`], [`Drafter::index_policy`],
+//!   [`Drafter::artifacts`], [`Drafter::wants_dump_refresh`]) are read at
+//!   admission and engine construction: they tell the engine which
+//!   compiled artifact variants the drafter touches, how its per-slot
+//!   sparse index sets are composed, and whether verification's attention
+//!   score dump feeds back into selection.
+//! * **[`Drafter::plan`]** is the host-free per-round hook: it sizes the
+//!   speculation (`DraftPlan::target`, clamped by the engine to the
+//!   schedule cap and the request's remaining budget) and, for proposal
+//!   drafters, returns the draft tokens themselves.
+//! * **[`Drafter::propose_batch`] / [`Drafter::after_draft`]** are the
+//!   batch hooks for drafters that need model access (EAGLE's head calls,
+//!   TriForce's sparse middle-layer verify, the oracle's exact-score
+//!   refresh).  The engine groups slots by drafter and hands over a
+//!   [`DraftHost`] with the runner, RNG and accounting — one call per
+//!   drafter per iteration, so batching across slots is preserved.
+//! * **[`Drafter::on_verify`]** closes the loop with per-round acceptance
+//!   feedback; adaptive policies (see [`crate::spec::adaptive`]) use it to
+//!   widen/narrow their speculation length online.
+//!
+//! # Write your own drafter
+//!
+//! A drafter that just re-proposes the pending token (a "parrot") needs
+//! ~20 lines and zero engine changes:
+//!
+//! ```no_run
+//! use std::rc::Rc;
+//! use sparsespec::engine::{Engine, EngineConfig};
+//! use sparsespec::model::ModelConfig;
+//! use sparsespec::runtime::Runtime;
+//! use sparsespec::spec::{
+//!     DraftCtx, DraftMode, DraftPlan, Drafter, DrafterKind, DrafterRegistry, IndexPolicy,
+//! };
+//!
+//! struct Parrot;
+//!
+//! impl Drafter for Parrot {
+//!     fn kind(&self) -> DrafterKind {
+//!         DrafterKind::Custom { name: "parrot" }
+//!     }
+//!     fn mode(&self) -> DraftMode {
+//!         DraftMode::Proposal
+//!     }
+//!     fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+//!         IndexPolicy::pillar(m.draft_budget) // unused: no sparse steps
+//!     }
+//!     fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+//!         // Guess the pending token keeps repeating; dense verification
+//!         // keeps this lossless no matter how wrong the guess is.
+//!         DraftPlan::proposals(vec![ctx.pending; ctx.k.min(ctx.remaining.max(1))])
+//!     }
+//! }
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut reg = DrafterRegistry::with_builtins();
+//! reg.register("parrot", |_kind, _m| Ok(Box::new(Parrot)));
+//! let rt = Rc::new(Runtime::load("artifacts")?);
+//! let cfg = EngineConfig::new(DrafterKind::Custom { name: "parrot" }).with_k(8);
+//! let _engine = Engine::with_registry(rt, cfg, reg)?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Per-session selection: set [`crate::workload::Request::drafter`] and the
+//! engine resolves it through the same registry at submit time — sessions
+//! with different drafters share one batch, one verification artifact and
+//! one KV pool (validated at `EngineConfig::builder` time for statically
+//! declared drafters, at submit time for dynamic ones).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{DrafterKind, IndexPolicy, NGramIndex};
+use crate::engine::{Phase, Slot};
+use crate::model::ModelConfig;
+use crate::runtime::ModelRunner;
+use crate::sampling;
+use crate::scheduler::IterComposition;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::ThreadPool;
+
+/// What class of engine execution a drafter needs each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftMode {
+    /// No speculation at all: every round is a single-query dense
+    /// verification (the vanilla baseline).  The engine compiles
+    /// `verify_q1` and forces `k = 0` when this is the default drafter.
+    Off,
+    /// Sparse self-speculative draft steps on the target model: the
+    /// engine runs `DraftPlan::target` sparse steps through the
+    /// `draft_w{W}` artifact, composing index sets from the slot's
+    /// [`crate::spec::PillarState`].
+    SelfSpec,
+    /// Host/auxiliary proposal generation (n-gram lookup, trained heads,
+    /// hierarchical drafts): the engine fills the slot's draft buffer
+    /// from [`Drafter::plan`] tokens or a [`Drafter::propose_batch`]
+    /// override, then verifies densely as usual.
+    Proposal,
+}
+
+/// Per-round planning context handed to [`Drafter::plan`].
+///
+/// Everything here is a value snapshot of the slot (plus a read-only view
+/// of its n-gram history), so `plan` never borrows engine internals.
+pub struct DraftCtx<'a> {
+    /// Request id (the per-session key for adaptive state).
+    pub req_id: u64,
+    /// Engine slot index.
+    pub slot_idx: usize,
+    /// The engine's configured speculation ceiling (`EngineConfig::k`).
+    pub k: usize,
+    /// Scheduler cap for this round (bucket alignment can shorten a
+    /// first round under the unified schedule).  The engine clamps the
+    /// returned target to this.
+    pub sched_cap: usize,
+    /// Current KV frontier (valid context length).
+    pub len: usize,
+    /// Generation budget left for this request.
+    pub remaining: usize,
+    /// The pending (sampled, not yet KV-written) token — the round's
+    /// anchor.
+    pub pending: i32,
+    /// True for the first round after admission/reload.
+    pub first_round: bool,
+    /// The slot's n-gram history index (prompt + accepted output).
+    pub ngram: Option<&'a NGramIndex>,
+}
+
+/// What a drafter wants to do this round (see [`Drafter::plan`]).
+#[derive(Clone, Debug, Default)]
+pub struct DraftPlan {
+    /// Speculation length for this round, before the engine clamps it to
+    /// the schedule cap and the remaining generation budget.  `0` means a
+    /// verify-only round.
+    pub target: usize,
+    /// Host-proposed draft tokens (proposal drafters).  Self-spec
+    /// drafters leave this empty: the engine runs `target` sparse draft
+    /// steps instead.
+    pub tokens: Vec<i32>,
+}
+
+impl DraftPlan {
+    /// Plan `n` engine-run sparse draft steps (self-spec drafters).
+    pub fn steps(n: usize) -> DraftPlan {
+        DraftPlan { target: n, tokens: Vec::new() }
+    }
+
+    /// Plan with concrete proposal tokens (proposal drafters).
+    pub fn proposals(tokens: Vec<i32>) -> DraftPlan {
+        DraftPlan { target: tokens.len(), tokens }
+    }
+}
+
+/// Verification feedback delivered to [`Drafter::on_verify`] after every
+/// round that touched one of the drafter's slots.
+///
+/// The attention score dump itself is not carried here: drafters that
+/// consume it declare [`Drafter::wants_dump_refresh`] and the engine
+/// refreshes the slot's `PillarState` on its worker pool, overlapped with
+/// device work — the zero-copy fast path of §4.1/§4.3.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyFeedback {
+    pub req_id: u64,
+    pub slot_idx: usize,
+    /// Tokens drafted this round.
+    pub drafted: usize,
+    /// Drafted tokens accepted (bonus token not counted, per §5.3).
+    pub accepted: usize,
+    /// The correction/bonus token verification sampled.
+    pub bonus_token: i32,
+    /// KV frontier after rollback (round start + accepted + 1).
+    pub context_len: usize,
+}
+
+/// Engine-side services handed to the batch hooks
+/// ([`Drafter::propose_batch`], [`Drafter::after_draft`]): the model
+/// runner, configuration, RNG and the iteration's accounting sinks.
+pub struct DraftHost<'a> {
+    pub runner: &'a mut ModelRunner,
+    pub m: &'a ModelConfig,
+    /// Engine speculation ceiling.
+    pub k: usize,
+    pub temperature: f32,
+    /// EAGLE head context length (from the runtime config).
+    pub eagle_ctx: usize,
+    pub rng: &'a mut Xoshiro256,
+    /// Per-iteration batch composition (feeds the simulated clock).
+    pub comp: &'a mut IterComposition,
+    /// Host CPU seconds consumed this iteration.
+    pub cpu_s: &'a mut f64,
+    pub pool: &'a ThreadPool,
+}
+
+/// An object-safe draft policy.  See the module docs for the lifecycle
+/// and a complete out-of-crate example.
+pub trait Drafter {
+    /// The parse/CLI-layer tag this instance answers to (`DrafterKind`
+    /// survives as the serialisable surface; the trait is the behaviour).
+    fn kind(&self) -> DrafterKind;
+
+    /// Display/metrics name (defaults to `kind().name()`); keys the
+    /// per-drafter acceptance breakdowns in `RunReport::accept_by`.
+    fn name(&self) -> String {
+        self.kind().name()
+    }
+
+    /// Execution class the engine must provide (see [`DraftMode`]).
+    fn mode(&self) -> DraftMode;
+
+    /// How this drafter's per-(layer, head) sparse index sets are
+    /// composed (sinks / recent window / score-selected split).
+    fn index_policy(&self, m: &ModelConfig) -> IndexPolicy;
+
+    /// Sparse budget W — selects the `draft_w{W}` artifact variant for
+    /// self-spec drafters and sizes the slot's index state.
+    fn draft_budget(&self, m: &ModelConfig) -> usize {
+        self.kind().budget().unwrap_or(m.draft_budget)
+    }
+
+    /// Artifact names (beyond `prefill` / the engine's dense verify) this
+    /// drafter can touch, for up-front precompilation.
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// n-gram history order kept per slot (NGram/TriForce consume it;
+    /// everyone else gets the cheap default).
+    fn ngram_order(&self) -> usize {
+        3
+    }
+
+    /// Should verification's attention score dump refresh the slot's
+    /// critical-token state?  (PillarAttn: yes; pure windows: no.)
+    fn wants_dump_refresh(&self) -> bool {
+        false
+    }
+
+    /// Engine-level compatibility check at resolve time (e.g. TriForce's
+    /// `sparse_verify` artifact is compiled for exactly one (W, k)).
+    fn validate_engine(&self, _m: &ModelConfig, _k: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// A request using this drafter entered a device slot (`resumed` when
+    /// reloading from the host KV tier rather than a fresh admission).
+    fn on_admit(&mut self, _req_id: u64, _resumed: bool) {}
+
+    /// Size the next speculation round / produce proposal tokens.  Called
+    /// at round start for self-spec drafters and per proposal-fill for
+    /// proposal drafters (via the default [`Drafter::propose_batch`]).
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan;
+
+    /// Batched proposal generation over this drafter's slots (`idxs` are
+    /// the slots owned by this drafter that need drafts this iteration).
+    /// The default loops [`Drafter::plan`] per slot — override it when
+    /// proposals need model access so calls stay batched.  Returns the
+    /// number of device launches performed.
+    fn propose_batch(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        let t = Instant::now();
+        for &i in idxs {
+            let plan = {
+                let slot = slots[i].as_ref().expect("proposal slot vanished");
+                let ctx = DraftCtx {
+                    req_id: slot.req.id,
+                    slot_idx: i,
+                    k: host.k,
+                    sched_cap: host.k,
+                    len: slot.len,
+                    remaining: slot.remaining(),
+                    pending: slot.pending,
+                    first_round: false,
+                    ngram: Some(&slot.ngram),
+                };
+                self.plan(&ctx)
+            };
+            let slot = slots[i].as_mut().unwrap();
+            // The drafter sizes its own proposal (plan.tokens); the engine
+            // clamp only enforces the k ceiling and the remaining budget.
+            let cap = host.k.min(slot.remaining().max(1));
+            let mut props = plan.tokens;
+            props.truncate(cap);
+            set_proposals(slot, props, host.m.vocab);
+        }
+        *host.cpu_s += t.elapsed().as_secs_f64();
+        Ok(0)
+    }
+
+    /// Hook after the engine ran a sparse draft step for this drafter's
+    /// slots (the oracle refreshes critical tokens from exact scores
+    /// here).  Returns the number of device launches performed.
+    fn after_draft(
+        &mut self,
+        _host: &mut DraftHost,
+        _slots: &mut [Option<Slot>],
+        _idxs: &[usize],
+    ) -> Result<u32> {
+        Ok(0)
+    }
+
+    /// Per-round verification feedback (acceptance, bonus token, new
+    /// frontier).  Adaptive policies steer their next `plan` from this.
+    fn on_verify(&mut self, _fb: &VerifyFeedback) {}
+
+    /// The request finished (completed or cancelled): drop per-session
+    /// state.
+    fn on_finish(&mut self, _req_id: u64) {}
+}
+
+/// Install proposal tokens as the slot's drafts (with one-hot q rows for
+/// the stochastic verifier, since proposals are deterministic).
+pub fn set_proposals(slot: &mut Slot, props: Vec<i32>, vocab: usize) {
+    slot.draft_probs.clear();
+    for &p in &props {
+        let mut onehot = vec![0.0f32; vocab];
+        onehot[p as usize] = 1.0;
+        slot.draft_probs.extend(onehot);
+    }
+    slot.drafts = props;
+    slot.phase = Phase::ReadyVerify;
+}
+
+/// Construction-time validation of a drafter configuration against the
+/// compiled artifact shape — shared by `EngineConfig::builder`, the
+/// builtin registry constructors and the engine's submit-time resolution,
+/// so degenerate parameters (`NGram { n: 0 }`, zero/tiny budgets) fail
+/// with an actionable error instead of a mid-run index underflow.
+pub fn validate_drafter(kind: &DrafterKind, m: &ModelConfig) -> Result<()> {
+    match *kind {
+        DrafterKind::Vanilla | DrafterKind::Eagle | DrafterKind::Custom { .. } => Ok(()),
+        DrafterKind::NGram { n } => {
+            if n == 0 {
+                bail!(
+                    "NGram drafter needs n >= 1: an empty suffix can never match \
+                     and n = 0 underflows draft composition"
+                );
+            }
+            if n > 4 {
+                bail!("NGram drafter packs keys into a u64: n must be <= 4 (got {n})");
+            }
+            Ok(())
+        }
+        DrafterKind::Pillar { w } | DrafterKind::Window { w } | DrafterKind::OracleTopK { w } => {
+            validate_budget(kind, w, m)?;
+            if !m.has_draft_w(w) {
+                bail!(
+                    "draft budget W={w} has no draft_w{w} artifact (variants: {:?})",
+                    m.draft_w_variants
+                );
+            }
+            Ok(())
+        }
+        DrafterKind::TriForce { w } => {
+            validate_budget(kind, w, m)?;
+            // sparse_verify is compiled for exactly (draft_budget, spec_k).
+            if w != m.draft_budget {
+                bail!(
+                    "TriForce W={w} must match the sparse_verify artifact's W={}",
+                    m.draft_budget
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
+fn validate_budget(kind: &DrafterKind, w: usize, _m: &ModelConfig) -> Result<()> {
+    // The sinks + recent-window split needs room: below 8 the policy
+    // degenerates (no sinks, window == budget) and W = 0 would compose
+    // empty index sets that the draft kernels reject as all-holes.
+    if w < 8 {
+        bail!(
+            "{} has a degenerate draft budget W={w}: the sinks/recent/top-k \
+             split needs W >= 8",
+            kind.name()
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// builtin drafters — the seven DrafterKind variants, ported onto the trait
+// ---------------------------------------------------------------------
+
+/// No speculation: dense autoregressive decode (the vLLM baseline).
+pub struct VanillaDrafter;
+
+impl Drafter for VanillaDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::Vanilla
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::Off
+    }
+
+    fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::pillar(m.draft_budget) // constructed, never composed
+    }
+
+    fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::steps(0)
+    }
+}
+
+/// SparseSpec: PillarAttn self-speculation — critical tokens re-selected
+/// from the verification score dump every round (§4.1).
+pub struct PillarDrafter {
+    pub w: usize,
+}
+
+impl Drafter for PillarDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::Pillar { w: self.w }
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::SelfSpec
+    }
+
+    fn index_policy(&self, _m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::pillar(self.w)
+    }
+
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        vec![format!("draft_w{}", self.w)]
+    }
+
+    fn wants_dump_refresh(&self) -> bool {
+        true
+    }
+
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::steps(ctx.k)
+    }
+}
+
+/// MagicDec / StreamingLLM-style: attention sinks + sliding window, no
+/// score feedback at all.
+pub struct WindowDrafter {
+    pub w: usize,
+}
+
+impl Drafter for WindowDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::Window { w: self.w }
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::SelfSpec
+    }
+
+    fn index_policy(&self, _m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::window(self.w)
+    }
+
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        vec![format!("draft_w{}", self.w)]
+    }
+
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::steps(ctx.k)
+    }
+}
+
+/// Oracle top-k (Fig. 3): critical tokens refreshed from *exact* scores
+/// after every draft step via a dense q=1 pass — the upper bound for
+/// dynamic sparse selection (acceptance comparisons only; not a
+/// wallclock-fair system).
+pub struct OracleDrafter {
+    pub w: usize,
+}
+
+impl Drafter for OracleDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::OracleTopK { w: self.w }
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::SelfSpec
+    }
+
+    fn index_policy(&self, _m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::pillar(self.w)
+    }
+
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        vec![format!("draft_w{}", self.w), "verify_q1".into()]
+    }
+
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::steps(ctx.k)
+    }
+
+    /// One dense q=1 pass over the slots that just drafted, then refresh
+    /// each slot's critical tokens from the exact score dump.
+    fn after_draft(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        if idxs.is_empty() {
+            return Ok(0);
+        }
+        let m = host.m;
+        let mut toks = vec![0i32; m.slots];
+        let mut opos = vec![0i32; m.slots];
+        let qv = vec![1i32; m.slots];
+        let mut act = vec![0i32; m.slots];
+        for &i in idxs {
+            let slot = slots[i].as_ref().expect("oracle slot vanished");
+            // re-feed the token we just wrote, at its own position
+            toks[i] = slot.pending;
+            opos[i] = (slot.len - 1) as i32;
+            act[i] = 1;
+        }
+        let vo = host.runner.verify(1, &toks, &opos, &qv, &act)?;
+        let t_dim = m.max_seq;
+        let per = m.layers * m.kv_heads * t_dim;
+        let t_sel = Instant::now();
+        for &i in idxs {
+            let slot = slots[i].as_mut().unwrap();
+            let dump = &vo.dump[i * per..(i + 1) * per];
+            let len = slot.len;
+            slot.pillar.refresh_parallel(dump, t_dim, len, host.pool);
+        }
+        host.runner
+            .stats
+            .note_host("pillar_select", t_sel.elapsed().as_secs_f64());
+        host.comp.attn_bytes +=
+            idxs.len() * slots[idxs[0]].as_ref().map(|s| s.len).unwrap_or(0) * m.kv_bytes_per_token();
+        Ok(1)
+    }
+}
+
+/// vLLM-NGram: longest-suffix n-gram lookup over the request's own
+/// history — host-only, no draft-model pass at all.
+pub struct NGramDrafter {
+    pub n: usize,
+}
+
+impl Drafter for NGramDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::NGram { n: self.n }
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::Proposal
+    }
+
+    fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::pillar(m.draft_budget) // constructed, never composed
+    }
+
+    fn ngram_order(&self) -> usize {
+        self.n
+    }
+
+    fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
+        let kk = ctx.k.min(ctx.remaining.max(1));
+        let props = ctx.ngram.map(|ix| ix.propose(kk)).unwrap_or_default();
+        DraftPlan::proposals(props)
+    }
+}
+
+/// EAGLE-like trained draft head (Fig. 11): k sequential head calls,
+/// batched across every slot that needs proposals.
+pub struct EagleDrafter;
+
+impl Drafter for EagleDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::Eagle
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::Proposal
+    }
+
+    fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::pillar(m.draft_budget) // constructed, never composed
+    }
+
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        vec!["eagle".into()]
+    }
+
+    /// Drafts through `propose_batch` (needs the head artifact); the
+    /// host-free path proposes nothing.
+    fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::proposals(Vec::new())
+    }
+
+    fn propose_batch(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        if idxs.is_empty() {
+            return Ok(0);
+        }
+        let m = host.m;
+        let ectx = host.eagle_ctx;
+        let k = host.k;
+        // k sequential head calls, batched across slots.
+        let mut ctxs: Vec<Vec<i32>> = vec![vec![0; ectx]; m.slots];
+        for &i in idxs {
+            let slot = slots[i].as_ref().expect("eagle slot vanished");
+            let full = slot.full_context();
+            let tail = &full[full.len().saturating_sub(ectx)..];
+            let mut c = vec![0i32; ectx];
+            c[ectx - tail.len()..].copy_from_slice(tail);
+            ctxs[i] = c;
+        }
+        let mut proposals: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
+        let mut launches = 0u32;
+        for _ in 0..k {
+            let flat: Vec<i32> = ctxs.iter().flatten().copied().collect();
+            let logits = host.runner.eagle(&flat)?;
+            launches += 1;
+            for &i in idxs {
+                let row = &logits[i * m.vocab..(i + 1) * m.vocab];
+                let t = sampling::argmax(row) as i32;
+                proposals[i].push(t);
+                ctxs[i].rotate_left(1);
+                let last = ctxs[i].len() - 1;
+                ctxs[i][last] = t;
+            }
+        }
+        host.comp.gemm_rows += idxs.len(); // head rows are tiny
+        let t = Instant::now();
+        for &i in idxs {
+            let slot = slots[i].as_mut().unwrap();
+            let kk = k.min(slot.remaining().max(1));
+            let props = proposals[i][..kk].to_vec();
+            set_proposals(slot, props, m.vocab);
+        }
+        *host.cpu_s += t.elapsed().as_secs_f64();
+        Ok(launches)
+    }
+}
+
+/// TriForce-like hierarchy: n-gram chunk proposals corrected by the
+/// sparse-window model (`sparse_verify` artifact), then verified densely
+/// like everyone else.
+pub struct TriForceDrafter {
+    pub w: usize,
+}
+
+impl Drafter for TriForceDrafter {
+    fn kind(&self) -> DrafterKind {
+        DrafterKind::TriForce { w: self.w }
+    }
+
+    fn mode(&self) -> DraftMode {
+        DraftMode::Proposal
+    }
+
+    fn index_policy(&self, _m: &ModelConfig) -> IndexPolicy {
+        IndexPolicy::window(self.w)
+    }
+
+    fn artifacts(&self, _k: usize) -> Vec<String> {
+        vec!["sparse_verify".into()]
+    }
+
+    fn validate_engine(&self, m: &ModelConfig, k: usize) -> Result<()> {
+        // sparse_verify is compiled for exactly (draft_budget, spec_k).
+        if k != m.spec_k {
+            bail!(
+                "TriForce k={k} must match the sparse_verify artifact's k={}",
+                m.spec_k
+            );
+        }
+        Ok(())
+    }
+
+    /// Drafts through `propose_batch` (needs the sparse middle layer);
+    /// the host-free path proposes nothing.
+    fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
+        DraftPlan::proposals(Vec::new())
+    }
+
+    fn propose_batch(
+        &mut self,
+        host: &mut DraftHost,
+        slots: &mut [Option<Slot>],
+        idxs: &[usize],
+    ) -> Result<u32> {
+        if idxs.is_empty() {
+            return Ok(0);
+        }
+        let m = host.m;
+        let w = self.w;
+        let k = host.k;
+        let q = k + 1;
+        let t = Instant::now();
+        let mut tokens = vec![0i32; m.slots * q];
+        let mut pos = vec![0i32; m.slots];
+        let mut qv = vec![1i32; m.slots];
+        let mut idx_buf = vec![0i32; m.slots * m.layers * m.kv_heads * w];
+        let mut active = vec![0i32; m.slots];
+        let mut props: Vec<Vec<i32>> = vec![Vec::new(); m.slots];
+        for &i in idxs {
+            let slot = slots[i].as_ref().expect("triforce slot vanished");
+            // level-1: n-gram chunk proposal
+            let mut p = slot.ngram.propose(k);
+            if p.is_empty() {
+                // no match: degenerate to the window model's own
+                // prediction chain (propose anchor continuation)
+                p = vec![slot.pending; 1];
+            }
+            p.truncate(k);
+            tokens[i * q] = slot.pending;
+            for (j, &pt) in p.iter().enumerate() {
+                tokens[i * q + 1 + j] = pt;
+            }
+            qv[i] = (1 + p.len()) as i32;
+            pos[i] = slot.len as i32;
+            let per_slot = m.layers * m.kv_heads * w;
+            let base = i * per_slot;
+            slot.pillar
+                .compose_into(&mut idx_buf[base..base + per_slot], slot.len + q);
+            active[i] = 1;
+            props[i] = p;
+        }
+        *host.cpu_s += t.elapsed().as_secs_f64();
+        host.comp.gemm_rows += idxs.len() * q;
+        host.comp.attn_bytes += idxs.len() * w * m.kv_bytes_per_token();
+        let logits = host
+            .runner
+            .sparse_verify(&tokens, &pos, &qv, &idx_buf, &active)?;
+
+        let t = Instant::now();
+        for &i in idxs {
+            let slot = slots[i].as_mut().unwrap();
+            // middle layer: greedy-match proposals under the window
+            // model; corrected draft = matched prefix + window pick.
+            let v = m.vocab;
+            let rows = &logits[i * q * v..(i + 1) * q * v];
+            let mut mid: Vec<i32> = Vec::new();
+            for (j, &pt) in props[i].iter().enumerate() {
+                let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
+                if e == pt {
+                    mid.push(pt);
+                } else {
+                    mid.push(e);
+                    break;
+                }
+            }
+            // KV frontier: sparse_verify wrote qv rows, but only the
+            // anchor row (and later the verified rows) matter — dense
+            // verification overwrites everything it validates.
+            let kk = k.min(slot.remaining().max(1));
+            mid.truncate(kk);
+            set_proposals(slot, mid, m.vocab);
+        }
+        *host.cpu_s += t.elapsed().as_secs_f64();
+        Ok(1)
+    }
+}
+
+// ---------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------
+
+/// Constructor signature stored in the registry: build a drafter from its
+/// parse-layer [`DrafterKind`] against the model/artifact shape.
+pub type DrafterCtor = Box<dyn Fn(&DrafterKind, &ModelConfig) -> Result<Box<dyn Drafter>>>;
+
+/// Name → constructor table the engine resolves every drafter through —
+/// the engine's plugin point.  [`DrafterRegistry::with_builtins`] carries
+/// the seven paper drafters; [`DrafterRegistry::register`] adds
+/// out-of-crate policies reachable via [`DrafterKind::Custom`] (or by
+/// shadowing a builtin name).
+pub struct DrafterRegistry {
+    ctors: BTreeMap<String, DrafterCtor>,
+}
+
+impl Default for DrafterRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl DrafterRegistry {
+    /// An empty registry (no names resolve).
+    pub fn empty() -> DrafterRegistry {
+        DrafterRegistry { ctors: BTreeMap::new() }
+    }
+
+    /// The seven builtin drafters under their canonical root names.
+    pub fn with_builtins() -> DrafterRegistry {
+        let mut r = DrafterRegistry::empty();
+        r.register("vanilla", |_, _| Ok(Box::new(VanillaDrafter)));
+        r.register("pillar", |kind, _| match *kind {
+            DrafterKind::Pillar { w } => Ok(Box::new(PillarDrafter { w })),
+            _ => bail!("pillar constructor got {kind:?}"),
+        });
+        r.register("window", |kind, _| match *kind {
+            DrafterKind::Window { w } => Ok(Box::new(WindowDrafter { w })),
+            _ => bail!("window constructor got {kind:?}"),
+        });
+        r.register("oracle", |kind, _| match *kind {
+            DrafterKind::OracleTopK { w } => Ok(Box::new(OracleDrafter { w })),
+            _ => bail!("oracle constructor got {kind:?}"),
+        });
+        r.register("ngram", |kind, _| match *kind {
+            DrafterKind::NGram { n } => Ok(Box::new(NGramDrafter { n })),
+            _ => bail!("ngram constructor got {kind:?}"),
+        });
+        r.register("eagle", |_, _| Ok(Box::new(EagleDrafter)));
+        r.register("triforce", |kind, _| match *kind {
+            DrafterKind::TriForce { w } => Ok(Box::new(TriForceDrafter { w })),
+            _ => bail!("triforce constructor got {kind:?}"),
+        });
+        r
+    }
+
+    /// Register (or shadow) a constructor under `name`.
+    pub fn register<F>(&mut self, name: &str, ctor: F)
+    where
+        F: Fn(&DrafterKind, &ModelConfig) -> Result<Box<dyn Drafter>> + 'static,
+    {
+        self.ctors.insert(name.to_string(), Box::new(ctor));
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.ctors.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Resolve a kind to a live drafter: validate its parameters against
+    /// the model/artifact shape, then run the registered constructor.
+    pub fn create(&self, kind: &DrafterKind, m: &ModelConfig) -> Result<Box<dyn Drafter>> {
+        validate_drafter(kind, m)?;
+        let key = kind.registry_key();
+        let Some(ctor) = self.ctors.get(key) else {
+            bail!(
+                "no drafter registered under '{key}' (registered: {:?})",
+                self.names()
+            );
+        };
+        ctor(kind, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    fn model() -> ModelConfig {
+        SystemConfig::synthetic("artifacts").model
+    }
+
+    #[test]
+    fn builtins_resolve_all_seven_kinds() {
+        let r = DrafterRegistry::with_builtins();
+        let m = model();
+        for (kind, mode) in [
+            (DrafterKind::Vanilla, DraftMode::Off),
+            (DrafterKind::Pillar { w: 64 }, DraftMode::SelfSpec),
+            (DrafterKind::Window { w: 64 }, DraftMode::SelfSpec),
+            (DrafterKind::OracleTopK { w: 64 }, DraftMode::SelfSpec),
+            (DrafterKind::NGram { n: 3 }, DraftMode::Proposal),
+            (DrafterKind::Eagle, DraftMode::Proposal),
+            (DrafterKind::TriForce { w: 64 }, DraftMode::Proposal),
+        ] {
+            let d = r.create(&kind, &m).unwrap();
+            assert_eq!(d.kind(), kind);
+            assert_eq!(d.mode(), mode, "{kind:?}");
+            assert_eq!(d.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn capabilities_match_the_enum_interpreter() {
+        // The capability surface must reproduce exactly what the old
+        // match-on-DrafterKind engine hardwired.
+        let r = DrafterRegistry::with_builtins();
+        let m = model();
+        let d = r.create(&DrafterKind::Pillar { w: 64 }, &m).unwrap();
+        assert!(d.wants_dump_refresh());
+        assert_eq!(d.artifacts(8), vec!["draft_w64".to_string()]);
+        assert_eq!(d.index_policy(&m).recent, IndexPolicy::pillar(64).recent);
+
+        let d = r.create(&DrafterKind::Window { w: 128 }, &m).unwrap();
+        assert!(!d.wants_dump_refresh());
+        let p = d.index_policy(&m);
+        assert_eq!(p.sinks + p.recent, 128, "window policy must be pure window");
+
+        let d = r.create(&DrafterKind::OracleTopK { w: 32 }, &m).unwrap();
+        assert_eq!(
+            d.artifacts(8),
+            vec!["draft_w32".to_string(), "verify_q1".to_string()]
+        );
+
+        let d = r.create(&DrafterKind::TriForce { w: 64 }, &m).unwrap();
+        assert_eq!(d.artifacts(8), vec!["sparse_verify".to_string()]);
+        assert!(d.validate_engine(&m, 8).is_ok());
+        assert!(d.validate_engine(&m, 4).is_err(), "k must match spec_k");
+
+        let d = r.create(&DrafterKind::NGram { n: 2 }, &m).unwrap();
+        assert_eq!(d.ngram_order(), 2);
+    }
+
+    #[test]
+    fn degenerate_params_rejected_with_actionable_errors() {
+        let m = model();
+        // one assertion per rejection class (satellite contract)
+        let e = validate_drafter(&DrafterKind::NGram { n: 0 }, &m).unwrap_err();
+        assert!(e.to_string().contains("n >= 1"), "{e}");
+        let e = validate_drafter(&DrafterKind::NGram { n: 9 }, &m).unwrap_err();
+        assert!(e.to_string().contains("<= 4"), "{e}");
+        let e = validate_drafter(&DrafterKind::Window { w: 0 }, &m).unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+        let e = validate_drafter(&DrafterKind::Pillar { w: 4 }, &m).unwrap_err();
+        assert!(e.to_string().contains("W >= 8"), "{e}");
+        let e = validate_drafter(&DrafterKind::Pillar { w: 100 }, &m).unwrap_err();
+        assert!(e.to_string().contains("draft_w100"), "{e}");
+        let e = validate_drafter(&DrafterKind::TriForce { w: 128 }, &m).unwrap_err();
+        assert!(e.to_string().contains("sparse_verify"), "{e}");
+        let e = validate_drafter(&DrafterKind::TriForce { w: 0 }, &m).unwrap_err();
+        assert!(e.to_string().contains("degenerate"), "{e}");
+        // registry create runs the same validation
+        let r = DrafterRegistry::with_builtins();
+        assert!(r.create(&DrafterKind::NGram { n: 0 }, &m).is_err());
+    }
+
+    #[test]
+    fn unknown_names_fail_with_the_registered_list() {
+        let r = DrafterRegistry::with_builtins();
+        let m = model();
+        let e = r
+            .create(&DrafterKind::Custom { name: "nope" }, &m)
+            .unwrap_err();
+        assert!(e.to_string().contains("nope"));
+        assert!(e.to_string().contains("pillar"), "error should list names");
+    }
+
+    #[test]
+    fn custom_registration_resolves() {
+        struct Fixed;
+        impl Drafter for Fixed {
+            fn kind(&self) -> DrafterKind {
+                DrafterKind::Custom { name: "fixed" }
+            }
+            fn mode(&self) -> DraftMode {
+                DraftMode::Proposal
+            }
+            fn index_policy(&self, m: &ModelConfig) -> IndexPolicy {
+                IndexPolicy::pillar(m.draft_budget)
+            }
+            fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
+                DraftPlan::proposals(vec![7, 7])
+            }
+        }
+        let mut r = DrafterRegistry::with_builtins();
+        r.register("fixed", |_, _| Ok(Box::new(Fixed)));
+        let m = model();
+        let mut d = r.create(&DrafterKind::Custom { name: "fixed" }, &m).unwrap();
+        assert_eq!(d.name(), "fixed");
+        let ctx = DraftCtx {
+            req_id: 1,
+            slot_idx: 0,
+            k: 8,
+            sched_cap: 8,
+            len: 10,
+            remaining: 5,
+            pending: 3,
+            first_round: true,
+            ngram: None,
+        };
+        assert_eq!(d.plan(&ctx).tokens, vec![7, 7]);
+    }
+
+    #[test]
+    fn plan_sizes_static_drafters_at_k() {
+        let m = model();
+        let r = DrafterRegistry::with_builtins();
+        let ctx = DraftCtx {
+            req_id: 0,
+            slot_idx: 0,
+            k: 8,
+            sched_cap: 3,
+            len: 40,
+            remaining: 100,
+            pending: 5,
+            first_round: true,
+            ngram: None,
+        };
+        for kind in [
+            DrafterKind::Pillar { w: 64 },
+            DrafterKind::Window { w: 64 },
+            DrafterKind::OracleTopK { w: 64 },
+        ] {
+            let mut d = r.create(&kind, &m).unwrap();
+            // static self-spec drafters always ask for the ceiling; the
+            // engine clamps to sched_cap (bucket alignment) afterwards
+            assert_eq!(d.plan(&ctx).target, 8, "{kind:?}");
+        }
+        let mut v = r.create(&DrafterKind::Vanilla, &m).unwrap();
+        assert_eq!(v.plan(&ctx).target, 0);
+    }
+}

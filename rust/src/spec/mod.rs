@@ -1,17 +1,30 @@
-//! Speculative decoding core: drafter taxonomy, PillarAttn critical-token
-//! state, N-gram matcher, and acceptance accounting.
+//! Speculative decoding core: the pluggable [`Drafter`] API + registry,
+//! the parse-layer drafter taxonomy, PillarAttn critical-token state, the
+//! N-gram matcher, adaptive speculation length, and acceptance accounting.
 //!
 //! All drafters run inside the same engine and are verified by the same
 //! dense verification artifact, so acceptance-rate comparisons (Fig. 12)
-//! isolate exactly the drafting algorithm.
+//! isolate exactly the drafting algorithm.  [`DrafterKind`] is the
+//! serialisable CLI/parse surface; behaviour lives in [`drafter::Drafter`]
+//! implementations resolved through the [`DrafterRegistry`].
 
+pub mod adaptive;
+pub mod drafter;
 pub mod ngram;
 pub mod pillar;
 
+pub use adaptive::{AdaptiveDrafter, AdaptiveK, AdaptiveKCfg};
+pub use drafter::{
+    set_proposals, validate_drafter, DraftCtx, DraftHost, DraftMode, DraftPlan, Drafter,
+    DrafterRegistry, VerifyFeedback,
+};
 pub use ngram::NGramIndex;
 pub use pillar::{select_into, topk_indices, IndexPolicy, PillarState, SelectScratch};
 
-/// Which draft model the engine runs (paper system + every baseline).
+/// Which draft model a request/engine names (paper system + every
+/// baseline).  This is the *parse layer*: each kind resolves to a live
+/// [`Drafter`] through the [`DrafterRegistry`], and out-of-crate policies
+/// ride in through [`DrafterKind::Custom`] without extending this enum.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DrafterKind {
     /// No speculation: dense autoregressive decode (vLLM baseline).
@@ -30,6 +43,9 @@ pub enum DrafterKind {
     Eagle,
     /// TriForce-like hierarchy: NGram -> sliding-window model -> full.
     TriForce { w: usize },
+    /// An out-of-crate drafter registered under `name` in the
+    /// [`DrafterRegistry`] (see `spec::drafter` for a worked example).
+    Custom { name: &'static str },
 }
 
 impl DrafterKind {
@@ -55,11 +71,53 @@ impl DrafterKind {
             DrafterKind::NGram { n } => format!("ngram_n{n}"),
             DrafterKind::Eagle => "eagle".into(),
             DrafterKind::TriForce { w } => format!("triforce_w{w}"),
+            DrafterKind::Custom { name } => (*name).into(),
+        }
+    }
+
+    /// Parse the canonical [`DrafterKind::name`] form back (for trace
+    /// files and reports): `"pillar_w64"`, `"ngram_n3"`, `"vanilla"`, …
+    /// `Custom` kinds are not reconstructible from a string (their
+    /// constructors live in a registry), so unknown names return `None`.
+    pub fn parse_name(s: &str) -> Option<DrafterKind> {
+        let (root, param) = match s.split_once('_') {
+            Some((r, p)) => (r, Some(p)),
+            None => (s, None),
+        };
+        let num = |pre: char| -> Option<usize> {
+            param
+                .and_then(|p| p.strip_prefix(pre))
+                .and_then(|x| x.parse().ok())
+        };
+        match root {
+            "vanilla" => Some(DrafterKind::Vanilla),
+            "eagle" => Some(DrafterKind::Eagle),
+            "pillar" => Some(DrafterKind::Pillar { w: num('w')? }),
+            "window" => Some(DrafterKind::Window { w: num('w')? }),
+            "oracle" => Some(DrafterKind::OracleTopK { w: num('w')? }),
+            "ngram" => Some(DrafterKind::NGram { n: num('n')? }),
+            "triforce" => Some(DrafterKind::TriForce { w: num('w')? }),
+            _ => None,
+        }
+    }
+
+    /// The [`DrafterRegistry`] key this kind resolves through.
+    pub fn registry_key(&self) -> &'static str {
+        match *self {
+            DrafterKind::Vanilla => "vanilla",
+            DrafterKind::Pillar { .. } => "pillar",
+            DrafterKind::Window { .. } => "window",
+            DrafterKind::OracleTopK { .. } => "oracle",
+            DrafterKind::NGram { .. } => "ngram",
+            DrafterKind::Eagle => "eagle",
+            DrafterKind::TriForce { .. } => "triforce",
+            DrafterKind::Custom { name } => name,
         }
     }
 
     /// Does this drafter run sparse-attention draft steps on the target
-    /// model (self-speculation)?
+    /// model (self-speculation)?  Parse-layer heuristic only — the engine
+    /// asks the resolved [`Drafter::mode`] instead.
     pub fn is_self_spec(&self) -> bool {
         matches!(
             self,
@@ -143,9 +201,37 @@ mod tests {
             ("triforce", 64, 3),
         ] {
             let k = DrafterKind::parse(s, w, n).unwrap();
-            assert!(DrafterKind::parse(&k.name().split('_').next().unwrap(), w, n).is_some());
+            assert!(DrafterKind::parse(k.name().split('_').next().unwrap(), w, n).is_some());
         }
         assert!(DrafterKind::parse("bogus", 0, 0).is_none());
+    }
+
+    #[test]
+    fn name_parse_name_roundtrip() {
+        for kind in [
+            DrafterKind::Vanilla,
+            DrafterKind::Pillar { w: 64 },
+            DrafterKind::Window { w: 128 },
+            DrafterKind::OracleTopK { w: 32 },
+            DrafterKind::NGram { n: 3 },
+            DrafterKind::Eagle,
+            DrafterKind::TriForce { w: 64 },
+        ] {
+            assert_eq!(DrafterKind::parse_name(&kind.name()), Some(kind));
+        }
+        assert!(DrafterKind::parse_name("pillar_wNaN").is_none());
+        assert!(DrafterKind::parse_name("pillar").is_none());
+        assert!(DrafterKind::parse_name("bogus_w4").is_none());
+        // custom names don't roundtrip through strings by design
+        assert!(DrafterKind::parse_name("my-plugin").is_none());
+        assert_eq!(DrafterKind::Custom { name: "my-plugin" }.name(), "my-plugin");
+    }
+
+    #[test]
+    fn registry_keys_are_name_roots() {
+        assert_eq!(DrafterKind::Pillar { w: 64 }.registry_key(), "pillar");
+        assert_eq!(DrafterKind::NGram { n: 2 }.registry_key(), "ngram");
+        assert_eq!(DrafterKind::Custom { name: "parrot" }.registry_key(), "parrot");
     }
 
     #[test]

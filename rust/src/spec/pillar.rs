@@ -502,8 +502,8 @@ mod tests {
         let mut dump = vec![0.0f32; 2 * 2 * t];
         // layer 0 head 0: position 33 is critical
         dump[33] = 1.0;
-        // layer 1 head 1: position 7 is critical
-        dump[(1 * 2 + 1) * t + 7] = 1.0;
+        // layer 1 head 1 (row l*kv_heads + h = 3): position 7 is critical
+        dump[3 * t + 7] = 1.0;
         st.refresh(&dump, t, 50);
         let idx = st.compose(50);
         assert_eq!(idx.len(), 2 * 2 * 16);

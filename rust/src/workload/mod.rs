@@ -8,6 +8,7 @@ pub mod trace;
 pub use grammar::{classify_next, TokenClass, TraceGen};
 
 use crate::model::{GrammarConfig, ModelConfig};
+use crate::spec::DrafterKind;
 use crate::util::rng::Xoshiro256;
 
 /// One serving request.
@@ -23,6 +24,10 @@ pub struct Request {
     /// Grammar seed — continuation of the prompt's trace, used by the
     /// N-gram-style drafters for *their* view of history only.
     pub seed: u64,
+    /// Per-session drafter override: `None` uses the engine default;
+    /// `Some(kind)` resolves through the engine's `DrafterRegistry` at
+    /// submit time (invalid kinds reject the session without queuing it).
+    pub drafter: Option<DrafterKind>,
 }
 
 /// Dataset profiles: the paper's Table 1 (Qwen3-14B outputs), linearly
@@ -133,7 +138,7 @@ impl WorkloadGen {
         let prompt = TraceGen::prompt(seed, self.grammar.clone());
         let id = self.next_id;
         self.next_id += 1;
-        Request { id, prompt, max_new, arrival_s, seed }
+        Request { id, prompt, max_new, arrival_s, seed, drafter: None }
     }
 
     /// Offline batch: `n` requests, all available at t=0 (the RL-rollout /

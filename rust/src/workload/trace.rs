@@ -3,19 +3,33 @@
 //! configurations can be shared as artefacts).
 
 use super::Request;
+use crate::spec::DrafterKind;
 use crate::util::json::{arr, num, obj, s, Json};
 use anyhow::{anyhow, Result};
 
-/// Serialise a request trace.
+/// Serialise a request trace.  Per-session drafter overrides ride along
+/// as their canonical `DrafterKind::name()` form (omitted when `None`, so
+/// pre-override traces stay byte-identical).
 pub fn to_json(reqs: &[Request]) -> String {
     arr(reqs.iter().map(|r| {
-        obj(vec![
+        let mut fields = vec![
             ("id", num(r.id as f64)),
             ("prompt", arr(r.prompt.iter().map(|&t| num(t as f64)))),
             ("max_new", num(r.max_new as f64)),
             ("arrival_s", num(r.arrival_s)),
             ("seed", s(&r.seed.to_string())), // u64-safe as string
-        ])
+        ];
+        if let Some(d) = r.drafter {
+            // Only kinds `DrafterKind::parse_name` can reconstruct are
+            // recorded: a `Custom` drafter's constructor lives in a
+            // registry, not in a string, so serialising its name would
+            // poison the trace for `from_json`.  Replays of such traces
+            // fall back to the serving engine's default drafter.
+            if DrafterKind::parse_name(&d.name()).is_some() {
+                fields.push(("drafter", s(&d.name())));
+            }
+        }
+        obj(fields)
     }))
     .to_string()
 }
@@ -48,7 +62,13 @@ pub fn from_json(text: &str) -> Result<Vec<Request>> {
                 .and_then(|v| v.as_str())
                 .and_then(|x| x.parse().ok())
                 .unwrap_or(0);
-            Ok(Request { id, prompt, max_new, arrival_s, seed })
+            let drafter = match it.get("drafter").and_then(|v| v.as_str()) {
+                None => None,
+                Some(name) => Some(DrafterKind::parse_name(name).ok_or_else(|| {
+                    anyhow!("request {id}: unknown drafter name '{name}' in trace")
+                })?),
+            };
+            Ok(Request { id, prompt, max_new, arrival_s, seed, drafter })
         })
         .collect()
 }
@@ -74,6 +94,7 @@ mod tests {
                 max_new: 120,
                 arrival_s: 0.5,
                 seed: u64::MAX - 7,
+                drafter: None,
             },
             Request {
                 id: 4,
@@ -81,6 +102,7 @@ mod tests {
                 max_new: 8,
                 arrival_s: 1.25,
                 seed: 42,
+                drafter: Some(DrafterKind::NGram { n: 3 }),
             },
         ]
     }
@@ -97,7 +119,18 @@ mod tests {
             assert_eq!(a.max_new, b.max_new);
             assert_eq!(a.arrival_s, b.arrival_s);
             assert_eq!(a.seed, b.seed); // u64::MAX survives (string-coded)
+            assert_eq!(a.drafter, b.drafter); // override survives by name
         }
+        // requests without an override serialise exactly as before
+        let plain = to_json(&reqs[..1]);
+        assert!(!plain.contains("drafter"), "None override must be omitted");
+        // custom overrides are non-reconstructible -> omitted, so the
+        // emitted trace always loads back
+        let mut custom = reqs[0].clone();
+        custom.drafter = Some(DrafterKind::Custom { name: "parrot" });
+        let text = to_json(&[custom]);
+        assert!(!text.contains("parrot"), "custom kinds must not be recorded");
+        assert_eq!(from_json(&text).unwrap()[0].drafter, None);
     }
 
     #[test]
@@ -105,5 +138,9 @@ mod tests {
         assert!(from_json("{}").is_err());
         assert!(from_json(r#"[{"id": 1}]"#).is_err());
         assert!(from_json("not json").is_err());
+        // a trace naming an unparseable drafter is an error, not a silent
+        // fall-through to the engine default
+        let bad = r#"[{"id": 1, "prompt": [1], "max_new": 4, "drafter": "warp-drive"}]"#;
+        assert!(from_json(bad).is_err());
     }
 }

@@ -9,6 +9,7 @@
 //! (requires `make artifacts`).  The Pallas compose-proof at the bottom is
 //! pjrt-only.
 
+
 use std::rc::Rc;
 
 use sparsespec::engine::{Engine, EngineConfig};

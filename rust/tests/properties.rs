@@ -4,6 +4,7 @@
 //! cross-module invariants the coordinator depends on.  Run with
 //! PTEST_CASES=N to scale case counts; failures print a reproducing seed.
 
+
 use sparsespec::kv_cache::{HostKv, KvManager, KvPolicy, PressureAction};
 use sparsespec::metrics::Histogram;
 use sparsespec::sampling::{sample_cat, softmax, verify_greedy, verify_stochastic};

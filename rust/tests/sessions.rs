@@ -10,6 +10,7 @@
 //! * `cancel()` mid-generation releases the slot and KV pages and leaves
 //!   every other session's output untouched.
 
+
 use std::cell::RefCell;
 use std::rc::Rc;
 
