@@ -12,6 +12,8 @@
 //! acceptance/TTFT columns.
 //!
 //!   cargo run --release --example online_chat [-- --rate 1.5 --horizon 20]
+//!   (add `--trace-out trace.json` to export a Perfetto trace of the
+//!    live-serving run)
 
 
 use std::rc::Rc;
@@ -19,7 +21,6 @@ use std::rc::Rc;
 use sparsespec::engine::{
     Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason,
 };
-use sparsespec::metrics;
 use sparsespec::runtime::Runtime;
 use sparsespec::scheduler::Schedule;
 use sparsespec::spec::DrafterKind;
@@ -39,12 +40,16 @@ fn main() -> anyhow::Result<()> {
             17,
         )
     };
-    let mk_cfg = || {
-        EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+    let trace_out = args.opt("trace-out").map(|s| s.to_string());
+    let mk_cfg = |traced: bool| {
+        let mut b = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
             .k(8)
             .schedule(Schedule::Unified)
-            .delayed_verify(true)
-            .build(&rt.cfg.model)
+            .delayed_verify(true);
+        if traced {
+            b = b.tracing(sparsespec::trace::TraceConfig::on());
+        }
+        b.build(&rt.cfg.model)
     };
 
     // Batch reference over the identical trace (greedy decoding, so
@@ -56,14 +61,14 @@ fn main() -> anyhow::Result<()> {
             "trace: {} arrivals over {horizon}s at {rate}/s (LiveCodeBench profile)",
             reqs.len()
         );
-        let mut eng = Engine::new(rt.clone(), mk_cfg()?)?;
+        let mut eng = Engine::new(rt.clone(), mk_cfg(false)?)?;
         eng.run(reqs)?
     };
 
     // Live serving: requests are admitted when they arrive on the serving
     // clock; tokens are pulled incrementally from each session.
     let mut driver = EngineDriver::with_arrivals(
-        EngineHandle::new(rt.clone(), mk_cfg()?)?,
+        EngineHandle::new(rt.clone(), mk_cfg(trace_out.is_some())?)?,
         mk_gen().online_arrivals(rate, horizon),
     );
     let mut streamed = 0usize;
@@ -82,6 +87,10 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    if let Some(path) = &trace_out {
+        std::fs::write(path, driver.tracer().export_chrome_string())?;
+        println!("  perfetto trace saved to {path}");
+    }
     let report = driver.report();
     println!("  {}", report.summary());
     println!(
@@ -93,7 +102,7 @@ fn main() -> anyhow::Result<()> {
 
     // Streaming latency metrics (wallclock), from per-session stats.
     let m = driver.session_metrics();
-    if let Some(ttft) = m.histograms.get("ttft_s") {
+    if let Some(ttft) = m.histogram("ttft_s", &[]) {
         println!(
             "  TTFT:        p50={:.4}s p99={:.4}s max={:.4}s (n={})",
             ttft.percentile(50.0),
@@ -102,7 +111,7 @@ fn main() -> anyhow::Result<()> {
             ttft.len()
         );
     }
-    if let Some(itl) = m.histograms.get("inter_token_s") {
+    if let Some(itl) = m.histogram("inter_token_s", &[]) {
         println!(
             "  inter-token: p50={:.5}s p99={:.5}s (n={})",
             itl.percentile(50.0),
@@ -174,7 +183,8 @@ fn main() -> anyhow::Result<()> {
         "drafter", "sessions", "acc/rnd", "alpha", "ttft p50(s)"
     );
     for (name, acc) in &pr.accept_by {
-        let sessions = pm.get(&metrics::keyed("sessions_completed", name));
+        let by: &[(&str, &str)] = &[("drafter", name)];
+        let sessions = pm.counter("sessions_completed", by);
         let acc_rnd = if acc.rounds > 0 {
             format!("{:>8.2}", acc.mean_accepted())
         } else {
@@ -186,8 +196,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:>8}", "n/a")
         };
         let ttft = pm
-            .histograms
-            .get(&metrics::keyed("ttft_s", name))
+            .histogram("ttft_s", by)
             .map(|h| format!("{:>12.4}", h.percentile(50.0)))
             .unwrap_or_else(|| format!("{:>12}", "n/a"));
         println!("  {name:<14} {sessions:>9} {acc_rnd} {alpha} {ttft}");

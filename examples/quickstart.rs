@@ -3,15 +3,22 @@
 //! stream one session token-by-token through the serving API.
 //!
 //!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart -- --trace-out trace.json
 //!   (add `make artifacts` + `--features pjrt` for the real XLA path; the
 //!    default build serves on the deterministic CPU fallback runtime)
+//!
+//! With `--trace-out` the final section saves a Chrome/Perfetto trace of a
+//! mixed-drafter batch under KV pressure — load it at ui.perfetto.dev.
 
 
 use std::rc::Rc;
 
 use sparsespec::engine::{Engine, EngineConfig, EngineHandle};
+use sparsespec::kv_cache::KvPolicy;
 use sparsespec::runtime::Runtime;
+use sparsespec::scheduler::Schedule;
 use sparsespec::spec::DrafterKind;
+use sparsespec::trace::{names, TraceConfig};
 use sparsespec::workload::{Dataset, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
@@ -93,5 +100,80 @@ fn main() -> anyhow::Result<()> {
         stats.ttft_s.unwrap_or(0.0),
         stats.mean_accepted_per_round()
     );
+
+    // ------------------------------------------------------------------
+    // Observability quickstart: trace a mixed-drafter batch under KV
+    // pressure and export the span journal as Chrome/Perfetto JSON
+    // (EXPERIMENTS.md §Observability walks through the resulting view).
+    // ------------------------------------------------------------------
+    let m = &rt.cfg.model;
+    // Tight dynamic budget (25% of worst case) forces offload/reload
+    // traffic, so the Kv track has something to show.
+    let kv_budget = m.slots * m.max_seq / 4;
+    let cfg = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
+        .k(8)
+        .schedule(Schedule::Unified)
+        .delayed_verify(true)
+        .kv(KvPolicy::Dynamic, kv_budget)
+        .adaptive_k(true)
+        .allow_drafter(DrafterKind::NGram { n: 3 })
+        .allow_drafter(DrafterKind::Vanilla)
+        .tracing(TraceConfig::on())
+        .ttft_slo(0.5)
+        .build(m)?;
+    let mut traced = Engine::new(rt.clone(), cfg)?;
+    // Oversubscribe the 12 slots so admission queueing shows up too.
+    let mut reqs =
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, 43)
+            .offline_batch(16);
+    // Mixed batch: a third of the sessions override the engine default.
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.drafter = match i % 3 {
+            1 => Some(DrafterKind::NGram { n: 3 }),
+            2 => Some(DrafterKind::Vanilla),
+            _ => None, // engine default (PillarAttn)
+        };
+    }
+    let rt_report = traced.run(reqs)?;
+    println!("\ntraced mixed-drafter run: {}", rt_report.summary());
+    println!("{}", rt_report.slo.to_markdown());
+    let chrome = traced.export_trace_chrome();
+    // The trace must carry the full iteration anatomy: draft + verify
+    // spans, the delayed-verification overlap window, and KV evictions.
+    for span in [
+        names::ITERATION,
+        names::DRAFT,
+        names::VERIFY,
+        names::DELAYED_VERIFY_OVERLAP,
+        names::KV_OFFLOAD,
+    ] {
+        assert!(
+            chrome.contains(&format!("\"{span}\"")),
+            "trace export is missing `{span}` spans"
+        );
+    }
+    println!(
+        "trace journal: {} events ({} dropped)",
+        traced.tracer().len(),
+        traced.tracer().dropped()
+    );
+    let mut trace_path = None;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        if a == "--trace-out" {
+            trace_path = argv.next();
+        }
+    }
+    if let Some(path) = trace_path {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&path, &chrome)?;
+        println!("perfetto trace saved to {path} — load it at ui.perfetto.dev");
+    } else {
+        println!("(pass `-- --trace-out trace.json` to save the Perfetto trace)");
+    }
     Ok(())
 }

@@ -8,6 +8,8 @@
 //! of inf/garbage.
 //!
 //!   cargo run --release --example reasoning_serve [-- --requests 12]
+//!   (add `--trace-out trace.json` to export a Perfetto trace of the
+//!    sparsespec run on the last dataset)
 
 
 use std::rc::Rc;
@@ -22,6 +24,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let rt = Rc::new(Runtime::load(&args.str("artifacts", "artifacts"))?);
     let n = args.usize("requests", 12);
+    let trace_out = args.opt("trace-out").map(|s| s.to_string());
     let systems: Vec<(&str, DrafterKind)> = vec![
         ("vllm", DrafterKind::Vanilla),
         ("vllm-ngram", DrafterKind::NGram { n: 3 }),
@@ -43,12 +46,20 @@ fn main() -> anyhow::Result<()> {
                 42,
             )
             .offline_batch(n);
-            let mut driver =
-                EngineDriver::new(EngineHandle::new(rt.clone(), EngineConfig::new(*d).with_k(8))?);
+            let traced = trace_out.is_some() && *name == "sparsespec";
+            let mut cfg = EngineConfig::new(*d).with_k(8);
+            if traced {
+                cfg.trace = sparsespec::trace::TraceConfig::on();
+            }
+            let mut driver = EngineDriver::new(EngineHandle::new(rt.clone(), cfg)?);
             for req in reqs {
                 driver.submit(req);
             }
             driver.drive()?;
+            if traced {
+                let path = trace_out.as_deref().unwrap();
+                std::fs::write(path, driver.tracer().export_chrome_string())?;
+            }
             let r = driver.report();
             if *name == "vllm" {
                 base = Some(r.sim_tok_s());
@@ -61,8 +72,7 @@ fn main() -> anyhow::Result<()> {
             };
             let ttft = driver.session_metrics();
             let ttft_p50 = ttft
-                .histograms
-                .get("ttft_s")
+                .histogram("ttft_s", &[])
                 .map(|h| format!("{:12.4}", h.percentile(50.0)))
                 .unwrap_or_else(|| format!("{:>12}", "n/a"));
             println!(

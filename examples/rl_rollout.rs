@@ -8,6 +8,8 @@
 //! as they land.
 //!
 //!   cargo run --release --example rl_rollout [-- --requests 32 --budget-frac 45]
+//!   (add `--trace-out trace.json` to export a Perfetto trace of the
+//!    sparsespec+dynamic run — offload/reload spans on the Kv track)
 
 
 use std::rc::Rc;
@@ -24,6 +26,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Rc::new(Runtime::load(&args.str("artifacts", "artifacts"))?);
     let n = args.usize("requests", 24);
     let frac = args.usize("budget-frac", 45);
+    let trace_out = args.opt("trace-out").map(|s| s.to_string());
     let budget = rt.cfg.model.slots * rt.cfg.model.max_seq * frac / 100;
     println!(
         "rollout batch: {n} requests, device KV budget {budget} tokens ({frac}% of pool)"
@@ -40,15 +43,22 @@ fn main() -> anyhow::Result<()> {
             9,
         )
         .offline_batch(n);
-        let cfg = EngineConfig::builder(drafter)
-            .k(8)
-            .kv(policy, budget)
-            .build(&rt.cfg.model)?;
+        let traced = trace_out.is_some() && policy == KvPolicy::Dynamic;
+        let mut b = EngineConfig::builder(drafter).k(8).kv(policy, budget);
+        if traced {
+            b = b.tracing(sparsespec::trace::TraceConfig::on());
+        }
+        let cfg = b.build(&rt.cfg.model)?;
         let mut driver = EngineDriver::new(EngineHandle::new(rt.clone(), cfg)?);
         for req in reqs {
             driver.submit(req);
         }
         driver.drive()?;
+        if traced {
+            let path = trace_out.as_deref().unwrap();
+            std::fs::write(path, driver.tracer().export_chrome_string())?;
+            println!("    perfetto trace saved to {path}");
+        }
         let done = driver
             .sessions()
             .iter()

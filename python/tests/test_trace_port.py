@@ -1,0 +1,608 @@
+# Cross-check of the PR-6 observability tentpole (rust/src/trace/mod.rs,
+# rust/src/metrics/registry.rs), per the no-Rust-toolchain verify flow:
+# a 1:1 Python port of the span journal -> Chrome/Perfetto exporter and of
+# the typed MetricsRegistry, driven through an engine-shaped emission
+# sequence (iterations with nested admit/draft/propose/verify spans,
+# session lifecycle instants, interleaved async KV offloads, counters).
+#
+# Pins, mirroring rust/tests/trace.rs and the trace/registry unit suites:
+#   1. span-name constants — extracted from rust/src/trace/mod.rs itself,
+#      so the twin fails if the Rust `names` module drifts;
+#   2. Perfetto trace-event schema — ph letters (X/i/C/b/e/M), one thread
+#      lane per track, every event carries args.sim_us, X spans nest
+#      properly per lane (proper containment, never partial overlap);
+#   3. journal sim timestamps are monotone under a monotone serving clock;
+#   4. sampling thins iteration spans but never lifecycle instants; the
+#      ring buffer bounds memory, counts drops, and orphaned Begins are
+#      skipped rather than corrupting the timeline;
+#   5. MetricsRegistry snapshot/merge is associative (counters sum, gauges
+#      last-write-wins, histograms concatenate) and the Prometheus/markdown
+#      renderings are deterministic.
+
+import copy
+import json
+import os
+import re
+
+# ---------------------------------------------------------------------
+# span-name constants, pinned against the Rust source
+# ---------------------------------------------------------------------
+
+NAMES = {
+    "ITERATION": "iteration",
+    "ADMIT": "admit",
+    "DRAFT": "draft",
+    "PROPOSE": "propose",
+    "VERIFY": "verify",
+    "DELAYED_VERIFY_OVERLAP": "delayed_verify_overlap",
+    "KV_ADMIT": "kv_admit",
+    "KV_OFFLOAD": "kv_offload",
+    "KV_PREEMPT": "kv_preempt",
+    "KV_RELOAD": "kv_reload",
+    "KV_FORGET": "kv_forget",
+    "BUCKET_ASSIGN": "bucket_assign",
+    "ADAPTIVE_K": "adaptive_k",
+    "SESSION_SUBMIT": "session_submit",
+    "SESSION_FIRST_TOKEN": "session_first_token",
+    "SESSION_FINISH": "session_finish",
+}
+
+TRACKS = {  # Track::tid() / Track::label()
+    "engine": 1,
+    "device": 2,
+    "scheduler": 3,
+    "kv": 4,
+    "session": 5,
+    "drafter": 6,
+    "overlap": 7,
+}
+
+
+def rust_trace_source():
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", "..", "rust", "src", "trace", "mod.rs")
+    with open(path) as f:
+        return f.read()
+
+
+def test_span_name_constants_match_rust_names_module():
+    src = rust_trace_source()
+    rust_names = dict(
+        re.findall(r'pub const ([A-Z_]+): &str = "([a-z_]+)";', src)
+    )
+    assert rust_names == NAMES, "python twin drifted from trace::names"
+    # track lanes stay pinned too
+    for label, tid in TRACKS.items():
+        assert f'Track::{label.capitalize()} => {tid}' in src.replace(
+            "Kv =>", "Kv =>"
+        ) or re.search(rf"Track::\w+ => {tid},", src), label
+        assert f'"{label}"' in src, f"track label {label} missing in Rust"
+
+
+# ---------------------------------------------------------------------
+# Tracer port (rust/src/trace/mod.rs)
+# ---------------------------------------------------------------------
+
+
+class Tracer:
+    """1:1 port of trace::Tracer with a deterministic wall clock."""
+
+    def __init__(self, enabled=False, capacity=65_536, sample_every=1):
+        self.enabled = enabled
+        self.capacity = max(capacity, 16)
+        self.sample_every = max(sample_every, 1)
+        self.events = []  # (name, kind, track, id, wall_us, sim_us, dur_us, args)
+        self.dropped = 0
+        self.sampled = False
+        self._wall = 0.0
+
+    def now_us(self):
+        self._wall += 1.0  # strictly-monotone stand-in for Instant::elapsed
+        return self._wall
+
+    def _push(self, ev):
+        if len(self.events) >= self.capacity:
+            self.events.pop(0)
+            self.dropped += 1
+        self.events.append(ev)
+
+    def _push_now(self, name, kind, track, id_, sim_s, args):
+        self._push((name, kind, track, id_, self.now_us(), sim_s * 1e6, 0.0, args))
+
+    def iter_begin(self, it, sim_s):
+        if not self.enabled:
+            return
+        self.sampled = it % self.sample_every == 0
+        if self.sampled:
+            self._push_now(NAMES["ITERATION"], "B", "engine", 0, sim_s, {"iter": it})
+
+    def iter_end(self, sim_s, args=None):
+        if self.sampled:
+            self._push_now(NAMES["ITERATION"], "E", "engine", 0, sim_s, args or {})
+
+    def begin(self, name, track, sim_s):
+        if self.sampled:
+            self._push_now(name, "B", track, 0, sim_s, {})
+
+    def end(self, name, track, sim_s, args=None):
+        if self.sampled:
+            self._push_now(name, "E", track, 0, sim_s, args or {})
+
+    def complete_at(self, name, track, wall_us, dur_us, sim_s, args=None):
+        if self.sampled:
+            self._push((name, "X", track, 0, wall_us, sim_s * 1e6, dur_us, args or {}))
+
+    def instant(self, name, track, sim_s, args=None):
+        if self.enabled:
+            self._push_now(name, "i", track, 0, sim_s, args or {})
+
+    def counter(self, name, sim_s, value):
+        if self.sampled:
+            self._push_now(name, "C", "engine", 0, sim_s, {"value": value})
+
+    def async_begin(self, name, track, id_, sim_s, args=None):
+        if self.enabled:
+            self._push_now(name, "b", track, id_, sim_s, args or {})
+
+    def async_end(self, name, track, id_, sim_s, args=None):
+        if self.enabled:
+            self._push_now(name, "e", track, id_, sim_s, args or {})
+
+    # -- exporters (mirrors export_chrome / export_jsonl) --------------
+
+    def export_chrome(self):
+        out = [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": 1,
+                "tid": 0,
+                "args": {"name": "sparsespec"},
+            }
+        ]
+        for label, tid in TRACKS.items():
+            out.append(
+                {
+                    "name": "thread_name",
+                    "ph": "M",
+                    "pid": 1,
+                    "tid": tid,
+                    "args": {"name": label},
+                }
+            )
+        stacks = {tid: [] for tid in TRACKS.values()}
+        for name, kind, track, id_, wall, sim, dur, args in self.events:
+            tid = TRACKS[track]
+            if kind == "B":
+                stacks[tid].append((name, wall, sim, args))
+            elif kind == "E":
+                # unwind to the matching Begin; orphans above it are dropped
+                while stacks[tid]:
+                    bname, bwall, bsim, bargs = stacks[tid].pop()
+                    if bname == name:
+                        a = {
+                            "sim_us": bsim,
+                            "sim_dur_us": max(sim - bsim, 0.0),
+                        }
+                        a.update(bargs)
+                        a.update(args)
+                        out.append(
+                            {
+                                "name": bname,
+                                "cat": track,
+                                "ph": "X",
+                                "pid": 1,
+                                "tid": tid,
+                                "ts": bwall,
+                                "dur": max(wall - bwall, 0.0),
+                                "args": a,
+                            }
+                        )
+                        break
+            elif kind == "X":
+                out.append(
+                    {
+                        "name": name,
+                        "cat": track,
+                        "ph": "X",
+                        "pid": 1,
+                        "tid": tid,
+                        "ts": wall,
+                        "dur": dur,
+                        "args": {"sim_us": sim, **args},
+                    }
+                )
+            elif kind == "i":
+                out.append(
+                    {
+                        "name": name,
+                        "cat": track,
+                        "ph": "i",
+                        "s": "t",
+                        "pid": 1,
+                        "tid": tid,
+                        "ts": wall,
+                        "args": {"sim_us": sim, **args},
+                    }
+                )
+            elif kind == "C":
+                out.append(
+                    {
+                        "name": name,
+                        "ph": "C",
+                        "pid": 1,
+                        "tid": tid,
+                        "ts": wall,
+                        "args": {"sim_us": sim, **args},
+                    }
+                )
+            else:  # b / e
+                out.append(
+                    {
+                        "name": name,
+                        "cat": track,
+                        "ph": kind,
+                        "id": id_,
+                        "pid": 1,
+                        "tid": tid,
+                        "ts": wall,
+                        "args": {"sim_us": sim, **args},
+                    }
+                )
+        return {
+            "traceEvents": out,
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped_events": self.dropped},
+        }
+
+    def export_jsonl(self):
+        lines = []
+        for name, kind, track, id_, wall, sim, dur, args in self.events:
+            rec = {
+                "name": name,
+                "kind": kind,
+                "track": track,
+                "wall_us": wall,
+                "sim_us": sim,
+            }
+            if id_ != 0:
+                rec["id"] = id_
+            if kind == "X":
+                rec["dur_us"] = dur
+            if args:
+                rec["args"] = args
+            lines.append(json.dumps(rec))
+        return "\n".join(lines)
+
+
+def drive_engine_shape(t, iters=6):
+    """Emit the event sequence the instrumented engine produces: nested
+    phase spans, per-slot lifecycle instants, interleaved KV offloads."""
+    sim = 0.0
+    for it in range(iters):
+        t.iter_begin(it, sim)
+        t.begin(NAMES["ADMIT"], "engine", sim)
+        if it == 0:
+            for rid in (1, 2):
+                t.instant(NAMES["SESSION_SUBMIT"], "session", sim, {"req": rid})
+                t.instant(NAMES["BUCKET_ASSIGN"], "scheduler", sim, {"req": rid, "bucket": rid % 3})
+                t.instant(NAMES["KV_ADMIT"], "kv", sim, {"req": rid, "tokens": 32})
+                t.instant(NAMES["SESSION_FIRST_TOKEN"], "session", sim, {"req": rid})
+        t.end(NAMES["ADMIT"], "engine", sim, {"admitted": 2 if it == 0 else 0})
+        t.begin(NAMES["DRAFT"], "engine", sim)
+        t.begin(NAMES["PROPOSE"], "engine", sim)
+        t.end(NAMES["PROPOSE"], "engine", sim, {"drafter": "pillar_w64", "slots": 2})
+        t.end(NAMES["DRAFT"], "engine", sim, {"w": 64, "slots": 2})
+        t.begin(NAMES["VERIFY"], "engine", sim)
+        t.end(NAMES["VERIFY"], "engine", sim, {"slots": 2, "delayed": 1})
+        if it == 1:
+            t.async_begin(NAMES["KV_OFFLOAD"], "kv", 1, sim, {"req": 1, "tokens": 40})
+            t.async_begin(NAMES["KV_OFFLOAD"], "kv", 2, sim, {"req": 2, "tokens": 48})
+        if it == 3:
+            # interleaved (not nested) completion order: 1 then 2
+            t.async_end(NAMES["KV_OFFLOAD"], "kv", 1, sim, {"transfer_us": 120.0})
+            t.async_end(NAMES["KV_OFFLOAD"], "kv", 2, sim, {"transfer_us": 130.0})
+            t.instant(NAMES["KV_RELOAD"], "kv", sim, {"req": 1, "tokens": 40})
+        t.complete_at("verify.gemm", "device", t.now_us(), 5.0, sim, {"calls": 1})
+        t.counter("queue_depth", sim, float(iters - it))
+        t.counter("kv_used_tokens", sim, 100.0 + it)
+        sim += 0.002
+        t.iter_end(sim, {"launches": 3})
+    for rid in (1, 2):
+        t.instant(NAMES["SESSION_FINISH"], "session", sim, {"req": rid, "reason": "completed"})
+
+
+def spans_nest_properly(events, tid):
+    """X spans on one lane must be disjoint or properly nested."""
+    xs = sorted(
+        (
+            (e["ts"], e["ts"] + e["dur"])
+            for e in events
+            if e.get("ph") == "X" and e["tid"] == tid
+        ),
+    )
+    stack = []
+    for lo, hi in xs:
+        while stack and stack[-1] <= lo:
+            stack.pop()
+        if stack:
+            assert hi <= stack[-1], f"partial overlap: ({lo},{hi}) vs end {stack[-1]}"
+        stack.append(hi)
+
+
+def test_perfetto_export_schema_and_phase_nesting():
+    t = Tracer(enabled=True)
+    drive_engine_shape(t)
+    doc = t.export_chrome()
+    # top-level shape
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    assert doc["otherData"]["dropped_events"] == 0
+    evs = doc["traceEvents"]
+    # metadata names every lane
+    lanes = {
+        e["args"]["name"]
+        for e in evs
+        if e["ph"] == "M" and e["name"] == "thread_name"
+    }
+    assert lanes == set(TRACKS)
+    # every non-metadata event: known ph, pid 1, a real lane, args.sim_us
+    for e in evs:
+        if e["ph"] == "M":
+            continue
+        assert e["ph"] in ("X", "i", "C", "b", "e"), e
+        assert e["pid"] == 1 and e["tid"] in TRACKS.values()
+        assert "sim_us" in e["args"], e
+    # phase spans folded into X and properly nested on the engine lane
+    xnames = [e["name"] for e in evs if e["ph"] == "X"]
+    for want in ("iteration", "admit", "draft", "propose", "verify"):
+        assert want in xnames, f"missing span {want}"
+    spans_nest_properly(evs, TRACKS["engine"])
+    # draft strictly contains propose (the begin/end emission order)
+    draft = next(e for e in evs if e["ph"] == "X" and e["name"] == "draft")
+    prop = next(e for e in evs if e["ph"] == "X" and e["name"] == "propose")
+    assert draft["ts"] < prop["ts"]
+    assert prop["ts"] + prop["dur"] < draft["ts"] + draft["dur"]
+    assert prop["args"]["drafter"] == "pillar_w64"
+    # counter shape
+    c = next(e for e in evs if e["ph"] == "C" and e["name"] == "queue_depth")
+    assert c["args"]["value"] == 6.0
+    # instants are thread-scoped
+    i = next(e for e in evs if e["ph"] == "i" and e["name"] == "session_submit")
+    assert i["s"] == "t" and i["tid"] == TRACKS["session"]
+    # async offloads: balanced b/e per id, on the kv lane
+    for id_ in (1, 2):
+        b = [e for e in evs if e["ph"] == "b" and e.get("id") == id_]
+        e_ = [e for e in evs if e["ph"] == "e" and e.get("id") == id_]
+        assert len(b) == 1 and len(e_) == 1, f"unbalanced async id {id_}"
+        assert b[0]["tid"] == TRACKS["kv"] and e_[0]["ts"] > b[0]["ts"]
+    # device complete span carries its explicit duration
+    dev = next(e for e in evs if e["ph"] == "X" and e["name"] == "verify.gemm")
+    assert dev["dur"] == 5.0 and dev["tid"] == TRACKS["device"]
+    # the whole document is valid JSON
+    json.loads(json.dumps(doc))
+
+
+def test_journal_sim_timestamps_are_monotone():
+    t = Tracer(enabled=True)
+    drive_engine_shape(t, iters=8)
+    last = float("-inf")
+    seen = 0
+    for line in t.export_jsonl().splitlines():
+        rec = json.loads(line)
+        assert rec["sim_us"] >= last, line
+        last = rec["sim_us"]
+        seen += 1
+    assert seen > 50
+
+
+def test_sampling_thins_iterations_but_keeps_lifecycle():
+    full = Tracer(enabled=True)
+    drive_engine_shape(full, iters=8)
+    thin = Tracer(enabled=True, sample_every=4)
+    drive_engine_shape(thin, iters=8)
+    assert len(thin.events) < len(full.events) / 2
+    kinds = [(n, k) for n, k, *_ in thin.events]
+    # lifecycle instants and async transitions survive sampling
+    assert kinds.count((NAMES["SESSION_SUBMIT"], "i")) == 2
+    assert kinds.count((NAMES["SESSION_FINISH"], "i")) == 2
+    assert kinds.count((NAMES["KV_OFFLOAD"], "b")) == 2
+    # iteration spans only on sampled iterations 0 and 4
+    assert kinds.count((NAMES["ITERATION"], "B")) == 2
+    # disabled tracer journals nothing at all
+    off = Tracer(enabled=False)
+    drive_engine_shape(off)
+    assert off.events == [] and off.dropped == 0
+
+
+def test_ring_buffer_caps_and_orphans_are_skipped():
+    t = Tracer(enabled=True, capacity=64)
+    drive_engine_shape(t, iters=40)
+    assert len(t.events) == 64
+    assert t.dropped > 0
+    doc = t.export_chrome()
+    assert doc["otherData"]["dropped_events"] == t.dropped
+    # Begins whose Ends were evicted must not produce X spans; whatever
+    # spans remain still nest properly per lane.
+    for tid in TRACKS.values():
+        spans_nest_properly(doc["traceEvents"], tid)
+    # explicit orphan: a Begin with no End never surfaces, and the
+    # enclosing span still pairs across it (the unwind rule)
+    t2 = Tracer(enabled=True)
+    t2.iter_begin(0, 0.0)
+    t2.begin(NAMES["DRAFT"], "engine", 0.0)
+    t2.begin(NAMES["VERIFY"], "engine", 0.0)
+    t2.end(NAMES["VERIFY"], "engine", 0.0)
+    t2.iter_end(0.001)
+    xnames = [e["name"] for e in t2.export_chrome()["traceEvents"] if e["ph"] == "X"]
+    assert "verify" in xnames and "iteration" in xnames
+    assert "draft" not in xnames
+
+
+# ---------------------------------------------------------------------
+# MetricsRegistry port (rust/src/metrics/registry.rs)
+# ---------------------------------------------------------------------
+
+
+def _key(name, labels=()):
+    return (name, tuple(sorted(labels)))
+
+
+def _sanitize(name):
+    return "".join(c if c.isalnum() or c in "_:" else "_" for c in name)
+
+
+def _escape(v):
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(v):
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+def _percentile(samples, p):
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    rank = round((p / 100.0) * (len(s) - 1))
+    return s[min(rank, len(s) - 1)]
+
+
+class Registry:
+    """1:1 port of metrics::MetricsRegistry merge/exposition semantics."""
+
+    def __init__(self):
+        self.counters = {}
+        self.gauges = {}
+        self.histograms = {}  # key -> list of samples
+
+    def inc(self, name, labels=(), by=1.0):
+        k = _key(name, labels)
+        self.counters[k] = self.counters.get(k, 0.0) + by
+
+    def set_gauge(self, name, labels=(), v=0.0):
+        self.gauges[_key(name, labels)] = v
+
+    def observe(self, name, labels=(), v=0.0):
+        self.histograms.setdefault(_key(name, labels), []).append(v)
+
+    def snapshot(self):
+        return copy.deepcopy(self)
+
+    def merge_from(self, other):
+        for k, v in other.counters.items():
+            self.counters[k] = self.counters.get(k, 0.0) + v
+        for k, v in other.gauges.items():
+            self.gauges[k] = v  # last-write-wins
+        for k, h in other.histograms.items():
+            self.histograms.setdefault(k, []).extend(h)
+
+    def expose_prometheus(self, prefix):
+        out = []
+        last = None
+
+        def type_line(full, kind):
+            nonlocal last
+            if last != (full, kind):
+                out.append(f"# TYPE {full} {kind}")
+                last = (full, kind)
+
+        def block(labels, extra=()):
+            parts = [f'{_sanitize(k)}="{_escape(v)}"' for k, v in labels]
+            parts += [f'{k}="{_escape(v)}"' for k, v in extra]
+            return "{" + ",".join(parts) + "}" if parts else ""
+
+        for (name, labels), v in sorted(self.counters.items()):
+            full = f"{_sanitize(prefix)}_{_sanitize(name)}"
+            type_line(full, "counter")
+            out.append(f"{full}{block(labels)} {_fmt(v)}")
+        for (name, labels), v in sorted(self.gauges.items()):
+            full = f"{_sanitize(prefix)}_{_sanitize(name)}"
+            type_line(full, "gauge")
+            out.append(f"{full}{block(labels)} {_fmt(v)}")
+        for (name, labels), h in sorted(self.histograms.items()):
+            full = f"{_sanitize(prefix)}_{_sanitize(name)}"
+            type_line(full, "summary")
+            for q, p in (("0.5", 50.0), ("0.99", 99.0)):
+                out.append(
+                    f"{full}{block(labels, (('quantile', q),))} "
+                    f"{_fmt(_percentile(h, p))}"
+                )
+            out.append(f"{full}_sum{block(labels)} {_fmt(sum(h))}")
+            out.append(f"{full}_count{block(labels)} {len(h)}")
+        return "\n".join(out) + ("\n" if out else "")
+
+
+def _mk_registry(seed):
+    """A deterministic pseudo-random registry (no random module needed)."""
+    r = Registry()
+    x = seed * 2654435761 % 2**32
+    for i in range(1 + seed % 4):
+        x = (x * 1103515245 + 12345) % 2**31
+        r.inc("requests_done", (("drafter", f"d{x % 3}"),), float(x % 7))
+        r.inc("requests_done", (), 1.0)
+        x = (x * 1103515245 + 12345) % 2**31
+        r.set_gauge("kv_used_tokens", (), float(x % 1000))
+        r.observe("ttft_s", (), (x % 100) / 100.0)
+        r.observe("ttft_s", (("drafter", f"d{x % 3}"),), (x % 50) / 100.0)
+    return r
+
+
+def test_registry_merge_is_associative():
+    # (a + b) + c == a + (b + c) on every surface — the fleet-rollup
+    # requirement stated in registry.rs module docs.
+    for seed in range(6):
+        a, b, c = _mk_registry(seed), _mk_registry(seed + 10), _mk_registry(seed + 20)
+        left = a.snapshot()
+        left.merge_from(b)
+        left.merge_from(c)
+        bc = b.snapshot()
+        bc.merge_from(c)
+        right = a.snapshot()
+        right.merge_from(bc)
+        assert left.counters == right.counters, f"seed {seed}"
+        assert left.gauges == right.gauges, f"seed {seed}"
+        assert {k: sorted(v) for k, v in left.histograms.items()} == {
+            k: sorted(v) for k, v in right.histograms.items()
+        }, f"seed {seed}"
+        assert left.expose_prometheus("t") == right.expose_prometheus("t")
+        # merge must leave the source untouched
+        assert b.expose_prometheus("t") == _mk_registry(seed + 10).expose_prometheus("t")
+
+
+def test_registry_merge_semantics_and_snapshot_independence():
+    a = Registry()
+    a.inc("n", (), 2.0)
+    a.set_gauge("g", (), 10.0)
+    a.observe("h", (), 1.0)
+    snap = a.snapshot()
+    b = Registry()
+    b.inc("n", (), 3.0)
+    b.set_gauge("g", (), 64.0)
+    b.observe("h", (), 5.0)
+    a.merge_from(b)
+    assert a.counters[_key("n")] == 5.0  # counters sum
+    assert a.gauges[_key("g")] == 64.0  # gauges LWW
+    assert a.histograms[_key("h")] == [1.0, 5.0]  # samples concatenate
+    # the earlier snapshot is a deep copy, not a view
+    assert snap.counters[_key("n")] == 2.0
+    assert snap.histograms[_key("h")] == [1.0]
+    # label sets are order-insensitive
+    c = Registry()
+    c.inc("x", (("a", "1"), ("b", "2")), 1.0)
+    c.inc("x", (("b", "2"), ("a", "1")), 1.0)
+    assert c.counters[_key("x", (("a", "1"), ("b", "2")))] == 2.0
+
+
+def test_prometheus_exposition_is_deterministic_and_shaped():
+    r = _mk_registry(3)
+    text = r.expose_prometheus("sparsespec")
+    assert text == _mk_registry(3).expose_prometheus("sparsespec")
+    assert "# TYPE sparsespec_requests_done counter" in text
+    assert "# TYPE sparsespec_kv_used_tokens gauge" in text
+    assert "# TYPE sparsespec_ttft_s summary" in text
+    assert 'sparsespec_ttft_s{quantile="0.5"}' in text
+    assert "sparsespec_ttft_s_count" in text
+    # one TYPE line per series even with many labelled children
+    assert text.count("# TYPE sparsespec_requests_done counter") == 1

@@ -8,10 +8,12 @@
 mod dispatch;
 mod experiments;
 mod kernels;
+mod trace_overhead;
 
 pub use dispatch::drafter_dispatch;
 pub use experiments::*;
 pub use kernels::{fig15_fused_kernel, pillar_select};
+pub use trace_overhead::trace_overhead;
 
 use crate::runtime::Runtime;
 use std::rc::Rc;
@@ -73,11 +75,12 @@ pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
         "fig15" => fig15_fused_kernel(ctx),
         "pillar_select" => pillar_select(ctx),
         "drafter_dispatch" => drafter_dispatch(ctx),
+        "trace_overhead" => trace_overhead(ctx),
         "all" => {
             for n in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
                 "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15", "pillar_select",
-                "drafter_dispatch",
+                "drafter_dispatch", "trace_overhead",
             ] {
                 println!("\n================ {n} ================");
                 run_named(ctx, n)?;

@@ -1,0 +1,142 @@
+//! `trace_overhead` — span-journal cost on the engine iteration path.
+//!
+//! The tentpole promise of the trace module is that it is effectively free
+//! when disabled and cheap when enabled.  Two measurements:
+//!
+//! 1. **Micro**: per-callsite-group latency (one begin/end pair plus one
+//!    gated instant — the shape a phase emits) against a disabled tracer
+//!    (config-flag branch only) and an enabled one (ring push + wall-clock
+//!    read + arg vec).
+//! 2. **End-to-end**: paired engine runs over the identical workload with
+//!    tracing off and on.  Outputs must be bit-identical (observability
+//!    never perturbs generation), and the off-run's per-iteration
+//!    wallclock anchors the extrapolated ratios.
+//!
+//! Gates (enforced after saving, like `drafter_dispatch`): the tracer
+//! cost extrapolated to a full iteration must stay under **1%** of an
+//! engine iteration when disabled and under **5%** when enabled.  Emits
+//! `reports/BENCH_trace_overhead.json`.
+
+use super::BenchCtx;
+use crate::engine::{Engine, EngineConfig};
+use crate::spec::DrafterKind;
+use crate::trace::{names, TraceConfig, Tracer, Track};
+use crate::util::json::{num, obj, s as jstr};
+use crate::workload::{Dataset, WorkloadGen};
+use anyhow::Result;
+use std::hint::black_box;
+use std::time::Instant;
+
+pub fn trace_overhead(ctx: &mut BenchCtx) -> Result<()> {
+    println!("trace_overhead: span journal cost, disabled vs enabled");
+    let reps = 200_000 * ctx.n_requests.max(1);
+
+    // Micro: disabled tracer — what every engine callsite pays when
+    // tracing is off (branch on the config flag; arg vecs are guarded at
+    // the call sites, mirrored by the `enabled()` guard here).
+    let mut off = Tracer::new(TraceConfig::default());
+    off.iter_begin(1, 0.0);
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let sim = black_box(i as f64 * 1e-6);
+        off.begin(names::DRAFT, Track::Engine, sim);
+        off.end(names::DRAFT, Track::Engine, sim, Vec::new());
+        if off.enabled() {
+            off.instant(names::KV_ADMIT, Track::Kv, sim, vec![("req", (i as u64).into())]);
+        }
+    }
+    let off_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    anyhow::ensure!(off.is_empty(), "disabled tracer must journal nothing");
+
+    // Micro: enabled tracer at full sampling (worst case: every event is
+    // a ring push with a wall-clock read).
+    let mut on = Tracer::new(TraceConfig::on());
+    on.iter_begin(1, 0.0);
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let sim = black_box(i as f64 * 1e-6);
+        on.begin(names::DRAFT, Track::Engine, sim);
+        on.end(names::DRAFT, Track::Engine, sim, vec![("w", 64usize.into())]);
+        if on.enabled() {
+            on.instant(names::KV_ADMIT, Track::Kv, sim, vec![("req", (i as u64).into())]);
+        }
+    }
+    let on_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    println!(
+        "  per callsite group (begin+end+instant): disabled {off_ns:.1}ns, \
+         enabled {on_ns:.1}ns"
+    );
+
+    // End-to-end anchor: the same workload with tracing off and on.
+    let rt = ctx.rt()?;
+    let m = rt.cfg.model.clone();
+    let n_req = ctx.n_requests.max(4);
+    let mk_reqs = |seed: u64| {
+        WorkloadGen::new(rt.cfg.grammar.clone(), m.clone(), Dataset::Aime, seed)
+            .offline_batch(n_req)
+    };
+    let mut eng_off = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8),
+    )?;
+    let r_off = eng_off.run(mk_reqs(ctx.seed))?;
+    let cfg_on = EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+        .k(8)
+        .tracing(TraceConfig::on())
+        .build(&m)?;
+    let mut eng_on = Engine::new(rt.clone(), cfg_on)?;
+    let r_on = eng_on.run(mk_reqs(ctx.seed))?;
+    // Observability must never perturb generation.
+    anyhow::ensure!(
+        r_off.outputs == r_on.outputs,
+        "tracing changed engine outputs (must be bit-identical)"
+    );
+    println!("  {}", r_off.summary());
+    let iter_us = r_off.wall_s * 1e6 / r_off.iterations.max(1) as f64;
+    let events_per_iter = eng_on.tracer().len() as f64 / r_on.iterations.max(1) as f64;
+
+    // Callsite-group bound per iteration: the phase spans (iteration,
+    // admit, one per draft-W group, one per proposal drafter, verify),
+    // per-slot lifecycle/KV instants, four counters and the device-track
+    // spans — comfortably under slots + 16 groups.
+    let groups_per_iter = (m.slots + 16) as f64;
+    let off_us_per_iter = off_ns * groups_per_iter / 1e3;
+    let on_us_per_iter = on_ns * groups_per_iter / 1e3;
+    let ratio_off = off_us_per_iter / iter_us.max(1e-9);
+    let ratio_on = on_us_per_iter / iter_us.max(1e-9);
+    println!(
+        "  per-iteration: engine {iter_us:.1}us, tracer bound disabled \
+         {off_us_per_iter:.4}us ({:.4}% — gate < 1%), enabled {on_us_per_iter:.3}us \
+         ({:.3}% — gate < 5%), observed {events_per_iter:.1} events/iter",
+        ratio_off * 100.0,
+        ratio_on * 100.0
+    );
+
+    let json = obj(vec![
+        ("experiment", jstr("trace_overhead")),
+        ("harness", jstr("cargo bench -- trace_overhead")),
+        ("group_disabled_ns", num(off_ns)),
+        ("group_enabled_ns", num(on_ns)),
+        ("engine_iter_us", num(iter_us)),
+        ("groups_per_iter_bound", num(groups_per_iter)),
+        ("events_per_iter_observed", num(events_per_iter)),
+        ("overhead_ratio_disabled", num(ratio_off)),
+        ("overhead_ratio_enabled", num(ratio_on)),
+        ("outputs_bit_identical", num(1.0)),
+    ]);
+    ctx.save("BENCH_trace_overhead.json", &json.to_string())?;
+    // Enforced after saving, so a regression still leaves evidence.
+    anyhow::ensure!(
+        ratio_off < 0.01,
+        "trace_overhead gate failed: disabled tracing costs {:.3}% of an \
+         engine iteration (need < 1%)",
+        ratio_off * 100.0
+    );
+    anyhow::ensure!(
+        ratio_on < 0.05,
+        "trace_overhead gate failed: enabled tracing costs {:.3}% of an \
+         engine iteration (need < 5%)",
+        ratio_on * 100.0
+    );
+    Ok(())
+}

@@ -36,7 +36,7 @@ use std::time::Instant;
 
 use super::core::Engine;
 use super::{EngineConfig, RunReport};
-use crate::metrics::{Histogram, Metrics};
+use crate::metrics::{Histogram, MetricsRegistry};
 use crate::runtime::Runtime;
 use crate::workload::Request;
 
@@ -52,6 +52,17 @@ pub enum FinishReason {
     /// missing artifact variant).  Nothing was queued; the reason is
     /// readable via [`SessionHandle::reject_reason`].
     Rejected,
+}
+
+impl FinishReason {
+    /// Stable lowercase label for trace args and metric labels.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Completed => "completed",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+        }
+    }
 }
 
 /// One element of a session's event stream.
@@ -372,6 +383,12 @@ impl EngineHandle {
         &mut self.engine
     }
 
+    /// The engine's trace journal (empty unless `EngineConfig::trace`
+    /// enabled tracing).
+    pub fn tracer(&self) -> &crate::trace::Tracer {
+        self.engine.tracer()
+    }
+
     /// Assemble the run report (drains per-run aggregates; call once at
     /// the end, exactly like `Engine::run`'s return value).
     pub fn report(&mut self) -> RunReport {
@@ -396,7 +413,7 @@ pub struct EngineDriver {
     handles: Vec<SessionHandle>,
     /// Stats folded out of pruned (finished) sessions — see
     /// `prune_finished`.
-    retired: Metrics,
+    retired: MetricsRegistry,
 }
 
 impl EngineDriver {
@@ -406,7 +423,7 @@ impl EngineDriver {
             arrivals: None,
             staged: None,
             handles: Vec::new(),
-            retired: Metrics::new(),
+            retired: MetricsRegistry::new(),
         }
     }
 
@@ -419,7 +436,7 @@ impl EngineDriver {
             arrivals: Some(Box::new(arrivals)),
             staged: None,
             handles: Vec::new(),
-            retired: Metrics::new(),
+            retired: MetricsRegistry::new(),
         }
     }
 
@@ -500,37 +517,38 @@ impl EngineDriver {
         Ok(())
     }
 
-    fn fold_session(m: &mut Metrics, h: &SessionHandle) {
+    fn fold_session(m: &mut MetricsRegistry, h: &SessionHandle) {
         let st = h.stats();
-        // Per-drafter breakdown keys ("ttft_s[pillar_w64]", …) ride next
-        // to the aggregate so mixed-drafter pools compare policies.
+        // Per-drafter label series ride next to the aggregate (empty
+        // label set) so mixed-drafter pools compare policies.
         let tag = st.drafter.clone();
+        let by: &[(&str, &str)] = &[("drafter", &tag)];
         if let Some(t) = st.ttft_s {
-            m.observe("ttft_s", t);
+            m.observe("ttft_s", &[], t);
             if !tag.is_empty() {
-                m.observe_keyed("ttft_s", &tag, t);
+                m.observe("ttft_s", by, t);
             }
         }
         if let Some(t) = st.ttft_sim_s() {
-            m.observe("ttft_sim_s", t);
+            m.observe("ttft_sim_s", &[], t);
         }
-        m.hist("inter_token_s").merge(&st.inter_token_s);
+        m.hist_mut("inter_token_s", &[]).merge(&st.inter_token_s);
         if st.rounds > 0 {
-            m.observe("accepted_per_round", st.mean_accepted_per_round());
+            m.observe("accepted_per_round", &[], st.mean_accepted_per_round());
             if !tag.is_empty() {
-                m.observe_keyed("accepted_per_round", &tag, st.mean_accepted_per_round());
+                m.observe("accepted_per_round", by, st.mean_accepted_per_round());
             }
         }
         match h.finish_reason() {
             Some(FinishReason::Completed) => {
-                m.inc("sessions_completed", 1.0);
+                m.inc("sessions_completed", &[], 1.0);
                 if !tag.is_empty() {
-                    m.inc_keyed("sessions_completed", &tag, 1.0);
+                    m.inc("sessions_completed", by, 1.0);
                 }
             }
-            Some(FinishReason::Cancelled) => m.inc("sessions_cancelled", 1.0),
-            Some(FinishReason::Rejected) => m.inc("sessions_rejected", 1.0),
-            None => m.inc("sessions_live", 1.0),
+            Some(FinishReason::Cancelled) => m.inc("sessions_cancelled", &[], 1.0),
+            Some(FinishReason::Rejected) => m.inc("sessions_rejected", &[], 1.0),
+            None => m.inc("sessions_live", &[], 1.0),
         }
     }
 
@@ -553,15 +571,15 @@ impl EngineDriver {
         before - self.handles.len()
     }
 
-    /// Aggregate per-session statistics into serving metrics: `ttft_s`,
-    /// `ttft_sim_s`, `inter_token_s` and `accepted_per_round` histograms
-    /// plus `sessions_{completed,cancelled,rejected,live}` counters.
-    /// Sessions carry their resolved drafter name, so `ttft_s[<drafter>]`,
-    /// `accepted_per_round[<drafter>]` and `sessions_completed[<drafter>]`
-    /// breakdowns land alongside the aggregates (mixed-drafter pools).
-    /// Includes sessions already dropped by `prune_finished`.
-    pub fn session_metrics(&self) -> Metrics {
-        let mut m = Metrics::new();
+    /// Aggregate per-session statistics into a typed
+    /// [`MetricsRegistry`]: `ttft_s`, `ttft_sim_s`, `inter_token_s` and
+    /// `accepted_per_round` histograms plus
+    /// `sessions_{completed,cancelled,rejected,live}` counters.  Sessions
+    /// carry their resolved drafter name, so `{drafter="<name>"}` label
+    /// series land alongside the unlabelled aggregates (mixed-drafter
+    /// pools).  Includes sessions already dropped by `prune_finished`.
+    pub fn session_metrics(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
         m.merge_from(&self.retired);
         for h in &self.handles {
             Self::fold_session(&mut m, h);
@@ -572,5 +590,10 @@ impl EngineDriver {
     /// Final run report (see [`EngineHandle::report`]).
     pub fn report(&mut self) -> RunReport {
         self.handle.report()
+    }
+
+    /// The engine's trace journal (empty unless tracing is enabled).
+    pub fn tracer(&self) -> &crate::trace::Tracer {
+        self.handle.tracer()
     }
 }

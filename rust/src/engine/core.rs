@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use super::api::{FinishReason, SessionHandle, SessionShared, TokenSink};
 use super::slot::{Phase, Slot};
-use super::{EngineConfig, RunReport};
+use super::{EngineConfig, RunReport, SloReport};
 use crate::kv_cache::{HostKv, KvManager, OffloadEngine, OffloadJob, PressureAction};
 use crate::metrics::Histogram;
 use crate::perfmodel::{DeviceModel, SimScale};
@@ -28,6 +28,7 @@ use crate::spec::{
     AcceptStats, AdaptiveDrafter, DraftCtx, DraftHost, DraftMode, Drafter, DrafterKind,
     DrafterRegistry, NGramIndex, PillarState, VerifyFeedback,
 };
+use crate::trace::{names, Tracer, Track};
 use crate::util::rng::Xoshiro256;
 use crate::util::threadpool::{Promise, ThreadPool};
 use crate::workload::Request;
@@ -57,6 +58,92 @@ struct VerifyWork {
     cpu_s: f64,
     /// Portion of `cpu_s` spent in critical-token selection (refresh).
     select_s: f64,
+}
+
+/// Always-on SLO accounting on the **simulated** serving clock.
+///
+/// Token events are queued while an iteration runs and flushed only after
+/// the clock has advanced past that iteration (mirroring `stamp_pending`),
+/// so TTFT/ITL include the cost of the iteration that produced them.
+struct SloTracker {
+    target_s: f64,
+    ttft: Histogram,
+    itl: Histogram,
+    within_target: usize,
+    completed: usize,
+    submit_sim: HashMap<u64, f64>,
+    /// First-token latency per live request; first admission wins, so a
+    /// preempt-restart's second prefill never rewrites TTFT.
+    ttft_by: HashMap<u64, f64>,
+    last_emit: HashMap<u64, f64>,
+    ttft_pending: Vec<u64>,
+    /// (req_id, tokens emitted this round) — ITL spreads the round gap
+    /// evenly over the tokens it delivered.
+    itl_pending: Vec<(u64, usize)>,
+    completed_pending: Vec<u64>,
+}
+
+impl SloTracker {
+    fn new(target_s: f64) -> SloTracker {
+        SloTracker {
+            target_s,
+            ttft: Histogram::default(),
+            itl: Histogram::default(),
+            within_target: 0,
+            completed: 0,
+            submit_sim: HashMap::new(),
+            ttft_by: HashMap::new(),
+            last_emit: HashMap::new(),
+            ttft_pending: Vec::new(),
+            itl_pending: Vec::new(),
+            completed_pending: Vec::new(),
+        }
+    }
+
+    fn on_submit(&mut self, id: u64, sim_s: f64) {
+        self.submit_sim.insert(id, sim_s);
+    }
+
+    /// Stamp queued events with the end-of-iteration clock.  Order
+    /// matters: first tokens before ITL (initialises `last_emit`), and
+    /// completions last, so a same-iteration retire still records TTFT.
+    fn flush(&mut self, now: f64) {
+        for id in std::mem::take(&mut self.ttft_pending) {
+            if self.ttft_by.contains_key(&id) {
+                continue; // preempt restart: the original TTFT stands
+            }
+            let Some(&t0) = self.submit_sim.get(&id) else { continue };
+            let ttft = (now - t0).max(0.0);
+            self.ttft_by.insert(id, ttft);
+            self.ttft.record(ttft);
+            self.last_emit.insert(id, now);
+        }
+        for (id, n) in std::mem::take(&mut self.itl_pending) {
+            if n == 0 {
+                continue;
+            }
+            let Some(last) = self.last_emit.get_mut(&id) else { continue };
+            let gap = ((now - *last) / n as f64).max(0.0);
+            for _ in 0..n {
+                self.itl.record(gap);
+            }
+            *last = now;
+        }
+        for id in std::mem::take(&mut self.completed_pending) {
+            self.completed += 1;
+            if self.ttft_by.get(&id).is_some_and(|t| *t <= self.target_s) {
+                self.within_target += 1;
+            }
+            self.forget(id);
+        }
+    }
+
+    /// Drop per-request state (cancellation or completion).
+    fn forget(&mut self, id: u64) {
+        self.submit_sim.remove(&id);
+        self.ttft_by.remove(&id);
+        self.last_emit.remove(&id);
+    }
 }
 
 pub struct Engine {
@@ -107,6 +194,14 @@ pub struct Engine {
     /// Sessions that produced events this iteration; their sim timestamps
     /// are stamped with the *end-of-iteration* clock in `step`.
     stamp_pending: Vec<Rc<RefCell<SessionShared>>>,
+    /// Span/counter journal (config-gated; near-free when disabled).
+    tracer: Tracer,
+    /// SLO accounting on the simulated clock (always on — it is two map
+    /// inserts per round, not a tracing feature).
+    slo: SloTracker,
+    /// Open delayed-verification overlap window (async-span id == the
+    /// iteration that launched it), closed at the next delayed drain.
+    overlap_open: Option<u64>,
 }
 
 impl Engine {
@@ -198,6 +293,9 @@ impl Engine {
             requests_rejected: 0,
             sessions: BTreeMap::new(),
             stamp_pending: Vec::new(),
+            tracer: Tracer::new(cfg.trace.clone()),
+            slo: SloTracker::new(cfg.ttft_slo_s),
+            overlap_open: None,
             rt,
             cfg,
         };
@@ -316,6 +414,7 @@ impl Engine {
             Ok(i) => self.drafter_names[*i].clone(),
             Err(_) => req.drafter.map(|k| k.name()).unwrap_or_default(),
         };
+        let trace_name = if self.tracer.enabled() { name.clone() } else { String::new() };
         let mut shared = SessionShared::new(req.id, self.sim_s, name);
         if let Some(s) = sink {
             shared.set_sink(s);
@@ -323,6 +422,15 @@ impl Engine {
         let rc = Rc::new(RefCell::new(shared));
         match resolved {
             Ok(_) => {
+                self.slo.on_submit(req.id, self.sim_s);
+                if self.tracer.enabled() {
+                    self.tracer.instant(
+                        names::SESSION_SUBMIT,
+                        Track::Session,
+                        self.sim_s,
+                        vec![("req", req.id.into()), ("drafter", trace_name.into())],
+                    );
+                }
                 self.sessions.insert(req.id, rc.clone());
                 self.queue.push_back(req);
             }
@@ -369,6 +477,22 @@ impl Engine {
         self.kv.used_tokens()
     }
 
+    /// The engine's trace journal (spans, instants, counters).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Chrome/Perfetto trace-event JSON of everything journaled so far.
+    /// Load it at `ui.perfetto.dev` or `chrome://tracing`.
+    pub fn export_trace_chrome(&self) -> String {
+        self.tracer.export_chrome_string()
+    }
+
+    /// One JSON object per line — the journal for ad-hoc `jq` analysis.
+    pub fn export_trace_jsonl(&self) -> String {
+        self.tracer.export_jsonl()
+    }
+
     /// Deliver any new output tokens of `slot` to its session.  Sessions
     /// with no observer — no consumer handle alive (the engine's map Rc
     /// is the only one) and no sink — skip token delivery and per-token
@@ -397,6 +521,14 @@ impl Engine {
         if let Some(sess) = self.sessions.remove(&id) {
             sess.borrow_mut().finish(reason);
             self.stamp_pending.push(sess);
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::SESSION_FINISH,
+                    Track::Session,
+                    self.sim_s,
+                    vec![("req", id.into()), ("reason", reason.label().into())],
+                );
+            }
         }
     }
 
@@ -437,8 +569,17 @@ impl Engine {
             // Covers both host-resident KV and rows still in offload
             // transit (the orphaned transfer is dropped at harvest time).
             self.kv.forget(id);
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::KV_FORGET,
+                    Track::Kv,
+                    self.sim_s,
+                    vec![("req", id.into()), ("tokens", sus.len.into())],
+                );
+            }
             self.drafters[sus.drafter].on_finish(id);
         }
+        self.slo.forget(id);
         self.requests_cancelled += 1;
         self.finish_session(id, FinishReason::Cancelled);
     }
@@ -447,11 +588,22 @@ impl Engine {
     /// moves out; in-flight offload transfers are drained first).
     pub(crate) fn take_report(&mut self, wall_s: f64) -> RunReport {
         // Drain any in-flight offloads (their requests will never resume).
-        for (id, kv) in self.offload.drain() {
+        for (id, kv, _transfer_s) in self.offload.drain() {
             if self.suspended.contains_key(&id) {
                 self.kv.host.insert(id, kv);
             }
         }
+        let slo = SloReport {
+            ttft_target_s: self.cfg.ttft_slo_s,
+            ttft_sim_s: self.slo.ttft.clone(),
+            itl_sim_s: self.slo.itl.clone(),
+            completed_within_ttft: self.slo.within_target,
+            completed: self.slo.completed,
+            goodput_rps: self.slo.within_target as f64 / self.sim_s.max(1e-9),
+            kv_evictions: self.kv.stats.recompute_events,
+            kv_offloads: self.kv.stats.offload_events,
+            kv_reloads: self.kv.stats.reload_events,
+        };
         let accept_by: BTreeMap<String, AcceptStats> = self
             .drafter_names
             .iter()
@@ -477,6 +629,7 @@ impl Engine {
             mean_kv_util: self.kv_util_sum / self.iter.max(1) as f64,
             outputs: std::mem::take(&mut self.outputs),
             request_latency_s: self.latency.clone(),
+            slo,
         }
     }
 
@@ -491,6 +644,15 @@ impl Engine {
             return Ok(false);
         }
         self.iter += 1;
+        let sim0 = self.sim_s;
+        self.tracer.iter_begin(self.iter, sim0);
+        // Snapshot device-phase stats so per-artifact spans can be carved
+        // out of this iteration's delta after the clock advances.
+        let dev_base = if self.tracer.hot() {
+            Some((self.runner.stats.clone(), self.tracer.now_us()))
+        } else {
+            None
+        };
         let mut comp = IterComposition::default();
         let mut launches = 0u32;
         let mut cpu_s = 0.0;
@@ -546,6 +708,42 @@ impl Engine {
                 sess.borrow_mut().stamp_sim(self.sim_s);
             }
         }
+        self.slo.flush(self.sim_s);
+        if let Some((base, dev_t0)) = dev_base {
+            // Device-track spans: one per artifact touched this iteration,
+            // laid end to end from the snapshot point (the modelled device
+            // is serial, so concatenation is the honest picture).
+            let mut cursor = dev_t0;
+            for (name, d) in self.runner.stats.delta_since(&base) {
+                let dur_us = d.total_s() * 1e6;
+                self.tracer.complete_at(
+                    &name,
+                    Track::Device,
+                    cursor,
+                    dur_us,
+                    sim0,
+                    vec![
+                        ("calls", (d.calls as f64).into()),
+                        ("upload_us", (d.upload_s * 1e6).into()),
+                        ("exec_us", (d.exec_s * 1e6).into()),
+                        ("fetch_us", (d.fetch_s * 1e6).into()),
+                    ],
+                );
+                cursor += dur_us;
+            }
+            self.tracer.counter("queue_depth", self.sim_s, self.queue.len() as f64);
+            self.tracer
+                .counter("delayed_verify_depth", self.sim_s, self.delayed.len() as f64);
+            self.tracer
+                .counter("kv_used_tokens", self.sim_s, self.kv.used_tokens() as f64);
+            self.tracer
+                .counter("live_sessions", self.sim_s, self.sessions.len() as f64);
+            let mut args = comp.trace_args();
+            args.push(("launches", (launches as f64).into()));
+            args.push(("t_dev_us", (t_dev * 1e6).into()));
+            args.push(("cpu_charge_us", (cpu_charge * 1e6).into()));
+            self.tracer.iter_end(self.sim_s, args);
+        }
         self.trace.push(comp);
         Ok(true)
     }
@@ -573,6 +771,7 @@ impl Engine {
             }
         }
         let m = self.mcfg().clone();
+        self.tracer.begin(names::ADMIT, Track::Engine, self.sim_s);
         let mut tokens = vec![0i32; m.slots * m.prompt_pad];
         let mut plen = vec![1i32; m.slots];
         let mut active = vec![0i32; m.slots];
@@ -599,6 +798,20 @@ impl Engine {
             plen[idx] = p as i32;
             active[idx] = 1;
             self.kv.admit(rid, p);
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::BUCKET_ASSIGN,
+                    Track::Scheduler,
+                    self.sim_s,
+                    vec![("req", rid.into()), ("bucket", bucket.into())],
+                );
+                self.tracer.instant(
+                    names::KV_ADMIT,
+                    Track::Kv,
+                    self.sim_s,
+                    vec![("req", rid.into()), ("tokens", p.into())],
+                );
+            }
             let pol = self.drafters[di].index_policy(&m);
             let mode = self.drafters[di].mode();
             let draft_w = self.drafters[di].draft_budget(&m);
@@ -631,6 +844,10 @@ impl Engine {
             newly.push(idx);
         }
         if newly.is_empty() {
+            if self.tracer.hot() {
+                self.tracer
+                    .end(names::ADMIT, Track::Engine, self.sim_s, vec![("admitted", 0usize.into())]);
+            }
             return Ok(0);
         }
         comp.prefilling = newly.len();
@@ -653,11 +870,24 @@ impl Engine {
             // Begin the first round, aligned to the slot's bucket.
             self.start_round(idx, true);
             // The sampled first token streams out immediately (TTFT).
-            Self::notify_session(
-                &self.sessions,
-                &mut self.stamp_pending,
-                self.slots[idx].as_ref().unwrap(),
-                None,
+            let slot = self.slots[idx].as_ref().unwrap();
+            self.slo.ttft_pending.push(slot.req.id);
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::SESSION_FIRST_TOKEN,
+                    Track::Session,
+                    self.sim_s,
+                    vec![("req", slot.req.id.into())],
+                );
+            }
+            Self::notify_session(&self.sessions, &mut self.stamp_pending, slot, None);
+        }
+        if self.tracer.hot() {
+            self.tracer.end(
+                names::ADMIT,
+                Track::Engine,
+                self.sim_s,
+                vec![("admitted", newly.len().into())],
             );
         }
         Ok(newly.len())
@@ -711,7 +941,16 @@ impl Engine {
             // harvest finished offload transfers into the host tier
             // (transfers whose request was cancelled mid-flight are
             // orphans — drop them instead of stranding host KV)
-            for (id, kv) in self.offload.poll() {
+            for (id, kv, transfer_s) in self.offload.poll() {
+                if self.tracer.enabled() {
+                    self.tracer.async_end(
+                        names::KV_OFFLOAD,
+                        Track::Kv,
+                        id,
+                        self.sim_s,
+                        vec![("req", id.into()), ("transfer_us", (transfer_s * 1e6).into())],
+                    );
+                }
                 if self.suspended.contains_key(&id) {
                     self.kv.host.insert(id, kv);
                 }
@@ -725,6 +964,14 @@ impl Engine {
             let idx = self.free_slot().unwrap();
             self.runner.kv_load(idx, &host_kv.k, &host_kv.v)?;
             self.kv.admit(id, sus.len);
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::KV_RELOAD,
+                    Track::Kv,
+                    self.sim_s,
+                    vec![("req", id.into()), ("tokens", sus.len.into())],
+                );
+            }
             let bucket = match self.cfg.schedule {
                 Schedule::Unified => self.buckets.assign(),
                 Schedule::Lockstep => self.buckets.assign_to(0),
@@ -822,6 +1069,15 @@ impl Engine {
                         kv: HostKv { k: rows_k, v: rows_v, len },
                         bytes,
                     });
+                    if self.tracer.enabled() {
+                        self.tracer.async_begin(
+                            names::KV_OFFLOAD,
+                            Track::Kv,
+                            req_id,
+                            self.sim_s,
+                            vec![("req", req_id.into()), ("bytes", bytes.into()), ("tokens", len.into())],
+                        );
+                    }
                 }
                 PressureAction::Preempt { req_id } => {
                     let Some(idx) = self.slot_of(req_id) else { continue };
@@ -839,6 +1095,14 @@ impl Engine {
                     // stochastically.  (Per-request reseeding would fix
                     // this but change legacy bit-compat outputs.)
                     self.tokens_generated -= slot.gen_count.min(slot.output.len()) as u64;
+                    if self.tracer.enabled() {
+                        self.tracer.instant(
+                            names::KV_PREEMPT,
+                            Track::Kv,
+                            self.sim_s,
+                            vec![("req", req_id.into()), ("tokens", slot.len.into())],
+                        );
+                    }
                     self.queue.push_back(slot.req);
                 }
             }
@@ -893,6 +1157,7 @@ impl Engine {
         let mut launches = 0u32;
         let mut stepped: Vec<usize> = Vec::new();
         for (&w, participating) in &groups {
+            self.tracer.begin(names::DRAFT, Track::Engine, self.sim_s);
             let t_cpu = Instant::now();
             let mut token = vec![0i32; m.slots];
             let mut pos = vec![0i32; m.slots];
@@ -947,6 +1212,14 @@ impl Engine {
                 self.kv.grow(id, 1);
             }
             *cpu_s += t_cpu.elapsed().as_secs_f64();
+            if self.tracer.hot() {
+                self.tracer.end(
+                    names::DRAFT,
+                    Track::Engine,
+                    self.sim_s,
+                    vec![("w", w.into()), ("slots", participating.len().into())],
+                );
+            }
             stepped.extend_from_slice(participating);
         }
 
@@ -1005,6 +1278,7 @@ impl Engine {
             if idxs.is_empty() {
                 continue;
             }
+            self.tracer.begin(names::PROPOSE, Track::Engine, self.sim_s);
             let mut host = DraftHost {
                 runner: &mut self.runner,
                 m: &m,
@@ -1017,6 +1291,15 @@ impl Engine {
                 pool: &self.pool,
             };
             launches += self.drafters[di].propose_batch(&mut host, &mut self.slots, &idxs)?;
+            if self.tracer.hot() {
+                let dname = self.drafter_names[di].clone();
+                self.tracer.end(
+                    names::PROPOSE,
+                    Track::Engine,
+                    self.sim_s,
+                    vec![("drafter", dname.into()), ("slots", idxs.len().into())],
+                );
+            }
         }
         Ok(launches)
     }
@@ -1049,6 +1332,7 @@ impl Engine {
         if participating.is_empty() {
             return Ok(0);
         }
+        self.tracer.begin(names::VERIFY, Track::Engine, self.sim_s);
         comp.verifying = participating.len();
         for &i in &participating {
             let slot = self.slots[i].as_ref().unwrap();
@@ -1134,6 +1418,28 @@ impl Engine {
             *cpu_s += c;
             self.post_verify(&participating)?;
         }
+        if self.cfg.delayed_verify && self.tracer.enabled() && self.overlap_open.is_none() {
+            // The CPU-side acceptance/refresh work now runs concurrently
+            // with whatever the device does next; the window closes at the
+            // next delayed drain (possibly several iterations later).
+            self.overlap_open = Some(self.iter);
+            self.tracer.async_begin(
+                names::DELAYED_VERIFY_OVERLAP,
+                Track::Overlap,
+                self.iter,
+                self.sim_s,
+                vec![("jobs", participating.len().into())],
+            );
+        }
+        if self.tracer.hot() {
+            let delayed: u64 = if self.cfg.delayed_verify { 1 } else { 0 };
+            self.tracer.end(
+                names::VERIFY,
+                Track::Engine,
+                self.sim_s,
+                vec![("slots", participating.len().into()), ("delayed", delayed.into())],
+            );
+        }
         Ok(1)
     }
 
@@ -1142,6 +1448,7 @@ impl Engine {
             return Ok(0.0);
         }
         let promises = std::mem::take(&mut self.delayed);
+        let n_jobs = promises.len();
         let mut boundary = Vec::new();
         let mut stall = 0.0;
         let mut sel = 0.0;
@@ -1158,6 +1465,15 @@ impl Engine {
             // breakdown (and the overlap model's observers) still want to
             // see its true cost.
             self.runner.stats.note_host("pillar_select", sel);
+        }
+        if let Some(id) = self.overlap_open.take() {
+            self.tracer.async_end(
+                names::DELAYED_VERIFY_OVERLAP,
+                Track::Overlap,
+                id,
+                self.sim_s,
+                vec![("jobs", n_jobs.into()), ("stall_us", (stall * 1e6).into())],
+            );
         }
         self.post_verify(&boundary)?;
         Ok(stall)
@@ -1209,6 +1525,21 @@ impl Engine {
             bonus_token: w.next_token,
             context_len: new_len,
         });
+        if self.tracer.enabled() {
+            // AdaptiveK (or any feedback-adaptive wrapper) may have just
+            // moved this session's speculation length.
+            if let Some(kc) = self.drafters[di].current_k(id) {
+                self.tracer.instant(
+                    names::ADAPTIVE_K,
+                    Track::Drafter,
+                    self.sim_s,
+                    vec![("req", id.into()), ("k", kc.into())],
+                );
+            }
+        }
+        if !newly.is_empty() {
+            self.slo.itl_pending.push((id, newly.len()));
+        }
         // Stream the accepted tokens out before retirement/pressure run.
         Self::notify_session(
             &self.sessions,
@@ -1235,6 +1566,7 @@ impl Engine {
                 self.latency
                     .record(slot.admitted_at.elapsed().as_secs_f64());
                 self.requests_done += 1;
+                self.slo.completed_pending.push(slot.req.id);
                 self.finish_session(slot.req.id, FinishReason::Completed);
             }
         }

@@ -94,6 +94,13 @@ pub struct EngineConfig {
     /// widens/narrows its per-round draft length from windowed
     /// verification feedback, bounded above by `k`.
     pub adaptive_k: bool,
+    /// Structured tracing (spans + counters into a bounded journal; see
+    /// [`crate::trace`]).  Off by default: disabled tracing costs one
+    /// branch per emission point.
+    pub trace: crate::trace::TraceConfig,
+    /// TTFT target (simulated seconds) for the SLO section of the report:
+    /// goodput counts only completions whose first token beat this.
+    pub ttft_slo_s: f64,
 }
 
 impl EngineConfig {
@@ -112,6 +119,8 @@ impl EngineConfig {
             sim_scale: None,
             extra_drafters: Vec::new(),
             adaptive_k: false,
+            trace: crate::trace::TraceConfig::default(),
+            ttft_slo_s: 1.0,
         }
     }
 
@@ -217,6 +226,22 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// Enable structured tracing with the given knobs (see
+    /// [`crate::trace::TraceConfig`]); export the journal after the run
+    /// via `Engine::export_trace_chrome` / `export_trace_jsonl` or the
+    /// CLI's `--trace-out`.
+    pub fn tracing(mut self, t: crate::trace::TraceConfig) -> Self {
+        self.cfg.trace = t;
+        self
+    }
+
+    /// TTFT target (simulated seconds) for SLO-centric reporting
+    /// (`RunReport::slo`).  Goodput counts completions under this target.
+    pub fn ttft_slo(mut self, s: f64) -> Self {
+        self.cfg.ttft_slo_s = s;
+        self
+    }
+
     /// Validate against the model/artifact shape and return the config.
     /// Catches at construction time what would otherwise surface as a
     /// mid-run artifact-lookup error (or silent mis-serving).
@@ -227,6 +252,9 @@ impl EngineConfigBuilder {
         }
         if cfg.max_iterations == 0 {
             bail!("max_iterations must be > 0");
+        }
+        if !cfg.ttft_slo_s.is_finite() || cfg.ttft_slo_s <= 0.0 {
+            bail!("ttft_slo_s must be finite and > 0 (got {})", cfg.ttft_slo_s);
         }
         // Vanilla forces k = 0 inside the engine; everything else verifies
         // with the verify_q{k+1} artifact.
@@ -287,6 +315,56 @@ impl EngineConfigBuilder {
     }
 }
 
+/// SLO-centric view of a run, measured on the **simulated** serving clock
+/// (so it is machine-independent and comparable across figures).
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    /// The TTFT target goodput is measured against (`EngineConfig::ttft_slo_s`).
+    pub ttft_target_s: f64,
+    /// Time to first token per completed-or-cancelled session.
+    pub ttft_sim_s: crate::metrics::Histogram,
+    /// Inter-token latency (per accepted token, simulated).
+    pub itl_sim_s: crate::metrics::Histogram,
+    /// Completions whose first token beat the target.
+    pub completed_within_ttft: usize,
+    /// Total completions.
+    pub completed: usize,
+    /// Completions-under-target per simulated second.
+    pub goodput_rps: f64,
+    /// KV-pressure eviction (recompute-path preemption) events.
+    pub kv_evictions: u64,
+    /// KV offload-to-host events.
+    pub kv_offloads: u64,
+    /// Host-tier reload events.
+    pub kv_reloads: u64,
+}
+
+impl SloReport {
+    /// Deterministic markdown rendering (sorted, fixed column order).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| slo | value |\n|---|---|\n");
+        let p = |h: &crate::metrics::Histogram, q: f64| h.percentile(q);
+        let rows: Vec<(&str, String)> = vec![
+            ("completed", format!("{}", self.completed)),
+            ("completed_within_ttft", format!("{}", self.completed_within_ttft)),
+            ("goodput_rps", format!("{:.4}", self.goodput_rps)),
+            ("itl_sim_s_p50", format!("{:.6}", p(&self.itl_sim_s, 50.0))),
+            ("itl_sim_s_p99", format!("{:.6}", p(&self.itl_sim_s, 99.0))),
+            ("kv_evictions", format!("{}", self.kv_evictions)),
+            ("kv_offloads", format!("{}", self.kv_offloads)),
+            ("kv_reloads", format!("{}", self.kv_reloads)),
+            ("ttft_sim_s_p50", format!("{:.6}", p(&self.ttft_sim_s, 50.0))),
+            ("ttft_sim_s_p99", format!("{:.6}", p(&self.ttft_sim_s, 99.0))),
+            ("ttft_target_s", format!("{:.4}", self.ttft_target_s)),
+        ];
+        for (k, v) in rows {
+            out.push_str(&format!("| {k} | {v} |\n"));
+        }
+        out
+    }
+}
+
 /// Everything a run produces (one row of the paper's figures).
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -316,6 +394,9 @@ pub struct RunReport {
     /// Outputs per request id (for losslessness checks).
     pub outputs: std::collections::BTreeMap<u64, Vec<i32>>,
     pub request_latency_s: crate::metrics::Histogram,
+    /// SLO section: TTFT/ITL percentiles, goodput at the latency target,
+    /// KV-pressure counts (always populated; simulated clock).
+    pub slo: SloReport,
 }
 
 impl RunReport {
@@ -329,11 +410,14 @@ impl RunReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{:<14} reqs={:<4} toks={:<6} iters={:<5} wall={:>7.2}s ({:>7.1} tok/s) \
+            "{:<14} reqs={:<4} canc={:<3} rej={:<3} toks={:<6} iters={:<5} \
+             wall={:>7.2}s ({:>7.1} tok/s) \
              sim={:>7.3}s ({:>8.1} tok/s) acc/rnd={:>5.2} α={:>4.2} kv_util={:>4.2} \
              offl={} recomp={}",
             self.name,
             self.requests_done,
+            self.requests_cancelled,
+            self.requests_rejected,
             self.tokens_generated,
             self.iterations,
             self.wall_s,
@@ -346,6 +430,49 @@ impl RunReport {
             self.kv.offload_events,
             self.kv.recomputed_tokens,
         )
+    }
+
+    /// The whole report as a typed, labelled [`crate::metrics::MetricsRegistry`]
+    /// — the canonical path to Prometheus exposition
+    /// (`registry().expose_prometheus("sparsespec")`) and to merging
+    /// reports across replicas (`MetricsRegistry::merge_from`).
+    pub fn registry(&self) -> crate::metrics::MetricsRegistry {
+        let mut r = crate::metrics::MetricsRegistry::default();
+        let none: &[(&str, &str)] = &[];
+        r.inc("requests_done", none, self.requests_done as f64);
+        r.inc("requests_cancelled", none, self.requests_cancelled as f64);
+        r.inc("requests_rejected", none, self.requests_rejected as f64);
+        r.inc("tokens_generated", none, self.tokens_generated as f64);
+        r.inc("iterations", none, self.iterations as f64);
+        r.inc("kv_offload_events", none, self.kv.offload_events as f64);
+        r.inc("kv_reload_events", none, self.kv.reload_events as f64);
+        r.inc("kv_recompute_events", none, self.kv.recompute_events as f64);
+        r.set_gauge("mean_kv_util", none, self.mean_kv_util);
+        r.set_gauge("sim_s", none, self.sim_s);
+        r.set_gauge("wall_s", none, self.wall_s);
+        r.set_gauge("goodput_rps", none, self.slo.goodput_rps);
+        r.hist_mut("request_latency_s", none).merge(&self.request_latency_s);
+        r.hist_mut("ttft_sim_s", none).merge(&self.slo.ttft_sim_s);
+        r.hist_mut("itl_sim_s", none).merge(&self.slo.itl_sim_s);
+        for (name, st) in &self.accept_by {
+            let labels: &[(&str, &str)] = &[("drafter", name)];
+            r.inc("drafted_tokens", labels, st.drafted as f64);
+            r.inc("accepted_tokens", labels, st.accepted as f64);
+            r.set_gauge("acceptance_alpha", labels, st.alpha());
+        }
+        r
+    }
+
+    /// Deterministic markdown: counters sorted, then the SLO section, then
+    /// per-drafter acceptance — every surface includes
+    /// `requests_cancelled`/`requests_rejected`.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## run: {}\n\n", self.name));
+        out.push_str(&self.registry().to_markdown());
+        out.push('\n');
+        out.push_str(&self.slo.to_markdown());
+        out
     }
 }
 

@@ -14,6 +14,17 @@ pub enum Phase {
     AwaitVerify,
 }
 
+impl Phase {
+    /// Stable lowercase label for trace args and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Drafting => "drafting",
+            Phase::ReadyVerify => "ready_verify",
+            Phase::AwaitVerify => "await_verify",
+        }
+    }
+}
+
 /// One resident request.
 pub struct Slot {
     pub req: Request,

@@ -32,16 +32,21 @@ pub struct OffloadStats {
     pub stall_s: f64,
 }
 
+/// A finished transfer as harvested by `poll`/`drain`: request id, the
+/// host-tier KV payload, and the modelled transfer seconds for that job
+/// (feeds the per-job KV_OFFLOAD trace span).
+pub type Done = (u64, HostKv, f64);
+
 enum Msg {
-    Job(OffloadJob, mpsc::Sender<(u64, HostKv)>),
+    Job(OffloadJob, mpsc::Sender<Done>),
     Quit,
 }
 
 /// Copier thread handle.
 pub struct OffloadEngine {
     tx: mpsc::Sender<Msg>,
-    done_rx: mpsc::Receiver<(u64, HostKv)>,
-    done_tx: mpsc::Sender<(u64, HostKv)>,
+    done_rx: mpsc::Receiver<Done>,
+    done_tx: mpsc::Sender<Done>,
     stats: Arc<Mutex<OffloadStats>>,
     handle: Option<thread::JoinHandle<()>>,
     pending: usize,
@@ -66,14 +71,15 @@ impl OffloadEngine {
                             // Model the PCIe pacing of one chunk.
                             thread::sleep(Duration::from_secs_f64(per_chunk));
                         }
+                        let took = t0.elapsed().as_secs_f64();
                         {
                             let mut s = st.lock().unwrap();
                             s.jobs += 1;
                             s.bytes += job.bytes as u64;
                             s.chunks += n_chunks as u64;
-                            s.transfer_s += t0.elapsed().as_secs_f64();
+                            s.transfer_s += took;
                         }
-                        let _ = reply.send((job.req_id, job.kv));
+                        let _ = reply.send((job.req_id, job.kv, took));
                     }
                 }
             }
@@ -98,7 +104,7 @@ impl OffloadEngine {
     }
 
     /// Harvest finished transfers without blocking.
-    pub fn poll(&mut self) -> Vec<(u64, HostKv)> {
+    pub fn poll(&mut self) -> Vec<Done> {
         let mut out = Vec::new();
         while let Ok(x) = self.done_rx.try_recv() {
             self.pending -= 1;
@@ -110,7 +116,7 @@ impl OffloadEngine {
     /// Block until all submitted transfers are done (end of run, or the
     /// rare case where the engine needs the slot *now*).  Stall time is
     /// charged to `stats.stall_s` — this is the non-overlapped remainder.
-    pub fn drain(&mut self) -> Vec<(u64, HostKv)> {
+    pub fn drain(&mut self) -> Vec<Done> {
         let t0 = Instant::now();
         let mut out = Vec::new();
         while self.pending > 0 {
@@ -160,6 +166,7 @@ mod tests {
         eng.submit(job(2, 2 << 20));
         let done = eng.drain();
         assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|(_, _, t)| *t > 0.0), "per-job transfer time");
         let st = eng.stats();
         assert_eq!(st.jobs, 2);
         assert_eq!(st.bytes, (6 << 20) as u64);

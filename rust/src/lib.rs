@@ -51,6 +51,15 @@
 //! `Engine::run(Vec<Request>)` survives as a batch-compatibility wrapper
 //! with bit-identical outputs.  See `engine::api` for the full surface.
 //!
+//! ## Observability
+//!
+//! [`trace`] provides span-based structured tracing on both the simulated
+//! serving clock and the wall clock, exported as Chrome/Perfetto trace
+//! JSON (`--trace-out`, `EngineConfig::builder().tracing(...)`);
+//! [`metrics::MetricsRegistry`] is the typed, labelled, mergeable metrics
+//! store behind Prometheus-style exposition and the SLO section of
+//! [`engine::RunReport`].  See EXPERIMENTS.md §Observability.
+//!
 //! ## Drafters are plugins
 //!
 //! Every draft policy — PillarAttn, sliding window, n-gram, EAGLE,
@@ -89,5 +98,6 @@ pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
 pub mod spec;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -29,7 +29,10 @@ fn usage() -> ! {
          \x20            --schedule lockstep|unified  --delayed  --kv-policy conservative|preempt|dynamic\n\
          \x20            --kv-budget TOKENS  --temp T  --seed S  --online-rate R --horizon SECS\n\
          \x20            --adaptive-k  (feedback-adaptive speculation length, bounded by --k)\n\
-         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select drafter_dispatch all\n\
+         \x20            --workload-in FILE  --workload-out FILE  (request trace replay/save)\n\
+         \x20            --trace-out FILE  (Perfetto/Chrome trace JSON)  --trace-sample N\n\
+         \x20            --metrics-out FILE  (Prometheus text exposition)  --ttft-slo SECS\n\
+         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select drafter_dispatch trace_overhead all\n\
          common: --artifacts DIR (default ./artifacts)  --out DIR (default ./reports)"
     );
     std::process::exit(2)
@@ -71,13 +74,19 @@ fn main() -> anyhow::Result<()> {
             cfg.seed = args.u64("seed", 7);
             cfg.verbose = args.bool("verbose", false);
             cfg.adaptive_k = args.bool("adaptive-k", false);
+            cfg.ttft_slo_s = args.f64("ttft-slo", 1.0);
+            let trace_out = args.opt("trace-out").map(|s| s.to_string());
+            if trace_out.is_some() {
+                cfg.trace = sparsespec::trace::TraceConfig::on()
+                    .with_sampling(args.usize("trace-sample", 1));
+            }
             let mut gen = WorkloadGen::new(
                 rt.cfg.grammar.clone(),
                 rt.cfg.model.clone(),
                 dataset,
                 args.u64("seed", 7),
             );
-            let reqs = if let Some(path) = args.opt("trace-in") {
+            let reqs = if let Some(path) = args.opt("workload-in") {
                 sparsespec::workload::trace::load(path)?
             } else if let Some(rate) = args.opt("online-rate") {
                 let rate: f64 = rate.parse().unwrap_or(2.0);
@@ -85,9 +94,9 @@ fn main() -> anyhow::Result<()> {
             } else {
                 gen.offline_batch(args.usize("requests", 12))
             };
-            if let Some(path) = args.opt("trace-out") {
+            if let Some(path) = args.opt("workload-out") {
                 sparsespec::workload::trace::save(path, &reqs)?;
-                println!("trace saved to {path}");
+                println!("workload trace saved to {path}");
             }
             println!(
                 "serving {} {} requests with {}",
@@ -105,6 +114,33 @@ fn main() -> anyhow::Result<()> {
                     lat.percentile(50.0),
                     lat.percentile(99.0)
                 );
+            }
+            let slo = &report.slo;
+            if !slo.ttft_sim_s.is_empty() {
+                println!(
+                    "slo (sim): ttft p50={:.3}s p99={:.3}s  itl p50={:.4}s p99={:.4}s  \
+                     goodput={:.2} req/s ({}/{} within {:.2}s ttft)",
+                    slo.ttft_sim_s.percentile(50.0),
+                    slo.ttft_sim_s.percentile(99.0),
+                    slo.itl_sim_s.percentile(50.0),
+                    slo.itl_sim_s.percentile(99.0),
+                    slo.goodput_rps,
+                    slo.completed_within_ttft,
+                    slo.completed,
+                    slo.ttft_target_s,
+                );
+            }
+            if let Some(path) = &trace_out {
+                std::fs::write(path, engine.export_trace_chrome())?;
+                println!(
+                    "perfetto trace saved to {path} ({} events, {} dropped)",
+                    engine.tracer().len(),
+                    engine.tracer().dropped()
+                );
+            }
+            if let Some(path) = args.opt("metrics-out") {
+                std::fs::write(path, report.registry().expose_prometheus("sparsespec"))?;
+                println!("metrics exposition saved to {path}");
             }
             if args.bool("stats", false) {
                 println!("\nper-artifact phase times (s):");

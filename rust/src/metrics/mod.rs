@@ -6,6 +6,10 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::Instant;
 
+pub mod registry;
+
+pub use registry::{MetricKey, MetricsRegistry};
+
 /// Reservoir-less exact histogram: keeps all samples (our runs are at most
 /// a few hundred thousand samples, so exactness is cheaper than HDR-style
 /// bucketing and gives exact p50/p99 for the reports).

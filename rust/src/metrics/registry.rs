@@ -1,0 +1,383 @@
+//! Typed metrics registry: counters / gauges / histograms with labels,
+//! snapshotable and mergeable across engine replicas.
+//!
+//! Replaces the ad-hoc `Metrics` string-map usage for serving-path
+//! metrics.  Three series types with explicit merge semantics chosen so
+//! that `merge_from` is **associative** (the fleet-rollup requirement,
+//! pinned by `python/tests/test_trace_port.py`):
+//!
+//! * counters — sum
+//! * gauges — last-write-wins (the merged-in value wins when present)
+//! * histograms — sample concatenation
+//!
+//! Exports: Prometheus-style text exposition ([`MetricsRegistry::
+//! expose_prometheus`]) and a deterministic markdown table
+//! ([`MetricsRegistry::to_markdown`]) — both iterate `BTreeMap`s, so
+//! output ordering is stable by construction.
+//!
+//! # Add your own metric
+//!
+//! ```
+//! use sparsespec::metrics::MetricsRegistry;
+//!
+//! let mut reg = MetricsRegistry::new();
+//! reg.inc("requests_done", &[], 1.0);
+//! reg.inc("requests_done", &[("drafter", "pillar_w64")], 1.0);
+//! reg.observe("ttft_s", &[("drafter", "pillar_w64")], 0.25);
+//! reg.set_gauge("kv_used_tokens", &[], 4096.0);
+//! let text = reg.expose_prometheus("sparsespec");
+//! assert!(text.contains("sparsespec_requests_done{drafter=\"pillar_w64\"} 1"));
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::Histogram;
+
+/// A metric identity: name + sorted label set.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        MetricKey { name: name.to_string(), labels }
+    }
+
+    /// `name{k="v",...}` — the human/debug rendering (also used in
+    /// markdown tables).
+    pub fn render(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let mut out = format!("{}{{", self.name);
+        for (i, (k, v)) in self.labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Sanitise a metric name to the Prometheus charset `[a-zA-Z0-9_:]`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render `{k="v",...}` for exposition, with optional extra pairs
+/// (the `quantile` label on summary lines).
+fn label_block(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize(k), escape_label(v)))
+        .collect();
+    parts.extend(extra.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))));
+    format!("{{{}}}", parts.join(","))
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Typed, labelled, mergeable metrics store.  See the module docs for
+/// merge semantics; `snapshot()` is a deep copy safe to ship across
+/// replica boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<MetricKey, f64>,
+    gauges: BTreeMap<MetricKey, f64>,
+    histograms: BTreeMap<MetricKey, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], by: f64) {
+        *self.counters.entry(MetricKey::new(name, labels)).or_insert(0.0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.gauges.insert(MetricKey::new(name, labels), v);
+    }
+
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.histograms
+            .entry(MetricKey::new(name, labels))
+            .or_default()
+            .record(v);
+    }
+
+    /// Counter value for `name` with the given labels (0.0 if absent).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.counters
+            .get(&MetricKey::new(name, labels))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Unlabelled-counter shorthand (the aggregate series).
+    pub fn get(&self, name: &str) -> f64 {
+        self.counter(name, &[])
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.gauges.get(&MetricKey::new(name, labels)).copied()
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Histogram> {
+        self.histograms.get(&MetricKey::new(name, labels))
+    }
+
+    pub fn hist_mut(&mut self, name: &str, labels: &[(&str, &str)]) -> &mut Histogram {
+        self.histograms
+            .entry(MetricKey::new(name, labels))
+            .or_default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Deep copy of the current state (safe to merge elsewhere later).
+    pub fn snapshot(&self) -> MetricsRegistry {
+        self.clone()
+    }
+
+    /// Fold another registry in: counters sum, gauges last-write-wins
+    /// (`other`'s value wins where present), histograms concatenate
+    /// samples.  Associative by construction.
+    pub fn merge_from(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Prometheus-style text exposition.  Counters and gauges one sample
+    /// per key; histograms as summaries (p50/p99 quantiles + `_sum` /
+    /// `_count`).  Deterministic: keys iterate in `BTreeMap` order.
+    pub fn expose_prometheus(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        let mut last_typed: Option<(String, &str)> = None;
+        let mut type_line = |out: &mut String, full: &str, kind: &str| {
+            if last_typed.as_ref().map(|(n, k)| (n.as_str(), *k)) != Some((full, kind)) {
+                let _ = writeln!(out, "# TYPE {full} {kind}");
+                last_typed = Some((full.to_string(), kind));
+            }
+        };
+        for (k, v) in &self.counters {
+            let full = format!("{}_{}", sanitize(prefix), sanitize(&k.name));
+            type_line(&mut out, &full, "counter");
+            let _ = writeln!(out, "{full}{} {}", label_block(&k.labels, &[]), fmt_value(*v));
+        }
+        for (k, v) in &self.gauges {
+            let full = format!("{}_{}", sanitize(prefix), sanitize(&k.name));
+            type_line(&mut out, &full, "gauge");
+            let _ = writeln!(out, "{full}{} {}", label_block(&k.labels, &[]), fmt_value(*v));
+        }
+        for (k, h) in &self.histograms {
+            let full = format!("{}_{}", sanitize(prefix), sanitize(&k.name));
+            type_line(&mut out, &full, "summary");
+            for (q, p) in [("0.5", 50.0), ("0.99", 99.0)] {
+                let _ = writeln!(
+                    out,
+                    "{full}{} {}",
+                    label_block(&k.labels, &[("quantile", q)]),
+                    fmt_value(h.percentile(p))
+                );
+            }
+            let _ = writeln!(out, "{full}_sum{} {}", label_block(&k.labels, &[]), fmt_value(h.sum()));
+            let _ = writeln!(out, "{full}_count{} {}", label_block(&k.labels, &[]), h.len());
+        }
+        out
+    }
+
+    /// Deterministic markdown rendering (sorted keys, fixed precision).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() || !self.gauges.is_empty() {
+            let _ = writeln!(out, "| metric | type | value |\n|---|---|---|");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "| {} | counter | {:.4} |", k.render(), v);
+            }
+            for (k, v) in &self.gauges {
+                let _ = writeln!(out, "| {} | gauge | {:.4} |", k.render(), v);
+            }
+        }
+        if !self.histograms.is_empty() {
+            let _ = writeln!(
+                out,
+                "\n| histogram | n | mean | p50 | p99 | max |\n|---|---|---|---|---|---|"
+            );
+            for (k, h) in &self.histograms {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {:.4} | {:.4} | {:.4} | {:.4} |",
+                    k.render(),
+                    h.len(),
+                    h.mean(),
+                    h.percentile(50.0),
+                    h.percentile(99.0),
+                    h.max()
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.inc("requests_done", &[], 3.0);
+        r.inc("requests_done", &[("drafter", "pillar_w64")], 2.0);
+        r.set_gauge("kv_used_tokens", &[], 128.0);
+        r.observe("ttft_s", &[], 0.5);
+        r.observe("ttft_s", &[], 1.5);
+        r
+    }
+
+    #[test]
+    fn labels_are_order_insensitive() {
+        let a = MetricKey::new("x", &[("a", "1"), ("b", "2")]);
+        let b = MetricKey::new("x", &[("b", "2"), ("a", "1")]);
+        assert_eq!(a, b);
+        let mut r = MetricsRegistry::new();
+        r.inc("x", &[("a", "1"), ("b", "2")], 1.0);
+        r.inc("x", &[("b", "2"), ("a", "1")], 1.0);
+        assert_eq!(r.counter("x", &[("a", "1"), ("b", "2")]), 2.0);
+    }
+
+    #[test]
+    fn merge_semantics_counter_gauge_histogram() {
+        let mut a = sample();
+        let mut b = MetricsRegistry::new();
+        b.inc("requests_done", &[], 4.0);
+        b.set_gauge("kv_used_tokens", &[], 64.0);
+        b.observe("ttft_s", &[], 2.5);
+        a.merge_from(&b);
+        assert_eq!(a.get("requests_done"), 7.0);
+        assert_eq!(a.gauge("kv_used_tokens", &[]), Some(64.0), "gauge LWW");
+        assert_eq!(a.histogram("ttft_s", &[]).unwrap().len(), 3);
+        // b untouched
+        assert_eq!(b.get("requests_done"), 4.0);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mk = |c: f64, g: Option<f64>, h: &[f64]| {
+            let mut r = MetricsRegistry::new();
+            r.inc("c", &[], c);
+            if let Some(g) = g {
+                r.set_gauge("g", &[], g);
+            }
+            for &x in h {
+                r.observe("h", &[], x);
+            }
+            r
+        };
+        let (a, b, c) = (mk(1.0, Some(10.0), &[1.0]), mk(2.0, None, &[2.0, 3.0]), mk(4.0, Some(30.0), &[]));
+        // (a ⊕ b) ⊕ c
+        let mut l = a.snapshot();
+        l.merge_from(&b);
+        l.merge_from(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.snapshot();
+        bc.merge_from(&c);
+        let mut r = a.snapshot();
+        r.merge_from(&bc);
+        assert_eq!(l.get("c"), r.get("c"));
+        assert_eq!(l.gauge("g", &[]), r.gauge("g", &[]));
+        assert_eq!(
+            {
+                let mut s = l.histogram("h", &[]).unwrap().samples();
+                s.sort_by(f64::total_cmp);
+                s
+            },
+            {
+                let mut s = r.histogram("h", &[]).unwrap().samples();
+                s.sort_by(f64::total_cmp);
+                s
+            }
+        );
+        assert_eq!(l.expose_prometheus("t"), r.expose_prometheus("t"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape_and_determinism() {
+        let r = sample();
+        let text = r.expose_prometheus("sparsespec");
+        assert!(text.contains("# TYPE sparsespec_requests_done counter"));
+        assert!(text.contains("sparsespec_requests_done 3"));
+        assert!(text.contains("sparsespec_requests_done{drafter=\"pillar_w64\"} 2"));
+        assert!(text.contains("# TYPE sparsespec_kv_used_tokens gauge"));
+        assert!(text.contains("sparsespec_ttft_s{quantile=\"0.5\"}"));
+        assert!(text.contains("sparsespec_ttft_s_sum 2"));
+        assert!(text.contains("sparsespec_ttft_s_count 2"));
+        // deterministic across calls and across an equivalent rebuild
+        assert_eq!(text, sample().expose_prometheus("sparsespec"));
+    }
+
+    #[test]
+    fn name_sanitation_and_label_escaping() {
+        let mut r = MetricsRegistry::new();
+        r.inc("ttft_s[pillar]", &[("q", "a\"b")], 1.0);
+        let text = r.expose_prometheus("x");
+        assert!(text.contains("x_ttft_s_pillar_"), "bad chars mapped to _: {text}");
+        assert!(text.contains("q=\"a\\\"b\""), "label value escaped: {text}");
+    }
+
+    #[test]
+    fn snapshot_is_independent() {
+        let mut r = sample();
+        let snap = r.snapshot();
+        r.inc("requests_done", &[], 100.0);
+        r.observe("ttft_s", &[], 9.0);
+        assert_eq!(snap.get("requests_done"), 3.0);
+        assert_eq!(snap.histogram("ttft_s", &[]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn markdown_is_deterministic_and_labelled() {
+        let r = sample();
+        let md = r.to_markdown();
+        assert!(md.contains("| requests_done | counter | 3.0000 |"));
+        assert!(md.contains("| requests_done{drafter=\"pillar_w64\"} | counter | 2.0000 |"));
+        assert!(md.contains("| kv_used_tokens | gauge | 128.0000 |"));
+        assert!(md.contains("| ttft_s | 2 |"));
+        assert_eq!(md, sample().to_markdown());
+    }
+}

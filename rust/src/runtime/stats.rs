@@ -43,6 +43,35 @@ impl StepStats {
             .map(|p| p.upload_s + p.fetch_s)
             .sum()
     }
+
+    /// Per-artifact deltas against an earlier snapshot — the engine turns
+    /// one iteration's worth of device activity into trace spans with
+    /// this.  Artifacts untouched since `base` (zero new calls and no new
+    /// host time) are omitted.
+    pub fn delta_since(&self, base: &StepStats) -> Vec<(String, PhaseTimes)> {
+        let mut out = Vec::new();
+        for (name, cur) in &self.per_artifact {
+            let zero = PhaseTimes::default();
+            let b = base.per_artifact.get(name).unwrap_or(&zero);
+            let d = PhaseTimes {
+                calls: cur.calls.saturating_sub(b.calls),
+                upload_s: (cur.upload_s - b.upload_s).max(0.0),
+                exec_s: (cur.exec_s - b.exec_s).max(0.0),
+                fetch_s: (cur.fetch_s - b.fetch_s).max(0.0),
+            };
+            if d.calls > 0 || d.upload_s + d.exec_s + d.fetch_s > 0.0 {
+                out.push((name.clone(), d));
+            }
+        }
+        out
+    }
+}
+
+impl PhaseTimes {
+    /// Total wall seconds across the three phases.
+    pub fn total_s(&self) -> f64 {
+        self.upload_s + self.exec_s + self.fetch_s
+    }
 }
 
 pub struct VerifyOut {

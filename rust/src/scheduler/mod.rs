@@ -120,6 +120,20 @@ pub struct IterComposition {
     pub attn_bytes: usize,
 }
 
+impl IterComposition {
+    /// The composition as trace-span args (attached to every `iteration`
+    /// span so Perfetto shows the Fig. 14 batch mix per slice).
+    pub fn trace_args(&self) -> crate::trace::Args {
+        vec![
+            ("drafting", self.drafting.into()),
+            ("verifying", self.verifying.into()),
+            ("prefilling", self.prefilling.into()),
+            ("gemm_rows", self.gemm_rows.into()),
+            ("attn_bytes", self.attn_bytes.into()),
+        ]
+    }
+}
+
 /// Trace of compositions over a run; feeds Fig. 14 and the simulated-time
 /// accounting of Fig. 13.
 #[derive(Clone, Debug, Default)]

@@ -251,6 +251,10 @@ impl Drafter for AdaptiveDrafter {
         self.inner.on_verify(fb);
     }
 
+    fn current_k(&self, req_id: u64) -> Option<usize> {
+        self.ctl.get(&req_id).map(|c| c.target())
+    }
+
     fn on_finish(&mut self, req_id: u64) {
         self.ctl.remove(&req_id);
         self.inner.on_finish(req_id);

@@ -329,6 +329,14 @@ pub trait Drafter {
     /// frontier).  Adaptive policies steer their next `plan` from this.
     fn on_verify(&mut self, _fb: &VerifyFeedback) {}
 
+    /// The live per-request speculation-length target, if this drafter
+    /// adapts one (see [`crate::spec::adaptive`]).  Static drafters return
+    /// `None`; the engine uses this to emit `adaptive_k` trace instants
+    /// without downcasting.
+    fn current_k(&self, _req_id: u64) -> Option<usize> {
+        None
+    }
+
     /// The request finished (completed or cancelled): drop per-session
     /// state.
     fn on_finish(&mut self, _req_id: u64) {}

@@ -1,0 +1,785 @@
+//! Span-based structured tracing on both the simulated serving clock and
+//! the wall clock (the observability tentpole).
+//!
+//! The engine emits *events* — phase spans (draft / verify / prefill),
+//! delayed-verification overlap windows, KV transitions, scheduler
+//! decisions, and per-session lifecycle marks — into a bounded ring-buffer
+//! journal owned by a [`Tracer`].  Two exporters turn the journal into
+//! files:
+//!
+//! * [`Tracer::export_chrome`] — Chrome/Perfetto trace-event JSON
+//!   (`{"traceEvents": [...]}`): open the file at <https://ui.perfetto.dev>
+//!   and read the draft/verify/overlap structure directly off the
+//!   timeline.  Wall-clock microseconds drive the `ts` axis; the simulated
+//!   serving clock rides along as `args.sim_us` on every event.
+//! * [`Tracer::export_jsonl`] — one JSON object per line, for ad-hoc
+//!   `grep`/pandas analysis.
+//!
+//! Tracing is **config-gated and cheap when off**: every emission method
+//! first checks a single bool ([`Tracer::enabled`] for lifecycle events,
+//! [`Tracer::hot`] for per-iteration spans, which additionally respects
+//! the `sample_every` knob).  The `trace_overhead` bench enforces the
+//! budget (<1% of an engine iteration disabled, <5% enabled).
+//!
+//! # Add your own span
+//!
+//! ```
+//! use sparsespec::trace::{TraceConfig, Tracer, Track};
+//!
+//! let mut tracer = Tracer::new(TraceConfig::on());
+//! let sim_s = 0.0;
+//! tracer.iter_begin(0, sim_s);          // opens the iteration span
+//! tracer.begin("my_phase", Track::Engine, sim_s);
+//! // ... do the work ...
+//! tracer.end("my_phase", Track::Engine, sim_s, vec![("items", 3.0.into())]);
+//! tracer.iter_end(sim_s + 0.001, vec![]);
+//! let json = tracer.export_chrome_string();
+//! assert!(json.contains("my_phase"));
+//! ```
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Canonical span / event names, so the Rust emitters, the tests, and the
+/// Python schema twin (`python/tests/test_trace_port.py`) can never drift.
+pub mod names {
+    pub const ITERATION: &str = "iteration";
+    pub const ADMIT: &str = "admit";
+    pub const DRAFT: &str = "draft";
+    pub const PROPOSE: &str = "propose";
+    pub const VERIFY: &str = "verify";
+    pub const DELAYED_VERIFY_OVERLAP: &str = "delayed_verify_overlap";
+    pub const KV_ADMIT: &str = "kv_admit";
+    pub const KV_OFFLOAD: &str = "kv_offload";
+    pub const KV_PREEMPT: &str = "kv_preempt";
+    pub const KV_RELOAD: &str = "kv_reload";
+    pub const KV_FORGET: &str = "kv_forget";
+    pub const BUCKET_ASSIGN: &str = "bucket_assign";
+    pub const ADAPTIVE_K: &str = "adaptive_k";
+    pub const SESSION_SUBMIT: &str = "session_submit";
+    pub const SESSION_FIRST_TOKEN: &str = "session_first_token";
+    pub const SESSION_FINISH: &str = "session_finish";
+}
+
+/// Tracing knobs, carried on `EngineConfig` (see
+/// `EngineConfig::builder().tracing(...)`).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Master switch.  When false every emission is a single branch.
+    pub enabled: bool,
+    /// Ring-buffer capacity in events; the oldest events are dropped (and
+    /// counted) once the journal is full.
+    pub capacity: usize,
+    /// Record per-iteration spans only every Nth iteration (1 = all).
+    /// Lifecycle events (sessions, KV transitions) are always recorded
+    /// while enabled — they are rare and are the ones you can't
+    /// reconstruct from a sampled timeline.
+    pub sample_every: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, capacity: 65_536, sample_every: 1 }
+    }
+}
+
+impl TraceConfig {
+    /// Tracing enabled with default capacity and no sampling.
+    pub fn on() -> Self {
+        TraceConfig { enabled: true, ..Default::default() }
+    }
+
+    pub fn with_sampling(mut self, every: u64) -> Self {
+        self.sample_every = every.max(1);
+        self
+    }
+
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.capacity = cap.max(16);
+        self
+    }
+}
+
+/// Perfetto "thread" lanes.  One lane per subsystem keeps nesting local:
+/// span begin/end pairs form a stack *per track*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// Iteration + phase spans of the coordinator loop.
+    Engine,
+    /// Per-artifact device time (from `runtime::StepStats` deltas).
+    Device,
+    /// Bucket / admission decisions.
+    Scheduler,
+    /// KV admit/evict/offload/reload/forget transitions.
+    Kv,
+    /// Session lifecycle instants.
+    Session,
+    /// Drafter-internal events (AdaptiveK k-trajectory).
+    Drafter,
+    /// Delayed-verification overlap windows (may cross iteration
+    /// boundaries, so they get a dedicated lane).
+    Overlap,
+}
+
+impl Track {
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Engine => 1,
+            Track::Device => 2,
+            Track::Scheduler => 3,
+            Track::Kv => 4,
+            Track::Session => 5,
+            Track::Drafter => 6,
+            Track::Overlap => 7,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Track::Engine => "engine",
+            Track::Device => "device",
+            Track::Scheduler => "scheduler",
+            Track::Kv => "kv",
+            Track::Session => "session",
+            Track::Drafter => "drafter",
+            Track::Overlap => "overlap",
+        }
+    }
+
+    fn all() -> [Track; 7] {
+        [
+            Track::Engine,
+            Track::Device,
+            Track::Scheduler,
+            Track::Kv,
+            Track::Session,
+            Track::Drafter,
+            Track::Overlap,
+        ]
+    }
+}
+
+/// Event argument value (stringly-typed JSON scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgVal {
+    F(f64),
+    S(String),
+}
+
+impl From<f64> for ArgVal {
+    fn from(v: f64) -> Self {
+        ArgVal::F(v)
+    }
+}
+
+impl From<usize> for ArgVal {
+    fn from(v: usize) -> Self {
+        ArgVal::F(v as f64)
+    }
+}
+
+impl From<u64> for ArgVal {
+    fn from(v: u64) -> Self {
+        ArgVal::F(v as f64)
+    }
+}
+
+impl From<&str> for ArgVal {
+    fn from(v: &str) -> Self {
+        ArgVal::S(v.to_string())
+    }
+}
+
+impl From<String> for ArgVal {
+    fn from(v: String) -> Self {
+        ArgVal::S(v)
+    }
+}
+
+impl ArgVal {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgVal::F(v) => num(*v),
+            ArgVal::S(v) => s(v),
+        }
+    }
+}
+
+pub type Args = Vec<(&'static str, ArgVal)>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+    /// Pre-paired span with an explicit duration (device sub-spans).
+    Complete,
+    Instant,
+    Counter,
+    /// Async begin/end: interleaving (non-nested) intervals matched by
+    /// `id` — concurrent KV offloads.
+    AsyncBegin,
+    AsyncEnd,
+}
+
+impl EventKind {
+    fn label(self) -> &'static str {
+        match self {
+            EventKind::Begin => "B",
+            EventKind::End => "E",
+            EventKind::Complete => "X",
+            EventKind::Instant => "i",
+            EventKind::Counter => "C",
+            EventKind::AsyncBegin => "b",
+            EventKind::AsyncEnd => "e",
+        }
+    }
+}
+
+/// One journal entry.  `wall_us` is microseconds since the tracer's epoch
+/// (the Chrome `ts` axis); `sim_us` is the simulated serving clock.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub kind: EventKind,
+    pub track: Track,
+    /// Correlation id for async events (0 otherwise).
+    pub id: u64,
+    pub wall_us: f64,
+    pub sim_us: f64,
+    /// Explicit duration for `Complete` events only.
+    pub dur_us: f64,
+    pub args: Args,
+}
+
+/// Bounded structured-event journal + exporters.  Owned by the engine;
+/// emission methods are no-ops (one branch) when tracing is off.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    /// Is the *current* iteration sampled?  Decided at `iter_begin`.
+    sampled: bool,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Self {
+        Tracer {
+            cfg,
+            epoch: Instant::now(),
+            events: VecDeque::new(),
+            dropped: 0,
+            sampled: false,
+        }
+    }
+
+    pub fn disabled() -> Self {
+        Tracer::new(TraceConfig::default())
+    }
+
+    /// Master gate: lifecycle events (sessions, KV transitions) record
+    /// whenever this is true.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Hot gate: per-iteration spans/counters record only when the current
+    /// iteration is sampled.  Callers building non-trivial `Args` should
+    /// guard on this first so the vec is never allocated off the sample.
+    #[inline]
+    pub fn hot(&self) -> bool {
+        self.sampled
+    }
+
+    /// Microseconds since the tracer epoch (the wall `ts` axis).
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted from the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.cfg.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    fn push_now(
+        &mut self,
+        name: &str,
+        kind: EventKind,
+        track: Track,
+        id: u64,
+        sim_s: f64,
+        args: Args,
+    ) {
+        let wall_us = self.now_us();
+        self.push(TraceEvent {
+            name: name.to_string(),
+            kind,
+            track,
+            id,
+            wall_us,
+            sim_us: sim_s * 1e6,
+            dur_us: 0.0,
+            args,
+        });
+    }
+
+    /// Open the iteration span and decide whether this iteration is
+    /// sampled.  Must be called once per engine step before any
+    /// `hot()`-gated emission.
+    pub fn iter_begin(&mut self, iter: u64, sim_s: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.sampled = iter % self.cfg.sample_every == 0;
+        if self.sampled {
+            self.push_now(
+                names::ITERATION,
+                EventKind::Begin,
+                Track::Engine,
+                0,
+                sim_s,
+                vec![("iter", ArgVal::F(iter as f64))],
+            );
+        }
+    }
+
+    /// Close the iteration span; `sim_s` here is the *advanced* clock, so
+    /// iteration spans carry real simulated durations.
+    pub fn iter_end(&mut self, sim_s: f64, args: Args) {
+        if self.sampled {
+            self.push_now(names::ITERATION, EventKind::End, Track::Engine, 0, sim_s, args);
+        }
+    }
+
+    pub fn begin(&mut self, name: &str, track: Track, sim_s: f64) {
+        if self.sampled {
+            self.push_now(name, EventKind::Begin, track, 0, sim_s, Vec::new());
+        }
+    }
+
+    pub fn end(&mut self, name: &str, track: Track, sim_s: f64, args: Args) {
+        if self.sampled {
+            self.push_now(name, EventKind::End, track, 0, sim_s, args);
+        }
+    }
+
+    /// A span whose endpoints were measured by the caller (device
+    /// sub-spans reconstructed from `StepStats` deltas).
+    pub fn complete_at(
+        &mut self,
+        name: &str,
+        track: Track,
+        wall_us: f64,
+        dur_us: f64,
+        sim_s: f64,
+        args: Args,
+    ) {
+        if self.sampled {
+            self.push(TraceEvent {
+                name: name.to_string(),
+                kind: EventKind::Complete,
+                track,
+                id: 0,
+                wall_us,
+                sim_us: sim_s * 1e6,
+                dur_us,
+                args,
+            });
+        }
+    }
+
+    /// Lifecycle instant — recorded whenever tracing is enabled
+    /// (not subject to sampling).
+    pub fn instant(&mut self, name: &str, track: Track, sim_s: f64, args: Args) {
+        if self.cfg.enabled {
+            self.push_now(name, EventKind::Instant, track, 0, sim_s, args);
+        }
+    }
+
+    /// Sampled counter series (queue depths, KV utilisation).
+    pub fn counter(&mut self, name: &'static str, sim_s: f64, value: f64) {
+        if self.sampled {
+            self.push_now(
+                name,
+                EventKind::Counter,
+                Track::Engine,
+                0,
+                sim_s,
+                vec![("value", ArgVal::F(value))],
+            );
+        }
+    }
+
+    /// Async interval start, matched to its end by `id` — for intervals
+    /// that interleave rather than nest (concurrent KV offloads).
+    /// Recorded whenever enabled: transitions are rare and non-local.
+    pub fn async_begin(&mut self, name: &str, track: Track, id: u64, sim_s: f64, args: Args) {
+        if self.cfg.enabled {
+            self.push_now(name, EventKind::AsyncBegin, track, id, sim_s, args);
+        }
+    }
+
+    pub fn async_end(&mut self, name: &str, track: Track, id: u64, sim_s: f64, args: Args) {
+        if self.cfg.enabled {
+            self.push_now(name, EventKind::AsyncEnd, track, id, sim_s, args);
+        }
+    }
+
+    // -- exporters ----------------------------------------------------
+
+    /// Chrome/Perfetto trace-event JSON.  Begin/End pairs are folded into
+    /// complete (`"ph":"X"`) events per track; a Begin whose End was lost
+    /// to ring eviction (or vice versa) is skipped rather than corrupting
+    /// the timeline.
+    pub fn export_chrome(&self) -> Json {
+        let mut out: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        // Metadata: one process, one named thread lane per track.
+        out.push(obj(vec![
+            ("name", s("process_name")),
+            ("ph", s("M")),
+            ("pid", num(1.0)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s("sparsespec"))])),
+        ]));
+        for t in Track::all() {
+            out.push(obj(vec![
+                ("name", s("thread_name")),
+                ("ph", s("M")),
+                ("pid", num(1.0)),
+                ("tid", num(t.tid() as f64)),
+                ("args", obj(vec![("name", s(t.label()))])),
+            ]));
+        }
+        // Per-track stacks of pending Begins (index into self.events order
+        // is already chronological).
+        let mut stacks: Vec<Vec<&TraceEvent>> = vec![Vec::new(); 8];
+        for ev in &self.events {
+            let tid = ev.track.tid() as f64;
+            match ev.kind {
+                EventKind::Begin => stacks[ev.track.tid() as usize].push(ev),
+                EventKind::End => {
+                    let stack = &mut stacks[ev.track.tid() as usize];
+                    // Unwind to the matching Begin; anything above it lost
+                    // its End to eviction/sampling and is dropped.
+                    while let Some(b) = stack.pop() {
+                        if b.name == ev.name {
+                            let mut fields = vec![
+                                ("name", s(&b.name)),
+                                ("cat", s(b.track.label())),
+                                ("ph", s("X")),
+                                ("pid", num(1.0)),
+                                ("tid", num(tid)),
+                                ("ts", num(b.wall_us)),
+                                ("dur", num((ev.wall_us - b.wall_us).max(0.0))),
+                            ];
+                            let mut a = vec![
+                                ("sim_us", num(b.sim_us)),
+                                ("sim_dur_us", num((ev.sim_us - b.sim_us).max(0.0))),
+                            ];
+                            for (k, v) in b.args.iter().chain(ev.args.iter()) {
+                                a.push((*k, v.to_json()));
+                            }
+                            fields.push(("args", obj(a)));
+                            out.push(obj(fields));
+                            break;
+                        }
+                    }
+                }
+                EventKind::Complete => {
+                    let mut a = vec![("sim_us", num(ev.sim_us))];
+                    for (k, v) in &ev.args {
+                        a.push((*k, v.to_json()));
+                    }
+                    out.push(obj(vec![
+                        ("name", s(&ev.name)),
+                        ("cat", s(ev.track.label())),
+                        ("ph", s("X")),
+                        ("pid", num(1.0)),
+                        ("tid", num(tid)),
+                        ("ts", num(ev.wall_us)),
+                        ("dur", num(ev.dur_us)),
+                        ("args", obj(a)),
+                    ]));
+                }
+                EventKind::Instant => {
+                    let mut a = vec![("sim_us", num(ev.sim_us))];
+                    for (k, v) in &ev.args {
+                        a.push((*k, v.to_json()));
+                    }
+                    out.push(obj(vec![
+                        ("name", s(&ev.name)),
+                        ("cat", s(ev.track.label())),
+                        ("ph", s("i")),
+                        ("s", s("t")),
+                        ("pid", num(1.0)),
+                        ("tid", num(tid)),
+                        ("ts", num(ev.wall_us)),
+                        ("args", obj(a)),
+                    ]));
+                }
+                EventKind::Counter => {
+                    let mut a = vec![("sim_us", num(ev.sim_us))];
+                    for (k, v) in &ev.args {
+                        a.push((*k, v.to_json()));
+                    }
+                    out.push(obj(vec![
+                        ("name", s(&ev.name)),
+                        ("ph", s("C")),
+                        ("pid", num(1.0)),
+                        ("tid", num(tid)),
+                        ("ts", num(ev.wall_us)),
+                        ("args", obj(a)),
+                    ]));
+                }
+                EventKind::AsyncBegin | EventKind::AsyncEnd => {
+                    let ph = if ev.kind == EventKind::AsyncBegin { "b" } else { "e" };
+                    let mut a = vec![("sim_us", num(ev.sim_us))];
+                    for (k, v) in &ev.args {
+                        a.push((*k, v.to_json()));
+                    }
+                    out.push(obj(vec![
+                        ("name", s(&ev.name)),
+                        ("cat", s(ev.track.label())),
+                        ("ph", s(ph)),
+                        ("id", num(ev.id as f64)),
+                        ("pid", num(1.0)),
+                        ("tid", num(tid)),
+                        ("ts", num(ev.wall_us)),
+                        ("args", obj(a)),
+                    ]));
+                }
+            }
+        }
+        obj(vec![
+            ("traceEvents", arr(out)),
+            ("displayTimeUnit", s("ms")),
+            ("otherData", obj(vec![("dropped_events", num(self.dropped as f64))])),
+        ])
+    }
+
+    pub fn export_chrome_string(&self) -> String {
+        self.export_chrome().to_string()
+    }
+
+    /// JSONL: one raw journal entry per line (no pairing), for ad-hoc
+    /// analysis.  `kind` uses the Chrome phase letters.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            let mut fields = vec![
+                ("name", s(&ev.name)),
+                ("kind", s(ev.kind.label())),
+                ("track", s(ev.track.label())),
+                ("wall_us", num(ev.wall_us)),
+                ("sim_us", num(ev.sim_us)),
+            ];
+            if ev.id != 0 {
+                fields.push(("id", num(ev.id as f64)));
+            }
+            if ev.kind == EventKind::Complete {
+                fields.push(("dur_us", num(ev.dur_us)));
+            }
+            if !ev.args.is_empty() {
+                fields.push((
+                    "args",
+                    obj(ev.args.iter().map(|(k, v)| (*k, v.to_json())).collect()),
+                ));
+            }
+            out.push_str(&obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chrome_events(t: &Tracer) -> Vec<Json> {
+        match t.export_chrome().get("traceEvents") {
+            Some(Json::Arr(v)) => v.clone(),
+            _ => panic!("traceEvents missing"),
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        t.iter_begin(0, 0.0);
+        t.begin(names::DRAFT, Track::Engine, 0.0);
+        t.end(names::DRAFT, Track::Engine, 0.0, vec![]);
+        t.instant(names::SESSION_SUBMIT, Track::Session, 0.0, vec![]);
+        t.counter("queue_depth", 0.0, 3.0);
+        t.async_begin(names::KV_OFFLOAD, Track::Kv, 7, 0.0, vec![]);
+        assert!(t.is_empty());
+        assert!(!t.enabled());
+        assert!(!t.hot());
+    }
+
+    #[test]
+    fn begin_end_pairs_fold_into_complete_events() {
+        let mut t = Tracer::new(TraceConfig::on());
+        t.iter_begin(0, 0.0);
+        t.begin(names::DRAFT, Track::Engine, 0.0);
+        t.end(names::DRAFT, Track::Engine, 0.0, vec![("slots", 4.0.into())]);
+        t.iter_end(0.002, vec![]);
+        let evs = chrome_events(&t);
+        let xs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2, "draft + iteration spans");
+        let draft = xs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some(names::DRAFT))
+            .unwrap();
+        assert!(draft.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            draft.get("args").unwrap().get("slots").unwrap().as_f64(),
+            Some(4.0)
+        );
+        // the iteration span carries the advanced sim clock as duration
+        let it = xs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some(names::ITERATION))
+            .unwrap();
+        let sim_dur = it.get("args").unwrap().get("sim_dur_us").unwrap().as_f64().unwrap();
+        assert!((sim_dur - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orphan_begin_is_skipped_not_corrupting() {
+        let mut t = Tracer::new(TraceConfig::on());
+        t.iter_begin(0, 0.0);
+        t.begin(names::DRAFT, Track::Engine, 0.0);
+        // no end for draft; verify opens and closes cleanly
+        t.begin(names::VERIFY, Track::Engine, 0.0);
+        t.end(names::VERIFY, Track::Engine, 0.0, vec![]);
+        t.iter_end(0.001, vec![]);
+        let evs = chrome_events(&t);
+        let names_out: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names_out.contains(&names::VERIFY));
+        // the unmatched draft begin does not appear as a span...
+        assert!(!names_out.contains(&names::DRAFT));
+        // ...and the iteration end unwound past it and still paired.
+        assert!(names_out.contains(&names::ITERATION));
+    }
+
+    #[test]
+    fn sampling_skips_iterations_but_keeps_lifecycle() {
+        let mut t = Tracer::new(TraceConfig::on().with_sampling(4));
+        for iter in 0..8u64 {
+            t.iter_begin(iter, iter as f64);
+            assert_eq!(t.hot(), iter % 4 == 0, "iter {iter}");
+            t.begin(names::DRAFT, Track::Engine, iter as f64);
+            t.end(names::DRAFT, Track::Engine, iter as f64, vec![]);
+            t.instant(names::SESSION_SUBMIT, Track::Session, iter as f64, vec![]);
+            t.iter_end(iter as f64 + 0.5, vec![]);
+        }
+        let instants = t
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Instant)
+            .count();
+        assert_eq!(instants, 8, "lifecycle instants are never sampled away");
+        let begins = t
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Begin && e.name == names::DRAFT)
+            .count();
+        assert_eq!(begins, 2, "iterations 0 and 4 only");
+    }
+
+    #[test]
+    fn ring_buffer_bounds_memory_and_counts_drops() {
+        let mut t = Tracer::new(TraceConfig::on().with_capacity(16));
+        for iter in 0..64u64 {
+            t.iter_begin(iter, 0.0);
+            t.iter_end(0.0, vec![]);
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.dropped(), 2 * 64 - 16);
+        // export still parses and reports the drop count
+        let parsed = Json::parse(&t.export_chrome_string()).unwrap();
+        assert_eq!(
+            parsed.get("otherData").unwrap().get("dropped_events").unwrap().as_f64(),
+            Some((2 * 64 - 16) as f64)
+        );
+    }
+
+    #[test]
+    fn async_events_pass_through_with_ids() {
+        let mut t = Tracer::new(TraceConfig::on());
+        t.async_begin(names::KV_OFFLOAD, Track::Kv, 3, 0.0, vec![("bytes", 1024.0.into())]);
+        t.async_begin(names::KV_OFFLOAD, Track::Kv, 4, 0.1, vec![]);
+        t.async_end(names::KV_OFFLOAD, Track::Kv, 3, 0.2, vec![]);
+        t.async_end(names::KV_OFFLOAD, Track::Kv, 4, 0.3, vec![]);
+        let evs = chrome_events(&t);
+        let b: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("b"))
+            .collect();
+        let e: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("e"))
+            .collect();
+        assert_eq!((b.len(), e.len()), (2, 2));
+        assert_eq!(b[0].get("id").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let mut t = Tracer::new(TraceConfig::on());
+        t.iter_begin(0, 0.0);
+        t.counter("kv_used_tokens", 0.0, 42.0);
+        t.iter_end(0.001, vec![("gemm_rows", 12.0.into())]);
+        let text = t.export_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in lines {
+            let v = Json::parse(l).expect("jsonl line parses");
+            assert!(v.get("sim_us").is_some());
+            assert!(v.get("wall_us").is_some());
+        }
+    }
+
+    #[test]
+    fn counter_shape_matches_chrome_schema() {
+        let mut t = Tracer::new(TraceConfig::on());
+        t.iter_begin(0, 1.0);
+        t.counter("queue_depth", 1.0, 5.0);
+        let evs = chrome_events(&t);
+        let c = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .expect("counter event present");
+        assert_eq!(c.get("args").unwrap().get("value").unwrap().as_f64(), Some(5.0));
+        assert_eq!(c.get("args").unwrap().get("sim_us").unwrap().as_f64(), Some(1e6));
+    }
+}

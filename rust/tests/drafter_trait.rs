@@ -21,7 +21,6 @@
 use std::rc::Rc;
 
 use sparsespec::engine::{Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason};
-use sparsespec::metrics;
 use sparsespec::model::ModelConfig;
 use sparsespec::runtime::Runtime;
 use sparsespec::spec::{
@@ -187,14 +186,14 @@ fn mixed_drafter_sessions_share_one_engine() {
     // per-drafter session metrics land next to the aggregates
     let m = driver.session_metrics();
     for name in ["pillar_w64", "ngram_n3", "vanilla"] {
+        let by: &[(&str, &str)] = &[("drafter", name)];
         assert_eq!(
-            m.get(&metrics::keyed("sessions_completed", name)),
+            m.counter("sessions_completed", by),
             2.0,
             "{name} session count"
         );
         assert!(
-            m.histograms
-                .contains_key(&metrics::keyed("accepted_per_round", name)),
+            m.histogram("accepted_per_round", by).is_some(),
             "{name} accepted_per_round breakdown missing"
         );
     }

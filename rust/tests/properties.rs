@@ -80,6 +80,102 @@ fn histogram_percentiles_bracket_samples() {
     });
 }
 
+/// Nearest-rank reference, mirroring `Histogram::percentile`.
+fn ref_percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+#[test]
+fn histogram_lazy_sort_cache_survives_interleaved_mutation() {
+    // The lazy-sort cache (interior-mutability sort behind &self reads)
+    // must be invalidated by BOTH mutation paths — `record` and `merge` —
+    // in any interleaving with sorted reads.  A shadow Vec is the oracle.
+    run_named("hist_cache", |g| {
+        let mut h = Histogram::default();
+        let mut shadow: Vec<f64> = Vec::new();
+        for _ in 0..g.usize(1, 80) {
+            match g.usize(0, 3) {
+                0 => {
+                    let x = g.f64(-50.0, 50.0);
+                    h.record(x);
+                    shadow.push(x);
+                }
+                1 => {
+                    // merge a small batch (possibly empty, possibly with a
+                    // clean cache from its own sorted read)
+                    let mut other = Histogram::default();
+                    let mut batch = Vec::new();
+                    for _ in 0..g.usize(0, 6) {
+                        let x = g.f64(-50.0, 50.0);
+                        other.record(x);
+                        batch.push(x);
+                    }
+                    if g.bool(0.5) {
+                        other.percentile(50.0); // mark the source sorted
+                    }
+                    h.merge(&other);
+                    shadow.extend_from_slice(&batch);
+                }
+                _ => {
+                    // sorted read: must agree with the oracle even right
+                    // after mutation, and must not perturb len/sum
+                    let p = g.f64(0.0, 100.0);
+                    assert_eq!(h.percentile(p), ref_percentile(&shadow, p));
+                    assert_eq!(h.len(), shadow.len());
+                }
+            }
+        }
+        // final full sweep, including the cached re-read
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            let want = ref_percentile(&shadow, p);
+            assert_eq!(h.percentile(p), want);
+            assert_eq!(h.percentile(p), want, "cached re-read must agree");
+        }
+        assert!((h.sum() - shadow.iter().sum::<f64>()).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn histogram_merge_is_ordering_invariant() {
+    // Merging the same parts in any order yields the same distribution
+    // (len/sum/mean and every percentile) — sorted reads interleaved
+    // between merges must not change the outcome.
+    run_named("hist_merge_order", |g| {
+        let n_parts = g.usize(2, 5);
+        let parts: Vec<Vec<f64>> = (0..n_parts)
+            .map(|_| (0..g.usize(0, 20)).map(|_| g.f64(-10.0, 10.0)).collect())
+            .collect();
+        let mk = |v: &[f64]| {
+            let mut h = Histogram::default();
+            for &x in v {
+                h.record(x);
+            }
+            h
+        };
+        let mut fwd = Histogram::default();
+        for p in &parts {
+            fwd.merge(&mk(p));
+        }
+        let mut rev = Histogram::default();
+        for p in parts.iter().rev() {
+            rev.merge(&mk(p));
+            rev.percentile(50.0); // dirty-then-clean the cache between merges
+        }
+        assert_eq!(fwd.len(), rev.len());
+        assert!((fwd.sum() - rev.sum()).abs() < 1e-9);
+        assert!((fwd.mean() - rev.mean()).abs() < 1e-9);
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(fwd.percentile(p), rev.percentile(p), "p{p} diverged");
+        }
+    });
+}
+
 // ---------------------------------------------------------------------
 // scheduler
 // ---------------------------------------------------------------------

@@ -1,0 +1,260 @@
+//! Observability integration tests: the tracing tentpole's contract.
+//!
+//! * Tracing is an **observer**: `Engine::run` outputs are bit-identical
+//!   with tracing off vs on (the acceptance criterion), and a disabled
+//!   tracer journals nothing.
+//! * The Chrome/Perfetto export of a mixed-drafter run under KV pressure
+//!   carries the full iteration anatomy: draft, verify, the
+//!   delayed-verification overlap window, KV offloads, and the session
+//!   lifecycle (submit → first token → finish).
+//! * Simulated timestamps are monotone across the journal, sampling thins
+//!   it, and the ring buffer drops oldest without losing count.
+//! * The SLO section of `RunReport` is populated from the sim clock, and
+//!   every report surface carries cancelled/rejected counts.
+
+use std::rc::Rc;
+
+use sparsespec::engine::{Engine, EngineConfig, EngineHandle, FinishReason};
+use sparsespec::kv_cache::KvPolicy;
+use sparsespec::runtime::Runtime;
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
+use sparsespec::trace::{names, TraceConfig};
+use sparsespec::workload::{Dataset, Request, WorkloadGen};
+
+fn artifacts_dir() -> String {
+    std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load(&artifacts_dir()).expect("runtime loads"))
+}
+
+fn small_requests(rt: &Runtime, n: usize, cap: usize, seed: u64) -> Vec<Request> {
+    let mut reqs =
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, seed)
+            .offline_batch(n);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+/// A config that exercises every traced subsystem: mixed drafters,
+/// delayed verification (overlap window), adaptive k, and a KV budget
+/// tight enough to force offloads.
+fn traced_cfg(rt: &Runtime, trace: TraceConfig) -> EngineConfig {
+    let m = &rt.cfg.model;
+    EngineConfig::builder(DrafterKind::Pillar { w: 64 })
+        .k(8)
+        .schedule(Schedule::Unified)
+        .delayed_verify(true)
+        .kv(KvPolicy::Dynamic, m.slots * m.max_seq / 8)
+        .adaptive_k(true)
+        .allow_drafter(DrafterKind::NGram { n: 3 })
+        .allow_drafter(DrafterKind::Vanilla)
+        .tracing(trace)
+        .build(m)
+        .expect("config validates")
+}
+
+fn mixed_requests(rt: &Runtime, n: usize, cap: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = small_requests(rt, n, cap, seed);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.drafter = match i % 3 {
+            1 => Some(DrafterKind::NGram { n: 3 }),
+            2 => Some(DrafterKind::Vanilla),
+            _ => None,
+        };
+    }
+    reqs
+}
+
+#[test]
+fn tracing_off_and_on_are_bit_identical() {
+    let rt = runtime();
+    let reqs = mixed_requests(&rt, 8, 60, 42);
+
+    let mut off = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::default())).unwrap();
+    let r_off = off.run(reqs.clone()).unwrap();
+    assert!(off.tracer().is_empty(), "disabled tracer must journal nothing");
+    assert_eq!(off.tracer().dropped(), 0);
+
+    let mut on = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::on())).unwrap();
+    let r_on = on.run(reqs).unwrap();
+    assert!(!on.tracer().is_empty());
+
+    assert_eq!(r_off.outputs, r_on.outputs, "tracing must not perturb generation");
+    assert_eq!(r_off.tokens_generated, r_on.tokens_generated);
+    assert_eq!(r_off.iterations, r_on.iterations);
+}
+
+#[test]
+fn chrome_export_contains_the_full_iteration_anatomy() {
+    let rt = runtime();
+    let mut eng = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::on())).unwrap();
+    let report = eng.run(mixed_requests(&rt, 12, 80, 7)).unwrap();
+    assert!(report.requests_done > 0);
+    assert!(
+        report.kv.offload_events > 0,
+        "tight budget must force offloads (got {:?})",
+        report.kv
+    );
+
+    let chrome = eng.export_trace_chrome();
+    assert!(chrome.starts_with('{') && chrome.ends_with('}'));
+    assert!(chrome.contains("\"traceEvents\""));
+    for span in [
+        names::ITERATION,
+        names::ADMIT,
+        names::DRAFT,
+        names::PROPOSE,
+        names::VERIFY,
+        names::DELAYED_VERIFY_OVERLAP,
+        names::KV_ADMIT,
+        names::KV_OFFLOAD,
+        names::BUCKET_ASSIGN,
+        names::ADAPTIVE_K,
+        names::SESSION_SUBMIT,
+        names::SESSION_FIRST_TOKEN,
+        names::SESSION_FINISH,
+    ] {
+        assert!(
+            chrome.contains(&format!("\"{span}\"")),
+            "chrome export missing `{span}`"
+        );
+    }
+    // Counter series ride along.
+    for counter in ["queue_depth", "kv_used_tokens", "live_sessions", "delayed_verify_depth"] {
+        assert!(chrome.contains(counter), "missing counter `{counter}`");
+    }
+    // Finish reasons are labelled.
+    assert!(chrome.contains("completed"));
+}
+
+#[test]
+fn journal_sim_timestamps_are_monotone() {
+    let rt = runtime();
+    let mut eng = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::on())).unwrap();
+    eng.run(mixed_requests(&rt, 6, 40, 3)).unwrap();
+    let jsonl = eng.export_trace_jsonl();
+    let mut last = f64::NEG_INFINITY;
+    let mut seen = 0usize;
+    for line in jsonl.lines() {
+        let Some(pos) = line.find("\"sim_us\":") else { continue };
+        let rest = &line[pos + "\"sim_us\":".len()..];
+        let end = rest
+            .find(|c: char| c == ',' || c == '}')
+            .expect("sim_us value terminates");
+        let v: f64 = rest[..end].trim().parse().expect("sim_us parses");
+        assert!(
+            v >= last,
+            "sim_us went backwards: {v} after {last} in line {line}"
+        );
+        last = v;
+        seen += 1;
+    }
+    assert!(seen > 50, "expected a populated journal, saw {seen} events");
+}
+
+#[test]
+fn sampling_thins_the_journal() {
+    let rt = runtime();
+    let reqs = small_requests(&rt, 6, 60, 11);
+
+    let mut full = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::on())).unwrap();
+    full.run(reqs.clone()).unwrap();
+    let mut thin =
+        Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::on().with_sampling(4))).unwrap();
+    thin.run(reqs).unwrap();
+
+    assert!(
+        thin.tracer().len() < full.tracer().len() / 2,
+        "sample_every=4 should thin the journal ({} vs {})",
+        thin.tracer().len(),
+        full.tracer().len()
+    );
+    // Lifecycle instants are NOT sampled away.
+    let chrome = thin.export_trace_chrome();
+    assert!(chrome.contains(names::SESSION_SUBMIT));
+    assert!(chrome.contains(names::SESSION_FINISH));
+}
+
+#[test]
+fn ring_buffer_caps_and_counts_drops() {
+    let rt = runtime();
+    let mut eng = Engine::new(
+        rt.clone(),
+        traced_cfg(&rt, TraceConfig::on().with_capacity(64)),
+    )
+    .unwrap();
+    eng.run(small_requests(&rt, 6, 60, 5)).unwrap();
+    assert!(eng.tracer().len() <= 64);
+    assert!(eng.tracer().dropped() > 0, "a long run must overflow capacity 64");
+    // Export stays well-formed even with orphaned begin events dropped.
+    let chrome = eng.export_trace_chrome();
+    assert!(chrome.contains("\"traceEvents\""));
+    assert!(chrome.contains("dropped_events"));
+}
+
+#[test]
+fn slo_report_is_populated_from_the_sim_clock() {
+    let rt = runtime();
+    let mut eng = Engine::new(rt.clone(), traced_cfg(&rt, TraceConfig::default())).unwrap();
+    let report = eng.run(mixed_requests(&rt, 12, 80, 21)).unwrap();
+
+    let slo = &report.slo;
+    assert_eq!(slo.completed, report.requests_done);
+    assert_eq!(slo.ttft_target_s, 1.0, "default SLO target");
+    assert_eq!(
+        slo.ttft_sim_s.len(),
+        report.requests_done,
+        "one TTFT sample per completed request (none cancelled here)"
+    );
+    assert!(slo.itl_sim_s.len() > 0, "multi-token outputs must record ITL");
+    assert!(slo.completed_within_ttft <= slo.completed);
+    assert!(slo.goodput_rps >= 0.0 && slo.goodput_rps.is_finite());
+    assert!(slo.kv_offloads > 0, "tight budget forces offloads");
+    for (a, b) in [(25.0, 50.0), (50.0, 99.0)] {
+        assert!(slo.ttft_sim_s.percentile(a) <= slo.ttft_sim_s.percentile(b));
+    }
+
+    // Markdown surface is deterministic and carries the SLO block.
+    let md = report.to_markdown();
+    assert!(md.contains("ttft_sim_s_p50"));
+    assert!(md.contains("goodput_rps"));
+    assert!(md.contains("requests_cancelled"));
+    assert!(md.contains("requests_rejected"));
+    assert_eq!(md, report.to_markdown(), "rendering is deterministic");
+}
+
+#[test]
+fn every_report_surface_carries_cancel_and_reject_counts() {
+    let rt = runtime();
+    let mut handle = EngineHandle::new(rt.clone(), traced_cfg(&rt, TraceConfig::on())).unwrap();
+    // One rejected (degenerate drafter parameters), the rest normal.
+    let mut reqs = small_requests(&rt, 4, 30, 9);
+    reqs[0].drafter = Some(DrafterKind::NGram { n: 0 });
+    let handles: Vec<_> = reqs.into_iter().map(|r| handle.submit(r)).collect();
+    assert_eq!(handles[0].finish_reason(), Some(FinishReason::Rejected));
+    // Cancel one mid-queue before driving.
+    handles[1].cancel();
+    handle.drive().unwrap();
+    let report = handle.report();
+
+    assert_eq!(report.requests_rejected, 1);
+    assert!(report.requests_cancelled >= 1);
+    let summary = report.summary();
+    assert!(summary.contains("canc="), "summary: {summary}");
+    assert!(summary.contains("rej="), "summary: {summary}");
+    let reg = report.registry();
+    assert_eq!(reg.get("requests_rejected"), 1.0);
+    assert!(reg.get("requests_cancelled") >= 1.0);
+    let prom = reg.expose_prometheus("sparsespec");
+    assert!(prom.contains("sparsespec_requests_rejected"));
+    assert!(prom.contains("sparsespec_requests_cancelled"));
+    // Session lifecycle instants made it to the journal, cancel included.
+    let chrome = handle.tracer().export_chrome_string();
+    assert!(chrome.contains(names::SESSION_FINISH));
+    assert!(chrome.contains("cancelled"));
+}
