@@ -13,7 +13,8 @@
 //!
 //!   cargo run --release --example online_chat [-- --rate 1.5 --horizon 20]
 //!   (add `--trace-out trace.json` to export a Perfetto trace of the
-//!    live-serving run)
+//!    live-serving run; add `--fault-plan runtime:0.02,verify_stall:0.1`
+//!    to serve the same trace under injected transient faults)
 
 
 use std::rc::Rc;
@@ -41,11 +42,22 @@ fn main() -> anyhow::Result<()> {
         )
     };
     let trace_out = args.opt("trace-out").map(|s| s.to_string());
+    // Optional chaos (`--fault-plan site:rate,... --fault-seed N`): live
+    // serving under injected faults — retries and degradations show up in
+    // the summary line, greedy outputs stay schedule-independent.
+    let fault_cfg = match args.opt("fault-plan") {
+        Some(spec) => sparsespec::fault::FaultConfig::new(
+            sparsespec::fault::FaultPlan::parse(spec)?,
+            args.u64("fault-seed", 0),
+        ),
+        None => sparsespec::fault::FaultConfig::off(),
+    };
     let mk_cfg = |traced: bool| {
         let mut b = EngineConfig::builder(DrafterKind::Pillar { w: 128 })
             .k(8)
             .schedule(Schedule::Unified)
-            .delayed_verify(true);
+            .delayed_verify(true)
+            .faults(fault_cfg.clone());
         if traced {
             b = b.tracing(sparsespec::trace::TraceConfig::on());
         }

@@ -9,6 +9,8 @@
 //!
 //! With `--trace-out` the final section saves a Chrome/Perfetto trace of a
 //! mixed-drafter batch under KV pressure — load it at ui.perfetto.dev.
+//! The robustness section at the end replays the comparison under a seeded
+//! fault plan and checks that chaos never changes the greedy outputs.
 
 
 use std::rc::Rc;
@@ -157,6 +159,36 @@ fn main() -> anyhow::Result<()> {
         traced.tracer().len(),
         traced.tracer().dropped()
     );
+    // ------------------------------------------------------------------
+    // Robustness quickstart: replay the very first comparison under a
+    // seeded chaos plan (transient runtime/KV faults + a drafter that
+    // "panics" 10% of the time).  Transient faults retry with sim-clock
+    // backoff, drafter faults demote only the affected slot to vanilla
+    // decoding — so every session completes and, at temperature 0, the
+    // generated tokens are bit-identical to the fault-free run above.
+    // (`sparsespec serve --fault-plan ... --fault-seed N` is the CLI
+    // spelling; EXPERIMENTS.md §Robustness has the full sweep.)
+    // ------------------------------------------------------------------
+    let plan = sparsespec::fault::FaultPlan::parse(
+        "runtime:0.02,kv_reload:0.05,drafter_panic:0.1",
+    )?;
+    let cfg = EngineConfig::new(DrafterKind::Pillar { w: 128 })
+        .with_k(8)
+        .with_faults(sparsespec::fault::FaultConfig::new(plan, 7));
+    let mut chaos = Engine::new(rt.clone(), cfg)?;
+    let rchaos = chaos.run(mk_reqs())?;
+    println!("\nchaos run: {}", rchaos.summary());
+    println!(
+        "chaos: {} faults injected, {} retries, {} slot degradations, {} failed — \
+         outputs identical to fault-free run: {}",
+        rchaos.faults_injected,
+        rchaos.fault_retries,
+        rchaos.slot_degradations,
+        rchaos.requests_failed,
+        rchaos.outputs == ro.outputs
+    );
+    assert_eq!(rchaos.outputs, ro.outputs, "chaos perturbed greedy outputs");
+
     let mut trace_path = None;
     let mut argv = std::env::args().skip(1);
     while let Some(a) = argv.next() {

@@ -9,7 +9,8 @@
 //!
 //!   cargo run --release --example reasoning_serve [-- --requests 12]
 //!   (add `--trace-out trace.json` to export a Perfetto trace of the
-//!    sparsespec run on the last dataset)
+//!    sparsespec run on the last dataset; add `--fault-plan runtime:0.02
+//!    --fault-seed 7` to re-run the whole table under injected faults)
 
 
 use std::rc::Rc;
@@ -50,6 +51,15 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = EngineConfig::new(*d).with_k(8);
             if traced {
                 cfg.trace = sparsespec::trace::TraceConfig::on();
+            }
+            // Optional chaos: serve the whole table under a fault plan
+            // (greedy outputs are unaffected; the table shows the cost of
+            // retries and degraded rounds instead).
+            if let Some(spec) = args.opt("fault-plan") {
+                cfg = cfg.with_faults(sparsespec::fault::FaultConfig::new(
+                    sparsespec::fault::FaultPlan::parse(spec)?,
+                    args.u64("fault-seed", 0),
+                ));
             }
             let mut driver = EngineDriver::new(EngineHandle::new(rt.clone(), cfg)?);
             for req in reqs {

@@ -9,7 +9,9 @@
 //!
 //!   cargo run --release --example rl_rollout [-- --requests 32 --budget-frac 45]
 //!   (add `--trace-out trace.json` to export a Perfetto trace of the
-//!    sparsespec+dynamic run — offload/reload spans on the Kv track)
+//!    sparsespec+dynamic run — offload/reload spans on the Kv track;
+//!    add `--fault-plan kv_reload:0.05 --fault-seed 7` to chaos-test the
+//!    offload/reload path under injected host-tier I/O faults)
 
 
 use std::rc::Rc;
@@ -47,6 +49,12 @@ fn main() -> anyhow::Result<()> {
         let mut b = EngineConfig::builder(drafter).k(8).kv(policy, budget);
         if traced {
             b = b.tracing(sparsespec::trace::TraceConfig::on());
+        }
+        if let Some(spec) = args.opt("fault-plan") {
+            b = b.faults(sparsespec::fault::FaultConfig::new(
+                sparsespec::fault::FaultPlan::parse(spec)?,
+                args.u64("fault-seed", 0),
+            ));
         }
         let cfg = b.build(&rt.cfg.model)?;
         let mut driver = EngineDriver::new(EngineHandle::new(rt.clone(), cfg)?);

@@ -1,0 +1,288 @@
+"""Python twin of `rust/src/fault/mod.rs` (PR 7 robustness).
+
+The Rust crate cannot run in every environment this repo is developed in,
+so — like ``test_trace_port.py`` for the tracer — this twin re-implements
+the fault injector's deterministic decision function bit-for-bit in
+Python and pins, by parsing the Rust source directly:
+
+* the splitmix64 finaliser (``mix64``) against known-good golden values,
+* the per-site hash salts (ASCII tags) and spec-string labels,
+* the transient-vs-fatal classification table of ``EngineError``,
+* the retry / degradation policy constants,
+* the schedule itself: per-site decision streams are a pure function of
+  ``(seed, site, check_index)`` — independent across sites, exact at the
+  rate endpoints, and empirically calibrated mid-range.
+
+If any of these drift in the Rust source without a matching edit here,
+a test below fails with a diff pointing at the divergence.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from pathlib import Path
+
+M64 = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+MIX_MUL_1 = 0xBF58476D1CE4E5B9
+MIX_MUL_2 = 0x94D049BB133111EB
+
+REPO = Path(__file__).resolve().parents[2]
+FAULT_RS = REPO / "rust" / "src" / "fault" / "mod.rs"
+
+# ---------------------------------------------------------------------------
+# Pinned tables — must mirror rust/src/fault/mod.rs exactly.
+# ---------------------------------------------------------------------------
+
+# FaultSite variant -> (spec/metrics label, per-site hash salt).
+# The salts are ASCII tags so a hexdump of the hash input is self-describing.
+SITES = {
+    "RuntimeStep": ("runtime", 0x52554E54494D4531),  # b"RUNTIME1"
+    "KvOffload": ("kv_offload", 0x4B564F46464C4431),  # b"KVOFFLD1"
+    "KvReload": ("kv_reload", 0x4B5652454C4F4431),  # b"KVRELOD1"
+    "VerifyStall": ("verify_stall", 0x565354414C4C3031),  # b"VSTALL01"
+    "DrafterPanic": ("drafter_panic", 0x4450414E49433031),  # b"DPANIC01"
+    "DrafterMalformed": ("drafter_malformed", 0x444D414C46524D31),  # b"DMALFRM1"
+}
+
+# EngineError variant -> ErrorClass. Transient errors are retried with
+# bounded sim-clock backoff; fatal ones isolate the slot/session.
+CLASSIFICATION = {
+    "RuntimeStep": "Transient",
+    "KvOffloadIo": "Transient",
+    "KvReloadIo": "Transient",
+    "VerifyStall": "Transient",
+    "DrafterPanic": "Fatal",
+    "MalformedProposal": "Fatal",
+    "RetriesExhausted": "Fatal",
+    "Internal": "Fatal",
+}
+
+# Retry / degradation policy knobs (engine defaults).
+POLICY = {
+    "MAX_STEP_RETRIES": 4,
+    "STEP_BACKOFF_BASE_S": 5e-4,
+    "RELOAD_FAULT_BUDGET": 8,
+    "DEGRADE_FAULT_THRESHOLD": 2,
+    "DEGRADE_ACCEPT_WINDOW": 8,
+    "PROBATION_ROUNDS": 16,
+}
+
+
+# ---------------------------------------------------------------------------
+# Bit-for-bit port of the injector's decision function.
+# ---------------------------------------------------------------------------
+
+
+def mix64(x: int) -> int:
+    """splitmix64 finaliser — mirrors `fault::mix64` exactly."""
+    x = (x + GAMMA) & M64
+    x = ((x ^ (x >> 30)) * MIX_MUL_1) & M64
+    x = ((x ^ (x >> 27)) * MIX_MUL_2) & M64
+    return x ^ (x >> 31)
+
+
+def threshold(rate: float) -> int:
+    """`(rate * 2^64) as u128`: truncation toward zero, exact endpoints."""
+    return int(rate * 2.0**64)
+
+
+class FaultInjector:
+    """Port of `fault::FaultInjector` for the sites/rates under test."""
+
+    def __init__(self, rates: dict[str, float], seed: int) -> None:
+        self.seed = seed & M64
+        self.enabled = any(r != 0.0 for r in rates.values())
+        self.thresholds = {site: threshold(rates.get(site, 0.0)) for site in SITES}
+        self.checks = {site: 0 for site in SITES}
+        self.fired = {site: 0 for site in SITES}
+
+    def check(self, site: str) -> bool:
+        if not self.enabled:
+            return False
+        n = self.checks[site]
+        self.checks[site] += 1
+        if self.thresholds[site] == 0:
+            return False
+        salt = SITES[site][1]
+        h = mix64(self.seed ^ salt ^ ((n * GAMMA) & M64))
+        hit = h < self.thresholds[site]
+        if hit:
+            self.fired[site] += 1
+        return hit
+
+
+def backoff_s(attempt: int) -> float:
+    """Port of `fault::backoff_s`: doubling, capped exponent."""
+    return POLICY["STEP_BACKOFF_BASE_S"] * float(1 << min(attempt, 16))
+
+
+# ---------------------------------------------------------------------------
+# Source pins: parse rust/src/fault/mod.rs and diff against the tables.
+# ---------------------------------------------------------------------------
+
+
+def rust_source() -> str:
+    assert FAULT_RS.is_file(), f"missing Rust twin source: {FAULT_RS}"
+    return FAULT_RS.read_text()
+
+
+def test_mix64_matches_reference_splitmix64():
+    # mix64(x) is exactly one step of splitmix64 seeded with state `x`.
+    # Golden values from the reference implementation (Steele et al.,
+    # "Fast Splittable Pseudorandom Number Generators", seed 0 stream).
+    assert mix64(0) == 0xE220A8397B1DCDAF
+    assert mix64(GAMMA) == 0x6E789E6AA1B965F4
+    assert mix64((2 * GAMMA) & M64) == 0x06C45D188009454F
+    # involution sanity: distinct inputs, distinct outputs, full 64-bit range
+    outs = {mix64(i) for i in range(1024)}
+    assert len(outs) == 1024
+    assert all(0 <= o <= M64 for o in outs)
+
+
+def test_mix64_constants_pinned_in_rust_source():
+    src = rust_source()
+    for c in (GAMMA, MIX_MUL_1, MIX_MUL_2):
+        assert f"0x{c:X}" in src, f"mix64 constant 0x{c:X} missing from fault/mod.rs"
+
+
+def test_site_labels_match_rust_source():
+    src = rust_source()
+    # label() arms: `FaultSite::RuntimeStep => "runtime",`
+    arms = dict(re.findall(r'FaultSite::(\w+) => "([a-z_]+)",', src))
+    expected = {site: label for site, (label, _) in SITES.items()}
+    assert arms == expected
+
+
+def test_site_salts_match_rust_source_and_are_ascii_tags():
+    src = rust_source()
+    # salt() arms: `FaultSite::RuntimeStep => 0x52554E54494D4531,`
+    arms = {
+        site: int(salt, 16)
+        for site, salt in re.findall(r"FaultSite::(\w+) => (0x[0-9A-Fa-f]{16}),", src)
+    }
+    expected = {site: salt for site, (_, salt) in SITES.items()}
+    assert arms == expected
+    # each salt decodes to a printable 8-byte ASCII tag, and tags are unique
+    tags = set()
+    for site, salt in expected.items():
+        tag = salt.to_bytes(8, "big").decode("ascii")
+        assert tag.isprintable(), f"{site} salt is not an ASCII tag"
+        tags.add(tag)
+    assert len(tags) == len(SITES)
+
+
+def test_error_classification_table_matches_rust_source():
+    src = rust_source()
+    # class() arms, one per line:
+    # `EngineError::RuntimeStep { .. } => ErrorClass::Transient,`
+    arms = dict(
+        re.findall(r"EngineError::(\w+) \{ \.\. \} => ErrorClass::(\w+),", src)
+    )
+    assert arms == CLASSIFICATION
+    # the taxonomy splits exactly 4 / 4 — drafter-side and exhausted/internal
+    # faults are never retried
+    fatal = [k for k, v in CLASSIFICATION.items() if v == "Fatal"]
+    assert sorted(fatal) == [
+        "DrafterPanic",
+        "Internal",
+        "MalformedProposal",
+        "RetriesExhausted",
+    ]
+
+
+def test_policy_constants_match_rust_source():
+    src = rust_source()
+    consts = dict(
+        re.findall(r"pub const ([A-Z_]+): (?:u32|f64) = ([0-9e.\-]+);", src)
+    )
+    assert set(consts) == set(POLICY), "policy constant set drifted"
+    for name, want in POLICY.items():
+        got = float(consts[name])
+        assert math.isclose(got, want, rel_tol=0, abs_tol=0), (name, got, want)
+
+
+def test_backoff_schedule():
+    base = POLICY["STEP_BACKOFF_BASE_S"]
+    assert backoff_s(0) == base
+    assert backoff_s(1) == base * 2
+    assert backoff_s(3) == base * 8
+    # exponent is capped so the sim clock cannot overflow on a stuck fault
+    assert backoff_s(16) == backoff_s(40) == base * (1 << 16)
+
+
+# ---------------------------------------------------------------------------
+# Schedule semantics (mirror the Rust unit tests so both sides agree on
+# behaviour, not just on code shape).
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_is_deterministic_and_sites_are_independent():
+    rates = {"RuntimeStep": 0.3, "KvReload": 0.3}
+    a = FaultInjector(rates, 42)
+    b = FaultInjector(rates, 42)
+    sa = [a.check("RuntimeStep") for _ in range(256)]
+    sb = [b.check("RuntimeStep") for _ in range(256)]
+    assert sa == sb
+    # interleaving another site's checks must not shift the stream
+    c = FaultInjector(rates, 42)
+    sc = []
+    for _ in range(256):
+        c.check("KvReload")
+        sc.append(c.check("RuntimeStep"))
+    assert sa == sc
+    # a different seed gives a different stream
+    d = FaultInjector(rates, 43)
+    sd = [d.check("RuntimeStep") for _ in range(256)]
+    assert sa != sd
+    assert any(sa), "rate 0.3 over 256 checks should fire at least once"
+
+
+def test_golden_schedule_prefix_is_pinned():
+    # The exact first-16 decisions for (seed=42, runtime:0.3) — any change
+    # to the hash input layout, salt, or threshold math breaks this.  The
+    # Rust injector replays this identical prefix for the same config.
+    inj = FaultInjector({"RuntimeStep": 0.3}, 42)
+    prefix = [inj.check("RuntimeStep") for _ in range(16)]
+    golden = [
+        mix64(42 ^ SITES["RuntimeStep"][1] ^ ((n * GAMMA) & M64)) < threshold(0.3)
+        for n in range(16)
+    ]
+    assert prefix == golden
+    assert inj.checks["RuntimeStep"] == 16
+    assert inj.fired["RuntimeStep"] == sum(prefix)
+
+
+def test_empirical_rate_is_calibrated():
+    inj = FaultInjector({"RuntimeStep": 0.25}, 7)
+    n = 20_000
+    hits = sum(inj.check("RuntimeStep") for _ in range(n))
+    rate = hits / n
+    assert abs(rate - 0.25) < 0.02, f"empirical rate {rate}"
+    assert inj.checks["RuntimeStep"] == n
+    assert inj.fired["RuntimeStep"] == hits
+
+
+def test_rate_endpoints_are_exact():
+    inj = FaultInjector({"DrafterPanic": 1.0, "KvOffload": 0.0}, 11)
+    for _ in range(1000):
+        assert inj.check("DrafterPanic"), "rate 1.0 must always fire"
+        assert not inj.check("KvOffload"), "rate 0.0 must never fire"
+    # a fully-empty plan disables the injector: no counters advance
+    off = FaultInjector({}, 99)
+    assert not off.enabled
+    for _ in range(100):
+        assert not off.check("RuntimeStep")
+    assert off.checks["RuntimeStep"] == 0
+
+
+def test_threshold_conversion_truncates_like_rust_cast():
+    assert threshold(0.0) == 0
+    assert threshold(1.0) == 1 << 64
+    assert threshold(0.5) == 1 << 63
+    # truncation toward zero, as `as u128` does for positive floats
+    assert threshold(0.25) == 1 << 62
+    t = threshold(0.3)
+    assert 0 < t < (1 << 64)
+    assert t == int(0.3 * 2.0**64)

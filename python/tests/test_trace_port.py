@@ -45,6 +45,12 @@ NAMES = {
     "SESSION_SUBMIT": "session_submit",
     "SESSION_FIRST_TOKEN": "session_first_token",
     "SESSION_FINISH": "session_finish",
+    # PR 7 robustness events (fault injection / degradation lifecycle)
+    "FAULT": "fault",
+    "FAULT_RETRY": "fault_retry",
+    "SLOT_DEGRADE": "slot_degrade",
+    "SLOT_PROMOTE": "slot_promote",
+    "SESSION_FAIL": "session_fail",
 }
 
 TRACKS = {  # Track::tid() / Track::label()

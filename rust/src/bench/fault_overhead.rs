@@ -1,0 +1,137 @@
+//! `fault_overhead` — fault-injector cost on the engine iteration path.
+//!
+//! The robustness tentpole promises that the injector is a pure chaos
+//! *option*: with no fault plan the engine must behave — and cost —
+//! exactly as if the injector did not exist.  Two measurements:
+//!
+//! 1. **Micro**: per-`check()` latency of a disabled injector (one branch
+//!    on `enabled`) against an armed one (per-site counter + splitmix64
+//!    hash + threshold compare — the price a chaos run pays per site
+//!    probe).
+//! 2. **End-to-end**: paired engine runs over the identical workload with
+//!    the default config and an explicit `FaultConfig::off()`.  Outputs,
+//!    iteration counts and fault counters must be bit-identical (the
+//!    disabled injector never perturbs generation), and the run's
+//!    per-iteration wallclock anchors the extrapolated ratio.
+//!
+//! Gate (enforced after saving, like `trace_overhead`): the disabled
+//! injector extrapolated to a full iteration's worth of site probes must
+//! stay under **1%** of an engine iteration.  Emits
+//! `reports/BENCH_fault_overhead.json`.
+
+use super::BenchCtx;
+use crate::engine::{Engine, EngineConfig};
+use crate::fault::{FaultConfig, FaultInjector, FaultPlan, FaultSite};
+use crate::spec::DrafterKind;
+use crate::util::json::{num, obj, s as jstr};
+use crate::workload::{Dataset, WorkloadGen};
+use anyhow::Result;
+use std::hint::black_box;
+use std::time::Instant;
+
+pub fn fault_overhead(ctx: &mut BenchCtx) -> Result<()> {
+    println!("fault_overhead: injector cost, disabled vs armed");
+    let reps = 400_000 * ctx.n_requests.max(1);
+
+    // Micro: disabled injector — the branch every fallible callsite pays
+    // in production (no plan configured).
+    let mut off = FaultInjector::disabled();
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let site = FaultSite::ALL[i % FaultSite::ALL.len()];
+        black_box(off.check(black_box(site)));
+    }
+    let off_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    anyhow::ensure!(
+        off.total_fired() == 0 && off.checks(FaultSite::RuntimeStep) == 0,
+        "disabled injector must neither fire nor count"
+    );
+
+    // Micro: armed injector at a mid-range rate (worst case per probe:
+    // counter bump + hash + compare, independent of whether it fires).
+    let cfg = FaultConfig::new(
+        FaultPlan::new()
+            .with_rate(FaultSite::RuntimeStep, 0.01)
+            .with_rate(FaultSite::KvReload, 0.01),
+        ctx.seed,
+    );
+    let mut on = FaultInjector::new(&cfg);
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let site = FaultSite::ALL[i % FaultSite::ALL.len()];
+        black_box(on.check(black_box(site)));
+    }
+    let on_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    println!("  per check(): disabled {off_ns:.2}ns, armed {on_ns:.2}ns");
+
+    // End-to-end: default config vs explicit FaultConfig::off() — the
+    // injector-disabled engine must be indistinguishable from one built
+    // before the injector existed.
+    let rt = ctx.rt()?;
+    let m = rt.cfg.model.clone();
+    let n_req = ctx.n_requests.max(4);
+    let mk_reqs = |seed: u64| {
+        WorkloadGen::new(rt.cfg.grammar.clone(), m.clone(), Dataset::Aime, seed)
+            .offline_batch(n_req)
+    };
+    let mut eng_default = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8),
+    )?;
+    let r_default = eng_default.run(mk_reqs(ctx.seed))?;
+    let mut eng_off = Engine::new(
+        rt.clone(),
+        EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(8)
+            .with_faults(FaultConfig::off()),
+    )?;
+    let r_off = eng_off.run(mk_reqs(ctx.seed))?;
+    anyhow::ensure!(
+        r_default.outputs == r_off.outputs,
+        "a disabled injector changed engine outputs (must be bit-identical)"
+    );
+    anyhow::ensure!(
+        r_default.iterations == r_off.iterations,
+        "a disabled injector changed the iteration schedule"
+    );
+    anyhow::ensure!(
+        r_off.faults_injected == 0 && r_off.fault_retries == 0 && r_off.requests_failed == 0,
+        "a disabled injector reported fault activity"
+    );
+    println!("  {}", r_off.summary());
+    let iter_us = r_off.wall_s * 1e6 / r_off.iterations.max(1) as f64;
+
+    // Probe bound per iteration: one runtime-step probe per launched
+    // step artifact (prefill/draft/verify/kv_load: ≤ a handful), one per
+    // pressure action and reload poll, one drafter probe per live slot —
+    // slots + 16 is a comfortable ceiling, mirroring trace_overhead.
+    let probes_per_iter = (m.slots + 16) as f64;
+    let off_us_per_iter = off_ns * probes_per_iter / 1e3;
+    let ratio_off = off_us_per_iter / iter_us.max(1e-9);
+    println!(
+        "  per-iteration: engine {iter_us:.1}us, disabled-injector bound \
+         {off_us_per_iter:.4}us ({:.4}% — gate < 1%)",
+        ratio_off * 100.0
+    );
+
+    let json = obj(vec![
+        ("experiment", jstr("fault_overhead")),
+        ("harness", jstr("cargo bench -- fault_overhead")),
+        ("check_disabled_ns", num(off_ns)),
+        ("check_armed_ns", num(on_ns)),
+        ("engine_iter_us", num(iter_us)),
+        ("probes_per_iter_bound", num(probes_per_iter)),
+        ("overhead_ratio_disabled", num(ratio_off)),
+        ("outputs_bit_identical", num(1.0)),
+        ("iterations_identical", num(1.0)),
+    ]);
+    ctx.save("BENCH_fault_overhead.json", &json.to_string())?;
+    // Enforced after saving, so a regression still leaves evidence.
+    anyhow::ensure!(
+        ratio_off < 0.01,
+        "fault_overhead gate failed: disabled injector costs {:.3}% of an \
+         engine iteration (need < 1%)",
+        ratio_off * 100.0
+    );
+    Ok(())
+}

@@ -7,11 +7,13 @@
 
 mod dispatch;
 mod experiments;
+mod fault_overhead;
 mod kernels;
 mod trace_overhead;
 
 pub use dispatch::drafter_dispatch;
 pub use experiments::*;
+pub use fault_overhead::fault_overhead;
 pub use kernels::{fig15_fused_kernel, pillar_select};
 pub use trace_overhead::trace_overhead;
 
@@ -76,11 +78,12 @@ pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
         "pillar_select" => pillar_select(ctx),
         "drafter_dispatch" => drafter_dispatch(ctx),
         "trace_overhead" => trace_overhead(ctx),
+        "fault_overhead" => fault_overhead(ctx),
         "all" => {
             for n in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
                 "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15", "pillar_select",
-                "drafter_dispatch", "trace_overhead",
+                "drafter_dispatch", "trace_overhead", "fault_overhead",
             ] {
                 println!("\n================ {n} ================");
                 run_named(ctx, n)?;

@@ -52,6 +52,13 @@ pub enum FinishReason {
     /// missing artifact variant).  Nothing was queued; the reason is
     /// readable via [`SessionHandle::reject_reason`].
     Rejected,
+    /// Poisoned by a fatal engine fault (e.g. a KV reload whose retry
+    /// budget was exhausted).  The stream holds whatever was delivered
+    /// before the fault; the typed detail is readable via
+    /// [`SessionHandle::failure_reason`].  Blast radius is one session:
+    /// its slot, bucket and KV (both tiers) are released through the
+    /// regular retirement paths and co-batched sessions are unaffected.
+    Failed,
 }
 
 impl FinishReason {
@@ -61,6 +68,7 @@ impl FinishReason {
             FinishReason::Completed => "completed",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Rejected => "rejected",
+            FinishReason::Failed => "failed",
         }
     }
 }
@@ -170,6 +178,7 @@ pub(crate) struct SessionShared {
     cancel_requested: bool,
     sink: Option<Box<dyn TokenSink>>,
     reject_reason: Option<String>,
+    failure_reason: Option<String>,
     stats: SessionStats,
 }
 
@@ -183,12 +192,17 @@ impl SessionShared {
             cancel_requested: false,
             sink: None,
             reject_reason: None,
+            failure_reason: None,
             stats: SessionStats::new(sim_s, drafter),
         }
     }
 
     pub(crate) fn set_reject_reason(&mut self, reason: String) {
         self.reject_reason = Some(reason);
+    }
+
+    pub(crate) fn set_failure_reason(&mut self, reason: String) {
+        self.failure_reason = Some(reason);
     }
 
     pub(crate) fn set_sink(&mut self, sink: Box<dyn TokenSink>) {
@@ -302,6 +316,13 @@ impl SessionHandle {
     /// [`FinishReason::Rejected`] sessions).
     pub fn reject_reason(&self) -> Option<String> {
         self.shared.borrow().reject_reason.clone()
+    }
+
+    /// The rendered [`EngineError`](crate::fault::EngineError) that
+    /// poisoned this session (only set for [`FinishReason::Failed`]
+    /// sessions).
+    pub fn failure_reason(&self) -> Option<String> {
+        self.shared.borrow().failure_reason.clone()
     }
 
     /// Request cancellation.  Applied by the engine at the next iteration
@@ -548,6 +569,7 @@ impl EngineDriver {
             }
             Some(FinishReason::Cancelled) => m.inc("sessions_cancelled", &[], 1.0),
             Some(FinishReason::Rejected) => m.inc("sessions_rejected", &[], 1.0),
+            Some(FinishReason::Failed) => m.inc("sessions_failed", &[], 1.0),
             None => m.inc("sessions_live", &[], 1.0),
         }
     }
@@ -574,7 +596,8 @@ impl EngineDriver {
     /// Aggregate per-session statistics into a typed
     /// [`MetricsRegistry`]: `ttft_s`, `ttft_sim_s`, `inter_token_s` and
     /// `accepted_per_round` histograms plus
-    /// `sessions_{completed,cancelled,rejected,live}` counters.  Sessions
+    /// `sessions_{completed,cancelled,rejected,failed,live}` counters.
+    /// Sessions
     /// carry their resolved drafter name, so `{drafter="<name>"}` label
     /// series land alongside the unlabelled aggregates (mixed-drafter
     /// pools).  Includes sessions already dropped by `prune_finished`.

@@ -18,6 +18,7 @@ use std::time::Instant;
 use super::api::{FinishReason, SessionHandle, SessionShared, TokenSink};
 use super::slot::{Phase, Slot};
 use super::{EngineConfig, RunReport, SloReport};
+use crate::fault::{self, EngineError, FaultInjector, FaultSite};
 use crate::kv_cache::{HostKv, KvManager, OffloadEngine, OffloadJob, PressureAction};
 use crate::metrics::Histogram;
 use crate::perfmodel::{DeviceModel, SimScale};
@@ -202,6 +203,18 @@ pub struct Engine {
     /// Open delayed-verification overlap window (async-span id == the
     /// iteration that launched it), closed at the next delayed drain.
     overlap_open: Option<u64>,
+    /// Deterministic fault source (`EngineConfig::fault`; disabled by
+    /// default — one branch per check site, CI-gated by `fault_overhead`).
+    injector: FaultInjector,
+    /// Transient-fault recoveries: runtime-step retries plus skipped
+    /// (naturally retried) KV offload/reload actions.
+    fault_retries: u64,
+    /// Consecutive injected reload faults per suspended request; cleared
+    /// on a clean check, a session fails at `fault::RELOAD_FAULT_BUDGET`.
+    reload_faults: HashMap<u64, u32>,
+    requests_failed: usize,
+    slot_degradations: u64,
+    slot_promotions: u64,
 }
 
 impl Engine {
@@ -296,6 +309,12 @@ impl Engine {
             tracer: Tracer::new(cfg.trace.clone()),
             slo: SloTracker::new(cfg.ttft_slo_s),
             overlap_open: None,
+            injector: FaultInjector::new(&cfg.fault),
+            fault_retries: 0,
+            reload_faults: HashMap::new(),
+            requests_failed: 0,
+            slot_degradations: 0,
+            slot_promotions: 0,
             rt,
             cfg,
         };
@@ -557,14 +576,16 @@ impl Engine {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
             if let Some(req) = self.queue.remove(pos) {
                 let di = self.lookup_drafter(req.drafter);
-                self.drafters[di].on_finish(id);
+                self.drafter_on_finish(di, id);
             }
         } else if let Some(idx) = self.slot_of(id) {
-            let slot = self.slots[idx].take().unwrap();
+            let slot = self.slots[idx]
+                .take()
+                .expect("slot_of returned a live slot index");
             self.buckets
                 .release(slot.bucket.min(self.buckets.n_buckets() - 1));
             self.kv.release(id);
-            self.drafters[slot.drafter].on_finish(id);
+            self.drafter_on_finish(slot.drafter, id);
         } else if let Some(sus) = self.suspended.remove(&id) {
             // Covers both host-resident KV and rows still in offload
             // transit (the orphaned transfer is dropped at harvest time).
@@ -577,11 +598,193 @@ impl Engine {
                     vec![("req", id.into()), ("tokens", sus.len.into())],
                 );
             }
-            self.drafters[sus.drafter].on_finish(id);
+            self.drafter_on_finish(sus.drafter, id);
         }
         self.slo.forget(id);
         self.requests_cancelled += 1;
         self.finish_session(id, FinishReason::Cancelled);
+    }
+
+    // ------------------------------------------------------------------
+    // fault handling (taxonomy and policy live in `crate::fault`)
+    // ------------------------------------------------------------------
+
+    /// Run one fallible runtime step under the injector with bounded retry
+    /// + exponential backoff charged to the **sim clock**.  Transient
+    /// errors (injected faults, and unclassified runner errors — a bounded
+    /// retry is harmless, a deterministic failure just exhausts the budget)
+    /// retry up to [`fault::MAX_STEP_RETRIES`] attempts; exhaustion
+    /// surfaces as the fatal [`EngineError::RetriesExhausted`] out of
+    /// [`Engine::step`].  Free-function shape (disjoint field borrows) so
+    /// the closure can hold `&mut self.runner`.
+    fn step_with_retry<T>(
+        injector: &mut FaultInjector,
+        sim_s: &mut f64,
+        fault_retries: &mut u64,
+        tracer: &mut Tracer,
+        artifact: &str,
+        mut f: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            let res = if injector.check(FaultSite::RuntimeStep) {
+                if tracer.enabled() {
+                    tracer.instant(
+                        names::FAULT,
+                        Track::Engine,
+                        *sim_s,
+                        vec![
+                            ("site", FaultSite::RuntimeStep.label().into()),
+                            ("artifact", artifact.to_string().into()),
+                        ],
+                    );
+                }
+                Err(EngineError::RuntimeStep {
+                    artifact: artifact.to_string(),
+                    detail: "injected fault".into(),
+                }
+                .into())
+            } else {
+                f()
+            };
+            match res {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    attempt += 1;
+                    let transient = e
+                        .downcast_ref::<EngineError>()
+                        .map(EngineError::is_transient)
+                        .unwrap_or(true);
+                    if !transient || attempt >= fault::MAX_STEP_RETRIES {
+                        return Err(EngineError::RetriesExhausted {
+                            site: FaultSite::RuntimeStep,
+                            attempts: attempt,
+                            last: format!("{e:#}"),
+                        }
+                        .into());
+                    }
+                    let backoff = fault::backoff_s(attempt - 1);
+                    *sim_s += backoff;
+                    *fault_retries += 1;
+                    if tracer.enabled() {
+                        tracer.instant(
+                            names::FAULT_RETRY,
+                            Track::Engine,
+                            *sim_s,
+                            vec![
+                                ("site", FaultSite::RuntimeStep.label().into()),
+                                ("artifact", artifact.to_string().into()),
+                                ("attempt", (attempt as u64).into()),
+                                ("backoff_us", (backoff * 1e6).into()),
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run a drafter lifecycle hook inside the panic sandbox.  Plugin
+    /// drafters are third-party code; a panic must cost the slot its
+    /// speculation, never the process or the co-batched sessions.
+    fn sandboxed<T>(
+        drafter: &str,
+        hook: &'static str,
+        f: impl FnOnce() -> T,
+    ) -> std::result::Result<T, EngineError> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+            Ok(v) => Ok(v),
+            Err(p) => Err(EngineError::DrafterPanic {
+                drafter: drafter.to_string(),
+                hook,
+                detail: fault::panic_detail(&*p),
+            }),
+        }
+    }
+
+    /// `on_finish` never blocks retirement: the session is already ending,
+    /// so a panicking drafter is logged and ignored.
+    fn drafter_on_finish(&mut self, di: usize, id: u64) {
+        if let Err(e) =
+            Self::sandboxed(&self.drafter_names[di], "on_finish", || {
+                self.drafters[di].on_finish(id)
+            })
+        {
+            if self.cfg.verbose {
+                eprintln!("ignored drafter fault at retire of {id}: {e}");
+            }
+        }
+    }
+
+    /// Record a drafter fault against a slot: trace it, and demote the
+    /// slot to vanilla (k=1) decoding once it crosses
+    /// [`fault::DEGRADE_FAULT_THRESHOLD`].  The session keeps running —
+    /// degraded slots still finish `Completed`, just without speculation.
+    fn note_drafter_fault(&mut self, slot_idx: usize, err: &EngineError) {
+        if self.cfg.verbose {
+            eprintln!("drafter fault (slot {slot_idx}): {err}");
+        }
+        let Some((req_id, demote)) = self.slots[slot_idx].as_mut().map(|slot| {
+            let demote = slot.note_fault();
+            if demote {
+                slot.demote();
+            }
+            (slot.req.id, demote)
+        }) else {
+            return;
+        };
+        if self.tracer.enabled() {
+            self.tracer.instant(
+                names::FAULT,
+                Track::Drafter,
+                self.sim_s,
+                vec![("req", req_id.into()), ("kind", err.kind_label().into())],
+            );
+        }
+        if demote {
+            self.note_degradation(req_id, err.kind_label());
+        }
+    }
+
+    /// Count + trace one slot demotion to vanilla decoding.
+    fn note_degradation(&mut self, req_id: u64, reason: &'static str) {
+        self.slot_degradations += 1;
+        if self.cfg.verbose {
+            eprintln!("request {req_id} degraded to vanilla decoding ({reason})");
+        }
+        if self.tracer.enabled() {
+            self.tracer.instant(
+                names::SLOT_DEGRADE,
+                Track::Drafter,
+                self.sim_s,
+                vec![("req", req_id.into()), ("reason", reason.into())],
+            );
+        }
+    }
+
+    /// Poison one session with a fatal error: record the detail on its
+    /// handle, count it, and finish it `Failed`.  Resource teardown (slot
+    /// / KV / bucket / drafter state) is the caller's job — it knows which
+    /// tier the request currently lives in.  Blast radius is exactly this
+    /// session: co-batched sessions' outputs are untouched.
+    fn fail_session(&mut self, id: u64, err: &EngineError) {
+        if let Some(sess) = self.sessions.get(&id) {
+            sess.borrow_mut().set_failure_reason(err.to_string());
+        }
+        if self.cfg.verbose {
+            eprintln!("session {id} failed: {err}");
+        }
+        self.slo.forget(id);
+        self.requests_failed += 1;
+        if self.tracer.enabled() {
+            self.tracer.instant(
+                names::SESSION_FAIL,
+                Track::Session,
+                self.sim_s,
+                vec![("req", id.into()), ("kind", err.kind_label().into())],
+            );
+        }
+        self.finish_session(id, FinishReason::Failed);
     }
 
     /// Assemble the run report and drain per-run aggregates (`outputs`
@@ -619,6 +822,11 @@ impl Engine {
             requests_done: self.requests_done,
             requests_cancelled: self.requests_cancelled,
             requests_rejected: self.requests_rejected,
+            requests_failed: self.requests_failed,
+            faults_injected: self.injector.total_fired(),
+            fault_retries: self.fault_retries,
+            slot_degradations: self.slot_degradations,
+            slot_promotions: self.slot_promotions,
             tokens_generated: self.tokens_generated,
             accept: self.accept.clone(),
             accept_by,
@@ -764,7 +972,10 @@ impl Engine {
             return Ok(0);
         }
         {
-            let req = self.queue.front().unwrap();
+            let req = self
+                .queue
+                .front()
+                .expect("queue non-empty: checked by the gate above");
             let p = req.prompt.len().min(self.mcfg().prompt_pad);
             if !self.kv.can_admit(p) {
                 return Ok(0);
@@ -782,10 +993,15 @@ impl Engine {
             if self.free_slot().is_none() || !self.kv.can_admit(p) {
                 break;
             }
-            let req = self.queue.pop_front().unwrap();
+            let req = self
+                .queue
+                .pop_front()
+                .expect("queue front checked in the loop condition");
             let rid = req.id;
             let di = self.lookup_drafter(req.drafter);
-            let idx = self.free_slot().unwrap();
+            let idx = self
+                .free_slot()
+                .expect("free slot checked in the loop condition");
             let bucket = match self.cfg.schedule {
                 Schedule::Unified => self.buckets.assign(),
                 // Everyone lives in bucket 0; counted there so release()
@@ -837,10 +1053,18 @@ impl Engine {
                 output: Vec::new(),
                 admitted_at: Instant::now(),
                 sim_admitted_at: self.sim_s,
+                faults: 0,
+                zero_accept_rounds: 0,
+                degraded: false,
+                probation: 0,
                 req,
             };
             self.slots[idx] = Some(slot);
-            self.drafters[di].on_admit(rid, false);
+            if let Err(e) = Self::sandboxed(&self.drafter_names[di], "on_admit", || {
+                self.drafters[di].on_admit(rid, false)
+            }) {
+                self.note_drafter_fault(idx, &e);
+            }
             newly.push(idx);
         }
         if newly.is_empty() {
@@ -854,10 +1078,22 @@ impl Engine {
         comp.gemm_rows += newly.len() * m.prompt_pad;
         comp.attn_bytes += newly.len() * m.prompt_pad * m.kv_bytes_per_token();
 
-        let logits = self.runner.prefill(&tokens, &plen, &active)?;
+        let logits = {
+            let runner = &mut self.runner;
+            Self::step_with_retry(
+                &mut self.injector,
+                &mut self.sim_s,
+                &mut self.fault_retries,
+                &mut self.tracer,
+                "prefill",
+                || runner.prefill(&tokens, &plen, &active),
+            )?
+        };
         let v = m.vocab;
         for &idx in &newly {
-            let slot = self.slots[idx].as_mut().unwrap();
+            let slot = self.slots[idx]
+                .as_mut()
+                .expect("newly admitted slot is live");
             let row = &logits[idx * v..(idx + 1) * v];
             let t0 = sampling::sample_logits(row, self.cfg.temperature, &mut self.rng) as i32;
             slot.output.push(t0);
@@ -870,7 +1106,9 @@ impl Engine {
             // Begin the first round, aligned to the slot's bucket.
             self.start_round(idx, true);
             // The sampled first token streams out immediately (TTFT).
-            let slot = self.slots[idx].as_ref().unwrap();
+            let slot = self.slots[idx]
+                .as_ref()
+                .expect("newly admitted slot is live");
             self.slo.ttft_pending.push(slot.req.id);
             if self.tracer.enabled() {
                 self.tracer.instant(
@@ -898,14 +1136,44 @@ impl Engine {
     /// alignment can shorten a first round — Fig. 8) and the remaining
     /// generation budget, then arm the slot.
     fn start_round(&mut self, idx: usize, first: bool) {
-        let (di, mode, bucket, remaining, len, pending, req_id) = {
-            let s = self.slots[idx].as_ref().unwrap();
-            (s.drafter, s.mode, s.bucket, s.remaining(), s.len, s.pending, s.req.id)
+        // Probation bookkeeping: demoted slots decode vanilla rounds until
+        // the window expires, then re-promote back to speculation.
+        let promoted = self.slots[idx]
+            .as_mut()
+            .expect("start_round targets a live slot")
+            .tick_probation();
+        if promoted {
+            self.slot_promotions += 1;
+            if self.tracer.enabled() {
+                let rid = self.slots[idx]
+                    .as_ref()
+                    .expect("slot checked above")
+                    .req
+                    .id;
+                self.tracer.instant(
+                    names::SLOT_PROMOTE,
+                    Track::Drafter,
+                    self.sim_s,
+                    vec![("req", rid.into())],
+                );
+            }
+        }
+        let (di, mode, bucket, remaining, len, pending, req_id, degraded) = {
+            let s = self.slots[idx].as_ref().expect("slot checked above");
+            (
+                s.drafter, s.mode, s.bucket, s.remaining(), s.len, s.pending, s.req.id,
+                s.degraded,
+            )
         };
-        if mode != DraftMode::SelfSpec {
-            // Proposal drafters fill drafts through their batch hook;
-            // no-speculation slots go straight to verification.
-            self.slots[idx].as_mut().unwrap().begin_round(0);
+        if degraded || mode != DraftMode::SelfSpec {
+            // Degraded slots decode vanilla (target 0 → verify q=1, one
+            // bonus token per round); proposal drafters fill drafts
+            // through their batch hook; no-speculation slots go straight
+            // to verification.
+            self.slots[idx]
+                .as_mut()
+                .expect("slot checked above")
+                .begin_round(0);
             return;
         }
         let sched_cap = if first {
@@ -927,9 +1195,35 @@ impl Engine {
             first_round: first,
             ngram: None,
         };
-        let plan = self.drafters[di].plan(&ctx);
-        let target = plan.target.min(sched_cap).min(remaining.max(1));
-        self.slots[idx].as_mut().unwrap().begin_round(target);
+        let plan = if self.injector.check(FaultSite::DrafterPanic) {
+            Err(EngineError::DrafterPanic {
+                drafter: self.drafter_names[di].clone(),
+                hook: "plan",
+                detail: "injected fault".into(),
+            })
+        } else {
+            Self::sandboxed(&self.drafter_names[di], "plan", || {
+                self.drafters[di].plan(&ctx)
+            })
+        };
+        match plan {
+            Ok(plan) => {
+                let target = plan.target.min(sched_cap).min(remaining.max(1));
+                self.slots[idx]
+                    .as_mut()
+                    .expect("slot checked above")
+                    .begin_round(target);
+            }
+            Err(e) => {
+                // A faulting planner costs this slot its speculation, not
+                // the batch: fall back to a vanilla round.
+                self.note_drafter_fault(idx, &e);
+                self.slots[idx]
+                    .as_mut()
+                    .expect("slot checked above")
+                    .begin_round(0);
+            }
+        }
     }
 
     fn try_reloads(&mut self) -> Result<()> {
@@ -955,14 +1249,72 @@ impl Engine {
                     self.kv.host.insert(id, kv);
                 }
             }
+            // Injected host-tier read fault, checked BEFORE `try_reload`
+            // mutates queue/host state: skipping the iteration retries the
+            // same reload naturally later.  A request that keeps faulting
+            // past its patience budget can never come back — tear it down
+            // and fail exactly that session.
+            if let Some(rid) = self.kv.peek_reload() {
+                if self.injector.check(FaultSite::KvReload) {
+                    let io =
+                        EngineError::KvReloadIo { req_id: rid, detail: "injected fault".into() };
+                    self.fault_retries += 1;
+                    if self.tracer.enabled() {
+                        self.tracer.instant(
+                            names::FAULT,
+                            Track::Kv,
+                            self.sim_s,
+                            vec![
+                                ("req", rid.into()),
+                                ("site", FaultSite::KvReload.label().into()),
+                            ],
+                        );
+                    }
+                    let n = {
+                        let n = self.reload_faults.entry(rid).or_insert(0);
+                        *n += 1;
+                        *n
+                    };
+                    if n >= fault::RELOAD_FAULT_BUDGET {
+                        self.reload_faults.remove(&rid);
+                        let err = EngineError::RetriesExhausted {
+                            site: FaultSite::KvReload,
+                            attempts: n,
+                            last: io.to_string(),
+                        };
+                        if let Some(sus) = self.suspended.remove(&rid) {
+                            self.kv.forget(rid);
+                            self.drafter_on_finish(sus.drafter, rid);
+                        } else {
+                            self.kv.forget(rid);
+                        }
+                        self.fail_session(rid, &err);
+                        continue; // the queue head changed; keep reloading
+                    }
+                    return Ok(());
+                }
+                self.reload_faults.remove(&rid);
+            }
             let Some((id, host_kv)) = self.kv.try_reload() else {
                 return Ok(());
             };
             let Some(sus) = self.suspended.remove(&id) else {
                 continue;
             };
-            let idx = self.free_slot().unwrap();
-            self.runner.kv_load(idx, &host_kv.k, &host_kv.v)?;
+            let idx = self
+                .free_slot()
+                .expect("free slot checked at the loop top");
+            {
+                let runner = &mut self.runner;
+                Self::step_with_retry(
+                    &mut self.injector,
+                    &mut self.sim_s,
+                    &mut self.fault_retries,
+                    &mut self.tracer,
+                    "kv_load",
+                    || runner.kv_load(idx, &host_kv.k, &host_kv.v),
+                )?;
+            }
             self.kv.admit(id, sus.len);
             if self.tracer.enabled() {
                 self.tracer.instant(
@@ -1002,10 +1354,18 @@ impl Engine {
                 output: sus.output,
                 admitted_at: sus.admitted_at,
                 sim_admitted_at: sus.sim_admitted_at,
+                faults: 0,
+                zero_accept_rounds: 0,
+                degraded: false,
+                probation: 0,
                 req: sus.req,
             };
             self.slots[idx] = Some(slot);
-            self.drafters[di].on_admit(id, true);
+            if let Err(e) = Self::sandboxed(&self.drafter_names[di], "on_admit", || {
+                self.drafters[di].on_admit(id, true)
+            }) {
+                self.note_drafter_fault(idx, &e);
+            }
             self.start_round(idx, true);
         }
     }
@@ -1034,12 +1394,41 @@ impl Engine {
             match act {
                 PressureAction::Offload { req_id } => {
                     let Some(idx) = self.slot_of(req_id) else { continue };
-                    if pool.is_none() {
-                        pool = Some(self.runner.kv_dump()?);
+                    if self.injector.check(FaultSite::KvOffload) {
+                        // Injected offload-write fault: keep the victim
+                        // resident this iteration (no state has moved
+                        // yet); pressure re-fires on a later step, which
+                        // is the natural retry.
+                        self.fault_retries += 1;
+                        if self.tracer.enabled() {
+                            self.tracer.instant(
+                                names::FAULT,
+                                Track::Kv,
+                                self.sim_s,
+                                vec![
+                                    ("req", req_id.into()),
+                                    ("site", FaultSite::KvOffload.label().into()),
+                                ],
+                            );
+                        }
+                        continue;
                     }
-                    let (ref pk, ref pv) = pool.as_ref().unwrap();
+                    if pool.is_none() {
+                        let runner = &mut self.runner;
+                        pool = Some(Self::step_with_retry(
+                            &mut self.injector,
+                            &mut self.sim_s,
+                            &mut self.fault_retries,
+                            &mut self.tracer,
+                            "kv_dump",
+                            || runner.kv_dump(),
+                        )?);
+                    }
+                    let (ref pk, ref pv) = pool.as_ref().expect("pool dumped above");
                     let (rows_k, rows_v) = self.extract_slot_rows(pk, pv, idx);
-                    let slot = self.slots[idx].take().unwrap();
+                    let slot = self.slots[idx]
+                        .take()
+                        .expect("slot_of returned a live slot index");
                     self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
                     let len = slot.len;
                     let bytes = (rows_k.len() + rows_v.len()) * 4;
@@ -1081,7 +1470,9 @@ impl Engine {
                 }
                 PressureAction::Preempt { req_id } => {
                     let Some(idx) = self.slot_of(req_id) else { continue };
-                    let slot = self.slots[idx].take().unwrap();
+                    let slot = self.slots[idx]
+                        .take()
+                        .expect("slot_of returned a live slot index");
                     self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
                     self.kv.complete_preempt(req_id);
                     // Restart from scratch (greedy decode regenerates the
@@ -1166,7 +1557,7 @@ impl Engine {
             let per_slot = m.layers * m.kv_heads * w;
             let mut sel_s = 0.0;
             for &i in participating {
-                let slot = self.slots[i].as_ref().unwrap();
+                let slot = self.slots[i].as_ref().expect("grouped above from live slots");
                 token[i] = slot.pending;
                 pos[i] = slot.len as i32;
                 // Compose straight into the flattened index buffer — no
@@ -1184,7 +1575,18 @@ impl Engine {
             comp.attn_bytes += participating.len() * w * m.kv_bytes_per_token();
             *cpu_s += t_cpu.elapsed().as_secs_f64();
 
-            let out = self.runner.draft(w, &token, &pos, &idxs, &active)?;
+            let out = {
+                let runner = &mut self.runner;
+                let artifact = format!("draft_w{w}");
+                Self::step_with_retry(
+                    &mut self.injector,
+                    &mut self.sim_s,
+                    &mut self.fault_retries,
+                    &mut self.tracer,
+                    &artifact,
+                    || runner.draft(w, &token, &pos, &idxs, &active),
+                )?
+            };
             launches += 1;
 
             let t_cpu = Instant::now();
@@ -1192,7 +1594,7 @@ impl Engine {
             let temp = self.cfg.temperature;
             for &i in participating {
                 let row = out.logits[i * v..(i + 1) * v].to_vec();
-                let slot = self.slots[i].as_mut().unwrap();
+                let slot = self.slots[i].as_mut().expect("grouped above from live slots");
                 let d = sampling::sample_logits(&row, temp, &mut self.rng) as i32;
                 slot.drafts.push(d);
                 if temp > 0.0 {
@@ -1244,7 +1646,19 @@ impl Engine {
                 cpu_s: &mut *cpu_s,
                 pool: &self.pool,
             };
-            launches += self.drafters[di].after_draft(&mut host, &mut self.slots, &idxs)?;
+            let res = Self::sandboxed(&self.drafter_names[di], "after_draft", || {
+                self.drafters[di].after_draft(&mut host, &mut self.slots, &idxs)
+            });
+            match res {
+                // Real runner errors inside the hook keep propagating —
+                // only panics are absorbed into the degrade path.
+                Ok(r) => launches += r?,
+                Err(e) => {
+                    for &i in &idxs {
+                        self.note_drafter_fault(i, &e);
+                    }
+                }
+            }
         }
         Ok(launches)
     }
@@ -1271,6 +1685,7 @@ impl Engine {
                             s.drafter == di
                                 && s.phase == Phase::ReadyVerify
                                 && s.drafts.is_empty()
+                                && !s.degraded // demoted slots verify q=1
                         })
                         .unwrap_or(false)
                 })
@@ -1279,18 +1694,58 @@ impl Engine {
                 continue;
             }
             self.tracer.begin(names::PROPOSE, Track::Engine, self.sim_s);
-            let mut host = DraftHost {
-                runner: &mut self.runner,
-                m: &m,
-                k: self.cfg.k,
-                temperature: self.cfg.temperature,
-                eagle_ctx,
-                rng: &mut self.rng,
-                comp: &mut *comp,
-                cpu_s: &mut *cpu_s,
-                pool: &self.pool,
+            let res = if self.injector.check(FaultSite::DrafterPanic) {
+                Err(EngineError::DrafterPanic {
+                    drafter: self.drafter_names[di].clone(),
+                    hook: "propose_batch",
+                    detail: "injected fault".into(),
+                })
+            } else {
+                let mut host = DraftHost {
+                    runner: &mut self.runner,
+                    m: &m,
+                    k: self.cfg.k,
+                    temperature: self.cfg.temperature,
+                    eagle_ctx,
+                    rng: &mut self.rng,
+                    comp: &mut *comp,
+                    cpu_s: &mut *cpu_s,
+                    pool: &self.pool,
+                };
+                Self::sandboxed(&self.drafter_names[di], "propose_batch", || {
+                    self.drafters[di].propose_batch(&mut host, &mut self.slots, &idxs)
+                })
             };
-            launches += self.drafters[di].propose_batch(&mut host, &mut self.slots, &idxs)?;
+            match res {
+                // Real runner errors inside the hook keep propagating.
+                Ok(r) => launches += r?,
+                Err(e) => {
+                    // The whole batch loses its proposals (the faulting
+                    // drafter owns every one of these slots); each slot
+                    // verifies as a vanilla round instead.
+                    for &i in &idxs {
+                        if let Some(slot) = self.slots[i].as_mut() {
+                            slot.drafts.clear();
+                            slot.draft_probs.clear();
+                        }
+                        self.note_drafter_fault(i, &e);
+                    }
+                }
+            }
+            // Injected malformed batch: corrupt one slot's proposals so
+            // the validation below is exercised end-to-end.
+            if self.injector.check(FaultSite::DrafterMalformed) {
+                if let Some(slot) = idxs.first().and_then(|&i| self.slots[i].as_mut()) {
+                    slot.drafts.push(m.vocab as i32); // out-of-vocab token
+                    let grown = slot.draft_probs.len() + m.vocab;
+                    slot.draft_probs.resize(grown, 0.0);
+                }
+            }
+            // Defensive shape validation: sandboxing catches panics, but a
+            // *returned* bad batch (token ids outside the vocab, more
+            // drafts than k, inconsistent prob rows) would corrupt the
+            // shared verify launch.  Never feed one to the verifier.
+            self.validate_proposals(di, &idxs, m.vocab);
             if self.tracer.hot() {
                 let dname = self.drafter_names[di].clone();
                 self.tracer.end(
@@ -1302,6 +1757,43 @@ impl Engine {
             }
         }
         Ok(launches)
+    }
+
+    /// Shape-validate the proposal batch a drafter just produced: at most
+    /// `k` drafts, every token id inside the vocab, prob rows consistent
+    /// with the draft count.  A malformed slot loses its proposals (it
+    /// verifies as a vanilla round) and counts a drafter fault toward
+    /// demotion — the engine never feeds a bad token id to the verifier.
+    fn validate_proposals(&mut self, di: usize, idxs: &[usize], vocab: usize) {
+        let k = self.cfg.k;
+        for &i in idxs {
+            let bad = {
+                let Some(slot) = self.slots[i].as_ref() else { continue };
+                let over_len = slot.drafts.len() > k;
+                let oov = slot.drafts.iter().any(|&t| t < 0 || t as usize >= vocab);
+                let probs_bad = slot.draft_probs.len() != slot.drafts.len() * vocab;
+                if over_len || oov || probs_bad {
+                    Some(format!(
+                        "{} drafts (k={k}), out_of_vocab={oov}, {} prob rows",
+                        slot.drafts.len(),
+                        slot.draft_probs.len() / vocab.max(1),
+                    ))
+                } else {
+                    None
+                }
+            };
+            if let Some(detail) = bad {
+                let err = EngineError::MalformedProposal {
+                    drafter: self.drafter_names[di].clone(),
+                    detail,
+                };
+                if let Some(slot) = self.slots[i].as_mut() {
+                    slot.drafts.clear();
+                    slot.draft_probs.clear();
+                }
+                self.note_drafter_fault(i, &err);
+            }
+        }
     }
 
     /// Dense verification for all ReadyVerify slots — one launch serves
@@ -1335,14 +1827,25 @@ impl Engine {
         self.tracer.begin(names::VERIFY, Track::Engine, self.sim_s);
         comp.verifying = participating.len();
         for &i in &participating {
-            let slot = self.slots[i].as_ref().unwrap();
+            let slot = self.slots[i].as_ref().expect("collected above from live slots");
             comp.gemm_rows += 1 + slot.drafts.len();
             comp.attn_bytes +=
                 (slot.round_start_len + 1 + slot.drafts.len()) * m.kv_bytes_per_token();
         }
         *cpu_s += t_cpu.elapsed().as_secs_f64();
 
-        let out = self.runner.verify(q, &tokens, &pos, &qv, &active)?;
+        let out = {
+            let runner = &mut self.runner;
+            let artifact = format!("verify_q{q}");
+            Self::step_with_retry(
+                &mut self.injector,
+                &mut self.sim_s,
+                &mut self.fault_retries,
+                &mut self.tracer,
+                &artifact,
+                || runner.verify(q, &tokens, &pos, &qv, &active),
+            )?
+        };
 
         // Process: acceptance + pillar refresh.  In delayed mode the CPU
         // part runs on the worker pool and is consumed next iteration.
@@ -1353,7 +1856,7 @@ impl Engine {
 
         let mut inline: Vec<Promise<VerifyWork>> = Vec::new();
         for &i in &participating {
-            let slot = self.slots[i].as_ref().unwrap();
+            let slot = self.slots[i].as_ref().expect("collected above from live slots");
             let drafts = slot.drafts.clone();
             let dprobs = slot.draft_probs.clone();
             let logits = out.logits[i * q * v..(i + 1) * q * v].to_vec();
@@ -1394,7 +1897,10 @@ impl Engine {
                 }
             };
             if self.cfg.delayed_verify {
-                self.slots[i].as_mut().unwrap().phase = Phase::AwaitVerify;
+                self.slots[i]
+                    .as_mut()
+                    .expect("collected above from live slots")
+                    .phase = Phase::AwaitVerify;
                 self.delayed.push(Promise::spawn_on(&self.pool, job));
             } else {
                 // Immediate mode still fans the per-slot acceptance +
@@ -1452,6 +1958,24 @@ impl Engine {
         let mut boundary = Vec::new();
         let mut stall = 0.0;
         let mut sel = 0.0;
+        if self.injector.check(FaultSite::VerifyStall) {
+            // Injected CPU-side stall: the delayed acceptance work took
+            // longer than the overlap window.  The overshoot is charged as
+            // stall time and absorbed — nothing else changes.
+            let extra = 4.0 * fault::STEP_BACKOFF_BASE_S;
+            stall += extra;
+            if self.tracer.enabled() {
+                self.tracer.instant(
+                    names::FAULT,
+                    Track::Engine,
+                    self.sim_s,
+                    vec![
+                        ("site", FaultSite::VerifyStall.label().into()),
+                        ("stall_us", (extra * 1e6).into()),
+                    ],
+                );
+            }
+        }
         for p in promises {
             let t0 = Instant::now();
             let w = p.get(); // usually already done: ran during GPU work
@@ -1487,6 +2011,11 @@ impl Engine {
         let drafted = slot.drafts.len();
         self.accept.record(drafted, w.accepted);
         self.accept_by[di].record(drafted, w.accepted);
+        // Acceptance-collapse tracking: a slot that keeps speculating
+        // without ever landing a draft token wastes every verify round —
+        // past the window it demotes to vanilla decoding (handled below,
+        // once the slot borrow ends).
+        let collapse = slot.note_round_accept(w.accepted, drafted > 0);
         let old_len = slot.len;
         let new_len = slot.round_start_len + w.accepted + 1;
 
@@ -1515,16 +2044,27 @@ impl Engine {
         } else {
             self.kv.shrink(id, old_len - new_len);
         }
+        if collapse {
+            if let Some(s) = self.slots[w.slot_idx].as_mut() {
+                s.demote();
+            }
+            self.note_degradation(id, "acceptance_collapse");
+        }
         // Close the feedback loop: the drafter steers its next plan from
         // this round's acceptance (AdaptiveK lives on exactly this hook).
-        self.drafters[di].on_verify(&VerifyFeedback {
+        let fb = VerifyFeedback {
             req_id: id,
             slot_idx: w.slot_idx,
             drafted,
             accepted: w.accepted,
             bonus_token: w.next_token,
             context_len: new_len,
-        });
+        };
+        if let Err(e) = Self::sandboxed(&self.drafter_names[di], "on_verify", || {
+            self.drafters[di].on_verify(&fb)
+        }) {
+            self.note_drafter_fault(w.slot_idx, &e);
+        }
         if self.tracer.enabled() {
             // AdaptiveK (or any feedback-adaptive wrapper) may have just
             // moved this session's speculation length.
@@ -1544,7 +2084,9 @@ impl Engine {
         Self::notify_session(
             &self.sessions,
             &mut self.stamp_pending,
-            self.slots[w.slot_idx].as_ref().unwrap(),
+            self.slots[w.slot_idx]
+                .as_ref()
+                .expect("verified slot is live (checked at entry)"),
             Some(w.accepted),
         );
         Ok(())
@@ -1556,10 +2098,12 @@ impl Engine {
         for &i in indices {
             let Some(slot) = self.slots[i].as_ref() else { continue };
             if slot.done() {
-                let slot = self.slots[i].take().unwrap();
+                let slot = self.slots[i]
+                    .take()
+                    .expect("done() was just read from this slot");
                 self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
                 self.kv.release(slot.req.id);
-                self.drafters[slot.drafter].on_finish(slot.req.id);
+                self.drafter_on_finish(slot.drafter, slot.req.id);
                 let mut out = slot.output;
                 out.truncate(slot.req.max_new);
                 self.outputs.insert(slot.req.id, out);

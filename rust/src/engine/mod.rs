@@ -101,6 +101,10 @@ pub struct EngineConfig {
     /// TTFT target (simulated seconds) for the SLO section of the report:
     /// goodput counts only completions whose first token beat this.
     pub ttft_slo_s: f64,
+    /// Deterministic fault injection (chaos testing; see [`crate::fault`]).
+    /// Disabled by default: an empty plan costs one branch per check site
+    /// and leaves outputs bit-identical (CI-gated by `fault_overhead`).
+    pub fault: crate::fault::FaultConfig,
 }
 
 impl EngineConfig {
@@ -121,6 +125,7 @@ impl EngineConfig {
             adaptive_k: false,
             trace: crate::trace::TraceConfig::default(),
             ttft_slo_s: 1.0,
+            fault: crate::fault::FaultConfig::default(),
         }
     }
 
@@ -145,6 +150,11 @@ impl EngineConfig {
     pub fn with_kv(mut self, policy: KvPolicy, budget: usize) -> Self {
         self.kv_policy = policy;
         self.kv_budget = budget;
+        self
+    }
+
+    pub fn with_faults(mut self, f: crate::fault::FaultConfig) -> Self {
+        self.fault = f;
         self
     }
 }
@@ -239,6 +249,14 @@ impl EngineConfigBuilder {
     /// (`RunReport::slo`).  Goodput counts completions under this target.
     pub fn ttft_slo(mut self, s: f64) -> Self {
         self.cfg.ttft_slo_s = s;
+        self
+    }
+
+    /// Deterministic fault injection for chaos testing (see
+    /// [`crate::fault`] for the plan grammar and the degradation story).
+    /// CLI: `--fault-plan "runtime:0.01,kv_reload:0.05" --fault-seed 42`.
+    pub fn faults(mut self, f: crate::fault::FaultConfig) -> Self {
+        self.cfg.fault = f;
         self
     }
 
@@ -379,6 +397,18 @@ pub struct RunReport {
     pub requests_cancelled: usize,
     /// Submissions rejected at resolve time (invalid per-session drafter).
     pub requests_rejected: usize,
+    /// Sessions poisoned by a fatal fault (`FinishReason::Failed`).
+    /// Blast radius is per-session: co-batched outputs are unaffected.
+    pub requests_failed: usize,
+    /// Faults the injector actually fired (0 when disabled).
+    pub faults_injected: u64,
+    /// Transient-fault retries (runtime backoff + skipped KV actions).
+    pub fault_retries: u64,
+    /// Slots demoted to vanilla (k=1) decoding after repeated drafter
+    /// faults or acceptance collapse.
+    pub slot_degradations: u64,
+    /// Demoted slots re-promoted to speculation after probation.
+    pub slot_promotions: u64,
     pub tokens_generated: u64,
     pub accept: AcceptStats,
     /// Acceptance accounting broken down by drafter name — one entry per
@@ -410,7 +440,8 @@ impl RunReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{:<14} reqs={:<4} canc={:<3} rej={:<3} toks={:<6} iters={:<5} \
+            "{:<14} reqs={:<4} canc={:<3} rej={:<3} fail={:<3} degr={:<3} \
+             toks={:<6} iters={:<5} \
              wall={:>7.2}s ({:>7.1} tok/s) \
              sim={:>7.3}s ({:>8.1} tok/s) acc/rnd={:>5.2} α={:>4.2} kv_util={:>4.2} \
              offl={} recomp={}",
@@ -418,6 +449,8 @@ impl RunReport {
             self.requests_done,
             self.requests_cancelled,
             self.requests_rejected,
+            self.requests_failed,
+            self.slot_degradations,
             self.tokens_generated,
             self.iterations,
             self.wall_s,
@@ -442,6 +475,11 @@ impl RunReport {
         r.inc("requests_done", none, self.requests_done as f64);
         r.inc("requests_cancelled", none, self.requests_cancelled as f64);
         r.inc("requests_rejected", none, self.requests_rejected as f64);
+        r.inc("requests_failed", none, self.requests_failed as f64);
+        r.inc("faults_injected", none, self.faults_injected as f64);
+        r.inc("fault_retries", none, self.fault_retries as f64);
+        r.inc("slot_degradations", none, self.slot_degradations as f64);
+        r.inc("slot_promotions", none, self.slot_promotions as f64);
         r.inc("tokens_generated", none, self.tokens_generated as f64);
         r.inc("iterations", none, self.iterations as f64);
         r.inc("kv_offload_events", none, self.kv.offload_events as f64);
@@ -465,7 +503,8 @@ impl RunReport {
 
     /// Deterministic markdown: counters sorted, then the SLO section, then
     /// per-drafter acceptance — every surface includes
-    /// `requests_cancelled`/`requests_rejected`.
+    /// `requests_cancelled`/`requests_rejected`/`requests_failed` and the
+    /// degradation counts.
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("## run: {}\n\n", self.name));

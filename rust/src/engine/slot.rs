@@ -68,6 +68,17 @@ pub struct Slot {
     pub admitted_at: std::time::Instant,
     /// Simulated-clock admission time.
     pub sim_admitted_at: f64,
+    /// Consecutive drafter faults (panic / malformed proposal) since the
+    /// last clean round — reaching `fault::DEGRADE_FAULT_THRESHOLD`
+    /// demotes the slot to vanilla decoding.
+    pub faults: u32,
+    /// Consecutive zero-accept speculation rounds (acceptance collapse).
+    pub zero_accept_rounds: u32,
+    /// Demoted to vanilla (k=1, non-speculative) decoding: the slot
+    /// drafts nothing and takes one bonus token per verify round.
+    pub degraded: bool,
+    /// Remaining vanilla rounds before re-promotion back to speculation.
+    pub probation: u32,
 }
 
 impl Slot {
@@ -84,6 +95,54 @@ impl Slot {
         let mut v = self.req.prompt.clone();
         v.extend_from_slice(&self.output);
         v
+    }
+
+    /// Record a drafter fault (panic / malformed proposal).  Returns true
+    /// when the slot has crossed the demotion threshold.
+    pub fn note_fault(&mut self) -> bool {
+        self.faults += 1;
+        !self.degraded && self.faults >= crate::fault::DEGRADE_FAULT_THRESHOLD
+    }
+
+    /// Record a finished speculation round's acceptance.  `speculated` is
+    /// whether the round actually carried drafts (vanilla rounds don't
+    /// count toward collapse).  Returns true when acceptance collapse
+    /// says the slot should demote.
+    pub fn note_round_accept(&mut self, accepted: usize, speculated: bool) -> bool {
+        if !speculated || self.degraded {
+            return false;
+        }
+        if accepted == 0 {
+            self.zero_accept_rounds += 1;
+        } else {
+            self.zero_accept_rounds = 0;
+            self.faults = 0; // a productive round clears fault pressure
+        }
+        self.zero_accept_rounds >= crate::fault::DEGRADE_ACCEPT_WINDOW
+    }
+
+    /// Demote to vanilla decoding for a probation window.
+    pub fn demote(&mut self) {
+        self.degraded = true;
+        self.probation = crate::fault::PROBATION_ROUNDS;
+        self.faults = 0;
+        self.zero_accept_rounds = 0;
+    }
+
+    /// Tick the probation window at round start; returns true exactly
+    /// when the slot re-promotes back to speculation.
+    pub fn tick_probation(&mut self) -> bool {
+        if !self.degraded {
+            return false;
+        }
+        if self.probation <= 1 {
+            self.degraded = false;
+            self.probation = 0;
+            true
+        } else {
+            self.probation -= 1;
+            false
+        }
     }
 
     /// Start a fresh speculation round.

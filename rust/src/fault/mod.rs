@@ -1,0 +1,598 @@
+//! Fault injection and the typed engine-error taxonomy.
+//!
+//! The engine's robustness contract (see ISSUE 7 / EXPERIMENTS.md
+//! §Robustness) is that speculation is a *pure accelerator*: any fault on
+//! the speculation side degrades the affected slot to vanilla (k=1,
+//! non-speculative) decoding and the session still finishes `Completed`;
+//! only exhausted-retry I/O faults poison a session (`FinishReason::
+//! Failed`), and even then co-batched sessions' outputs stay bit-identical
+//! to a fault-free run.
+//!
+//! This module provides the two pieces that contract is built on:
+//!
+//! * [`FaultInjector`] — a deterministic, seed-driven chaos source.  Each
+//!   injection site keeps its own check counter and decides "fault here?"
+//!   by hashing `(seed, site, counter)` with a splitmix64 finaliser and
+//!   comparing against `rate · 2⁶⁴`.  The decision stream is a pure
+//!   function of the seed and the per-site check index: it never touches
+//!   the engine's sampling RNG (so enabling the injector cannot perturb
+//!   generated tokens), replays identically for the same seed, and is
+//!   cheap enough that the disabled path is a single branch.
+//!   `python/tests/test_fault_port.py` pins the exact schedule.
+//!
+//! * [`EngineError`] — the typed taxonomy replacing panics on fallible
+//!   paths.  [`EngineError::class`] splits errors into
+//!   [`ErrorClass::Transient`] (bounded retry + exponential backoff on the
+//!   sim clock) and [`ErrorClass::Fatal`] (isolate: degrade the slot or
+//!   fail the session, never the batch).
+//!
+//! # Inject your own fault / handle an `EngineError`
+//!
+//! ```
+//! use sparsespec::fault::{
+//!     EngineError, ErrorClass, FaultConfig, FaultInjector, FaultPlan, FaultSite,
+//! };
+//!
+//! // A fault plan is `site:rate` pairs — the same string the CLI takes
+//! // via `--fault-plan` (with `--fault-seed` choosing the schedule).
+//! let plan = FaultPlan::parse("runtime:0.25,kv_reload:1.0")?;
+//! let cfg = FaultConfig { plan, seed: 7 };
+//!
+//! // Deterministic: two injectors with the same config agree exactly.
+//! let mut a = FaultInjector::new(&cfg);
+//! let mut b = FaultInjector::new(&cfg);
+//! let fire_a: Vec<bool> = (0..64).map(|_| a.check(FaultSite::RuntimeStep)).collect();
+//! let fire_b: Vec<bool> = (0..64).map(|_| b.check(FaultSite::RuntimeStep)).collect();
+//! assert_eq!(fire_a, fire_b);
+//! assert!(b.check(FaultSite::KvReload), "rate 1.0 always fires");
+//!
+//! // The taxonomy tells callers how to react: transient errors are
+//! // retried with backoff, fatal ones isolate the slot/session.
+//! let io = EngineError::KvReloadIo { req_id: 3, detail: "injected".into() };
+//! assert_eq!(io.class(), ErrorClass::Transient);
+//! let poison = EngineError::DrafterPanic {
+//!     drafter: "my_plugin".into(),
+//!     hook: "plan",
+//!     detail: "index out of bounds".into(),
+//! };
+//! assert!(poison.class() == ErrorClass::Fatal && poison.is_fatal());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! To exercise the whole stack end-to-end, pass the config through the
+//! engine builder: `EngineConfig::builder(..).faults(cfg).build(&m)?` —
+//! every injected fault, retry, degradation and recovery then shows up as
+//! `fault`/`fault_retry`/`slot_degrade`/`slot_promote` trace events and
+//! `faults_injected`/`fault_retries`/... counters in the
+//! [`MetricsRegistry`](crate::metrics::MetricsRegistry).
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// Retry / degradation policy knobs (engine defaults; pinned by the twin)
+// ---------------------------------------------------------------------------
+
+/// Max attempts for one logical runtime step before giving up (1 initial
+/// try + `MAX_STEP_RETRIES - 1` retries).
+pub const MAX_STEP_RETRIES: u32 = 4;
+/// First backoff charged to the **sim clock** after a transient runtime
+/// fault; doubles per retry (0.5ms, 1ms, 2ms, ...).
+pub const STEP_BACKOFF_BASE_S: f64 = 5e-4;
+/// Consecutive reload faults tolerated per suspended request before the
+/// session is declared `Failed` (each skipped reload retries naturally on
+/// a later iteration, so this is a patience budget, not a tight loop).
+pub const RELOAD_FAULT_BUDGET: u32 = 8;
+/// Consecutive drafter faults (panic / malformed proposal) before the
+/// slot is demoted to vanilla decoding.
+pub const DEGRADE_FAULT_THRESHOLD: u32 = 2;
+/// Consecutive zero-accept speculation rounds before the slot is demoted
+/// (acceptance collapse: speculation is pure waste at α≈0).
+pub const DEGRADE_ACCEPT_WINDOW: u32 = 8;
+/// Rounds a demoted slot spends in vanilla decoding before it is
+/// re-promoted and allowed to speculate again.
+pub const PROBATION_ROUNDS: u32 = 16;
+
+/// Sim-clock backoff before retry number `attempt` (0-based), doubling
+/// from [`STEP_BACKOFF_BASE_S`].
+pub fn backoff_s(attempt: u32) -> f64 {
+    STEP_BACKOFF_BASE_S * f64::from(1u32 << attempt.min(16))
+}
+
+// ---------------------------------------------------------------------------
+// Fault sites + plan
+// ---------------------------------------------------------------------------
+
+/// Where in the engine a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// A runtime step function (prefill/draft/verify/kv_load) fails.
+    RuntimeStep,
+    /// The async KV offload write errors (host-tier I/O).
+    KvOffload,
+    /// Reading a suspended request's KV back errors (host-tier I/O).
+    KvReload,
+    /// A delayed-verification promise stalls (extra sim latency).
+    VerifyStall,
+    /// A drafter lifecycle hook panics.
+    DrafterPanic,
+    /// A drafter returns a malformed proposal batch.
+    DrafterMalformed,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::RuntimeStep,
+        FaultSite::KvOffload,
+        FaultSite::KvReload,
+        FaultSite::VerifyStall,
+        FaultSite::DrafterPanic,
+        FaultSite::DrafterMalformed,
+    ];
+
+    /// The spec-string / metrics-label name of this site.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::RuntimeStep => "runtime",
+            FaultSite::KvOffload => "kv_offload",
+            FaultSite::KvReload => "kv_reload",
+            FaultSite::VerifyStall => "verify_stall",
+            FaultSite::DrafterPanic => "drafter_panic",
+            FaultSite::DrafterMalformed => "drafter_malformed",
+        }
+    }
+
+    /// Parse a spec-string site name (the inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|site| site.label() == s)
+    }
+
+    /// Per-site hash salt so each site draws an independent decision
+    /// stream from the same seed (values are ASCII tags, pinned by the
+    /// Python twin — do not change without updating it).
+    fn salt(self) -> u64 {
+        match self {
+            FaultSite::RuntimeStep => 0x52554E54494D4531,
+            FaultSite::KvOffload => 0x4B564F46464C4431,
+            FaultSite::KvReload => 0x4B5652454C4F4431,
+            FaultSite::VerifyStall => 0x565354414C4C3031,
+            FaultSite::DrafterPanic => 0x4450414E49433031,
+            FaultSite::DrafterMalformed => 0x444D414C46524D31,
+        }
+    }
+}
+
+/// Per-site fault rates in `[0, 1]`.  `Default` is all-zero (no faults).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    rates: [f64; 6],
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `site:rate[,site:rate...]` spec, e.g.
+    /// `"runtime:0.01,kv_reload:0.05"`.  Sites: `runtime`, `kv_offload`,
+    /// `kv_reload`, `verify_stall`, `drafter_panic`, `drafter_malformed`.
+    /// An empty string is the empty (disabled) plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((site, rate)) = part.split_once(':') else {
+                bail!("fault plan entry `{part}` is not `site:rate`");
+            };
+            let Some(site) = FaultSite::parse(site.trim()) else {
+                bail!(
+                    "unknown fault site `{}` (expected one of: {})",
+                    site.trim(),
+                    FaultSite::ALL.map(|s| s.label()).join(", ")
+                );
+            };
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault rate `{}` is not a number", rate.trim()))?;
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault rate {rate} for `{}` outside [0, 1]", site.label());
+            }
+            plan.rates[site as usize] = rate;
+        }
+        Ok(plan)
+    }
+
+    /// Builder-style single-site rate.
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> Self {
+        self.rates[site as usize] = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn rate(&self, site: FaultSite) -> f64 {
+        self.rates[site as usize]
+    }
+
+    /// True when every rate is zero (the injector compiles to one branch).
+    pub fn is_empty(&self) -> bool {
+        self.rates.iter().all(|&r| r == 0.0)
+    }
+
+    /// Canonical spec string (round-trips through [`Self::parse`]).
+    pub fn to_spec(&self) -> String {
+        FaultSite::ALL
+            .iter()
+            .filter(|s| self.rates[**s as usize] > 0.0)
+            .map(|s| format!("{}:{}", s.label(), self.rates[*s as usize]))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Engine-facing fault configuration: a plan plus the schedule seed.
+/// `Default` is disabled (empty plan).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    pub plan: FaultPlan,
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// Disabled config (no faults; zero overhead on the engine path).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn new(plan: FaultPlan, seed: u64) -> Self {
+        Self { plan, seed }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic injector
+// ---------------------------------------------------------------------------
+
+/// splitmix64 finaliser — the injector's entire source of randomness.
+/// Mirrored bit-for-bit in `python/tests/test_fault_port.py`.
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic, seed-driven fault source.  See the module docs for the
+/// decision function; per-site `checks`/`fired` counters are exposed for
+/// reporting.  The injector deliberately owns no engine state and no RNG:
+/// with the plan empty, [`FaultInjector::check`] is a single branch and
+/// the engine's behaviour is bit-identical to not having an injector at
+/// all (CI-gated by the `fault_overhead` bench).
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    enabled: bool,
+    seed: u64,
+    /// `rate · 2⁶⁴` per site, as u128 so rate=1.0 is exactly "always".
+    thresholds: [u128; 6],
+    checks: [u64; 6],
+    fired: [u64; 6],
+}
+
+impl FaultInjector {
+    /// Injector that never fires (the production default).
+    pub fn disabled() -> Self {
+        Self::new(&FaultConfig::off())
+    }
+
+    pub fn new(cfg: &FaultConfig) -> Self {
+        let mut thresholds = [0u128; 6];
+        for site in FaultSite::ALL {
+            let rate = cfg.plan.rate(site).clamp(0.0, 1.0);
+            // exact at the endpoints: 0 → never, 1 → 2^64 (always).
+            thresholds[site as usize] = (rate * 18_446_744_073_709_551_616.0) as u128;
+        }
+        FaultInjector {
+            enabled: !cfg.plan.is_empty(),
+            seed: cfg.seed,
+            thresholds,
+            checks: [0; 6],
+            fired: [0; 6],
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Should a fault fire at this site, at this site's next check index?
+    /// Advances the per-site counter only when enabled, so a disabled
+    /// injector is stateless and free.
+    #[inline]
+    pub fn check(&mut self, site: FaultSite) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let i = site as usize;
+        let n = self.checks[i];
+        self.checks[i] += 1;
+        if self.thresholds[i] == 0 {
+            return false;
+        }
+        let h = mix64(self.seed ^ site.salt() ^ n.wrapping_mul(0x9E3779B97F4A7C15));
+        let hit = (h as u128) < self.thresholds[i];
+        if hit {
+            self.fired[i] += 1;
+        }
+        hit
+    }
+
+    /// How many times [`Self::check`] was called for `site`.
+    pub fn checks(&self, site: FaultSite) -> u64 {
+        self.checks[site as usize]
+    }
+
+    /// How many checks fired for `site`.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site as usize]
+    }
+
+    /// Total faults fired across all sites.
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed error taxonomy
+// ---------------------------------------------------------------------------
+
+/// How a caller should react to an [`EngineError`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Retry with bounded exponential backoff on the sim clock.
+    Transient,
+    /// Do not retry: isolate (degrade the slot / fail the session).
+    Fatal,
+}
+
+/// The typed error taxonomy for fallible engine paths.  Carried inside
+/// `anyhow::Error` across existing `Result` plumbing (downcast to react),
+/// so no new dependency is needed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// A runtime step function (prefill/draft/verify/kv_load) failed.
+    RuntimeStep { artifact: String, detail: String },
+    /// The async host-tier offload write failed.
+    KvOffloadIo { req_id: u64, detail: String },
+    /// Reading a suspended request's host-tier KV back failed.
+    KvReloadIo { req_id: u64, detail: String },
+    /// A delayed-verification promise stalled past its deadline.
+    VerifyStall { detail: String },
+    /// A drafter lifecycle hook panicked (caught at the sandbox boundary).
+    DrafterPanic { drafter: String, hook: &'static str, detail: String },
+    /// A drafter returned a shape-invalid proposal batch.
+    MalformedProposal { drafter: String, detail: String },
+    /// A transient fault persisted past its retry budget.
+    RetriesExhausted { site: FaultSite, attempts: u32, last: String },
+    /// An internal invariant was violated (always a bug).
+    Internal { detail: String },
+}
+
+impl EngineError {
+    /// Transient-vs-fatal classification table (pinned by
+    /// `python/tests/test_fault_port.py` — update both together).
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            EngineError::RuntimeStep { .. } => ErrorClass::Transient,
+            EngineError::KvOffloadIo { .. } => ErrorClass::Transient,
+            EngineError::KvReloadIo { .. } => ErrorClass::Transient,
+            EngineError::VerifyStall { .. } => ErrorClass::Transient,
+            EngineError::DrafterPanic { .. } => ErrorClass::Fatal,
+            EngineError::MalformedProposal { .. } => ErrorClass::Fatal,
+            EngineError::RetriesExhausted { .. } => ErrorClass::Fatal,
+            EngineError::Internal { .. } => ErrorClass::Fatal,
+        }
+    }
+
+    pub fn is_transient(&self) -> bool {
+        self.class() == ErrorClass::Transient
+    }
+
+    pub fn is_fatal(&self) -> bool {
+        self.class() == ErrorClass::Fatal
+    }
+
+    /// Stable metrics-label name for this error kind.
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            EngineError::RuntimeStep { .. } => "runtime_step",
+            EngineError::KvOffloadIo { .. } => "kv_offload_io",
+            EngineError::KvReloadIo { .. } => "kv_reload_io",
+            EngineError::VerifyStall { .. } => "verify_stall",
+            EngineError::DrafterPanic { .. } => "drafter_panic",
+            EngineError::MalformedProposal { .. } => "malformed_proposal",
+            EngineError::RetriesExhausted { .. } => "retries_exhausted",
+            EngineError::Internal { .. } => "internal",
+        }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::RuntimeStep { artifact, detail } => {
+                write!(f, "runtime step `{artifact}` failed: {detail}")
+            }
+            EngineError::KvOffloadIo { req_id, detail } => {
+                write!(f, "kv offload I/O error for request {req_id}: {detail}")
+            }
+            EngineError::KvReloadIo { req_id, detail } => {
+                write!(f, "kv reload I/O error for request {req_id}: {detail}")
+            }
+            EngineError::VerifyStall { detail } => write!(f, "delayed verify stalled: {detail}"),
+            EngineError::DrafterPanic { drafter, hook, detail } => {
+                write!(f, "drafter `{drafter}` panicked in `{hook}`: {detail}")
+            }
+            EngineError::MalformedProposal { drafter, detail } => {
+                write!(f, "drafter `{drafter}` produced a malformed proposal: {detail}")
+            }
+            EngineError::RetriesExhausted { site, attempts, last } => write!(
+                f,
+                "{} fault persisted after {attempts} attempts (last: {last})",
+                site.label()
+            ),
+            EngineError::Internal { detail } => write!(f, "internal invariant violated: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Render a caught panic payload into a readable detail string (the
+/// sandbox boundary around drafter hooks uses this).
+pub fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_roundtrip_and_errors() {
+        let p = FaultPlan::parse("runtime:0.01, kv_reload:0.5,drafter_panic:1.0").unwrap();
+        assert_eq!(p.rate(FaultSite::RuntimeStep), 0.01);
+        assert_eq!(p.rate(FaultSite::KvReload), 0.5);
+        assert_eq!(p.rate(FaultSite::DrafterPanic), 1.0);
+        assert_eq!(p.rate(FaultSite::KvOffload), 0.0);
+        assert!(!p.is_empty());
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("bogus:0.1").is_err());
+        assert!(FaultPlan::parse("runtime:1.5").is_err());
+        assert!(FaultPlan::parse("runtime").is_err());
+        assert!(FaultPlan::parse("runtime:x").is_err());
+    }
+
+    #[test]
+    fn injector_is_deterministic_and_sites_are_independent() {
+        let cfg = FaultConfig::new(FaultPlan::parse("runtime:0.3,kv_reload:0.3").unwrap(), 42);
+        let mut a = FaultInjector::new(&cfg);
+        let mut b = FaultInjector::new(&cfg);
+        let sa: Vec<bool> = (0..256).map(|_| a.check(FaultSite::RuntimeStep)).collect();
+        let sb: Vec<bool> = (0..256).map(|_| b.check(FaultSite::RuntimeStep)).collect();
+        assert_eq!(sa, sb);
+        // interleaving checks of another site must not shift the stream
+        let mut c = FaultInjector::new(&cfg);
+        let sc: Vec<bool> = (0..256)
+            .map(|_| {
+                c.check(FaultSite::KvReload);
+                c.check(FaultSite::RuntimeStep)
+            })
+            .collect();
+        assert_eq!(sa, sc);
+        // different seed → different stream (overwhelmingly likely)
+        let mut d = FaultInjector::new(&FaultConfig::new(cfg.plan.clone(), 43));
+        let sd: Vec<bool> = (0..256).map(|_| d.check(FaultSite::RuntimeStep)).collect();
+        assert_ne!(sa, sd);
+    }
+
+    #[test]
+    fn injector_rates_are_calibrated() {
+        let cfg = FaultConfig::new(FaultPlan::new().with_rate(FaultSite::RuntimeStep, 0.25), 7);
+        let mut inj = FaultInjector::new(&cfg);
+        let n = 20_000u64;
+        let mut hits = 0u64;
+        for _ in 0..n {
+            if inj.check(FaultSite::RuntimeStep) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "empirical rate {rate}");
+        assert_eq!(inj.checks(FaultSite::RuntimeStep), n);
+        assert_eq!(inj.fired(FaultSite::RuntimeStep), hits);
+        assert_eq!(inj.total_fired(), hits);
+    }
+
+    #[test]
+    fn rate_endpoints_are_exact() {
+        let cfg = FaultConfig::new(
+            FaultPlan::new()
+                .with_rate(FaultSite::DrafterPanic, 1.0)
+                .with_rate(FaultSite::KvOffload, 0.0)
+                .with_rate(FaultSite::RuntimeStep, 0.5),
+            11,
+        );
+        let mut inj = FaultInjector::new(&cfg);
+        for _ in 0..1000 {
+            assert!(inj.check(FaultSite::DrafterPanic));
+            assert!(!inj.check(FaultSite::KvOffload));
+        }
+        // disabled injector: never fires, never counts
+        let mut off = FaultInjector::disabled();
+        assert!(!off.enabled());
+        for _ in 0..100 {
+            assert!(!off.check(FaultSite::RuntimeStep));
+        }
+        assert_eq!(off.checks(FaultSite::RuntimeStep), 0);
+    }
+
+    #[test]
+    fn classification_table() {
+        use ErrorClass::*;
+        let cases: Vec<(EngineError, ErrorClass)> = vec![
+            (
+                EngineError::RuntimeStep { artifact: "verify_q9".into(), detail: "x".into() },
+                Transient,
+            ),
+            (EngineError::KvOffloadIo { req_id: 1, detail: "x".into() }, Transient),
+            (EngineError::KvReloadIo { req_id: 1, detail: "x".into() }, Transient),
+            (EngineError::VerifyStall { detail: "x".into() }, Transient),
+            (
+                EngineError::DrafterPanic { drafter: "p".into(), hook: "plan", detail: "x".into() },
+                Fatal,
+            ),
+            (
+                EngineError::MalformedProposal { drafter: "p".into(), detail: "x".into() },
+                Fatal,
+            ),
+            (
+                EngineError::RetriesExhausted {
+                    site: FaultSite::KvReload,
+                    attempts: 8,
+                    last: "x".into(),
+                },
+                Fatal,
+            ),
+            (EngineError::Internal { detail: "x".into() }, Fatal),
+        ];
+        for (err, class) in cases {
+            assert_eq!(err.class(), class, "{err}");
+            assert_eq!(err.is_fatal(), class == Fatal);
+            // every kind has a stable label and a Display impl
+            assert!(!err.kind_label().is_empty());
+            assert!(!err.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn engine_error_downcasts_through_anyhow() {
+        let err: anyhow::Error =
+            EngineError::KvReloadIo { req_id: 9, detail: "injected".into() }.into();
+        let e = err.downcast_ref::<EngineError>().expect("downcast");
+        assert!(e.is_transient());
+    }
+
+    #[test]
+    fn backoff_doubles() {
+        assert_eq!(backoff_s(0), STEP_BACKOFF_BASE_S);
+        assert_eq!(backoff_s(1), STEP_BACKOFF_BASE_S * 2.0);
+        assert_eq!(backoff_s(3), STEP_BACKOFF_BASE_S * 8.0);
+    }
+}

@@ -254,6 +254,14 @@ impl KvManager {
         Some((id, kv))
     }
 
+    /// The request id [`Self::try_reload`] would pop next, without popping
+    /// it (the engine's fault-injection hook checks reload I/O faults
+    /// *before* the reload mutates queue/host state, so a skipped reload
+    /// retries naturally on a later iteration).
+    pub fn peek_reload(&self) -> Option<u64> {
+        self.reload_queue.front().copied()
+    }
+
     pub fn has_offloaded(&self) -> bool {
         !self.host.is_empty()
     }

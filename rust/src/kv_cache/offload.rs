@@ -96,11 +96,18 @@ impl OffloadEngine {
 
     /// Submit an offload; returns immediately (the transfer overlaps with
     /// whatever the engine does next).
+    ///
+    /// If the copier thread has died (its receiver is gone), the job
+    /// completes synchronously through the done channel instead — the KV
+    /// payload is never lost and the engine's harvest path is unchanged;
+    /// only the PCIe pacing model is skipped.
     pub fn submit(&mut self, job: OffloadJob) {
         self.pending += 1;
-        self.tx
-            .send(Msg::Job(job, self.done_tx.clone()))
-            .expect("offload thread alive");
+        if let Err(mpsc::SendError(Msg::Job(job, reply))) =
+            self.tx.send(Msg::Job(job, self.done_tx.clone()))
+        {
+            let _ = reply.send((job.req_id, job.kv, 0.0));
+        }
     }
 
     /// Harvest finished transfers without blocking.
@@ -120,12 +127,27 @@ impl OffloadEngine {
         let t0 = Instant::now();
         let mut out = Vec::new();
         while self.pending > 0 {
-            if let Ok(x) = self.done_rx.recv_timeout(Duration::from_millis(200)) {
-                self.pending -= 1;
-                out.push(x);
+            match self.done_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(x) => {
+                    self.pending -= 1;
+                    out.push(x);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // A dead copier can never deliver the remaining jobs;
+                    // give up instead of spinning forever (`submit` keeps
+                    // new jobs lossless, this bounds the old ones).
+                    if self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true) {
+                        self.pending = 0;
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.pending = 0;
+                    break;
+                }
             }
         }
-        self.stats.lock().unwrap().stall_s += t0.elapsed().as_secs_f64();
+        self.lock_stats().stall_s += t0.elapsed().as_secs_f64();
         out
     }
 
@@ -134,7 +156,14 @@ impl OffloadEngine {
     }
 
     pub fn stats(&self) -> OffloadStats {
-        self.stats.lock().unwrap().clone()
+        self.lock_stats().clone()
+    }
+
+    /// Poison-proof stats lock: a copier that panicked mid-update leaves
+    /// numbers that are at worst slightly stale — not worth taking the
+    /// engine down over.
+    fn lock_stats(&self) -> std::sync::MutexGuard<'_, OffloadStats> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 

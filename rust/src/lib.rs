@@ -74,6 +74,19 @@
 //! on any of them.  See `spec::drafter` for a worked "write your own
 //! drafter" example.
 //!
+//! ## Robustness
+//!
+//! Speculation is a pure accelerator, and the failure story keeps it one:
+//! fallible paths return the typed [`fault::EngineError`] taxonomy
+//! (transient errors retry with sim-clock backoff; fatal ones isolate),
+//! drafter hooks run inside a `catch_unwind` sandbox with proposal-shape
+//! validation, and misbehaving slots demote to vanilla (k=1) decoding
+//! with a probation window — sessions finish `Completed`, just slower.
+//! A deterministic, seed-driven [`fault::FaultInjector`] (`--fault-plan`,
+//! `--fault-seed`) drives the chaos suite (`rust/tests/chaos.rs`), whose
+//! invariant is that co-batched unaffected sessions stay bit-identical
+//! to a fault-free run.  See EXPERIMENTS.md §Robustness.
+//!
 //! ## Execution backends
 //!
 //! The default build serves through a **deterministic CPU fallback
@@ -90,6 +103,7 @@
 
 pub mod bench;
 pub mod engine;
+pub mod fault;
 pub mod kv_cache;
 pub mod metrics;
 pub mod model;

@@ -32,7 +32,10 @@ fn usage() -> ! {
          \x20            --workload-in FILE  --workload-out FILE  (request trace replay/save)\n\
          \x20            --trace-out FILE  (Perfetto/Chrome trace JSON)  --trace-sample N\n\
          \x20            --metrics-out FILE  (Prometheus text exposition)  --ttft-slo SECS\n\
-         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select drafter_dispatch trace_overhead all\n\
+         \x20            --fault-plan SPEC  (chaos: site:rate[,site:rate..]; sites: runtime,\n\
+         \x20            kv_offload, kv_reload, verify_stall, drafter_panic, drafter_malformed)\n\
+         \x20            --fault-seed S  (fault schedule seed, default 0)\n\
+         bench:  table1 fig2 fig3 fig4 fig5 table2 fig10 fig11 fig12_accept fig12_sens fig13 fig14 fig15 pillar_select drafter_dispatch trace_overhead fault_overhead all\n\
          common: --artifacts DIR (default ./artifacts)  --out DIR (default ./reports)"
     );
     std::process::exit(2)
@@ -79,6 +82,15 @@ fn main() -> anyhow::Result<()> {
             if trace_out.is_some() {
                 cfg.trace = sparsespec::trace::TraceConfig::on()
                     .with_sampling(args.usize("trace-sample", 1));
+            }
+            if let Some(spec) = args.opt("fault-plan") {
+                let plan = sparsespec::fault::FaultPlan::parse(spec)?;
+                cfg.fault = sparsespec::fault::FaultConfig::new(plan, args.u64("fault-seed", 0));
+                println!(
+                    "chaos: fault plan [{}] seed {}",
+                    cfg.fault.plan.to_spec(),
+                    cfg.fault.seed
+                );
             }
             let mut gen = WorkloadGen::new(
                 rt.cfg.grammar.clone(),

@@ -87,8 +87,8 @@ impl ModelRunner {
         if out.len() != 3 {
             return Err(anyhow!("prefill: expected 3 outputs, got {}", out.len()));
         }
-        self.kv_v = out.pop().unwrap();
-        self.kv_k = out.pop().unwrap();
+        self.kv_v = out.pop().expect("output arity checked above");
+        self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
         let t3 = Instant::now();
         self.stats.add(
@@ -128,8 +128,8 @@ impl ModelRunner {
         if out.len() != 3 {
             return Err(anyhow!("{name}: expected 3 outputs, got {}", out.len()));
         }
-        self.kv_v = out.pop().unwrap();
-        self.kv_k = out.pop().unwrap();
+        self.kv_v = out.pop().expect("output arity checked above");
+        self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
         let t3 = Instant::now();
         self.stats.add(
@@ -169,9 +169,9 @@ impl ModelRunner {
         if out.len() != 4 {
             return Err(anyhow!("{name}: expected 4 outputs, got {}", out.len()));
         }
-        let dump_buf = out.pop().unwrap();
-        self.kv_v = out.pop().unwrap();
-        self.kv_k = out.pop().unwrap();
+        let dump_buf = out.pop().expect("output arity checked above");
+        self.kv_v = out.pop().expect("output arity checked above");
+        self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
         let dump = self.rt.fetch_f32(&dump_buf)?;
         let t3 = Instant::now();
@@ -213,8 +213,8 @@ impl ModelRunner {
         if out.len() != 3 {
             return Err(anyhow!("sparse_verify: expected 3 outputs"));
         }
-        self.kv_v = out.pop().unwrap();
-        self.kv_k = out.pop().unwrap();
+        self.kv_v = out.pop().expect("output arity checked above");
+        self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
         let t3 = Instant::now();
         self.stats.add(
@@ -244,7 +244,7 @@ impl ModelRunner {
         let t1 = Instant::now();
         let out = self
             .rt
-            .execute("eagle", &[self.eagle_weights.as_ref().unwrap(), &cx])?;
+            .execute("eagle", &[self.eagle_weights.as_ref().expect("lazily loaded above"), &cx])?;
         let t2 = Instant::now();
         let logits = self.rt.fetch_f32(&out[0])?;
         let t3 = Instant::now();
@@ -287,8 +287,8 @@ impl ModelRunner {
         if out.len() != 2 {
             return Err(anyhow!("kv_load: expected 2 outputs"));
         }
-        self.kv_v = out.pop().unwrap();
-        self.kv_k = out.pop().unwrap();
+        self.kv_v = out.pop().expect("output arity checked above");
+        self.kv_k = out.pop().expect("output arity checked above");
         self.stats.add(
             "kv_load",
             (t1 - t0).as_secs_f64(),

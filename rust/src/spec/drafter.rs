@@ -344,7 +344,17 @@ pub trait Drafter {
 
 /// Install proposal tokens as the slot's drafts (with one-hot q rows for
 /// the stochastic verifier, since proposals are deterministic).
-pub fn set_proposals(slot: &mut Slot, props: Vec<i32>, vocab: usize) {
+///
+/// Defensive: a token id outside `[0, vocab)` truncates the proposal at
+/// that point instead of panicking on the one-hot write — a buggy
+/// third-party drafter loses the tail of its speculation, never the
+/// process.  (The engine additionally shape-validates every proposal
+/// batch before it can enter the shared verify launch; see
+/// [`crate::fault`] for the full robustness contract.)
+pub fn set_proposals(slot: &mut Slot, mut props: Vec<i32>, vocab: usize) {
+    if let Some(bad) = props.iter().position(|&p| p < 0 || p as usize >= vocab) {
+        props.truncate(bad);
+    }
     slot.draft_probs.clear();
     for &p in &props {
         let mut onehot = vec![0.0f32; vocab];

@@ -61,6 +61,11 @@ pub mod names {
     pub const SESSION_SUBMIT: &str = "session_submit";
     pub const SESSION_FIRST_TOKEN: &str = "session_first_token";
     pub const SESSION_FINISH: &str = "session_finish";
+    pub const FAULT: &str = "fault";
+    pub const FAULT_RETRY: &str = "fault_retry";
+    pub const SLOT_DEGRADE: &str = "slot_degrade";
+    pub const SLOT_PROMOTE: &str = "slot_promote";
+    pub const SESSION_FAIL: &str = "session_fail";
 }
 
 /// Tracing knobs, carried on `EngineConfig` (see
