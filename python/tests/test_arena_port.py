@@ -1,0 +1,243 @@
+# Python twin of the raw-speed arena pass (rust/src/runtime/arena.rs +
+# the restructured kernels in rust/src/runtime/sim.rs).
+#
+# The Rust side keeps the seed-era kernels verbatim in
+# `runtime::sim::reference` and bit-identity-tests the optimised kernels
+# against them; this twin re-pins the three *restructurings* the arena
+# pass made, independently of the Rust toolchain:
+#
+#   1. verify dump: filled once into the representative (layer 0, head 0)
+#      row then replicated across the remaining L*Hkv-1 rows == the
+#      seed-era per-row recompute, including the end=(base+qv).min(T)
+#      truncation and the zeroed tail;
+#   2. sparse visibility: the per-slot bitmask (build_vis + O(1) tests)
+#      == the seed-era O(CTX*W) linear scan of the index row, including
+#      -1 sentinel stop and out-of-range index handling, and the sparse
+#      context hash built on either membership test folds identically;
+#   3. arena view layouts: buffer capacities sized once from ModelConfig
+#      cover every step shape (no step can ever resize), and the valid-
+#      prefix view lengths per step type are what the engine reads.
+#
+# Constants and fold order MUST stay in lockstep with runtime/sim.rs
+# (shared with test_sim_runtime_port.py).
+
+M64 = (1 << 64) - 1
+GOLDEN = 0x9E37_79B9_7F4A_7C15
+SEED0 = 0xC0FF_EE00_5EED_1234
+CTX = 8
+LONG_MIN = 24
+LONG_BAND = 5
+
+# The synthetic ModelConfig (model/mod.rs SystemConfig::synthetic).
+VOCAB = 512
+LAYERS = 4
+KV_HEADS = 2
+MAX_SEQ = 512
+SLOTS = 12
+PROMPT_PAD = 32
+SPEC_K = 8
+DRAFT_BUDGET = 64
+VERIFY_Q_VARIANTS = [1, 5, 9, 13, 17, 21]
+DRAFT_W_VARIANTS = [16, 32, 64, 128, 256]
+
+
+def mix64(seed):
+    z = (seed + GOLDEN) & M64
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & M64
+    return z ^ (z >> 31)
+
+
+def dump_mass(t, end):
+    mass = 1.0 / (1.0 + (end - 1 - t))
+    if t < 4:
+        mass += 3.0
+    if abs(t - end // 2) <= LONG_BAND:
+        mass += 2.0
+    return mass
+
+
+# --- 1. dump representative-row equality --------------------------------
+
+def dump_reference(base, qv, t_dim):
+    """Seed-era verify dump for one slot: every (layer, head) row
+    recomputed (runtime::sim::reference::Runner::verify)."""
+    end = min(base + qv, t_dim)
+    rows = []
+    for _lh in range(LAYERS * KV_HEADS):
+        rows.append([dump_mass(t, end) if t < end else 0.0 for t in range(t_dim)])
+    return rows
+
+
+def dump_arena(base, qv, t_dim):
+    """Arena verify dump: row (0, 0) computed once, then replicated
+    (copy_from_slice) across the remaining L*Hkv-1 rows."""
+    end = min(base + qv, t_dim)
+    row0 = [dump_mass(t, end) if t < end else 0.0 for t in range(t_dim)]
+    return [row0] + [list(row0) for _ in range(LAYERS * KV_HEADS - 1)]
+
+
+def test_dump_replication_equals_per_row_recompute():
+    for base, qv in [(0, 1), (7, 9), (100, 9), (MAX_SEQ - 4, 9), (MAX_SEQ - 1, 21)]:
+        ref = dump_reference(base, qv, MAX_SEQ)
+        got = dump_arena(base, qv, MAX_SEQ)
+        assert got == ref, f"dump diverged at base={base} qv={qv}"
+
+
+def test_dump_end_truncation_and_zero_tail():
+    # Past-the-end positions stay zero; end clamps at T.
+    rows = dump_arena(MAX_SEQ - 3, 9, MAX_SEQ)
+    end = MAX_SEQ  # clamped
+    for row in rows:
+        assert all(x > 0.0 for x in row[:end])
+    rows = dump_arena(10, 5, MAX_SEQ)
+    for row in rows:
+        assert all(x == 0.0 for x in row[15:])
+        assert all(x > 0.0 for x in row[:15])
+
+
+# --- 2. visibility bitmask == linear scan -------------------------------
+
+def visible_linear(idx_row, t):
+    """Seed-era membership: scan the ascending valid prefix (stop at the
+    first -1 sentinel)."""
+    for x in idx_row:
+        if x < 0:
+            return False
+        if x == t:
+            return True
+    return False
+
+
+def build_vis(idx_row, t_dim):
+    """Arena path: one bitmask per slot; out-of-range indices ignored
+    (the linear scan never matched them against any t < max_seq)."""
+    words = [0] * ((t_dim + 63) // 64)
+    cap = len(words) * 64
+    for x in idx_row:
+        if x < 0:
+            break
+        if x < cap:
+            words[x >> 6] |= 1 << (x & 63)
+    return words
+
+
+def vis_test(words, t):
+    return (words[t >> 6] >> (t & 63)) & 1 == 1
+
+
+def idx_rows_for_test():
+    rows = [
+        [],                                   # empty -> nothing visible
+        [-1, 5, 9],                           # sentinel first -> nothing
+        [0, 1, 2, 3, -1, 7, 8],               # valid prefix then junk
+        list(range(0, DRAFT_BUDGET)),         # full ascending row
+        [0, 3, 64, 65, 127, 128, 450, 511],   # word-boundary positions
+        [2, 511, MAX_SEQ + 10, -1],           # out-of-range index ignored
+        [t * 7 % MAX_SEQ for t in range(DRAFT_BUDGET)],  # unsorted junk order
+    ]
+    # Deterministic pseudo-random rows (mix64-driven, like the Rust tests).
+    for seed in range(4):
+        h, row = seed, []
+        for _ in range(DRAFT_BUDGET):
+            h = mix64(h)
+            row.append(h % (MAX_SEQ + 8))  # some intentionally OOB
+        row.sort()
+        cut = mix64(seed + 99) % DRAFT_BUDGET
+        rows.append(row[:cut] + [-1] * (DRAFT_BUDGET - cut))
+    return rows
+
+
+def test_bitmask_equals_linear_scan_everywhere():
+    for idx_row in idx_rows_for_test():
+        words = build_vis(idx_row, MAX_SEQ)
+        for t in range(MAX_SEQ):
+            assert vis_test(words, t) == visible_linear(idx_row, t), (
+                f"visibility diverged at t={t} for row {idx_row[:12]}..."
+            )
+
+
+def sparse_hash(kv, p, member):
+    """sparse_ctx_hash fold, parameterised over the membership test —
+    identical folds on either membership implementation is the invariant
+    sparse_ctx_hash_vis relies on."""
+    h = SEED0
+    if p >= LONG_MIN:
+        lp = p // 2
+        if member(lp):
+            h = mix64(h ^ (kv[lp] + 1))
+    for t in range(max(p + 1 - CTX, 0), p + 1):
+        if member(t):
+            h = mix64(h ^ (kv[t] + 1))
+    return h
+
+
+def test_sparse_hash_identical_on_either_membership():
+    kv = [(mix64(1000 + i) % (VOCAB - 1)) + 1 for i in range(MAX_SEQ)]
+    for idx_row in idx_rows_for_test():
+        words = build_vis(idx_row, MAX_SEQ)
+        for p in [0, 5, CTX, LONG_MIN - 1, LONG_MIN, 100, 255, MAX_SEQ - 1]:
+            a = sparse_hash(kv, p, lambda t: visible_linear(idx_row, t))
+            b = sparse_hash(kv, p, lambda t: vis_test(words, t))
+            assert a == b, f"hash diverged at p={p} for row {idx_row[:12]}..."
+
+
+# --- 3. arena view layouts ----------------------------------------------
+
+def arena_capacities():
+    """StepArena::new sizing (arena.rs): worst case over every step."""
+    q_max = max(VERIFY_Q_VARIANTS + [SPEC_K + 1, 1])
+    return {
+        "logits": SLOTS * q_max * VOCAB,
+        "dump": SLOTS * LAYERS * KV_HEADS * MAX_SEQ,
+        "vis_words": SLOTS * ((MAX_SEQ + 63) // 64),
+    }
+
+
+def view_lens(step, q=None):
+    """Valid-prefix lengths (logits_len / dump_len) each step publishes."""
+    if step in ("prefill", "draft", "eagle"):
+        return SLOTS * VOCAB, None  # dump untouched
+    if step == "verify":
+        return SLOTS * q * VOCAB, SLOTS * LAYERS * KV_HEADS * MAX_SEQ
+    if step == "sparse_verify":
+        return SLOTS * (SPEC_K + 1) * VOCAB, None
+    raise AssertionError(step)
+
+
+def test_every_step_shape_fits_the_arena():
+    caps = arena_capacities()
+    shapes = [view_lens("prefill"), view_lens("draft"), view_lens("eagle"),
+              view_lens("sparse_verify")]
+    shapes += [view_lens("verify", q=q) for q in VERIFY_Q_VARIANTS]
+    for logits_len, dump_len in shapes:
+        assert logits_len <= caps["logits"], "a step would have to resize logits"
+        if dump_len is not None:
+            assert dump_len <= caps["dump"], "a step would have to resize the dump"
+    # The worst logits shape is exactly the capacity (nothing wasted).
+    assert max(l for l, _ in shapes) == caps["logits"]
+    # Dense verify writes the full dump (valid prefix == capacity).
+    assert view_lens("verify", q=SPEC_K + 1)[1] == caps["dump"]
+
+
+def test_engine_row_offsets_match_views():
+    # The engine reads slot i's rows at fixed strides of the views; check
+    # the strides tile the valid prefix exactly.
+    q = SPEC_K + 1
+    logits_len, dump_len = view_lens("verify", q=q)
+    per_logits = q * VOCAB
+    per_dump = LAYERS * KV_HEADS * MAX_SEQ
+    assert per_logits * SLOTS == logits_len
+    assert per_dump * SLOTS == dump_len
+    logits_len, _ = view_lens("draft")
+    assert VOCAB * SLOTS == logits_len
+
+
+def test_artifact_names_cover_variants():
+    # ArtifactNames::new pre-renders one name per compiled variant; the
+    # engine's hot path does pure lookups.  Pin the rendering.
+    drafts = {w: f"draft_w{w}" for w in DRAFT_W_VARIANTS}
+    verifies = {q: f"verify_q{q}" for q in VERIFY_Q_VARIANTS}
+    assert drafts[64] == "draft_w64"
+    assert verifies[SPEC_K + 1] == "verify_q9"
+    assert 63 not in drafts and SPEC_K not in verifies  # misses stay misses

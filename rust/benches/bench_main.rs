@@ -7,6 +7,12 @@
 
 use sparsespec::bench::{run_named, BenchCtx};
 
+/// The bench binary counts allocations so `engine_iteration` can enforce
+/// its zero-steady-state-allocation gate (library builds keep the system
+/// allocator; see `util::alloc`).
+#[global_allocator]
+static ALLOC: sparsespec::util::alloc::CountingAlloc = sparsespec::util::alloc::CountingAlloc;
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let names: Vec<&str> = if args.is_empty() {

@@ -1,0 +1,371 @@
+//! engine_iteration — the raw-speed proof for the arena hot path
+//! (EXPERIMENTS.md §Raw-speed).
+//!
+//! Three legs over a slots × context sweep of the decode round
+//! (draft + dense verify + sparse verify):
+//!
+//! 1. **reference** — the seed-era kernels kept verbatim in
+//!    [`crate::runtime::reference`]: fresh `Vec`s per call, per-row dump
+//!    recompute, linear-scan sparse visibility, strictly serial.
+//! 2. **serial arena** — the optimised kernels with the slot-parallel
+//!    phase off: same bits, zero steady-state allocations (counted when
+//!    the bench binary installs [`crate::util::alloc::CountingAlloc`]).
+//! 3. **parallel arena** — the shipping configuration.
+//!
+//! Emits `BENCH_engine_iteration.json` *before* enforcing the gates, so
+//! a regression still leaves its evidence on disk.  Gates:
+//! * every leg's per-round output checksums are bit-identical;
+//! * `Engine::run` produces identical outputs with `parallel` on/off;
+//! * best arena leg ≥ 1.5× the reference iterations/s;
+//! * zero steady-state allocations on the serial leg (skip, not pass,
+//!   when no counting allocator is installed in this binary).
+
+use super::BenchCtx;
+use crate::engine::{Engine, EngineConfig};
+use crate::spec::DrafterKind;
+use crate::util::json::{obj, s as jstr, Json};
+use crate::workload::Dataset;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Engine-level identity leg: one workload, two runs (`parallel` on/off),
+/// outputs compared field-by-field.  Runs on every backend.
+struct EngineLeg {
+    outputs_equal: bool,
+    iterations: u64,
+    tokens: u64,
+    parallel_s: f64,
+    serial_s: f64,
+}
+
+impl EngineLeg {
+    fn to_json(&self) -> Json {
+        use crate::util::json::num;
+        obj(vec![
+            ("outputs_equal", Json::Bool(self.outputs_equal)),
+            ("iterations", num(self.iterations as f64)),
+            ("tokens_generated", num(self.tokens as f64)),
+            ("parallel_s", num(self.parallel_s)),
+            ("serial_s", num(self.serial_s)),
+        ])
+    }
+}
+
+fn engine_identity(ctx: &mut BenchCtx) -> Result<EngineLeg> {
+    let rt = ctx.rt()?;
+    let mut reqs = crate::workload::WorkloadGen::new(
+        rt.cfg.grammar.clone(),
+        rt.cfg.model.clone(),
+        Dataset::Aime,
+        ctx.seed,
+    )
+    .offline_batch(6);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(40);
+    }
+    let mut run = |on: bool| -> Result<(crate::engine::RunReport, f64)> {
+        let mut cfg = EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+        cfg.parallel = on;
+        let mut eng = Engine::new(rt.clone(), cfg)?;
+        let t0 = Instant::now();
+        let rep = eng.run(reqs.clone())?;
+        Ok((rep, t0.elapsed().as_secs_f64()))
+    };
+    let (rep_par, parallel_s) = run(true)?;
+    let (rep_ser, serial_s) = run(false)?;
+    let outputs_equal = rep_par.outputs == rep_ser.outputs
+        && rep_par.iterations == rep_ser.iterations
+        && rep_par.tokens_generated == rep_ser.tokens_generated;
+    println!(
+        "  engine identity: outputs_equal={} ({} iterations, {} tokens; parallel {:.0}ms, serial {:.0}ms)",
+        outputs_equal,
+        rep_par.iterations,
+        rep_par.tokens_generated,
+        parallel_s * 1e3,
+        serial_s * 1e3
+    );
+    Ok(EngineLeg {
+        outputs_equal,
+        iterations: rep_par.iterations,
+        tokens: rep_par.tokens_generated,
+        parallel_s,
+        serial_s,
+    })
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod kernel {
+    use crate::runtime::{reference, ModelRunner, Runtime};
+    use crate::util::json::{num, obj, Json};
+    use anyhow::Result;
+    use std::rc::Rc;
+    use std::time::Instant;
+
+    pub struct Sweep {
+        pub combos: Vec<Json>,
+        pub reference_s: f64,
+        pub serial_s: f64,
+        pub parallel_s: f64,
+        pub total_rounds: usize,
+        pub identical: bool,
+        /// Steady-state allocations across every serial-leg timed loop;
+        /// `None` when no counting allocator is installed.
+        pub steady_allocs: Option<u64>,
+    }
+
+    /// FNV-style fold of raw f32 bit patterns — exact equality across
+    /// legs, allocation-free so it can sit inside the counted loop.
+    fn fold(mut h: u64, xs: &[f32]) -> u64 {
+        for &x in xs {
+            h = (h ^ x.to_bits() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        h
+    }
+
+    pub fn sweep(rt: Rc<Runtime>, scale: usize) -> Result<Sweep> {
+        let m = rt.cfg.model.clone();
+        let (s_max, pad) = (m.slots, m.prompt_pad);
+        let q = m.spec_k + 1;
+        let w = m.draft_budget;
+        let per_head = m.layers * m.kv_heads;
+        let rounds = 24 * scale.max(1);
+        let warmup = 4usize;
+
+        let mut slot_counts = vec![1usize, (s_max / 2).max(1), s_max];
+        slot_counts.dedup();
+        let hi = m.max_seq.saturating_sub(q + 1).max(1);
+        let mut ctxs = vec![(m.max_seq / 8).max(1).min(hi), (m.max_seq / 2).min(hi), hi];
+        ctxs.dedup();
+
+        let mut rr = reference::Runner::new(m.clone(), rt.cfg.eagle.ctx);
+        let mut serial = ModelRunner::new(rt.clone())?;
+        serial.set_parallel(false);
+        let mut par = ModelRunner::new(rt.clone())?;
+        par.set_parallel(true);
+
+        let mut combos = Vec::new();
+        let (mut ref_tot, mut ser_tot, mut par_tot) = (0.0f64, 0.0f64, 0.0f64);
+        let mut identical = true;
+        let mut steady_allocs: Option<u64> = None;
+        let mut counted_any = false;
+        println!(
+            "  {:<6} {:>5} {:>10} {:>10} {:>10} {:>8} {:>8}",
+            "slots", "ctx", "ref_it/s", "ser_it/s", "par_it/s", "ser_x", "par_x"
+        );
+        for &sa in &slot_counts {
+            for &c0 in &ctxs {
+                let active: Vec<i32> = (0..s_max).map(|i| (i < sa) as i32).collect();
+                let ptokens: Vec<i32> = (0..s_max * pad).map(|i| (i % 97) as i32 + 1).collect();
+                let plen = vec![pad.min(c0).max(1) as i32; s_max];
+                let dtok: Vec<i32> = (0..s_max).map(|s| (s as i32 % 31) + 2).collect();
+                let pos = vec![c0 as i32; s_max];
+                let vtok: Vec<i32> = (0..s_max * q).map(|i| (i % 89) as i32 + 1).collect();
+                let qv = vec![q as i32; s_max];
+                let idx: Vec<i32> =
+                    (0..s_max * per_head * w).map(|i| ((i * 13) % c0) as i32).collect();
+
+                // Reference leg (the in-JSON baseline).
+                rr.reset_kv();
+                let l = rr.prefill(&ptokens, &plen, &active);
+                let mut h_ref = fold(0x5EED, &l);
+                for _ in 0..warmup {
+                    rr.draft(w, &dtok, &pos, &idx, &active);
+                    rr.verify(q, &vtok, &pos, &qv, &active);
+                    rr.sparse_verify(&vtok, &pos, &qv, &idx, &active);
+                }
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    let l = rr.draft(w, &dtok, &pos, &idx, &active);
+                    h_ref = fold(h_ref, &l);
+                    let (l, d) = rr.verify(q, &vtok, &pos, &qv, &active);
+                    h_ref = fold(h_ref, &l);
+                    h_ref = fold(h_ref, &d);
+                    let l = rr.sparse_verify(&vtok, &pos, &qv, &idx, &active);
+                    h_ref = fold(h_ref, &l);
+                }
+                let ref_s = t0.elapsed().as_secs_f64();
+
+                // Arena legs: the KV writes are deterministic overwrites,
+                // so warmup rounds leave the pools exactly where the timed
+                // rounds need them and the checksums stay comparable.
+                let mut run_arena = |r: &mut ModelRunner, gate: bool| -> Result<(f64, u64)> {
+                    r.reset_kv()?;
+                    r.prefill(&ptokens, &plen, &active)?;
+                    let mut h = fold(0x5EED, r.logits());
+                    for _ in 0..warmup {
+                        r.draft(w, &dtok, &pos, &idx, &active)?;
+                        r.verify(q, &vtok, &pos, &qv, &active)?;
+                        r.sparse_verify(&vtok, &pos, &qv, &idx, &active)?;
+                    }
+                    let base = if gate { crate::util::alloc::allocations() } else { None };
+                    let t0 = Instant::now();
+                    for _ in 0..rounds {
+                        r.draft(w, &dtok, &pos, &idx, &active)?;
+                        h = fold(h, r.logits());
+                        r.verify(q, &vtok, &pos, &qv, &active)?;
+                        h = fold(h, r.logits());
+                        h = fold(h, r.dump());
+                        r.sparse_verify(&vtok, &pos, &qv, &idx, &active)?;
+                        h = fold(h, r.logits());
+                    }
+                    let dt = t0.elapsed().as_secs_f64();
+                    if gate {
+                        if let Some(n) = crate::util::alloc::allocations_since(base) {
+                            counted_any = true;
+                            *steady_allocs.get_or_insert(0) += n;
+                        }
+                    }
+                    Ok((dt, h))
+                };
+                let (ser_s, h_ser) = run_arena(&mut serial, true)?;
+                let (par_s, h_par) = run_arena(&mut par, false)?;
+                identical &= h_ref == h_ser && h_ref == h_par;
+
+                let rps = |s: f64| rounds as f64 / s.max(1e-12);
+                println!(
+                    "  {:<6} {:>5} {:>10.0} {:>10.0} {:>10.0} {:>7.1}x {:>7.1}x",
+                    sa,
+                    c0,
+                    rps(ref_s),
+                    rps(ser_s),
+                    rps(par_s),
+                    ref_s / ser_s.max(1e-12),
+                    ref_s / par_s.max(1e-12)
+                );
+                combos.push(obj(vec![
+                    ("slots", num(sa as f64)),
+                    ("ctx", num(c0 as f64)),
+                    ("reference_iters_per_s", num(rps(ref_s))),
+                    ("serial_arena_iters_per_s", num(rps(ser_s))),
+                    ("parallel_arena_iters_per_s", num(rps(par_s))),
+                    ("speedup_serial", num(ref_s / ser_s.max(1e-12))),
+                    ("speedup_parallel", num(ref_s / par_s.max(1e-12))),
+                ]));
+                ref_tot += ref_s;
+                ser_tot += ser_s;
+                par_tot += par_s;
+            }
+        }
+        if !counted_any {
+            steady_allocs = None;
+        }
+        Ok(Sweep {
+            combos,
+            reference_s: ref_tot,
+            serial_s: ser_tot,
+            parallel_s: par_tot,
+            total_rounds: rounds * slot_counts.len() * ctxs.len(),
+            identical,
+            steady_allocs,
+        })
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn engine_iteration(ctx: &mut BenchCtx) -> Result<()> {
+    use crate::util::json::{arr, num};
+    println!("engine_iteration: arena hot path vs seed-era reference kernels");
+    let leg = engine_identity(ctx)?;
+    let rt = ctx.rt()?;
+    let scale = ctx.n_requests.max(1);
+    let sw = kernel::sweep(rt, scale)?;
+
+    let best = sw.serial_s.min(sw.parallel_s);
+    let baseline_rps = sw.total_rounds as f64 / sw.reference_s.max(1e-12);
+    let arena_rps = sw.total_rounds as f64 / best.max(1e-12);
+    let speedup = sw.reference_s / best.max(1e-12);
+    println!(
+        "  totals: reference {:.0} it/s, arena {:.0} it/s -> {:.2}x (gate: >= 1.5x)",
+        baseline_rps, arena_rps, speedup
+    );
+
+    let json = obj(vec![
+        ("experiment", jstr("engine_iteration")),
+        ("harness", jstr("cargo bench -- engine_iteration")),
+        ("rounds_total_per_leg", num(sw.total_rounds as f64)),
+        ("combos", arr(sw.combos)),
+        (
+            "totals",
+            obj(vec![
+                ("reference_s", num(sw.reference_s)),
+                ("serial_arena_s", num(sw.serial_s)),
+                ("parallel_arena_s", num(sw.parallel_s)),
+                ("baseline_iters_per_s", num(baseline_rps)),
+                ("arena_iters_per_s", num(arena_rps)),
+                ("speedup_vs_baseline", num(speedup)),
+            ]),
+        ),
+        ("kernels_bit_identical", Json::Bool(sw.identical)),
+        ("engine", leg.to_json()),
+        (
+            "alloc_gate",
+            obj(vec![
+                ("counted", Json::Bool(sw.steady_allocs.is_some())),
+                (
+                    "steady_state_allocs",
+                    sw.steady_allocs.map_or(Json::Null, |n| num(n as f64)),
+                ),
+            ]),
+        ),
+        (
+            "gates",
+            obj(vec![
+                ("min_speedup", num(1.5)),
+                ("zero_alloc", Json::Bool(true)),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    ctx.save("BENCH_engine_iteration.json", &json.to_string())?;
+
+    anyhow::ensure!(
+        sw.identical,
+        "engine_iteration gate failed: arena kernels diverged from the reference kernels"
+    );
+    anyhow::ensure!(
+        leg.outputs_equal,
+        "engine_iteration gate failed: Engine::run outputs differ between parallel and serial"
+    );
+    anyhow::ensure!(
+        speedup >= 1.5,
+        "engine_iteration gate failed: arena speedup {speedup:.2}x vs reference, need >= 1.5x"
+    );
+    match sw.steady_allocs {
+        Some(0) => println!(
+            "  zero-allocation gate: PASS (0 steady-state allocations over {} rounds)",
+            sw.total_rounds
+        ),
+        Some(n) => anyhow::bail!(
+            "engine_iteration gate failed: {n} steady-state allocations on the serial arena leg, need 0"
+        ),
+        None => println!(
+            "  zero-allocation gate: SKIPPED (no counting allocator installed in this binary; \
+             run via `cargo bench` or `cargo test --test alloc_gate`)"
+        ),
+    }
+    Ok(())
+}
+
+/// pjrt builds keep only the engine-level identity gate: the seed-era
+/// reference kernels (the throughput baseline) and the allocation count
+/// are properties of the sim backend.
+#[cfg(feature = "pjrt")]
+pub fn engine_iteration(ctx: &mut BenchCtx) -> Result<()> {
+    println!("engine_iteration: engine identity only (kernel baseline is sim-only)");
+    let leg = engine_identity(ctx)?;
+    let json = obj(vec![
+        ("experiment", jstr("engine_iteration")),
+        ("backend", jstr("pjrt")),
+        (
+            "note",
+            jstr("kernel baseline + alloc gate are sim-only; engine identity gate only"),
+        ),
+        ("engine", leg.to_json()),
+    ]);
+    ctx.save("BENCH_engine_iteration.json", &json.to_string())?;
+    anyhow::ensure!(
+        leg.outputs_equal,
+        "engine_iteration gate failed: Engine::run outputs differ between parallel and serial"
+    );
+    Ok(())
+}

@@ -208,8 +208,8 @@ pub fn fig4_attention_dynamics(ctx: &mut BenchCtx) -> Result<()> {
     plen[0] = prompt.len() as i32;
     let mut active = vec![0i32; s];
     active[0] = 1;
-    let logits = runner.prefill(&tokens, &plen, &active)?;
-    let mut pending = crate::sampling::argmax(&logits[0..m.vocab]) as i32;
+    runner.prefill(&tokens, &plen, &active)?;
+    let mut pending = crate::sampling::argmax(&runner.logits()[0..m.vocab]) as i32;
     let mut len = prompt.len();
 
     let steps = 256usize;
@@ -223,14 +223,14 @@ pub fn fig4_attention_dynamics(ctx: &mut BenchCtx) -> Result<()> {
         let mut pos = vec![0i32; s];
         pos[0] = len as i32;
         let qv = vec![1i32; s];
-        let out = runner.verify(1, &tok, &pos, &qv, &active)?;
+        runner.verify(1, &tok, &pos, &qv, &active)?;
         len += 1;
-        pending = crate::sampling::argmax(&out.logits[0..m.vocab]) as i32;
+        pending = crate::sampling::argmax(&runner.logits()[0..m.vocab]) as i32;
         if step % probe_every == 0 {
             // aggregate dump over layers+heads for slot 0
             let t = m.max_seq;
             let per = m.layers * m.kv_heads * t;
-            let d = &out.dump[0..per];
+            let d = &runner.dump()[0..per];
             let mut agg = vec![0.0f32; t];
             for lh in 0..(m.layers * m.kv_heads) {
                 for x in 0..t {

@@ -6,12 +6,14 @@
 //! under `reports/` so the markdown in EXPERIMENTS.md can cite them.
 
 mod dispatch;
+mod engine_iteration;
 mod experiments;
 mod fault_overhead;
 mod kernels;
 mod trace_overhead;
 
 pub use dispatch::drafter_dispatch;
+pub use engine_iteration::engine_iteration;
 pub use experiments::*;
 pub use fault_overhead::fault_overhead;
 pub use kernels::{fig15_fused_kernel, pillar_select};
@@ -79,11 +81,12 @@ pub fn run_named(ctx: &mut BenchCtx, name: &str) -> anyhow::Result<()> {
         "drafter_dispatch" => drafter_dispatch(ctx),
         "trace_overhead" => trace_overhead(ctx),
         "fault_overhead" => fault_overhead(ctx),
+        "engine_iteration" => engine_iteration(ctx),
         "all" => {
             for n in [
                 "table1", "fig2", "fig3", "fig4", "fig5", "table2", "fig10", "fig11",
                 "fig12_accept", "fig12_sens", "fig13", "fig14", "fig15", "pillar_select",
-                "drafter_dispatch", "trace_overhead", "fault_overhead",
+                "drafter_dispatch", "trace_overhead", "fault_overhead", "engine_iteration",
             ] {
                 println!("\n================ {n} ================");
                 run_named(ctx, n)?;

@@ -22,7 +22,7 @@ use crate::fault::{self, EngineError, FaultInjector, FaultSite};
 use crate::kv_cache::{HostKv, KvManager, OffloadEngine, OffloadJob, PressureAction};
 use crate::metrics::Histogram;
 use crate::perfmodel::{DeviceModel, SimScale};
-use crate::runtime::{ModelRunner, Runtime};
+use crate::runtime::{ArtifactNames, ModelRunner, Runtime};
 use crate::sampling;
 use crate::scheduler::{BucketScheduler, IterComposition, Schedule, ScheduleTrace};
 use crate::spec::{
@@ -47,6 +47,35 @@ struct Suspended {
     drafter: usize,
     admitted_at: Instant,
     sim_admitted_at: f64,
+}
+
+/// Engine-owned staging buffers, cleared and refilled in place each
+/// iteration so steady-state batch composition (admit / draft / verify)
+/// allocates nothing: `clear()` + `resize()` is a memset over retained
+/// capacity.  Fields are shared across phases (the phases run
+/// sequentially), so capacity converges to the largest shape touched.
+#[derive(Default)]
+struct Scratch {
+    /// Token staging: `slots × prompt_pad` (admit), `slots` (draft) or
+    /// `slots × q` (verify).
+    tokens: Vec<i32>,
+    plen: Vec<i32>,
+    pos: Vec<i32>,
+    qv: Vec<i32>,
+    active: Vec<i32>,
+    /// Flattened per-slot sparse index rows for grouped draft launches.
+    idxs: Vec<i32>,
+    /// Slot indices admitted this iteration.
+    newly: Vec<usize>,
+    /// Slot indices that drafted this iteration (across all W groups).
+    stepped: Vec<usize>,
+    /// Slot indices in this verification launch.
+    participating: Vec<usize>,
+    /// One vocab-row copy of the arena logits view — ends the runner
+    /// borrow before sampling mutates the engine.
+    row: Vec<f32>,
+    /// Draft-distribution staging (`softmax_into` target).
+    probs: Vec<f32>,
 }
 
 /// Result of the off-thread verification processing (delayed mode).
@@ -109,7 +138,9 @@ impl SloTracker {
     /// matters: first tokens before ITL (initialises `last_emit`), and
     /// completions last, so a same-iteration retire still records TTFT.
     fn flush(&mut self, now: f64) {
-        for id in std::mem::take(&mut self.ttft_pending) {
+        // Iterate + clear (never drop the `Vec`s) so the pending queues
+        // keep their capacity across iterations — flush runs every step.
+        for &id in &self.ttft_pending {
             if self.ttft_by.contains_key(&id) {
                 continue; // preempt restart: the original TTFT stands
             }
@@ -119,7 +150,8 @@ impl SloTracker {
             self.ttft.record(ttft);
             self.last_emit.insert(id, now);
         }
-        for (id, n) in std::mem::take(&mut self.itl_pending) {
+        self.ttft_pending.clear();
+        for &(id, n) in &self.itl_pending {
             if n == 0 {
                 continue;
             }
@@ -130,13 +162,19 @@ impl SloTracker {
             }
             *last = now;
         }
-        for id in std::mem::take(&mut self.completed_pending) {
+        self.itl_pending.clear();
+        // `forget` needs `&mut self`, so this queue is taken out for the
+        // walk and handed back (same buffer, capacity retained).
+        let done = std::mem::take(&mut self.completed_pending);
+        for &id in &done {
             self.completed += 1;
             if self.ttft_by.get(&id).is_some_and(|t| *t <= self.target_s) {
                 self.within_target += 1;
             }
             self.forget(id);
         }
+        self.completed_pending = done;
+        self.completed_pending.clear();
     }
 
     /// Drop per-request state (cancellation or completion).
@@ -151,6 +189,11 @@ pub struct Engine {
     pub cfg: EngineConfig,
     pub runner: ModelRunner,
     rt: Rc<Runtime>,
+    /// Pre-rendered `draft_w{W}` / `verify_q{Q}` labels for retry/trace
+    /// call sites — the serving loop never formats an artifact name.
+    names: ArtifactNames,
+    /// Reusable staging buffers (see [`Scratch`]).
+    scratch: Scratch,
     queue: VecDeque<Request>,
     slots: Vec<Option<Slot>>,
     buckets: BucketScheduler,
@@ -230,13 +273,16 @@ impl Engine {
         cfg: EngineConfig,
         registry: DrafterRegistry,
     ) -> Result<Engine> {
-        let runner = ModelRunner::new(rt.clone())?;
+        let mut runner = ModelRunner::new(rt.clone())?;
         let m = rt.cfg.model.clone();
         let default_drafter = registry.create(&cfg.drafter, &m)?;
         // A no-speculation default forces k = 0 (verify_q1, no drafting).
         let k = if default_drafter.mode() == DraftMode::Off { 0 } else { cfg.k };
         let mut cfg = cfg;
         cfg.k = k;
+        // Slot-parallel sim kernels follow the engine knob (bit-identical
+        // either way; serial is the zero-allocation reference mode).
+        runner.set_parallel(cfg.parallel);
         let default_drafter: Box<dyn Drafter> =
             if cfg.adaptive_k && default_drafter.mode() != DraftMode::Off {
                 Box::new(AdaptiveDrafter::new(default_drafter, k))
@@ -269,6 +315,8 @@ impl Engine {
         let drafter_kinds = vec![cfg.drafter];
         let mut eng = Engine {
             runner,
+            names: ArtifactNames::new(&m),
+            scratch: Scratch::default(),
             queue: VecDeque::new(),
             slots: (0..m.slots).map(|_| None).collect(),
             buckets: BucketScheduler::new(k.max(1)),
@@ -341,14 +389,15 @@ impl Engine {
         if let Some(i) = self.drafter_kinds.iter().position(|x| *x == kind) {
             return Ok(i);
         }
-        let m = self.rt.cfg.model.clone();
-        let d = self.registry.create(&kind, &m)?;
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
+        let d = self.registry.create(&kind, m)?;
         let d: Box<dyn Drafter> = if self.cfg.adaptive_k && d.mode() != DraftMode::Off {
             Box::new(AdaptiveDrafter::new(d, self.cfg.k))
         } else {
             d
         };
-        d.validate_engine(&m, self.cfg.k)?;
+        d.validate_engine(m, self.cfg.k)?;
         let arts = d.artifacts(self.cfg.k);
         if !arts.is_empty() {
             let refs: Vec<&str> = arts.iter().map(|s| s.as_str()).collect();
@@ -796,10 +845,14 @@ impl Engine {
                 self.kv.host.insert(id, kv);
             }
         }
+        // Consumed-once aggregates MOVE into the report (`mem::take` /
+        // `mem::replace`) instead of deep-cloning histograms and trace
+        // journals; the engine keeps fresh zeroed accounting so a server
+        // that reports mid-flight continues recording cleanly.
         let slo = SloReport {
             ttft_target_s: self.cfg.ttft_slo_s,
-            ttft_sim_s: self.slo.ttft.clone(),
-            itl_sim_s: self.slo.itl.clone(),
+            ttft_sim_s: std::mem::take(&mut self.slo.ttft),
+            itl_sim_s: std::mem::take(&mut self.slo.itl),
             completed_within_ttft: self.slo.within_target,
             completed: self.slo.completed,
             goodput_rps: self.slo.within_target as f64 / self.sim_s.max(1e-9),
@@ -807,12 +860,13 @@ impl Engine {
             kv_offloads: self.kv.stats.offload_events,
             kv_reloads: self.kv.stats.reload_events,
         };
-        let accept_by: BTreeMap<String, AcceptStats> = self
-            .drafter_names
-            .iter()
-            .cloned()
-            .zip(self.accept_by.iter().cloned())
-            .collect();
+        let accept_by: BTreeMap<String, AcceptStats> = {
+            let taken = std::mem::take(&mut self.accept_by);
+            self.accept_by = (0..taken.len())
+                .map(|_| AcceptStats::new(self.cfg.k.max(1)))
+                .collect();
+            self.drafter_names.iter().cloned().zip(taken).collect()
+        };
         RunReport {
             name: self.drafter_names[0].clone(),
             iterations: self.iter,
@@ -828,15 +882,15 @@ impl Engine {
             slot_degradations: self.slot_degradations,
             slot_promotions: self.slot_promotions,
             tokens_generated: self.tokens_generated,
-            accept: self.accept.clone(),
+            accept: std::mem::replace(&mut self.accept, AcceptStats::new(self.cfg.k.max(1))),
             accept_by,
-            kv: self.kv.stats.clone(),
+            kv: std::mem::take(&mut self.kv.stats),
             offload: self.offload.stats(),
-            trace: self.trace.clone(),
-            step_stats: self.runner.stats.clone(),
+            trace: std::mem::take(&mut self.trace),
+            step_stats: std::mem::take(&mut self.runner.stats),
             mean_kv_util: self.kv_util_sum / self.iter.max(1) as f64,
             outputs: std::mem::take(&mut self.outputs),
-            request_latency_s: self.latency.clone(),
+            request_latency_s: std::mem::take(&mut self.latency),
             slo,
         }
     }
@@ -981,12 +1035,16 @@ impl Engine {
                 return Ok(0);
             }
         }
-        let m = self.mcfg().clone();
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
         self.tracer.begin(names::ADMIT, Track::Engine, self.sim_s);
-        let mut tokens = vec![0i32; m.slots * m.prompt_pad];
-        let mut plen = vec![1i32; m.slots];
-        let mut active = vec![0i32; m.slots];
-        let mut newly: Vec<usize> = Vec::new();
+        self.scratch.tokens.clear();
+        self.scratch.tokens.resize(m.slots * m.prompt_pad, 0);
+        self.scratch.plen.clear();
+        self.scratch.plen.resize(m.slots, 1);
+        self.scratch.active.clear();
+        self.scratch.active.resize(m.slots, 0);
+        self.scratch.newly.clear();
 
         while let Some(req) = self.queue.front() {
             let p = req.prompt.len().min(m.prompt_pad);
@@ -1009,10 +1067,10 @@ impl Engine {
                 Schedule::Lockstep => self.buckets.assign_to(0),
             };
             for (j, &t) in req.prompt.iter().take(p).enumerate() {
-                tokens[idx * m.prompt_pad + j] = t;
+                self.scratch.tokens[idx * m.prompt_pad + j] = t;
             }
-            plen[idx] = p as i32;
-            active[idx] = 1;
+            self.scratch.plen[idx] = p as i32;
+            self.scratch.active[idx] = 1;
             self.kv.admit(rid, p);
             if self.tracer.enabled() {
                 self.tracer.instant(
@@ -1028,9 +1086,9 @@ impl Engine {
                     vec![("req", rid.into()), ("tokens", p.into())],
                 );
             }
-            let pol = self.drafters[di].index_policy(&m);
+            let pol = self.drafters[di].index_policy(m);
             let mode = self.drafters[di].mode();
-            let draft_w = self.drafters[di].draft_budget(&m);
+            let draft_w = self.drafters[di].draft_budget(m);
             let refresh_dump = self.drafters[di].wants_dump_refresh();
             let nord = self.drafters[di].ngram_order();
             let slot = Slot {
@@ -1065,44 +1123,57 @@ impl Engine {
             }) {
                 self.note_drafter_fault(idx, &e);
             }
-            newly.push(idx);
+            self.scratch.newly.push(idx);
         }
-        if newly.is_empty() {
+        if self.scratch.newly.is_empty() {
             if self.tracer.hot() {
                 self.tracer
                     .end(names::ADMIT, Track::Engine, self.sim_s, vec![("admitted", 0usize.into())]);
             }
             return Ok(0);
         }
-        comp.prefilling = newly.len();
-        comp.gemm_rows += newly.len() * m.prompt_pad;
-        comp.attn_bytes += newly.len() * m.prompt_pad * m.kv_bytes_per_token();
+        comp.prefilling = self.scratch.newly.len();
+        comp.gemm_rows += self.scratch.newly.len() * m.prompt_pad;
+        comp.attn_bytes += self.scratch.newly.len() * m.prompt_pad * m.kv_bytes_per_token();
 
-        let logits = {
+        {
             let runner = &mut self.runner;
+            let sc = &self.scratch;
             Self::step_with_retry(
                 &mut self.injector,
                 &mut self.sim_s,
                 &mut self.fault_retries,
                 &mut self.tracer,
                 "prefill",
-                || runner.prefill(&tokens, &plen, &active),
-            )?
-        };
+                || runner.prefill(&sc.tokens, &sc.plen, &sc.active),
+            )?;
+        }
         let v = m.vocab;
+        // `start_round` below needs `&mut self`, so walk a taken copy of
+        // the admit list and hand the staging buffer back after.
+        let newly = std::mem::take(&mut self.scratch.newly);
         for &idx in &newly {
+            // Copy this slot's logits row out of the arena view so the
+            // runner borrow ends before sampling/session mutation below.
+            self.scratch.row.clear();
+            self.scratch
+                .row
+                .extend_from_slice(&self.runner.logits()[idx * v..(idx + 1) * v]);
+            let t0 = sampling::sample_logits(&self.scratch.row, self.cfg.temperature, &mut self.rng)
+                as i32;
             let slot = self.slots[idx]
                 .as_mut()
                 .expect("newly admitted slot is live");
-            let row = &logits[idx * v..(idx + 1) * v];
-            let t0 = sampling::sample_logits(row, self.cfg.temperature, &mut self.rng) as i32;
             slot.output.push(t0);
             slot.gen_count = 1;
             slot.pending = t0;
             self.tokens_generated += 1;
-            let mut hist = slot.req.prompt.clone();
-            hist.push(t0);
-            slot.ngram.extend(&hist);
+            if slot.ngram.max_n > 0 {
+                // Only n-gram-consuming drafters pay the history build.
+                let mut hist = slot.req.prompt.clone();
+                hist.push(t0);
+                slot.ngram.extend(&hist);
+            }
             // Begin the first round, aligned to the slot's bucket.
             self.start_round(idx, true);
             // The sampled first token streams out immediately (TTFT).
@@ -1120,15 +1191,16 @@ impl Engine {
             }
             Self::notify_session(&self.sessions, &mut self.stamp_pending, slot, None);
         }
+        self.scratch.newly = newly;
         if self.tracer.hot() {
             self.tracer.end(
                 names::ADMIT,
                 Track::Engine,
                 self.sim_s,
-                vec![("admitted", newly.len().into())],
+                vec![("admitted", self.scratch.newly.len().into())],
             );
         }
-        Ok(newly.len())
+        Ok(self.scratch.newly.len())
     }
 
     /// Start a speculation round on slot `idx`: ask the slot's drafter to
@@ -1227,7 +1299,8 @@ impl Engine {
     }
 
     fn try_reloads(&mut self) -> Result<()> {
-        let m = self.mcfg().clone();
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
         loop {
             if self.free_slot().is_none() {
                 return Ok(());
@@ -1330,7 +1403,7 @@ impl Engine {
             };
             let di = sus.drafter;
             let mode = self.drafters[di].mode();
-            let draft_w = self.drafters[di].draft_budget(&m);
+            let draft_w = self.drafters[di].draft_budget(m);
             let refresh_dump = self.drafters[di].wants_dump_refresh();
             let mut ngram = NGramIndex::new(self.drafters[di].ngram_order());
             ngram.extend(&sus.ngram_hist);
@@ -1388,8 +1461,10 @@ impl Engine {
         if actions.is_empty() {
             return Ok(());
         }
-        // One pool dump serves all victims this iteration.
-        let mut pool: Option<(Vec<f32>, Vec<f32>)> = None;
+        // One pool preparation serves all victims this iteration; the
+        // rows are then borrowed straight out of the runner's host-side
+        // pools (`kv_pools`) — no full-pool copy.
+        let mut pool_ready = false;
         for act in actions {
             match act {
                 PressureAction::Offload { req_id } => {
@@ -1413,34 +1488,41 @@ impl Engine {
                         }
                         continue;
                     }
-                    if pool.is_none() {
+                    if !pool_ready {
                         let runner = &mut self.runner;
-                        pool = Some(Self::step_with_retry(
+                        Self::step_with_retry(
                             &mut self.injector,
                             &mut self.sim_s,
                             &mut self.fault_retries,
                             &mut self.tracer,
                             "kv_dump",
-                            || runner.kv_dump(),
-                        )?);
+                            || runner.kv_dump_prepare(),
+                        )?;
+                        pool_ready = true;
                     }
-                    let (ref pk, ref pv) = pool.as_ref().expect("pool dumped above");
-                    let (rows_k, rows_v) = self.extract_slot_rows(pk, pv, idx);
+                    let (rows_k, rows_v) = {
+                        let (pk, pv) = self.runner.kv_pools();
+                        self.extract_slot_rows(pk, pv, idx)
+                    };
                     let slot = self.slots[idx]
                         .take()
                         .expect("slot_of returned a live slot index");
                     self.buckets.release(slot.bucket.min(self.buckets.n_buckets() - 1));
                     let len = slot.len;
                     let bytes = (rows_k.len() + rows_v.len()) * 4;
+                    // `full_context` reads prompt + output, so build it
+                    // before the owned fields MOVE into `Suspended` (the
+                    // slot was taken — no reason to clone them).
+                    let ngram_hist = slot.full_context();
                     self.suspended.insert(
                         req_id,
                         Suspended {
                             len,
                             gen_count: slot.gen_count,
                             pending: slot.pending,
-                            output: slot.output.clone(),
-                            pillar: slot.pillar.clone(),
-                            ngram_hist: slot.full_context(),
+                            output: slot.output,
+                            pillar: slot.pillar,
+                            ngram_hist,
                             drafter: slot.drafter,
                             admitted_at: slot.admitted_at,
                             sim_admitted_at: slot.sim_admitted_at,
@@ -1544,30 +1626,35 @@ impl Engine {
         if groups.is_empty() {
             return Ok(0);
         }
-        let m = self.mcfg().clone();
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
         let mut launches = 0u32;
-        let mut stepped: Vec<usize> = Vec::new();
+        self.scratch.stepped.clear();
         for (&w, participating) in &groups {
             self.tracer.begin(names::DRAFT, Track::Engine, self.sim_s);
             let t_cpu = Instant::now();
-            let mut token = vec![0i32; m.slots];
-            let mut pos = vec![0i32; m.slots];
-            let mut idxs = vec![0i32; m.slots * m.layers * m.kv_heads * w];
-            let mut active = vec![0i32; m.slots];
             let per_slot = m.layers * m.kv_heads * w;
+            self.scratch.tokens.clear();
+            self.scratch.tokens.resize(m.slots, 0);
+            self.scratch.pos.clear();
+            self.scratch.pos.resize(m.slots, 0);
+            self.scratch.idxs.clear();
+            self.scratch.idxs.resize(m.slots * per_slot, 0);
+            self.scratch.active.clear();
+            self.scratch.active.resize(m.slots, 0);
             let mut sel_s = 0.0;
             for &i in participating {
                 let slot = self.slots[i].as_ref().expect("grouped above from live slots");
-                token[i] = slot.pending;
-                pos[i] = slot.len as i32;
+                self.scratch.tokens[i] = slot.pending;
+                self.scratch.pos[i] = slot.len as i32;
                 // Compose straight into the flattened index buffer — no
                 // intermediate Vec + copy.
                 let base = i * per_slot;
                 let t_sel = Instant::now();
                 slot.pillar
-                    .compose_into(&mut idxs[base..base + per_slot], slot.len + 1);
+                    .compose_into(&mut self.scratch.idxs[base..base + per_slot], slot.len + 1);
                 sel_s += t_sel.elapsed().as_secs_f64();
-                active[i] = 1;
+                self.scratch.active[i] = 1;
             }
             self.runner.stats.note_host("pillar_select", sel_s);
             comp.drafting += participating.len();
@@ -1575,34 +1662,48 @@ impl Engine {
             comp.attn_bytes += participating.len() * w * m.kv_bytes_per_token();
             *cpu_s += t_cpu.elapsed().as_secs_f64();
 
-            let out = {
+            {
                 let runner = &mut self.runner;
-                let artifact = format!("draft_w{w}");
+                let sc = &self.scratch;
+                let artifact = self
+                    .names
+                    .draft(w)
+                    .expect("slot draft_w comes from a validated variant");
                 Self::step_with_retry(
                     &mut self.injector,
                     &mut self.sim_s,
                     &mut self.fault_retries,
                     &mut self.tracer,
-                    &artifact,
-                    || runner.draft(w, &token, &pos, &idxs, &active),
-                )?
-            };
+                    artifact,
+                    || runner.draft(w, &sc.tokens, &sc.pos, &sc.idxs, &sc.active),
+                )?;
+            }
             launches += 1;
 
             let t_cpu = Instant::now();
             let v = m.vocab;
             let temp = self.cfg.temperature;
             for &i in participating {
-                let row = out.logits[i * v..(i + 1) * v].to_vec();
+                // Row copy ends the arena borrow before engine mutation;
+                // softmax refills the scratch distribution in place.
+                self.scratch.row.clear();
+                self.scratch
+                    .row
+                    .extend_from_slice(&self.runner.logits()[i * v..(i + 1) * v]);
+                if temp > 0.0 {
+                    let Scratch { row, probs, .. } = &mut self.scratch;
+                    sampling::softmax_into(row, temp, probs);
+                }
+                let d = sampling::sample_logits(&self.scratch.row, temp, &mut self.rng) as i32;
                 let slot = self.slots[i].as_mut().expect("grouped above from live slots");
-                let d = sampling::sample_logits(&row, temp, &mut self.rng) as i32;
                 slot.drafts.push(d);
                 if temp > 0.0 {
-                    slot.draft_probs.extend(sampling::softmax(&row, temp));
+                    slot.draft_probs.extend_from_slice(&self.scratch.probs);
                 } else {
-                    let mut onehot = vec![0.0f32; v];
-                    onehot[d as usize] = 1.0;
-                    slot.draft_probs.extend(onehot);
+                    // One-hot written straight into the slot's buffer.
+                    let base = slot.draft_probs.len();
+                    slot.draft_probs.resize(base + v, 0.0);
+                    slot.draft_probs[base + d as usize] = 1.0;
                 }
                 slot.pending = d;
                 slot.len += 1; // the fed token's KV row was written
@@ -1622,13 +1723,13 @@ impl Engine {
                     vec![("w", w.into()), ("slots", participating.len().into())],
                 );
             }
-            stepped.extend_from_slice(participating);
+            self.scratch.stepped.extend_from_slice(participating);
         }
 
         // Per-drafter post-step hooks over the slots that just drafted
         // (oracle: dense q=1 pass + exact-score refresh).
         let mut by_drafter: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for &i in &stepped {
+        for &i in &self.scratch.stepped {
             if let Some(slot) = self.slots[i].as_ref() {
                 by_drafter.entry(slot.drafter).or_default().push(i);
             }
@@ -1637,7 +1738,7 @@ impl Engine {
         for (di, idxs) in by_drafter {
             let mut host = DraftHost {
                 runner: &mut self.runner,
-                m: &m,
+                m,
                 k: self.cfg.k,
                 temperature: self.cfg.temperature,
                 eagle_ctx,
@@ -1670,8 +1771,9 @@ impl Engine {
         comp: &mut IterComposition,
         cpu_s: &mut f64,
     ) -> Result<u32> {
-        let m = self.mcfg().clone();
-        let eagle_ctx = self.rt.cfg.eagle.ctx;
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
+        let eagle_ctx = rt.cfg.eagle.ctx;
         let mut launches = 0u32;
         for di in 0..self.drafters.len() {
             if self.drafters[di].mode() != DraftMode::Proposal {
@@ -1703,7 +1805,7 @@ impl Engine {
             } else {
                 let mut host = DraftHost {
                     runner: &mut self.runner,
-                    m: &m,
+                    m,
                     k: self.cfg.k,
                     temperature: self.cfg.temperature,
                     eagle_ctx,
@@ -1799,34 +1901,39 @@ impl Engine {
     /// Dense verification for all ReadyVerify slots — one launch serves
     /// every drafter (per-slot `qv` covers mixed speculation lengths).
     fn verify_step(&mut self, comp: &mut IterComposition, cpu_s: &mut f64) -> Result<u32> {
-        let m = self.mcfg().clone();
+        let rt = self.rt.clone();
+        let m = &rt.cfg.model;
         let q = self.cfg.k + 1;
         let t_cpu = Instant::now();
-        let mut tokens = vec![0i32; m.slots * q];
-        let mut pos = vec![0i32; m.slots];
-        let mut qv = vec![1i32; m.slots];
-        let mut active = vec![0i32; m.slots];
-        let mut participating = Vec::new();
+        self.scratch.tokens.clear();
+        self.scratch.tokens.resize(m.slots * q, 0);
+        self.scratch.pos.clear();
+        self.scratch.pos.resize(m.slots, 0);
+        self.scratch.qv.clear();
+        self.scratch.qv.resize(m.slots, 1);
+        self.scratch.active.clear();
+        self.scratch.active.resize(m.slots, 0);
+        self.scratch.participating.clear();
         for i in 0..m.slots {
             let Some(slot) = self.slots[i].as_ref() else { continue };
             if slot.phase != Phase::ReadyVerify {
                 continue;
             }
-            participating.push(i);
-            tokens[i * q] = slot.anchor;
+            self.scratch.participating.push(i);
+            self.scratch.tokens[i * q] = slot.anchor;
             for (j, &d) in slot.drafts.iter().enumerate().take(q - 1) {
-                tokens[i * q + 1 + j] = d;
+                self.scratch.tokens[i * q + 1 + j] = d;
             }
-            qv[i] = (1 + slot.drafts.len()) as i32;
-            pos[i] = slot.round_start_len as i32;
-            active[i] = 1;
+            self.scratch.qv[i] = (1 + slot.drafts.len()) as i32;
+            self.scratch.pos[i] = slot.round_start_len as i32;
+            self.scratch.active[i] = 1;
         }
-        if participating.is_empty() {
+        if self.scratch.participating.is_empty() {
             return Ok(0);
         }
         self.tracer.begin(names::VERIFY, Track::Engine, self.sim_s);
-        comp.verifying = participating.len();
-        for &i in &participating {
+        comp.verifying = self.scratch.participating.len();
+        for &i in &self.scratch.participating {
             let slot = self.slots[i].as_ref().expect("collected above from live slots");
             comp.gemm_rows += 1 + slot.drafts.len();
             comp.attn_bytes +=
@@ -1834,18 +1941,22 @@ impl Engine {
         }
         *cpu_s += t_cpu.elapsed().as_secs_f64();
 
-        let out = {
+        {
             let runner = &mut self.runner;
-            let artifact = format!("verify_q{q}");
+            let sc = &self.scratch;
+            // k+1 is builder-validated against the compiled variants; the
+            // permissive constructor path falls back to a generic label
+            // and lets `verify` surface the artifact error as before.
+            let artifact = self.names.verify(q).unwrap_or("verify");
             Self::step_with_retry(
                 &mut self.injector,
                 &mut self.sim_s,
                 &mut self.fault_retries,
                 &mut self.tracer,
-                &artifact,
-                || runner.verify(q, &tokens, &pos, &qv, &active),
-            )?
-        };
+                artifact,
+                || runner.verify(q, &sc.tokens, &sc.pos, &sc.qv, &sc.active),
+            )?;
+        }
 
         // Process: acceptance + pillar refresh.  In delayed mode the CPU
         // part runs on the worker pool and is consumed next iteration.
@@ -1855,15 +1966,18 @@ impl Engine {
         let temp = self.cfg.temperature;
 
         let mut inline: Vec<Promise<VerifyWork>> = Vec::new();
-        for &i in &participating {
+        let mut serial: Vec<VerifyWork> = Vec::new();
+        for &i in &self.scratch.participating {
             let slot = self.slots[i].as_ref().expect("collected above from live slots");
             let drafts = slot.drafts.clone();
             let dprobs = slot.draft_probs.clone();
-            let logits = out.logits[i * q * v..(i + 1) * q * v].to_vec();
+            // Off-thread jobs need owned rows (the arena view cannot cross
+            // the pool); the copies are the price of the overlap.
+            let logits = self.runner.logits()[i * q * v..(i + 1) * q * v].to_vec();
             // Whether the score dump feeds selection is the slot's
             // drafter's call (PillarAttn: yes; windows/proposals: no).
             let dump = if slot.refresh_dump {
-                Some(out.dump[i * per_dump..(i + 1) * per_dump].to_vec())
+                Some(self.runner.dump()[i * per_dump..(i + 1) * per_dump].to_vec())
             } else {
                 None
             };
@@ -1902,16 +2016,26 @@ impl Engine {
                     .expect("collected above from live slots")
                     .phase = Phase::AwaitVerify;
                 self.delayed.push(Promise::spawn_on(&self.pool, job));
-            } else {
+            } else if self.cfg.parallel {
                 // Immediate mode still fans the per-slot acceptance +
                 // refresh work out across the pool; results are collected
                 // (in deterministic slot order) right below.
                 inline.push(Promise::spawn_on(&self.pool, job));
+            } else {
+                // Serial mode runs the identical closure synchronously —
+                // bit-identical results without touching the pool (the
+                // RNG seed was drawn in the same per-slot order above).
+                serial.push(job());
             }
         }
-        if !inline.is_empty() {
+        if !inline.is_empty() || !serial.is_empty() {
             let mut c = 0.0;
             let mut sel = 0.0;
+            for w in serial {
+                c += w.cpu_s;
+                sel += w.select_s;
+                self.apply_verify(w)?;
+            }
             for p in inline {
                 let w = p.get();
                 c += w.cpu_s;
@@ -1922,7 +2046,12 @@ impl Engine {
                 self.runner.stats.note_host("pillar_select", sel);
             }
             *cpu_s += c;
+            // `post_verify` needs `&mut self`; lend it the boundary list
+            // and put the staging buffer back after (it never touches the
+            // verify scratch).
+            let participating = std::mem::take(&mut self.scratch.participating);
             self.post_verify(&participating)?;
+            self.scratch.participating = participating;
         }
         if self.cfg.delayed_verify && self.tracer.enabled() && self.overlap_open.is_none() {
             // The CPU-side acceptance/refresh work now runs concurrently
@@ -1934,7 +2063,7 @@ impl Engine {
                 Track::Overlap,
                 self.iter,
                 self.sim_s,
-                vec![("jobs", participating.len().into())],
+                vec![("jobs", self.scratch.participating.len().into())],
             );
         }
         if self.tracer.hot() {
@@ -1943,7 +2072,10 @@ impl Engine {
                 names::VERIFY,
                 Track::Engine,
                 self.sim_s,
-                vec![("slots", participating.len().into()), ("delayed", delayed.into())],
+                vec![
+                    ("slots", self.scratch.participating.len().into()),
+                    ("delayed", delayed.into()),
+                ],
             );
         }
         Ok(1)
@@ -2021,18 +2153,20 @@ impl Engine {
 
         // Accepted tokens + correction/bonus token enter the output.
         let take = w.accepted.min(slot.remaining());
+        let out_base = slot.output.len();
         for j in 0..take {
             slot.output.push(slot.drafts[j]);
         }
-        let mut newly: Vec<i32> = slot.drafts[..take].to_vec();
         slot.gen_count += take;
         if slot.remaining() > 0 {
             slot.output.push(w.next_token);
             slot.gen_count += 1;
-            newly.push(w.next_token);
         }
-        self.tokens_generated += newly.len() as u64;
-        slot.ngram.extend(&newly);
+        let n_new = slot.output.len() - out_base;
+        self.tokens_generated += n_new as u64;
+        // The n-gram index reads the new tokens straight off the output
+        // tail — no staging Vec (order-0 indexes skip even the hashing).
+        slot.ngram.extend(&slot.output[out_base..]);
         slot.pending = w.next_token;
         slot.len = new_len;
         if let Some(p) = w.pillar {
@@ -2077,8 +2211,8 @@ impl Engine {
                 );
             }
         }
-        if !newly.is_empty() {
-            self.slo.itl_pending.push((id, newly.len()));
+        if n_new > 0 {
+            self.slo.itl_pending.push((id, n_new));
         }
         // Stream the accepted tokens out before retirement/pressure run.
         Self::notify_session(

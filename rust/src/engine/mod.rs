@@ -105,6 +105,13 @@ pub struct EngineConfig {
     /// Disabled by default: an empty plan costs one branch per check site
     /// and leaves outputs bit-identical (CI-gated by `fault_overhead`).
     pub fault: crate::fault::FaultConfig,
+    /// Slot-parallel execution (default on): sim kernels split per-slot
+    /// work across the runner's thread pool, and immediate-mode verify
+    /// processing fans out across the engine pool.  Off forces the fully
+    /// serial path — **bit-identical outputs** either way (the arena
+    /// bit-identity suite gates on it); serial is also the reference mode
+    /// for the zero-allocation bench gate.
+    pub parallel: bool,
 }
 
 impl EngineConfig {
@@ -126,6 +133,7 @@ impl EngineConfig {
             trace: crate::trace::TraceConfig::default(),
             ttft_slo_s: 1.0,
             fault: crate::fault::FaultConfig::default(),
+            parallel: true,
         }
     }
 
@@ -257,6 +265,15 @@ impl EngineConfigBuilder {
     /// CLI: `--fault-plan "runtime:0.01,kv_reload:0.05" --fault-seed 42`.
     pub fn faults(mut self, f: crate::fault::FaultConfig) -> Self {
         self.cfg.fault = f;
+        self
+    }
+
+    /// Toggle slot-parallel sim kernels + pooled verify processing.
+    /// Outputs are bit-identical either way (gated by `tests/arena.rs`);
+    /// `parallel(false)` is the zero-allocation reference mode used by
+    /// the `engine_iteration` bench gate.
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.cfg.parallel = on;
         self
     }
 

@@ -1,0 +1,147 @@
+//! Arena-backed step buffers shared by every runtime backend.
+//!
+//! The serving hot loop calls a runner step function (draft / verify /
+//! sparse-verify / eagle / prefill) several times per iteration.  Before
+//! the raw-speed pass each call allocated fresh output `Vec`s (logits plus,
+//! for verify, a `slots × layers × kv_heads × max_seq` attention dump) —
+//! pure allocator churn, since the consumer always finishes with the
+//! buffers before the next step runs.  [`StepArena`] replaces that with
+//! buffers sized **once** from [`ModelConfig`] at runner construction:
+//! each step writes into the arena and the caller reads borrowed views
+//! back through `ModelRunner::logits()` / `ModelRunner::dump()`.
+//!
+//! Capacity is the worst case over every step shape, so no step ever
+//! resizes:
+//!
+//! * `logits`: `slots × q_max × vocab`, where `q_max` covers every
+//!   compiled `verify_q` variant, the TriForce sparse-verify shape
+//!   (`spec_k + 1`) and the single-row draft/prefill/eagle shape.
+//! * `dump`: `slots × layers × kv_heads × max_seq` (dense verify only).
+//! * `vis`: one visibility bitmask word-row per slot
+//!   (`ceil(max_seq / 64)` words) — the sparse-attention kernels build it
+//!   once per call and test positions in O(1) instead of scanning the
+//!   index row per position.
+//!
+//! [`ArtifactNames`] is the other per-call allocation killed here: step
+//! functions used to `format!("draft_w{w}")` / `format!("verify_q{q}")` on
+//! every invocation; the names are a pure function of the config's variant
+//! lists, so they are rendered once up front and borrowed thereafter.
+
+use std::collections::BTreeMap;
+
+use crate::model::ModelConfig;
+
+/// Reusable step-output buffers (see module docs).  Owned by the
+/// `ModelRunner` of each backend; views are handed out by the runner's
+/// `logits()` / `dump()` accessors after a step fills them.
+pub struct StepArena {
+    pub(crate) logits: Vec<f32>,
+    pub(crate) dump: Vec<f32>,
+    /// Per-slot visibility bitmasks, `words_per_slot` u64 words per slot.
+    pub(crate) vis: Vec<u64>,
+    pub(crate) words_per_slot: usize,
+    /// Valid prefix of `logits` written by the most recent step.
+    pub(crate) logits_len: usize,
+    /// Valid prefix of `dump` written by the most recent dense verify.
+    pub(crate) dump_len: usize,
+}
+
+impl StepArena {
+    pub fn new(m: &ModelConfig) -> Self {
+        let q_max = m
+            .verify_q_variants
+            .iter()
+            .copied()
+            .chain([m.spec_k + 1, 1])
+            .max()
+            .unwrap_or(1);
+        let words_per_slot = m.max_seq.div_ceil(64);
+        StepArena {
+            logits: vec![0.0; m.slots * q_max * m.vocab],
+            dump: vec![0.0; m.slots * m.layers * m.kv_heads * m.max_seq],
+            vis: vec![0; m.slots * words_per_slot],
+            words_per_slot,
+            logits_len: 0,
+            dump_len: 0,
+        }
+    }
+
+    /// The logits view of the most recent step.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits[..self.logits_len]
+    }
+
+    /// The attention-mass dump of the most recent dense verify.
+    pub fn dump(&self) -> &[f32] {
+        &self.dump[..self.dump_len]
+    }
+
+    /// Total capacity in f32 elements (steady-state allocation tests pin
+    /// this against reallocation).
+    pub fn capacity_elems(&self) -> usize {
+        self.logits.capacity() + self.dump.capacity()
+    }
+}
+
+/// Pre-rendered artifact names for every compiled variant, so the hot
+/// path never formats a name.  Misses (a `w`/`q` outside the config's
+/// variant lists) are a validation error in every backend, so lookups on
+/// the serving path always hit.
+pub struct ArtifactNames {
+    draft: BTreeMap<usize, String>,
+    verify: BTreeMap<usize, String>,
+}
+
+impl ArtifactNames {
+    pub fn new(m: &ModelConfig) -> Self {
+        let draft = m
+            .draft_w_variants
+            .iter()
+            .map(|&w| (w, format!("draft_w{w}")))
+            .collect();
+        let verify = m
+            .verify_q_variants
+            .iter()
+            .map(|&q| (q, format!("verify_q{q}")))
+            .collect();
+        ArtifactNames { draft, verify }
+    }
+
+    pub fn draft(&self, w: usize) -> Option<&str> {
+        self.draft.get(&w).map(String::as_str)
+    }
+
+    pub fn verify(&self, q: usize) -> Option<&str> {
+        self.verify.get(&q).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemConfig;
+
+    #[test]
+    fn arena_covers_every_step_shape() {
+        let m = SystemConfig::synthetic("a").model;
+        let a = StepArena::new(&m);
+        let q_max = m.verify_q_variants.iter().copied().max().unwrap().max(m.spec_k + 1);
+        assert!(a.logits.len() >= m.slots * q_max * m.vocab);
+        assert_eq!(a.dump.len(), m.slots * m.layers * m.kv_heads * m.max_seq);
+        assert_eq!(a.vis.len(), m.slots * m.max_seq.div_ceil(64));
+        assert!(a.logits().is_empty(), "no step ran yet");
+    }
+
+    #[test]
+    fn names_cover_config_variants() {
+        let m = SystemConfig::synthetic("a").model;
+        let n = ArtifactNames::new(&m);
+        for &w in &m.draft_w_variants {
+            assert_eq!(n.draft(w).unwrap(), format!("draft_w{w}"));
+        }
+        for &q in &m.verify_q_variants {
+            assert_eq!(n.verify(q).unwrap(), format!("verify_q{q}"));
+        }
+        assert!(n.draft(63).is_none());
+    }
+}

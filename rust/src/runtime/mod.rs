@@ -20,9 +20,11 @@
 //! identically against either; raw artifact execution (`Runtime::execute`)
 //! and the Pallas compose-proof paths are `pjrt`-only.
 
+mod arena;
 mod stats;
 
-pub use stats::{DraftOut, PhaseTimes, StepStats, VerifyOut};
+pub use arena::{ArtifactNames, StepArena};
+pub use stats::{PhaseTimes, StepStats};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -33,5 +35,7 @@ pub use self::{pjrt::Runtime, runner::ModelRunner};
 
 #[cfg(not(feature = "pjrt"))]
 mod sim;
+#[cfg(not(feature = "pjrt"))]
+pub use sim::reference;
 #[cfg(not(feature = "pjrt"))]
 pub use sim::{Artifact, Buffer, ModelRunner, Runtime};

@@ -4,15 +4,21 @@
 //! the two KV pools, which are threaded functionally through every step —
 //! each execute returns fresh pool buffers that replace the old ones, so
 //! the KV-cache never crosses the host boundary on the request path
-//! (offloading uses `kv_dump`/`kv_load`, which is the deliberate,
+//! (offloading uses `kv_dump_prepare`/`kv_pools`, which is the deliberate,
 //! bandwidth-modelled host transfer).
+//!
+//! Signatures mirror the sim backend's arena API: steps fill the
+//! [`StepArena`] and callers read `logits()` / `dump()` views.  On this
+//! backend the fetch from device already materialises a host `Vec`, which
+//! lands in the arena so the view lifetimes and zeroing semantics are
+//! identical to the fallback.
 
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
-use super::{DraftOut, Runtime, StepStats, VerifyOut};
+use super::{ArtifactNames, Runtime, StepArena, StepStats};
 
 pub struct ModelRunner {
     pub rt: Rc<Runtime>,
@@ -20,6 +26,11 @@ pub struct ModelRunner {
     eagle_weights: Option<xla::PjRtBuffer>,
     kv_k: xla::PjRtBuffer,
     kv_v: xla::PjRtBuffer,
+    arena: StepArena,
+    names: ArtifactNames,
+    /// Host staging for `kv_dump_prepare` → `kv_pools` (offload path).
+    host_k: Vec<f32>,
+    host_v: Vec<f32>,
     pub stats: StepStats,
 }
 
@@ -40,18 +51,50 @@ impl ModelRunner {
         let dims = [m.layers, m.slots, m.max_seq, m.kv_heads, m.head_dim];
         let kv_k = rt.upload_f32(&zeros, &dims)?;
         let kv_v = rt.upload_f32(&zeros, &dims)?;
+        let arena = StepArena::new(m);
+        let names = ArtifactNames::new(m);
         Ok(Self {
             rt,
             weights,
             eagle_weights: None,
             kv_k,
             kv_v,
+            arena,
+            names,
+            host_k: Vec::new(),
+            host_v: Vec::new(),
             stats: StepStats::default(),
         })
     }
 
     fn m(&self) -> &crate::model::ModelConfig {
         &self.rt.cfg.model
+    }
+
+    /// No-op on this backend: per-slot parallelism happens inside the XLA
+    /// executable, not in host code.  Kept so engine code toggling the
+    /// fallback's slot-parallel fill compiles unchanged.
+    pub fn set_parallel(&mut self, _on: bool) {}
+
+    pub fn parallel(&self) -> bool {
+        true
+    }
+
+    /// The logits written by the most recent step: `[S, V]` for
+    /// prefill/draft/eagle, `[S, Q, V]` for (sparse-)verify.
+    pub fn logits(&self) -> &[f32] {
+        self.arena.logits()
+    }
+
+    /// The `[S, L, Hkv, T]` attention-mass dump of the most recent dense
+    /// verify.
+    pub fn dump(&self) -> &[f32] {
+        self.arena.dump()
+    }
+
+    fn stash_logits(&mut self, logits: Vec<f32>) {
+        self.arena.logits[..logits.len()].copy_from_slice(&logits);
+        self.arena.logits_len = logits.len();
     }
 
     /// Zero both KV pools (between benchmark phases).
@@ -69,8 +112,8 @@ impl ModelRunner {
     // ------------------------------------------------------------------
 
     /// Prefill the prompt chunk for newly-admitted slots.
-    /// tokens: [S*P], plen/active: [S].  Returns last-token logits [S*V].
-    pub fn prefill(&mut self, tokens: &[i32], plen: &[i32], active: &[i32]) -> Result<Vec<f32>> {
+    /// tokens: [S*P], plen/active: [S].  Fills last-token logits [S*V].
+    pub fn prefill(&mut self, tokens: &[i32], plen: &[i32], active: &[i32]) -> Result<()> {
         let m = self.m();
         let (s, p) = (m.slots, m.prompt_pad);
         debug_assert_eq!(tokens.len(), s * p);
@@ -90,6 +133,7 @@ impl ModelRunner {
         self.kv_v = out.pop().expect("output arity checked above");
         self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
+        self.stash_logits(logits);
         let t3 = Instant::now();
         self.stats.add(
             "prefill",
@@ -97,11 +141,11 @@ impl ModelRunner {
             (t2 - t1).as_secs_f64(),
             (t3 - t2).as_secs_f64(),
         );
-        Ok(logits)
+        Ok(())
     }
 
     /// One sparse draft step (budget `w` must be a compiled variant).
-    /// token/pos/active: [S]; idx: [S*L*Hkv*w] (-1 holes).
+    /// token/pos/active: [S]; idx: [S*L*Hkv*w] (-1 holes).  Fills [S*V].
     pub fn draft(
         &mut self,
         w: usize,
@@ -109,11 +153,15 @@ impl ModelRunner {
         pos: &[i32],
         idx: &[i32],
         active: &[i32],
-    ) -> Result<DraftOut> {
+    ) -> Result<()> {
         let m = self.m();
         let (s, l, hkv) = (m.slots, m.layers, m.kv_heads);
         debug_assert_eq!(idx.len(), s * l * hkv * w);
-        let name = format!("draft_w{w}");
+        let name = self
+            .names
+            .draft(w)
+            .ok_or_else(|| anyhow!("no draft_w{w} variant"))?
+            .to_string();
         let t0 = Instant::now();
         let tok = self.rt.upload_i32(token, &[s])?;
         let po = self.rt.upload_i32(pos, &[s])?;
@@ -131,6 +179,7 @@ impl ModelRunner {
         self.kv_v = out.pop().expect("output arity checked above");
         self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
+        self.stash_logits(logits);
         let t3 = Instant::now();
         self.stats.add(
             &name,
@@ -138,11 +187,12 @@ impl ModelRunner {
             (t2 - t1).as_secs_f64(),
             (t3 - t2).as_secs_f64(),
         );
-        Ok(DraftOut { logits })
+        Ok(())
     }
 
     /// One dense verification step over q query tokens (compiled variant).
-    /// tokens: [S*q]; pos/q_valid/active: [S].
+    /// tokens: [S*q]; pos/q_valid/active: [S].  Fills logits [S*q*V] and
+    /// the dump [S*L*Hkv*T].
     pub fn verify(
         &mut self,
         q: usize,
@@ -150,11 +200,15 @@ impl ModelRunner {
         pos: &[i32],
         q_valid: &[i32],
         active: &[i32],
-    ) -> Result<VerifyOut> {
+    ) -> Result<()> {
         let m = self.m();
         let s = m.slots;
         debug_assert_eq!(tokens.len(), s * q);
-        let name = format!("verify_q{q}");
+        let name = self
+            .names
+            .verify(q)
+            .ok_or_else(|| anyhow!("no verify_q{q} variant"))?
+            .to_string();
         let t0 = Instant::now();
         let tok = self.rt.upload_i32(tokens, &[s, q])?;
         let po = self.rt.upload_i32(pos, &[s])?;
@@ -173,7 +227,10 @@ impl ModelRunner {
         self.kv_v = out.pop().expect("output arity checked above");
         self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
+        self.stash_logits(logits);
         let dump = self.rt.fetch_f32(&dump_buf)?;
+        self.arena.dump[..dump.len()].copy_from_slice(&dump);
+        self.arena.dump_len = dump.len();
         let t3 = Instant::now();
         self.stats.add(
             &name,
@@ -181,10 +238,11 @@ impl ModelRunner {
             (t2 - t1).as_secs_f64(),
             (t3 - t2).as_secs_f64(),
         );
-        Ok(VerifyOut { logits, dump })
+        Ok(())
     }
 
-    /// TriForce middle layer: verify q tokens under the sparse draft model.
+    /// TriForce middle layer: verify q tokens under the sparse draft
+    /// model.  Fills logits [S*(spec_k+1)*V].
     pub fn sparse_verify(
         &mut self,
         tokens: &[i32],
@@ -192,7 +250,7 @@ impl ModelRunner {
         q_valid: &[i32],
         idx: &[i32],
         active: &[i32],
-    ) -> Result<Vec<f32>> {
+    ) -> Result<()> {
         let m = self.m();
         let (s, l, hkv, w) = (m.slots, m.layers, m.kv_heads, m.draft_budget);
         let q = m.spec_k + 1;
@@ -216,6 +274,7 @@ impl ModelRunner {
         self.kv_v = out.pop().expect("output arity checked above");
         self.kv_k = out.pop().expect("output arity checked above");
         let logits = self.rt.fetch_f32(&out[0])?;
+        self.stash_logits(logits);
         let t3 = Instant::now();
         self.stats.add(
             "sparse_verify",
@@ -223,11 +282,11 @@ impl ModelRunner {
             (t2 - t1).as_secs_f64(),
             (t3 - t2).as_secs_f64(),
         );
-        Ok(logits)
+        Ok(())
     }
 
     /// EAGLE-like draft head: ctx [S*ECTX] -> logits [S*V].
-    pub fn eagle(&mut self, ctx: &[i32]) -> Result<Vec<f32>> {
+    pub fn eagle(&mut self, ctx: &[i32]) -> Result<()> {
         let m = self.m();
         let (s, ectx) = (m.slots, self.rt.cfg.eagle.ctx);
         debug_assert_eq!(ctx.len(), s * ectx);
@@ -247,6 +306,7 @@ impl ModelRunner {
             .execute("eagle", &[self.eagle_weights.as_ref().expect("lazily loaded above"), &cx])?;
         let t2 = Instant::now();
         let logits = self.rt.fetch_f32(&out[0])?;
+        self.stash_logits(logits);
         let t3 = Instant::now();
         self.stats.add(
             "eagle",
@@ -254,19 +314,26 @@ impl ModelRunner {
             (t2 - t1).as_secs_f64(),
             (t3 - t2).as_secs_f64(),
         );
-        Ok(logits)
+        Ok(())
     }
 
-    /// Pull both KV pools to the host (offload path).
-    /// Returns (k, v) each [L*S*T*Hkv*D].
-    pub fn kv_dump(&mut self) -> Result<(Vec<f32>, Vec<f32>)> {
+    /// Pull both KV pools to the host (offload path); read them back with
+    /// [`Self::kv_pools`].  One device→host copy per pool, landing in
+    /// reused staging buffers.
+    pub fn kv_dump_prepare(&mut self) -> Result<()> {
         let t0 = Instant::now();
-        let k = self.rt.fetch_f32(&self.kv_k)?;
-        let v = self.rt.fetch_f32(&self.kv_v)?;
+        self.host_k = self.rt.fetch_f32(&self.kv_k)?;
+        self.host_v = self.rt.fetch_f32(&self.kv_v)?;
         let t1 = Instant::now();
         self.stats
             .add("kv_dump", 0.0, 0.0, (t1 - t0).as_secs_f64());
-        Ok((k, v))
+        Ok(())
+    }
+
+    /// Host views of (k, v), each [L*S*T*Hkv*D].  Valid after
+    /// [`Self::kv_dump_prepare`].
+    pub fn kv_pools(&self) -> (&[f32], &[f32]) {
+        (&self.host_k, &self.host_v)
     }
 
     /// Write one slot's KV rows back into the device pools (onload path).

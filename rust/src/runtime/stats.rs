@@ -19,7 +19,14 @@ pub struct PhaseTimes {
 
 impl StepStats {
     pub(crate) fn add(&mut self, name: &str, upload: f64, exec: f64, fetch: f64) {
-        let e = self.per_artifact.entry(name.to_string()).or_default();
+        // Key interning happens once per artifact; the steady state takes
+        // the `get_mut` path and never allocates the `String` key.  (Two
+        // separate lookups rather than a `get_mut`-or-`entry` match — the
+        // borrow checker rejects holding both mutable borrows.)
+        if !self.per_artifact.contains_key(name) {
+            self.per_artifact.insert(name.to_string(), PhaseTimes::default());
+        }
+        let e = self.per_artifact.get_mut(name).expect("inserted above");
         e.calls += 1;
         e.upload_s += upload;
         e.exec_s += exec;
@@ -72,16 +79,4 @@ impl PhaseTimes {
     pub fn total_s(&self) -> f64 {
         self.upload_s + self.exec_s + self.fetch_s
     }
-}
-
-pub struct VerifyOut {
-    /// [S, Q, V] flattened.
-    pub logits: Vec<f32>,
-    /// [S, L, Hkv, T] flattened attention-mass dump (PillarAttn input).
-    pub dump: Vec<f32>,
-}
-
-pub struct DraftOut {
-    /// [S, V] flattened.
-    pub logits: Vec<f32>,
 }

@@ -12,19 +12,26 @@ use crate::util::rng::Xoshiro256;
 
 /// Softmax over logits at temperature `t` (t=0 ⇒ argmax one-hot).
 pub fn softmax(logits: &[f32], t: f32) -> Vec<f32> {
-    let n = logits.len();
+    let mut p = Vec::new();
+    softmax_into(logits, t, &mut p);
+    p
+}
+
+/// [`softmax`] into a caller-owned buffer (cleared and refilled), so hot
+/// loops reuse capacity instead of allocating a distribution per token.
+pub fn softmax_into(logits: &[f32], t: f32, out: &mut Vec<f32>) {
+    out.clear();
     if t <= 0.0 {
-        let mut p = vec![0.0; n];
-        p[argmax(logits)] = 1.0;
-        return p;
+        out.resize(logits.len(), 0.0);
+        out[argmax(logits)] = 1.0;
+        return;
     }
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut p: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
-    let s: f32 = p.iter().sum();
-    for x in &mut p {
+    out.extend(logits.iter().map(|&l| ((l - m) / t).exp()));
+    let s: f32 = out.iter().sum();
+    for x in out.iter_mut() {
         *x /= s;
     }
-    p
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -145,6 +152,18 @@ mod tests {
     fn softmax_temp_zero_is_argmax() {
         let p = softmax(&[0.1, 5.0, 2.0], 0.0);
         assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_into_reuses_capacity() {
+        let mut buf = Vec::new();
+        softmax_into(&[1.0, 2.0, 3.0], 1.0, &mut buf);
+        assert_eq!(buf, softmax(&[1.0, 2.0, 3.0], 1.0));
+        let cap = buf.capacity();
+        softmax_into(&[0.5, 0.25], 0.8, &mut buf);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.capacity(), cap, "refill must not reallocate");
+        assert!((buf.iter().sum::<f32>() - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -246,8 +246,11 @@ pub trait Drafter {
         Vec::new()
     }
 
-    /// n-gram history order kept per slot (NGram/TriForce consume it;
-    /// everyone else gets the cheap default).
+    /// n-gram history order kept per slot.  NGram/TriForce consume it;
+    /// builtin drafters that never call `propose` return 0 so accepted
+    /// tokens cost neither hashing nor history growth on the hot path.
+    /// The default stays 3 for out-of-crate drafters, whose `plan` may
+    /// read `DraftCtx::ngram`.
     fn ngram_order(&self) -> usize {
         3
     }
@@ -443,6 +446,10 @@ impl Drafter for VanillaDrafter {
         IndexPolicy::pillar(m.draft_budget) // constructed, never composed
     }
 
+    fn ngram_order(&self) -> usize {
+        0
+    }
+
     fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
         DraftPlan::steps(0)
     }
@@ -475,6 +482,10 @@ impl Drafter for PillarDrafter {
         true
     }
 
+    fn ngram_order(&self) -> usize {
+        0
+    }
+
     fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
         DraftPlan::steps(ctx.k)
     }
@@ -501,6 +512,10 @@ impl Drafter for WindowDrafter {
 
     fn artifacts(&self, _k: usize) -> Vec<String> {
         vec![format!("draft_w{}", self.w)]
+    }
+
+    fn ngram_order(&self) -> usize {
+        0
     }
 
     fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
@@ -533,6 +548,10 @@ impl Drafter for OracleDrafter {
         vec![format!("draft_w{}", self.w), "verify_q1".into()]
     }
 
+    fn ngram_order(&self) -> usize {
+        0
+    }
+
     fn plan(&mut self, ctx: &DraftCtx) -> DraftPlan {
         DraftPlan::steps(ctx.k)
     }
@@ -560,15 +579,16 @@ impl Drafter for OracleDrafter {
             opos[i] = (slot.len - 1) as i32;
             act[i] = 1;
         }
-        let vo = host.runner.verify(1, &toks, &opos, &qv, &act)?;
+        host.runner.verify(1, &toks, &opos, &qv, &act)?;
         let t_dim = m.max_seq;
         let per = m.layers * m.kv_heads * t_dim;
         let t_sel = Instant::now();
+        let pool = host.pool;
         for &i in idxs {
             let slot = slots[i].as_mut().unwrap();
-            let dump = &vo.dump[i * per..(i + 1) * per];
+            let dump = &host.runner.dump()[i * per..(i + 1) * per];
             let len = slot.len;
-            slot.pillar.refresh_parallel(dump, t_dim, len, host.pool);
+            slot.pillar.refresh_parallel(dump, t_dim, len, pool);
         }
         host.runner
             .stats
@@ -630,6 +650,10 @@ impl Drafter for EagleDrafter {
         vec!["eagle".into()]
     }
 
+    fn ngram_order(&self) -> usize {
+        0
+    }
+
     /// Drafts through `propose_batch` (needs the head artifact); the
     /// host-free path proposes nothing.
     fn plan(&mut self, _ctx: &DraftCtx) -> DraftPlan {
@@ -662,10 +686,10 @@ impl Drafter for EagleDrafter {
         let mut launches = 0u32;
         for _ in 0..k {
             let flat: Vec<i32> = ctxs.iter().flatten().copied().collect();
-            let logits = host.runner.eagle(&flat)?;
+            host.runner.eagle(&flat)?;
             launches += 1;
             for &i in idxs {
-                let row = &logits[i * m.vocab..(i + 1) * m.vocab];
+                let row = &host.runner.logits()[i * m.vocab..(i + 1) * m.vocab];
                 let t = sampling::argmax(row) as i32;
                 proposals[i].push(t);
                 ctxs[i].rotate_left(1);
@@ -773,8 +797,7 @@ impl Drafter for TriForceDrafter {
         *host.cpu_s += t.elapsed().as_secs_f64();
         host.comp.gemm_rows += idxs.len() * q;
         host.comp.attn_bytes += idxs.len() * w * m.kv_bytes_per_token();
-        let logits = host
-            .runner
+        host.runner
             .sparse_verify(&tokens, &pos, &qv, &idx_buf, &active)?;
 
         let t = Instant::now();
@@ -783,7 +806,7 @@ impl Drafter for TriForceDrafter {
             // middle layer: greedy-match proposals under the window
             // model; corrected draft = matched prefix + window pick.
             let v = m.vocab;
-            let rows = &logits[i * q * v..(i + 1) * q * v];
+            let rows = &host.runner.logits()[i * q * v..(i + 1) * q * v];
             let mut mid: Vec<i32> = Vec::new();
             for (j, &pt) in props[i].iter().enumerate() {
                 let e = sampling::argmax(&rows[j * v..(j + 1) * v]) as i32;
@@ -949,6 +972,20 @@ mod tests {
 
         let d = r.create(&DrafterKind::NGram { n: 2 }, &m).unwrap();
         assert_eq!(d.ngram_order(), 2);
+
+        // drafters that never propose from history keep order-0 (inert)
+        // n-gram state, so accepted tokens don't pay indexing costs
+        for kind in [
+            DrafterKind::Vanilla,
+            DrafterKind::Pillar { w: 64 },
+            DrafterKind::Window { w: 64 },
+            DrafterKind::OracleTopK { w: 64 },
+            DrafterKind::Eagle,
+        ] {
+            assert_eq!(r.create(&kind, &m).unwrap().ngram_order(), 0, "{kind:?}");
+        }
+        let d = r.create(&DrafterKind::TriForce { w: 64 }, &m).unwrap();
+        assert!(d.ngram_order() >= 1, "TriForce consumes n-gram history");
     }
 
     #[test]

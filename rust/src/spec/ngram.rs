@@ -27,8 +27,12 @@ fn pack(window: &[i32]) -> u64 {
 }
 
 impl NGramIndex {
+    /// `max_n == 0` builds a disabled index: `extend` is a no-op and
+    /// `propose` never matches.  Drafters that don't consult n-gram
+    /// history (pillar/window/oracle/eagle/vanilla) use it so accepted
+    /// tokens cost neither hashing nor history growth on the hot path.
     pub fn new(max_n: usize) -> Self {
-        assert!(max_n >= 1 && max_n <= 4, "packed key supports n in 1..=4");
+        assert!(max_n <= 4, "packed key supports n in 0..=4");
         NGramIndex {
             max_n,
             maps: vec![HashMap::new(); max_n],
@@ -46,6 +50,9 @@ impl NGramIndex {
 
     /// Append accepted tokens to the indexed history.
     pub fn extend(&mut self, toks: &[i32]) {
+        if self.max_n == 0 {
+            return;
+        }
         for &t in toks {
             self.history.push(t);
             let end = self.history.len();
@@ -136,6 +143,14 @@ mod tests {
         // "5" key update is end itself; propose uses cont<end so earlier one.
         let p = ix.propose(2);
         assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn order_zero_is_inert() {
+        let mut ix = NGramIndex::new(0);
+        ix.extend(&[1, 2, 3, 1, 2, 3]);
+        assert!(ix.is_empty(), "order-0 must not accumulate history");
+        assert!(ix.propose(4).is_empty());
     }
 
     #[test]

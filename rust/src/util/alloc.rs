@@ -1,0 +1,61 @@
+//! Counting global allocator for the zero-allocation gates.
+//!
+//! [`CountingAlloc`] wraps [`System`] and counts every `alloc` /
+//! `realloc` (frees and zero-size requests are not interesting: the gates
+//! assert that the steady state *requests no new memory*, not that it
+//! frees none).  It is installed as the `#[global_allocator]` by the
+//! binaries that gate on allocation counts — `benches/bench_main.rs`
+//! (the `engine_iteration` steady-state gate) and `tests/alloc_gate.rs`
+//! (the same invariant as a plain test) — and deliberately **not** by the
+//! library, so ordinary builds keep the untouched system allocator.
+//!
+//! Because only those binaries install it, gate code must distinguish
+//! "zero allocations" from "nobody is counting": installation flips
+//! [`INSTALLED`] at first use, and [`allocations`] returns `None` until
+//! then.  Gates skip (with a note in the bench JSON) rather than
+//! vacuously pass when the counter is absent.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static COUNT: AtomicU64 = AtomicU64::new(0);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// `#[global_allocator]`-compatible counting wrapper over [`System`].
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        INSTALLED.store(true, Ordering::Relaxed);
+        COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocation count so far, or `None` when no [`CountingAlloc`] is
+/// installed in this binary (gates should skip, not pass).
+pub fn allocations() -> Option<u64> {
+    if INSTALLED.load(Ordering::Relaxed) {
+        Some(COUNT.load(Ordering::Relaxed))
+    } else {
+        None
+    }
+}
+
+/// Allocations between two [`allocations`] snapshots; `None` if the
+/// counter is absent.
+pub fn allocations_since(base: Option<u64>) -> Option<u64> {
+    match (allocations(), base) {
+        (Some(now), Some(b)) => Some(now.saturating_sub(b)),
+        _ => None,
+    }
+}

@@ -2,6 +2,7 @@
 //! registry only carries the `xla` closure — no tokio / clap / serde / rand /
 //! proptest / criterion; DESIGN.md §1 documents the substitution).
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod ptest;

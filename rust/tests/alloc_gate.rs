@@ -1,0 +1,60 @@
+//! The zero-allocation invariant as a plain test: with the counting
+//! allocator installed, a steady-state serial step loop (draft + dense
+//! verify + sparse verify, every buffer arena-resident) must request no
+//! new memory at all.  This is the same gate `cargo bench --
+//! engine_iteration` enforces; having it as a test means plain `cargo
+//! test` catches an allocation regression without running the bench.
+//!
+//! This file is its own test binary with a single test, so no concurrent
+//! test can pollute the allocation count.  Sim-backend only: the pjrt
+//! runner allocates per device fetch by design.
+
+#![cfg(not(feature = "pjrt"))]
+
+#[global_allocator]
+static ALLOC: sparsespec::util::alloc::CountingAlloc = sparsespec::util::alloc::CountingAlloc;
+
+use std::rc::Rc;
+
+use sparsespec::runtime::{ModelRunner, Runtime};
+use sparsespec::util::alloc;
+
+#[test]
+fn serial_arena_step_loop_is_allocation_free() {
+    let dir = std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Rc::new(Runtime::load(&dir).expect("runtime loads"));
+    let m = rt.cfg.model.clone();
+    let (s, pad) = (m.slots, m.prompt_pad);
+    let q = m.spec_k + 1;
+    let w = m.draft_budget;
+    let per_head = m.layers * m.kv_heads;
+
+    let active = vec![1i32; s];
+    let ptokens: Vec<i32> = (0..s * pad).map(|i| (i % 97) as i32 + 1).collect();
+    let plen = vec![pad as i32; s];
+    let dtok: Vec<i32> = (0..s).map(|x| (x as i32 % 31) + 2).collect();
+    let pos = vec![pad as i32; s];
+    let vtok: Vec<i32> = (0..s * q).map(|i| (i % 89) as i32 + 1).collect();
+    let qv = vec![q as i32; s];
+    let idx: Vec<i32> = (0..s * per_head * w).map(|i| ((i * 13) % pad) as i32).collect();
+
+    let mut r = ModelRunner::new(rt.clone()).unwrap();
+    r.set_parallel(false);
+    r.prefill(&ptokens, &plen, &active).unwrap();
+    // Warmup: first calls may intern stats keys / size lazy state.
+    for _ in 0..4 {
+        r.draft(w, &dtok, &pos, &idx, &active).unwrap();
+        r.verify(q, &vtok, &pos, &qv, &active).unwrap();
+        r.sparse_verify(&vtok, &pos, &qv, &idx, &active).unwrap();
+    }
+
+    let base = alloc::allocations();
+    assert!(base.is_some(), "counting allocator must be installed in this binary");
+    for _ in 0..32 {
+        r.draft(w, &dtok, &pos, &idx, &active).unwrap();
+        r.verify(q, &vtok, &pos, &qv, &active).unwrap();
+        r.sparse_verify(&vtok, &pos, &qv, &idx, &active).unwrap();
+    }
+    let n = alloc::allocations_since(base).expect("counter stays installed");
+    assert_eq!(n, 0, "steady-state serial step loop allocated {n} time(s), expected 0");
+}

@@ -1,0 +1,199 @@
+//! Bit-identity suite for the arena-backed hot path: the slot-parallel
+//! sim kernels and the pooled verify processing are *optimisations*, so
+//! `EngineConfig::parallel` must not change a single output bit —
+//! outputs, iteration counts, the schedule trace, and the structured
+//! trace span-name sequence all have to match the serial path exactly.
+//! Plus: `ThreadPool::scope` over disjoint chunks is deterministic for
+//! any worker count (the property the kernels' fan-out relies on).
+
+use std::rc::Rc;
+
+use sparsespec::engine::{Engine, EngineConfig, RunReport};
+use sparsespec::runtime::Runtime;
+use sparsespec::spec::DrafterKind;
+use sparsespec::trace::TraceConfig;
+use sparsespec::util::json::Json;
+use sparsespec::util::threadpool::ThreadPool;
+use sparsespec::workload::{Dataset, WorkloadGen};
+
+fn runtime() -> Rc<Runtime> {
+    let dir = std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Rc::new(Runtime::load(&dir).expect("runtime loads"))
+}
+
+fn small_requests(rt: &Runtime, n: usize, cap: usize) -> Vec<sparsespec::workload::Request> {
+    let mut reqs =
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, 7)
+            .offline_batch(n);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+/// `ph:name` per journal line — everything about a span that must be
+/// schedule-determined (wall timestamps/durations legitimately differ).
+fn span_names(jsonl: &str) -> Vec<String> {
+    jsonl
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let j = Json::parse(l).expect("journal line parses");
+            format!(
+                "{}:{}",
+                j.get("ph").and_then(|x| x.as_str()).unwrap_or("?"),
+                j.get("name").and_then(|x| x.as_str()).unwrap_or("?")
+            )
+        })
+        .collect()
+}
+
+fn run_once(
+    rt: &Rc<Runtime>,
+    drafter: DrafterKind,
+    parallel: bool,
+    temperature: f32,
+) -> (RunReport, Vec<String>) {
+    let mut cfg = EngineConfig::new(drafter).with_k(8);
+    cfg.parallel = parallel;
+    cfg.temperature = temperature;
+    cfg.trace = TraceConfig::on();
+    let mut eng = Engine::new(rt.clone(), cfg).unwrap();
+    let rep = eng.run(small_requests(rt, 4, 40)).unwrap();
+    let names = span_names(&eng.export_trace_jsonl());
+    (rep, names)
+}
+
+fn assert_identical(drafter: DrafterKind, temperature: f32) {
+    let rt = runtime();
+    let (par, par_spans) = run_once(&rt, drafter, true, temperature);
+    let (ser, ser_spans) = run_once(&rt, drafter, false, temperature);
+    let tag = format!("{} t={temperature}", drafter.name());
+    assert_eq!(par.outputs, ser.outputs, "outputs diverged [{tag}]");
+    assert_eq!(par.iterations, ser.iterations, "iterations diverged [{tag}]");
+    assert_eq!(
+        par.tokens_generated, ser.tokens_generated,
+        "token counts diverged [{tag}]"
+    );
+    assert_eq!(
+        par.trace.csv(),
+        ser.trace.csv(),
+        "schedule trace diverged [{tag}]"
+    );
+    assert_eq!(par_spans, ser_spans, "trace span names diverged [{tag}]");
+    assert!(!par_spans.is_empty(), "tracing was on but no spans [{tag}]");
+}
+
+#[test]
+fn pillar_greedy_bit_identical_parallel_vs_serial() {
+    assert_identical(DrafterKind::Pillar { w: 64 }, 0.0);
+}
+
+#[test]
+fn pillar_stochastic_bit_identical_parallel_vs_serial() {
+    // Temperature > 0 exercises the verify rng-seed draw order — the
+    // serial path must consume the engine rng in the same per-slot order
+    // as the pooled path.
+    assert_identical(DrafterKind::Pillar { w: 64 }, 0.8);
+}
+
+#[test]
+fn ngram_bit_identical_parallel_vs_serial() {
+    assert_identical(DrafterKind::NGram { n: 3 }, 0.0);
+}
+
+#[test]
+fn eagle_bit_identical_parallel_vs_serial() {
+    assert_identical(DrafterKind::Eagle, 0.0);
+}
+
+#[test]
+fn vanilla_bit_identical_parallel_vs_serial() {
+    assert_identical(DrafterKind::Vanilla, 0.0);
+}
+
+#[test]
+fn triforce_bit_identical_parallel_vs_serial() {
+    // TriForce drives the sparse-verify kernel (visibility bitmask path).
+    assert_identical(DrafterKind::TriForce { w: 64 }, 0.0);
+}
+
+/// The fan-out shape the kernels use — disjoint `chunks_mut` of one
+/// buffer, one boxed job per worker chunk — must produce byte-identical
+/// buffers for every worker count, including counts that do not divide
+/// the slot count.
+#[test]
+fn threadpool_chunked_fill_deterministic_for_any_worker_count() {
+    let (slots, per) = (13usize, 37usize);
+    let fill = |s: usize, out: &mut [f32]| {
+        for (i, x) in out.iter_mut().enumerate() {
+            *x = ((s * 1_000_003 + i * 7919) % 104_729) as f32;
+        }
+    };
+    let mut want = vec![0.0f32; slots * per];
+    for (s, ch) in want.chunks_mut(per).enumerate() {
+        fill(s, ch);
+    }
+    for workers in [1usize, 2, 3, 5, 8] {
+        let pool = ThreadPool::new(workers);
+        let mut got = vec![-1.0f32; slots * per];
+        let nc = workers.min(slots);
+        let spc = slots.div_ceil(nc);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = got
+            .chunks_mut(spc * per)
+            .enumerate()
+            .map(|(ci, bch)| {
+                Box::new(move || {
+                    for (r, out) in bch.chunks_mut(per).enumerate() {
+                        fill(ci * spc + r, out);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(got, want, "worker count {workers} changed the fill");
+    }
+}
+
+/// Kernel-level spot check against the seed-era executable spec (the
+/// same oracle the `engine_iteration` bench baselines against).
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn arena_kernels_match_reference_runner() {
+    use sparsespec::runtime::{reference, ModelRunner};
+    let rt = runtime();
+    let m = rt.cfg.model.clone();
+    let (s, pad) = (m.slots, m.prompt_pad);
+    let q = m.spec_k + 1;
+    let w = m.draft_budget;
+    let per_head = m.layers * m.kv_heads;
+
+    let active: Vec<i32> = (0..s).map(|i| (i % 2 == 0) as i32).collect();
+    let ptokens: Vec<i32> = (0..s * pad).map(|i| (i % 97) as i32 + 1).collect();
+    let plen = vec![pad as i32; s];
+    let dtok: Vec<i32> = (0..s).map(|x| (x as i32 % 31) + 2).collect();
+    let pos = vec![pad as i32; s];
+    let vtok: Vec<i32> = (0..s * q).map(|i| (i % 89) as i32 + 1).collect();
+    let qv = vec![q as i32; s];
+    let idx: Vec<i32> = (0..s * per_head * w).map(|i| ((i * 13) % pad) as i32).collect();
+
+    let mut rr = reference::Runner::new(m.clone(), rt.cfg.eagle.ctx);
+    let ref_prefill = rr.prefill(&ptokens, &plen, &active);
+    let ref_draft = rr.draft(w, &dtok, &pos, &idx, &active);
+    let (ref_vl, ref_vd) = rr.verify(q, &vtok, &pos, &qv, &active);
+    let ref_sv = rr.sparse_verify(&vtok, &pos, &qv, &idx, &active);
+
+    for parallel in [false, true] {
+        let mut r = ModelRunner::new(rt.clone()).unwrap();
+        r.set_parallel(parallel);
+        r.prefill(&ptokens, &plen, &active).unwrap();
+        assert_eq!(r.logits(), &ref_prefill[..], "prefill parallel={parallel}");
+        r.draft(w, &dtok, &pos, &idx, &active).unwrap();
+        assert_eq!(r.logits(), &ref_draft[..], "draft parallel={parallel}");
+        r.verify(q, &vtok, &pos, &qv, &active).unwrap();
+        assert_eq!(r.logits(), &ref_vl[..], "verify logits parallel={parallel}");
+        assert_eq!(r.dump(), &ref_vd[..], "verify dump parallel={parallel}");
+        r.sparse_verify(&vtok, &pos, &qv, &idx, &active).unwrap();
+        assert_eq!(r.logits(), &ref_sv[..], "sparse_verify parallel={parallel}");
+    }
+}

@@ -45,13 +45,14 @@ fn runtime_loads_and_executes_verify() {
     let rt = runtime();
     let m = rt.cfg.model.clone();
     let mut runner = ModelRunner::new(rt.clone()).unwrap();
-    let logits = runner
+    runner
         .prefill(
             &vec![5i32; m.slots * m.prompt_pad],
             &vec![4i32; m.slots],
             &vec![1i32; m.slots],
         )
         .unwrap();
+    let logits = runner.logits();
     assert_eq!(logits.len(), m.slots * m.vocab);
     assert!(logits.iter().all(|x| x.is_finite()));
 }
@@ -275,8 +276,9 @@ fn pallas_compose_proof_artifacts_match_ref_path() {
     }
     let token = vec![7i32; s];
     let pos = vec![8i32; s];
-    // ref path artifact
-    let a = runner.draft(w, &token, &pos, &idx, &active).unwrap();
+    // ref path artifact (arena-resident after the fill call)
+    runner.draft(w, &token, &pos, &idx, &active).unwrap();
+    let ref_logits = runner.logits().to_vec();
     // pallas path artifact — same inputs, direct execute
     let rtc = runner.rt.clone();
     let weights = {
@@ -306,8 +308,7 @@ fn pallas_compose_proof_artifacts_match_ref_path() {
         .execute("draft_pallas", &[&wbuf, kvk, kvv, &tok_b, &pos_b, &idx_b, &act_b])
         .unwrap();
     let logits_pallas = rtc.fetch_f32(&out2[0]).unwrap();
-    let max_diff = a
-        .logits
+    let max_diff = ref_logits
         .iter()
         .zip(logits_pallas.iter())
         .map(|(x, y)| (x - y).abs())
