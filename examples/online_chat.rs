@@ -22,6 +22,7 @@ use std::rc::Rc;
 use sparsespec::engine::{
     Engine, EngineConfig, EngineDriver, EngineHandle, FinishReason,
 };
+use sparsespec::metrics::{latency_block, p50_cell};
 use sparsespec::runtime::Runtime;
 use sparsespec::scheduler::Schedule;
 use sparsespec::spec::DrafterKind;
@@ -112,25 +113,10 @@ fn main() -> anyhow::Result<()> {
         report.requests_cancelled,
     );
 
-    // Streaming latency metrics (wallclock), from per-session stats.
+    // Streaming latency metrics (wallclock), from per-session stats —
+    // rendered by the shared helper the client binary also uses.
     let m = driver.session_metrics();
-    if let Some(ttft) = m.histogram("ttft_s", &[]) {
-        println!(
-            "  TTFT:        p50={:.4}s p99={:.4}s max={:.4}s (n={})",
-            ttft.percentile(50.0),
-            ttft.percentile(99.0),
-            ttft.max(),
-            ttft.len()
-        );
-    }
-    if let Some(itl) = m.histogram("inter_token_s", &[]) {
-        println!(
-            "  inter-token: p50={:.5}s p99={:.5}s (n={})",
-            itl.percentile(50.0),
-            itl.percentile(99.0),
-            itl.len()
-        );
-    }
+    print!("{}", latency_block(&m, &[]));
 
     // Cancellation isolation: every non-cancelled session's output must be
     // bit-identical to the batch reference; the cancelled one kept its
@@ -207,10 +193,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             format!("{:>8}", "n/a")
         };
-        let ttft = pm
-            .histogram("ttft_s", by)
-            .map(|h| format!("{:>12.4}", h.percentile(50.0)))
-            .unwrap_or_else(|| format!("{:>12}", "n/a"));
+        let ttft = p50_cell(&pm, "ttft_s", by, 12, 4);
         println!("  {name:<14} {sessions:>9} {acc_rnd} {alpha} {ttft}");
     }
     assert_eq!(pr.requests_done, 9, "mixed pool must serve every session");

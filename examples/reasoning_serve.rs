@@ -16,6 +16,7 @@
 use std::rc::Rc;
 
 use sparsespec::engine::{EngineConfig, EngineDriver, EngineHandle};
+use sparsespec::metrics::p50_cell;
 use sparsespec::runtime::Runtime;
 use sparsespec::spec::DrafterKind;
 use sparsespec::util::cli::Args;
@@ -81,10 +82,7 @@ fn main() -> anyhow::Result<()> {
                 _ => " n/a".to_string(),
             };
             let ttft = driver.session_metrics();
-            let ttft_p50 = ttft
-                .histogram("ttft_s", &[])
-                .map(|h| format!("{:12.4}", h.percentile(50.0)))
-                .unwrap_or_else(|| format!("{:>12}", "n/a"));
+            let ttft_p50 = p50_cell(&ttft, "ttft_s", &[], 12, 4);
             println!(
                 "{:<14} {:<14} {:>10.1} {:>5.1} ({speedup}) {:>8.2} {:>8.2} {ttft_p50}",
                 ds.name(),

@@ -1,0 +1,217 @@
+"""Python twin of the serving front-end's policy kernels
+(`rust/src/serving/server.rs`).
+
+Two pieces of the server are pure decision logic, re-implemented here
+bit-for-bit and pinned against the Rust source:
+
+* ``WrrQueues`` — bounded per-tenant FIFOs drained by deficit-weighted
+  round-robin.  Single-pass rounds: a non-empty queue earns its weight in
+  deficit once per round and releases one item per whole unit; empty
+  queues forfeit deficit (no banking); the first global ``can_admit``
+  refusal ends the whole round.
+* The credit-gated outbound queue — tokens need both queue headroom and
+  reader-granted credit, control frames bypass credit (but a closed
+  queue refuses everything).
+
+The scenarios mirror the Rust unit tests in ``server.rs`` with identical
+expected values, so the two implementations cannot drift silently; the
+config-default pins parse the Rust source directly.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import deque
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+SERVER_RS = REPO / "rust" / "src" / "serving" / "server.rs"
+
+
+class WrrQueues:
+    """Twin of `WrrQueues<T>`: name-ordered tenants, deficit round-robin."""
+
+    def __init__(self, weights: dict[str, float], cap: int):
+        self.weights = dict(weights)
+        self.cap = cap
+        self.tenants: dict[str, dict] = {}  # name -> {weight, deficit, q}
+
+    def _weight_of(self, tenant: str) -> float:
+        w = self.weights.get(tenant, 1.0)
+        return w if (w > 0.0 and w == w and w != float("inf")) else 1.0
+
+    def push(self, tenant: str, item):
+        tq = self.tenants.setdefault(
+            tenant, {"weight": self._weight_of(tenant), "deficit": 0.0, "q": deque()}
+        )
+        if len(tq["q"]) >= self.cap:
+            return False  # Rust: Err(item)
+        tq["q"].append(item)
+        return True
+
+    def admit_round(self, maximum: int, can_admit) -> list[tuple[str, object]]:
+        out: list[tuple[str, object]] = []
+        for name in sorted(self.tenants):  # BTreeMap iteration order
+            tq = self.tenants[name]
+            if not tq["q"]:
+                tq["deficit"] = 0.0  # no banking while idle
+                continue
+            tq["deficit"] += tq["weight"]
+            while tq["deficit"] >= 1.0 and len(out) < maximum:
+                if not tq["q"]:
+                    break
+                if not can_admit(tq["q"][0]):
+                    return out  # global resource exhausted: end the round
+                tq["deficit"] -= 1.0
+                out.append((name, tq["q"].popleft()))
+            if len(out) >= maximum:
+                break
+        return out
+
+    def total_len(self) -> int:
+        return sum(len(t["q"]) for t in self.tenants.values())
+
+
+class ConnOut:
+    """Twin of the credit/cap gate in `ConnOut::try_token` / `push_ctrl`."""
+
+    def __init__(self, cap: int, window: int):
+        self.cap = cap
+        self.credit = window
+        self.q: deque = deque()
+        self.closed = False
+
+    def try_token(self, frame) -> bool:
+        if self.closed or self.credit == 0 or len(self.q) >= self.cap:
+            return False
+        self.credit -= 1
+        self.q.append(frame)
+        return True
+
+    def push_ctrl(self, frame) -> bool:
+        if self.closed:
+            return False
+        self.q.append(frame)
+        return True
+
+    def add_credit(self, n: int):
+        self.credit = min(self.credit + n, (1 << 32) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Scenario twins — identical numbers to the server.rs unit tests.
+# ---------------------------------------------------------------------------
+
+def test_wrr_respects_weights_under_saturation():
+    qs = WrrQueues({"a": 2.0, "b": 1.0}, 1000)
+    for i in range(300):
+        assert qs.push("a", i)
+        assert qs.push("b", 1000 + i)
+    got = {"a": 0, "b": 0}
+    for _ in range(60):
+        for tenant, _ in qs.admit_round(3, lambda _i: True):
+            got[tenant] += 1
+    assert got["a"] + got["b"] == 180
+    # saturated 2:1 weights admit exactly 2:1 per round here (deficit of
+    # 'b' banks only while its queue is non-empty and it gets its turn)
+    assert abs(got["a"] / got["b"] - 2.0) < 0.2
+
+
+def test_wrr_is_fifo_within_a_tenant_and_bounded():
+    qs = WrrQueues({}, 3)
+    for i in (1, 2, 3):
+        assert qs.push("t", i)
+    assert not qs.push("t", 4), "cap is enforced"
+    admitted = []
+    for _ in range(3):  # weight 1 => one item per round
+        admitted += [v for _, v in qs.admit_round(10, lambda _i: True)]
+    assert admitted == [1, 2, 3], "FIFO per tenant"
+    assert qs.total_len() == 0
+
+
+def test_wrr_global_refusal_ends_the_round():
+    qs = WrrQueues({"a": 3.0}, 100)
+    for i in range(10):
+        assert qs.push("a", i)
+        assert qs.push("b", 100 + i)
+    allowance = {"n": 3}
+
+    def can_admit(_item):
+        if allowance["n"] > 0:
+            allowance["n"] -= 1
+            return True
+        return False
+
+    admitted = qs.admit_round(1 << 60, can_admit)
+    assert all(t == "a" for t, _ in admitted)
+    assert len(admitted) == 3, "refusal stops everything, nothing is lost"
+    assert qs.total_len() == 17
+
+
+def test_wrr_idle_tenants_do_not_bank_deficit():
+    qs = WrrQueues({"a": 4.0}, 100)
+    for _ in range(10):
+        assert qs.admit_round(10, lambda _i: True) == []
+    for i in range(10):
+        assert qs.push("a", i)
+        assert qs.push("b", 100 + i)
+    first = [t for t, _ in qs.admit_round(1 << 60, lambda _i: True)]
+    assert first.count("a") <= 4, "one round grants at most the weight"
+
+
+def test_wrr_admission_order_is_name_then_fifo():
+    # one full round: 'a' (weight 2) releases two, then 'b' one — in
+    # BTreeMap name order, FIFO within each tenant
+    qs = WrrQueues({"a": 2.0, "b": 1.0}, 100)
+    for i in range(5):
+        qs.push("b", f"b{i}")
+        qs.push("a", f"a{i}")
+    assert qs.admit_round(1 << 60, lambda _i: True) == [
+        ("a", "a0"),
+        ("a", "a1"),
+        ("b", "b0"),
+    ]
+
+
+def test_conn_out_credit_gating_and_ctrl_bypass():
+    out = ConnOut(cap=4, window=2)
+    assert out.try_token("t0")
+    assert out.try_token("t1")
+    assert not out.try_token("t2"), "credit exhausted"
+    assert out.push_ctrl("pong"), "control bypasses credit"
+    out.add_credit(1)
+    assert out.try_token("t2")
+    assert not out.try_token("t3"), "queue cap binds even with credit"
+    out.closed = True
+    assert not out.push_ctrl("pong2"), "closed refuses everything"
+
+
+# ---------------------------------------------------------------------------
+# Source pins: config defaults and policy constants in server.rs.
+# ---------------------------------------------------------------------------
+
+def test_server_config_defaults_pinned():
+    src = SERVER_RS.read_text()
+    new_block = src.split("impl ServerConfig")[1].split("}")[0:6]
+    blob = "}".join(new_block)
+    for field, value in [
+        ("send_window", "1024"),
+        ("send_queue_cap", "1024 + 64"),
+        ("stall_ticks", "2000"),
+        ("kv_shed_watermark", "0.85"),
+        ("tenant_queue_cap", "64"),
+        ("max_inflight", "0"),
+        ("metrics_publish_every", "16"),
+    ]:
+        assert re.search(rf"{field}: {re.escape(value)},", blob), f"{field} default drifted"
+
+
+def test_wrr_semantics_pinned_in_source():
+    src = SERVER_RS.read_text()
+    # no banking while idle
+    assert "tq.deficit = 0.0; // no banking while idle" in src
+    # a global refusal returns early, ending the whole round
+    assert "return out; // global resource exhausted: end the round" in src
+    # the engine-side admission projects prompt_pad + k + 2 per unstarted
+    # session (the server's worst-case KV estimate)
+    assert re.search(r"let est = self\.prompt_pad \+ self\.cfg\.engine\.k \+ 2;", src)

@@ -1,0 +1,375 @@
+"""Python twin of `rust/src/serving/wire.rs` (serving front-end PR).
+
+Like ``test_fault_port.py`` and ``test_trace_port.py``, this twin
+re-implements the wire codec bit-for-bit in Python and pins, by parsing
+the Rust source directly:
+
+* the frame-kind byte table (``K_SUBMIT`` .. ``K_PONG``),
+* the protocol constants (``PROTOCOL_VERSION``, ``MAX_FRAME``,
+  ``MAX_PROMPT``),
+* the ``ErrorCode`` discriminants and metric labels,
+* golden byte strings shared verbatim with ``rust/tests/wire.rs``,
+* the rejection rules: truncated / oversized / trailing / unknown-kind /
+  lying-prompt-count inputs all raise a typed error, never escape as a
+  crash or a silently wrong frame.
+
+If the wire layout drifts in Rust without a matching edit here, a test
+below fails pointing at the divergence.
+"""
+
+from __future__ import annotations
+
+import re
+import struct
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+WIRE_RS = REPO / "rust" / "src" / "serving" / "wire.rs"
+
+PROTOCOL_VERSION = 1
+MAX_FRAME = 1 << 20
+MAX_PROMPT = 4096
+
+KINDS = {
+    "SUBMIT": 0x01,
+    "CANCEL": 0x02,
+    "CREDIT": 0x03,
+    "SHUTDOWN": 0x04,
+    "PING": 0x05,
+    "HELLO": 0x10,
+    "ACCEPTED": 0x11,
+    "TOKEN": 0x12,
+    "FINISHED": 0x13,
+    "ERROR": 0x14,
+    "PONG": 0x15,
+}
+
+# discriminant -> metric label, mirroring ErrorCode in wire.rs
+ERROR_CODES = {
+    1: "admission_reject",
+    2: "kv_shed",
+    3: "tenant_queue_full",
+    4: "slow_reader",
+    5: "drafter_rejected",
+    6: "protocol",
+    7: "draining",
+    8: "engine_fault",
+}
+
+FINISH_REASONS = (0, 1, 2, 3)  # completed, cancelled, rejected, failed
+
+
+class WireErr(Exception):
+    """Typed decode failure (the twin of Rust's ``WireError``)."""
+
+
+# ---------------------------------------------------------------------------
+# Codec twin
+# ---------------------------------------------------------------------------
+
+def _s(text: str) -> bytes:
+    b = text.encode("utf-8")
+    return struct.pack("<H", len(b)) + b
+
+
+def encode_body(frame: tuple) -> bytes:
+    kind = frame[0]
+    if kind == "submit":
+        _, req_id, seed, max_new, tenant, drafter, prompt = frame
+        out = bytes([KINDS["SUBMIT"]]) + struct.pack("<QQI", req_id, seed, max_new)
+        out += _s(tenant) + _s(drafter) + struct.pack("<I", len(prompt))
+        out += struct.pack(f"<{len(prompt)}i", *prompt) if prompt else b""
+        return out
+    if kind == "cancel":
+        return bytes([KINDS["CANCEL"]]) + struct.pack("<Q", frame[1])
+    if kind == "credit":
+        return bytes([KINDS["CREDIT"]]) + struct.pack("<I", frame[1])
+    if kind == "shutdown":
+        return bytes([KINDS["SHUTDOWN"], 1 if frame[1] else 0])
+    if kind == "ping":
+        return bytes([KINDS["PING"]]) + struct.pack("<Q", frame[1])
+    if kind == "hello":
+        return bytes([KINDS["HELLO"], frame[1]]) + struct.pack("<I", frame[2])
+    if kind == "accepted":
+        return bytes([KINDS["ACCEPTED"]]) + struct.pack("<QQ", frame[1], frame[2])
+    if kind == "token":
+        return bytes([KINDS["TOKEN"]]) + struct.pack("<QIi", frame[1], frame[2], frame[3])
+    if kind == "finished":
+        return bytes([KINDS["FINISHED"]]) + struct.pack("<QBI", frame[1], frame[2], frame[3])
+    if kind == "error":
+        return bytes([KINDS["ERROR"]]) + struct.pack("<QB", frame[1], frame[2]) + _s(frame[3])
+    if kind == "pong":
+        return bytes([KINDS["PONG"]]) + struct.pack("<Q", frame[1])
+    raise AssertionError(f"unknown frame {kind}")
+
+
+def encode(frame: tuple) -> bytes:
+    body = encode_body(frame)
+    return struct.pack("<I", len(body)) + body
+
+
+class _Cur:
+    def __init__(self, buf: bytes):
+        self.buf, self.pos = buf, 0
+
+    def take(self, n: int) -> bytes:
+        if len(self.buf) - self.pos < n:
+            raise WireErr("truncated")
+        s = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return s
+
+    def unpack(self, fmt: str):
+        return struct.unpack(fmt, self.take(struct.calcsize(fmt)))
+
+    def string(self) -> str:
+        (n,) = self.unpack("<H")
+        raw = self.take(n)
+        try:
+            return raw.decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise WireErr("bad utf8") from e
+
+    def rest(self) -> int:
+        return len(self.buf) - self.pos
+
+
+def decode_body(body: bytes) -> tuple:
+    c = _Cur(body)
+    (kind,) = c.unpack("<B")
+    if kind == KINDS["SUBMIT"]:
+        req_id, seed, max_new = c.unpack("<QQI")
+        tenant, drafter = c.string(), c.string()
+        (n,) = c.unpack("<I")
+        if n > MAX_PROMPT:
+            raise WireErr("bad value: prompt length")
+        if c.rest() < n * 4:
+            raise WireErr("truncated")
+        prompt = list(c.unpack(f"<{n}i")) if n else []
+        frame = ("submit", req_id, seed, max_new, tenant, drafter, prompt)
+    elif kind == KINDS["CANCEL"]:
+        frame = ("cancel", *c.unpack("<Q"))
+    elif kind == KINDS["CREDIT"]:
+        frame = ("credit", *c.unpack("<I"))
+    elif kind == KINDS["SHUTDOWN"]:
+        (mode,) = c.unpack("<B")
+        if mode > 1:
+            raise WireErr("bad value: shutdown mode")
+        frame = ("shutdown", mode == 1)
+    elif kind == KINDS["PING"]:
+        frame = ("ping", *c.unpack("<Q"))
+    elif kind == KINDS["HELLO"]:
+        frame = ("hello", *c.unpack("<BI"))
+    elif kind == KINDS["ACCEPTED"]:
+        frame = ("accepted", *c.unpack("<QQ"))
+    elif kind == KINDS["TOKEN"]:
+        frame = ("token", *c.unpack("<QIi"))
+    elif kind == KINDS["FINISHED"]:
+        session, reason = c.unpack("<QB")
+        if reason not in FINISH_REASONS:
+            raise WireErr("bad value: finish reason")
+        (tokens,) = c.unpack("<I")
+        frame = ("finished", session, reason, tokens)
+    elif kind == KINDS["ERROR"]:
+        req_id, code = c.unpack("<QB")
+        if code not in ERROR_CODES:
+            raise WireErr("bad value: error code")
+        frame = ("error", req_id, code, c.string())
+    elif kind == KINDS["PONG"]:
+        frame = ("pong", *c.unpack("<Q"))
+    else:
+        raise WireErr(f"unknown kind 0x{kind:02x}")
+    if c.rest() != 0:
+        raise WireErr(f"trailing: {c.rest()}")
+    return frame
+
+
+def decode(buf: bytes) -> tuple:
+    if len(buf) < 4:
+        raise WireErr("truncated")
+    (n,) = struct.unpack("<I", buf[:4])
+    if n == 0 or n > MAX_FRAME:
+        raise WireErr(f"oversized: {n}")
+    if len(buf) - 4 < n:
+        raise WireErr("truncated")
+    if len(buf) - 4 > n:
+        raise WireErr("trailing")
+    return decode_body(buf[4:])
+
+
+# ---------------------------------------------------------------------------
+# Source pinning
+# ---------------------------------------------------------------------------
+
+def test_kind_bytes_match_rust_source():
+    src = WIRE_RS.read_text()
+    for name, value in KINDS.items():
+        m = re.search(rf"pub const K_{name}: u8 = (0x[0-9a-fA-F]+);", src)
+        assert m, f"K_{name} missing from wire.rs"
+        assert int(m.group(1), 16) == value, f"K_{name} drifted"
+    assert re.search(rf"pub const PROTOCOL_VERSION: u8 = {PROTOCOL_VERSION};", src)
+    assert re.search(r"pub const MAX_FRAME: usize = 1 << 20;", src)
+    assert re.search(rf"pub const MAX_PROMPT: usize = {MAX_PROMPT};", src)
+
+
+def test_error_codes_match_rust_source():
+    src = WIRE_RS.read_text()
+    for disc, label in ERROR_CODES.items():
+        variant = "".join(p.capitalize() for p in label.split("_"))
+        assert re.search(rf"{variant} = {disc},", src), f"{variant} discriminant drifted"
+        assert re.search(rf'ErrorCode::{variant} => "{label}"', src), f"{variant} label drifted"
+    # from_u8 covers exactly the table, nothing else
+    assert f"{max(ERROR_CODES) + 1} =>" not in src
+
+
+# ---------------------------------------------------------------------------
+# Golden bytes (shared verbatim with rust/tests/wire.rs)
+# ---------------------------------------------------------------------------
+
+GOLDEN = [
+    (
+        ("submit", 1, 2, 3, "t", "d", [5, -1]),
+        "270000000101000000000000000200000000000000030000000100740100640200000005000000ffffffff",
+    ),
+    (("hello", 1, 1024), "06000000100100040000"),
+    (("error", 7, 2, "x"), "0d00000014070000000000000002010078"),
+    (("token", 9, 4, -7), "1100000012090000000000000004000000f9ffffff"),
+]
+
+
+def test_golden_bytes_pin_the_layout():
+    for frame, hexstr in GOLDEN:
+        assert encode(frame).hex() == hexstr, frame
+        assert decode(bytes.fromhex(hexstr)) == frame
+
+
+# ---------------------------------------------------------------------------
+# Round-trip + rejection properties (seeded splitmix64, no hypothesis)
+# ---------------------------------------------------------------------------
+
+M64 = (1 << 64) - 1
+
+
+def splitmix64(seed: int):
+    state = seed & M64
+    while True:
+        state = (state + 0x9E3779B97F4A7C15) & M64
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        yield z ^ (z >> 31)
+
+
+def _rand_frame(rng) -> tuple:
+    def u64():
+        return next(rng)
+
+    def u32():
+        return next(rng) & 0xFFFFFFFF
+
+    def i32():
+        v = next(rng) & 0xFFFFFFFF
+        return v - (1 << 32) if v >= 1 << 31 else v
+
+    def s(maxlen):
+        n = next(rng) % (maxlen + 1)
+        return "".join(chr(ord("a") + next(rng) % 26) for _ in range(n))
+
+    k = next(rng) % 11
+    if k == 0:
+        return ("submit", u64(), u64(), u32(), s(12), s(12),
+                [i32() for _ in range(next(rng) % 64)])
+    if k == 1:
+        return ("cancel", u64())
+    if k == 2:
+        return ("credit", u32())
+    if k == 3:
+        return ("shutdown", next(rng) % 2 == 1)
+    if k == 4:
+        return ("ping", u64())
+    if k == 5:
+        return ("hello", next(rng) % 256, u32())
+    if k == 6:
+        return ("accepted", u64(), u64())
+    if k == 7:
+        return ("token", u64(), u32(), i32())
+    if k == 8:
+        return ("finished", u64(), next(rng) % 4, u32())
+    if k == 9:
+        return ("error", u64(), 1 + next(rng) % 8, s(40))
+    return ("pong", u64())
+
+
+def test_roundtrip_every_kind_fuzzed():
+    rng = splitmix64(0xC0DEC)
+    for _ in range(2000):
+        f = _rand_frame(rng)
+        assert decode(encode(f)) == f
+
+
+def test_decode_is_canonical():
+    rng = splitmix64(0xBEEF)
+    for _ in range(2000):
+        body = encode_body(_rand_frame(rng))
+        assert encode_body(decode_body(body)) == body
+
+
+def test_truncations_always_raise():
+    rng = splitmix64(0x7A7A)
+    for _ in range(200):
+        body = encode_body(_rand_frame(rng))
+        for cut in range(len(body)):
+            with pytest.raises(WireErr):
+                decode_body(body[:cut])
+
+
+def test_garbage_never_escapes_typed_error():
+    rng = splitmix64(0x6A6B)
+    for _ in range(2000):
+        blob = bytes(next(rng) & 0xFF for _ in range(next(rng) % 96))
+        try:
+            decode(blob)
+        except WireErr:
+            pass  # every failure is the typed one
+
+
+def test_malformed_rejections():
+    # unknown kind byte
+    with pytest.raises(WireErr, match="unknown kind"):
+        decode_body(bytes([0x7F]) + b"\0" * 8)
+    # zero / oversized declared length
+    with pytest.raises(WireErr, match="oversized"):
+        decode(struct.pack("<I", 0))
+    with pytest.raises(WireErr, match="oversized"):
+        decode(struct.pack("<I", MAX_FRAME + 1) + b"\0")
+    # trailing bytes after a valid payload
+    with pytest.raises(WireErr, match="trailing"):
+        decode_body(encode_body(("cancel", 5)) + b"\0")
+    # lying prompt count on a short body (must not over-allocate)
+    lying = encode_body(("submit", 1, 2, 3, "", "", []))[:-4] + struct.pack("<I", MAX_PROMPT)
+    with pytest.raises(WireErr, match="truncated"):
+        decode_body(lying)
+    # absurd prompt count is a bad value even if the length field lies big
+    huge = encode_body(("submit", 1, 2, 3, "", "", []))[:-4] + struct.pack("<I", MAX_PROMPT + 1)
+    with pytest.raises(WireErr, match="prompt length"):
+        decode_body(huge)
+    # invalid finish reason / error code / shutdown mode bytes
+    with pytest.raises(WireErr, match="finish reason"):
+        decode_body(bytes([KINDS["FINISHED"]]) + struct.pack("<QBI", 1, 9, 0))
+    with pytest.raises(WireErr, match="error code"):
+        decode_body(bytes([KINDS["ERROR"]]) + struct.pack("<QB", 1, 99) + _s(""))
+    with pytest.raises(WireErr, match="shutdown mode"):
+        decode_body(bytes([KINDS["SHUTDOWN"], 2]))
+    # non-utf8 string payload
+    bad = bytes([KINDS["ERROR"]]) + struct.pack("<QB", 1, 1) + struct.pack("<H", 2) + b"\xff\xfe"
+    with pytest.raises(WireErr, match="utf8"):
+        decode_body(bad)
+
+
+def test_rust_twin_carries_the_same_goldens():
+    """The golden hex strings must appear verbatim in rust/tests/wire.rs."""
+    src = (REPO / "rust" / "tests" / "wire.rs").read_text()
+    for _, hexstr in GOLDEN:
+        assert hexstr in src, f"golden {hexstr[:16]}… missing from rust/tests/wire.rs"

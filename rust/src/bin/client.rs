@@ -1,0 +1,102 @@
+//! sparsespec-client — open-loop load generator for sparsespec-server.
+//!
+//! Generates per-tenant `workload` traffic (Poisson or bursty/diurnal
+//! arrival curves), replays it over the wire protocol, and reports
+//! client-side TTFT / inter-token latency / goodput plus typed refusal
+//! counts.
+//!
+//! Examples:
+//!   sparsespec-client --addr 127.0.0.1:7433 --tenants acme,hobby \
+//!       --requests 16 --rate 4 --horizon 20 --arrival bursty:4 \
+//!       --dataset aime --seed 7 --shutdown
+
+use sparsespec::serving::{run_load, ClientConfig, TenantLoad};
+use sparsespec::util::cli::Args;
+use sparsespec::workload::{ArrivalCurve, Dataset, WorkloadGen};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sparsespec-client [flags]\n\
+         \x20 --addr ADDR         server wire address (default 127.0.0.1:7433)\n\
+         \x20 --tenants LIST      comma-separated tenant names (default 'default')\n\
+         \x20 --drafters LIST     per-tenant wire drafter names, parallel to --tenants ('' = engine default)\n\
+         \x20 --requests N        requests per tenant for offline mode (default 8)\n\
+         \x20 --rate R            arrivals/s per tenant — switches to online arrivals\n\
+         \x20 --horizon SECS      online horizon in trace seconds (default 20)\n\
+         \x20 --arrival CURVE     uniform | bursty:<ratio> | diurnal:<ratio> (default uniform)\n\
+         \x20 --dataset NAME      aime|olympiad|livecode|short|long (default aime)\n\
+         \x20 --seed S            workload seed (default 7; tenant index is mixed in)\n\
+         \x20 --time-scale F      trace-seconds compressed per wall second (default 50)\n\
+         \x20 --credit-every N    return token credit every N tokens (default 32)\n\
+         \x20 --timeout SECS      client deadline (default 60)\n\
+         \x20 --artifacts DIR     artifact dir for workload model/grammar config\n\
+         \x20 --shutdown          drain the server after the run\n\
+         \x20 --report-out FILE   save the Prometheus exposition of client metrics"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if args.bool("help", false) {
+        usage();
+    }
+    let rt = sparsespec::runtime::Runtime::load(&args.str("artifacts", "artifacts"))?;
+    let dataset = Dataset::parse(&args.str("dataset", "aime")).unwrap_or_else(|| usage());
+    let curve = ArrivalCurve::parse(&args.str("arrival", "uniform")).unwrap_or_else(|| usage());
+    let tenants: Vec<String> = args
+        .str("tenants", "default")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.to_string())
+        .collect();
+    let drafters: Vec<String> = args
+        .str("drafters", "")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let seed = args.u64("seed", 7);
+    let horizon = args.f64("horizon", 20.0);
+
+    let mut cfg = ClientConfig::new(&args.str("addr", "127.0.0.1:7433"));
+    cfg.credit_every = args.u64("credit-every", 32) as u32;
+    cfg.time_scale = args.f64("time-scale", 50.0);
+    cfg.timeout_s = args.f64("timeout", 60.0);
+    cfg.shutdown_after = args.bool("shutdown", false);
+
+    for (i, name) in tenants.iter().enumerate() {
+        let mut gen = WorkloadGen::new(
+            rt.cfg.grammar.clone(),
+            rt.cfg.model.clone(),
+            dataset,
+            // distinct per-tenant streams, deterministic per --seed
+            seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let requests = match args.opt("rate") {
+            Some(r) => {
+                let rate: f64 = r.parse().unwrap_or(2.0);
+                gen.online_trace_curve(rate, horizon, curve)
+            }
+            None => gen.offline_batch(args.usize("requests", 8)),
+        };
+        println!("tenant {name}: {} requests ({})", requests.len(), dataset.name());
+        cfg.tenants.push(TenantLoad {
+            name: name.clone(),
+            requests,
+            drafter: drafters.get(i).cloned().unwrap_or_default(),
+        });
+    }
+
+    let report = run_load(cfg)?;
+    print!("{}", report.render());
+    if let Some(path) = args.opt("report-out") {
+        std::fs::write(path, report.metrics.expose_prometheus("sparsespec_client"))?;
+        println!("client metrics saved to {path}");
+    }
+    // Non-zero exit when anything failed outright (refusals are expected
+    // under deliberate overload and do not fail the run).
+    if report.failed > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! sparsespec-server — the network serving front-end.
+//!
+//! Binds the wire protocol on `--listen`, serves `/metrics` on
+//! `--metrics-addr`, and polices traffic: KV-budget admission control,
+//! watermark load-shedding, bounded per-tenant queues under weighted
+//! round-robin, slow-reader drop-to-cancel, graceful drain on the wire
+//! `Shutdown` frame (or SIGINT-free: any client can request the drain).
+//!
+//! Examples:
+//!   sparsespec-server --listen 127.0.0.1:7433 --metrics-addr 127.0.0.1:7434 \
+//!       --drafter pillar --k 8 --kv-policy dynamic --kv-budget 2048 \
+//!       --shed-watermark 0.85 --tenant-weights acme:2,hobby:1 \
+//!       --trace-out reports/server_trace.json
+
+use std::collections::BTreeMap;
+
+use sparsespec::engine::EngineConfig;
+use sparsespec::kv_cache::KvPolicy;
+use sparsespec::scheduler::Schedule;
+use sparsespec::serving::{Server, ServerConfig};
+use sparsespec::spec::DrafterKind;
+use sparsespec::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sparsespec-server [flags]\n\
+         \x20 --listen ADDR          wire-protocol listen address (default 127.0.0.1:7433; port 0 = ephemeral)\n\
+         \x20 --metrics-addr ADDR    HTTP /metrics listen address (off unless given)\n\
+         \x20 --artifacts DIR        artifact directory (default ./artifacts; falls back to the sim model)\n\
+         \x20 --drafter NAME  --w W  --ngram-n N   default drafter (as the sparsespec CLI)\n\
+         \x20 --k K  --schedule lockstep|unified  --delayed  --kv-policy conservative|preempt|dynamic\n\
+         \x20 --kv-budget TOKENS  --temp T  --seed S  --adaptive-k\n\
+         \x20 --shed-watermark F     refuse new work above this KV utilisation (default 0.85)\n\
+         \x20 --send-window N        initial per-connection token credit (default 1024)\n\
+         \x20 --stall-ticks N        serving-loop ticks before a stalled reader is dropped (default 2000)\n\
+         \x20 --tenant-queue-cap N   per-tenant admission queue bound (default 64)\n\
+         \x20 --max-inflight N       sessions in the engine at once (default 2x slots)\n\
+         \x20 --tenant-weights SPEC  name:weight[,name:weight..] for weighted round-robin\n\
+         \x20 --trace-out FILE       export the Perfetto trace on drain  --trace-sample N\n\
+         \x20 --fault-plan SPEC  --fault-seed S   chaos injection (as the sparsespec CLI)"
+    );
+    std::process::exit(2)
+}
+
+fn parse_weights(spec: &str) -> Option<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (name, w) = part.split_once(':')?;
+        let w: f64 = w.parse().ok()?;
+        if !w.is_finite() || w <= 0.0 {
+            return None;
+        }
+        out.insert(name.to_string(), w);
+    }
+    Some(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if args.bool("help", false) {
+        usage();
+    }
+    let artifacts = args.str("artifacts", "artifacts");
+
+    // Engine configuration — same flags as `sparsespec serve`.
+    let rt_probe = sparsespec::runtime::Runtime::load(&artifacts)?;
+    let w = args.usize("w", rt_probe.cfg.model.draft_budget);
+    let n = args.usize("ngram-n", 3);
+    let drafter =
+        DrafterKind::parse(&args.str("drafter", "pillar"), w, n).unwrap_or_else(|| usage());
+    let schedule = Schedule::parse(&args.str("schedule", "lockstep")).unwrap_or_else(|| usage());
+    let kv_policy = KvPolicy::parse(&args.str("kv-policy", "dynamic")).unwrap_or_else(|| usage());
+    let mut cfg = EngineConfig::new(drafter)
+        .with_k(args.usize("k", rt_probe.cfg.model.spec_k))
+        .with_schedule(schedule, args.bool("delayed", false))
+        .with_kv(kv_policy, args.usize("kv-budget", usize::MAX / 2));
+    cfg.temperature = args.f64("temp", 0.0) as f32;
+    cfg.seed = args.u64("seed", 7);
+    cfg.adaptive_k = args.bool("adaptive-k", false);
+    // A server runs until drained, not until an experiment's iteration cap.
+    cfg.max_iterations = u64::MAX;
+    let trace_out = args.opt("trace-out").map(|s| s.to_string());
+    if trace_out.is_some() {
+        cfg.trace =
+            sparsespec::trace::TraceConfig::on().with_sampling(args.usize("trace-sample", 1));
+    }
+    if let Some(spec) = args.opt("fault-plan") {
+        let plan = sparsespec::fault::FaultPlan::parse(spec)?;
+        cfg.fault = sparsespec::fault::FaultConfig::new(plan, args.u64("fault-seed", 0));
+        println!("chaos: fault plan [{}] seed {}", cfg.fault.plan.to_spec(), cfg.fault.seed);
+    }
+    drop(rt_probe);
+
+    let mut scfg = ServerConfig::new(&artifacts, cfg);
+    scfg.addr = args.str("listen", "127.0.0.1:7433");
+    scfg.metrics_addr = args.opt("metrics-addr").map(|s| s.to_string());
+    scfg.kv_shed_watermark = args.f64("shed-watermark", 0.85);
+    scfg.send_window = args.u64("send-window", 1024) as u32;
+    scfg.send_queue_cap = scfg.send_window as usize + 64;
+    scfg.stall_ticks = args.u64("stall-ticks", 2000);
+    scfg.tenant_queue_cap = args.usize("tenant-queue-cap", 64);
+    scfg.max_inflight = args.usize("max-inflight", 0);
+    scfg.trace_out = trace_out;
+    if let Some(spec) = args.opt("tenant-weights") {
+        scfg.tenant_weights = parse_weights(spec).unwrap_or_else(|| usage());
+    }
+
+    let server = Server::spawn(scfg)?;
+    println!("sparsespec-server listening on {}", server.addr());
+    if let Some(m) = server.metrics_addr() {
+        println!("metrics on http://{m}/metrics");
+    }
+    println!("(drain with the wire Shutdown frame, e.g. sparsespec-client --shutdown)");
+
+    let summary = server.join()?;
+    println!(
+        "drained: completed={} cancelled={} refused={}",
+        summary.sessions_completed, summary.sessions_cancelled, summary.sessions_refused
+    );
+    println!("{}", summary.report.summary());
+    if let Some(path) = args.opt("metrics-out") {
+        std::fs::write(path, &summary.exposition)?;
+        println!("metrics exposition saved to {path}");
+    }
+    Ok(())
+}

@@ -28,6 +28,14 @@
 //! Everything here is single-threaded by design (the engine owns `Rc`
 //! runtime state); sessions are `Rc<RefCell<…>>` views, not channels
 //! across threads.
+//!
+//! **Network entry point:** the `sparsespec-server` binary
+//! ([`crate::serving`]) wraps exactly this API behind a TCP wire
+//! protocol — submit/stream/cancel frames map 1:1 onto
+//! [`EngineHandle::submit`] / [`SessionHandle::drain`] /
+//! [`SessionHandle::cancel`], with admission control, backpressure and
+//! per-tenant fairness layered in front.  Outputs stay bit-identical to
+//! in-process serving (greedy decode is schedule-independent).
 
 use anyhow::Result;
 use std::cell::RefCell;

@@ -50,6 +50,11 @@
 //! inter-token / acceptance stats, and can be cancelled mid-generation;
 //! `Engine::run(Vec<Request>)` survives as a batch-compatibility wrapper
 //! with bit-identical outputs.  See `engine::api` for the full surface.
+//! The [`serving`] module takes the same surface across the process
+//! boundary: `sparsespec-server` exposes submit/stream/cancel over TCP
+//! (admission control, backpressure, per-tenant fairness) and
+//! `sparsespec-client` replays open-loop workload traffic against it —
+//! see EXPERIMENTS.md §Serving.
 //!
 //! ## Observability
 //!
@@ -111,6 +116,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
+pub mod serving;
 pub mod spec;
 pub mod trace;
 pub mod util;

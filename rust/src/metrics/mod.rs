@@ -118,6 +118,55 @@ pub fn keyed(name: &str, tag: &str) -> String {
     format!("{name}[{tag}]")
 }
 
+/// Shared TTFT / inter-token report block over a registry's `ttft_s` and
+/// `inter_token_s` histograms (empty string when neither has samples).
+/// One renderer for the `reasoning_serve` / `online_chat` examples and
+/// the `sparsespec-client` load generator, so latency lines stay
+/// comparable across all three.
+pub fn latency_block(m: &MetricsRegistry, labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    if let Some(ttft) = m.histogram("ttft_s", labels) {
+        if !ttft.is_empty() {
+            let _ = writeln!(
+                out,
+                "  TTFT:        p50={:.4}s p99={:.4}s max={:.4}s (n={})",
+                ttft.percentile(50.0),
+                ttft.percentile(99.0),
+                ttft.max(),
+                ttft.len()
+            );
+        }
+    }
+    if let Some(itl) = m.histogram("inter_token_s", labels) {
+        if !itl.is_empty() {
+            let _ = writeln!(
+                out,
+                "  inter-token: p50={:.5}s p99={:.5}s (n={})",
+                itl.percentile(50.0),
+                itl.percentile(99.0),
+                itl.len()
+            );
+        }
+    }
+    out
+}
+
+/// Fixed-width right-aligned p50 table cell with an `n/a` guard for
+/// missing/empty histograms — the other half of the shared report
+/// rendering (the per-system / per-drafter summary tables).
+pub fn p50_cell(
+    m: &MetricsRegistry,
+    name: &str,
+    labels: &[(&str, &str)],
+    width: usize,
+    prec: usize,
+) -> String {
+    match m.histogram(name, labels) {
+        Some(h) if !h.is_empty() => format!("{:>width$.prec$}", h.percentile(50.0)),
+        _ => format!("{:>width$}", "n/a"),
+    }
+}
+
 /// Named counters + histograms + monotonically-sampled traces.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -324,6 +373,31 @@ mod tests {
         h.record(100.0);
         assert_eq!(h.percentile(100.0), 100.0);
         assert_eq!(h.len(), 11);
+    }
+
+    #[test]
+    fn latency_block_renders_and_guards_empty() {
+        let empty = MetricsRegistry::new();
+        assert_eq!(latency_block(&empty, &[]), "");
+        let mut m = MetricsRegistry::new();
+        m.observe("ttft_s", &[], 0.25);
+        m.observe("inter_token_s", &[], 0.001);
+        m.observe("inter_token_s", &[], 0.003);
+        let text = latency_block(&m, &[]);
+        assert!(text.contains("TTFT:        p50=0.2500s"), "{text}");
+        assert!(text.contains("inter-token: p50="), "{text}");
+        assert!(text.contains("(n=2)"), "{text}");
+        // labelled series are independent of the aggregate
+        assert_eq!(latency_block(&m, &[("tenant", "a")]), "");
+    }
+
+    #[test]
+    fn p50_cell_formats_and_falls_back() {
+        let mut m = MetricsRegistry::new();
+        m.observe("ttft_s", &[], 1.5);
+        assert_eq!(p50_cell(&m, "ttft_s", &[], 12, 4), "      1.5000");
+        assert_eq!(p50_cell(&m, "ttft_s", &[("d", "x")], 12, 4), "         n/a");
+        assert_eq!(p50_cell(&m, "missing", &[], 8, 2), "     n/a");
     }
 
     #[test]

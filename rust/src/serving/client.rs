@@ -1,0 +1,444 @@
+//! `sparsespec-client`: open-loop load generator for the serving
+//! front-end.
+//!
+//! Replays `workload` traffic over the wire protocol — one connection per
+//! tenant, submissions paced by each request's `arrival_s` (compressed by
+//! [`ClientConfig::time_scale`]), tokens consumed as they stream — and
+//! measures everything from the *client* side: TTFT from the moment the
+//! `Submit` frame hits the socket, inter-token gaps between `Token`
+//! frames, goodput over completed sessions, and typed refusal counts per
+//! [`ErrorCode`].  Client-side numbers are the ones a user would see;
+//! they include wire, queueing and admission delay the in-process
+//! `SessionStats` cannot.
+//!
+//! The generator is open-loop: arrival times come from the workload
+//! trace, not from response latency, so an overloaded server shows up as
+//! latency/refusals instead of silently throttled offered load.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{latency_block, MetricsRegistry};
+use crate::workload::Request;
+
+use super::wire::{self, Frame};
+
+/// One tenant's share of the offered load.
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    pub name: String,
+    /// Pre-generated requests; `arrival_s` paces submission.
+    pub requests: Vec<Request>,
+    /// Wire drafter name for every request of this tenant ("" = engine
+    /// default; per-request `Request::drafter` overrides are not carried
+    /// over the wire — name them here instead).
+    pub drafter: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    pub addr: String,
+    pub tenants: Vec<TenantLoad>,
+    /// Grant token credit back to the server every N consumed tokens.
+    pub credit_every: u32,
+    /// Divide workload `arrival_s` by this to get wall seconds (50 ⇒ one
+    /// trace second replays in 20 ms).
+    pub time_scale: f64,
+    /// Hard wall-clock deadline; sessions still unterminated at the
+    /// deadline count as failed.
+    pub timeout_s: f64,
+    /// Send a graceful `Shutdown` after all sessions terminate and wait
+    /// for the server to drain.
+    pub shutdown_after: bool,
+}
+
+impl ClientConfig {
+    pub fn new(addr: &str) -> Self {
+        ClientConfig {
+            addr: addr.to_string(),
+            tenants: Vec::new(),
+            credit_every: 32,
+            time_scale: 50.0,
+            timeout_s: 60.0,
+            shutdown_after: false,
+        }
+    }
+}
+
+/// Client-side run results.
+pub struct ClientReport {
+    /// `ttft_s` / `inter_token_s` histograms and session counters, both
+    /// aggregate and `{tenant="…"}`-labelled.
+    pub metrics: MetricsRegistry,
+    /// Streamed output per request: `(tenant, client req id)` → tokens.
+    pub outputs: BTreeMap<(String, u64), Vec<i32>>,
+    pub completed: u64,
+    pub cancelled: u64,
+    /// Typed pre-admission refusals by [`super::wire::ErrorCode`] label.
+    pub refused: BTreeMap<String, u64>,
+    /// Engine-faulted plus deadline-expired sessions.
+    pub failed: u64,
+    pub wall_s: f64,
+}
+
+impl ClientReport {
+    pub fn refused_total(&self) -> u64 {
+        self.refused.values().sum()
+    }
+
+    /// Tokens from completed sessions per wall second.
+    pub fn goodput_tok_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.get("tokens_completed") / self.wall_s
+    }
+
+    /// Human summary (the client binary's output); latency lines come
+    /// from the shared [`latency_block`] helper the examples use.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "client: ok={} cancelled={} refused={} failed={} in {:.2}s  goodput={:.1} tok/s",
+            self.completed,
+            self.cancelled,
+            self.refused_total(),
+            self.failed,
+            self.wall_s,
+            self.goodput_tok_s(),
+        );
+        out.push_str(&latency_block(&self.metrics, &[]));
+        let tenants: Vec<String> = self
+            .outputs
+            .keys()
+            .map(|(t, _)| t.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        if tenants.len() > 1 {
+            for t in tenants {
+                let by: &[(&str, &str)] = &[("tenant", &t)];
+                let _ = writeln!(
+                    out,
+                    "  tenant {t}: ok={} tokens={}",
+                    self.metrics.counter("sessions_completed", by),
+                    self.metrics.counter("tokens_completed", by),
+                );
+                out.push_str(&latency_block(&self.metrics, by));
+            }
+        }
+        for (code, n) in &self.refused {
+            let _ = writeln!(out, "  refused[{code}] = {n}");
+        }
+        out
+    }
+}
+
+/// Per-session receive state, filled in by the reader thread.
+struct SessRecv {
+    req_id: u64,
+    tokens: Vec<i32>,
+    submitted: Instant,
+    first: Option<Instant>,
+    last: Option<Instant>,
+    finished: Option<u8>,
+}
+
+#[derive(Default)]
+struct Shared {
+    /// Submit wall time by client req id (written just before the frame).
+    submitted: BTreeMap<u64, Instant>,
+    /// Accepted sessions by server session id.
+    by_session: BTreeMap<u64, SessRecv>,
+    req_to_session: BTreeMap<u64, u64>,
+    /// Pre-admission refusals: req id → error-code label.
+    refusals: BTreeMap<u64, String>,
+    /// Post-admission error details (slow reader, engine fault).
+    session_errors: BTreeMap<u64, String>,
+    /// Requests that reached a terminal state (refused or finished).
+    terminal: usize,
+    hello_window: Option<u32>,
+    reader_dead: bool,
+}
+
+fn send(stream: &Mutex<TcpStream>, f: &Frame) -> Result<()> {
+    let mut s = stream.lock().expect("client write lock");
+    wire::write_frame(&mut *s, f).map_err(|e| anyhow!("client write: {e}"))
+}
+
+fn reader_loop(stream: TcpStream, write: Arc<Mutex<TcpStream>>, shared: Arc<Mutex<Shared>>, credit_every: u32) {
+    let mut r = BufReader::new(stream);
+    let mut consumed = 0u32;
+    loop {
+        let frame = match wire::read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break,
+        };
+        let mut sh = shared.lock().expect("client shared lock");
+        match frame {
+            Frame::Hello { window, .. } => sh.hello_window = Some(window),
+            Frame::Accepted { req_id, session } => {
+                let submitted = sh.submitted.get(&req_id).copied().unwrap_or_else(Instant::now);
+                sh.req_to_session.insert(req_id, session);
+                sh.by_session.insert(
+                    session,
+                    SessRecv { req_id, tokens: Vec::new(), submitted, first: None, last: None, finished: None },
+                );
+            }
+            Frame::Token { session, token, .. } => {
+                if let Some(s) = sh.by_session.get_mut(&session) {
+                    let now = Instant::now();
+                    if s.first.is_none() {
+                        s.first = Some(now);
+                    }
+                    s.last = Some(now);
+                    s.tokens.push(token);
+                }
+                consumed += 1;
+                if consumed >= credit_every {
+                    drop(sh);
+                    let _ = send(&write, &Frame::Credit { n: consumed });
+                    consumed = 0;
+                    continue;
+                }
+            }
+            Frame::Finished { session, reason, .. } => {
+                if let Some(s) = sh.by_session.get_mut(&session) {
+                    if s.finished.is_none() {
+                        s.finished = Some(reason);
+                        sh.terminal += 1;
+                    }
+                }
+            }
+            Frame::Error { req_id, code, detail } => {
+                // An Error for an accepted request annotates the session
+                // (its Finished frame is the terminal event); an Error for
+                // an unaccepted request IS the terminal event (refusal).
+                if let Some(&session) = sh.req_to_session.get(&req_id) {
+                    sh.session_errors.insert(session, detail);
+                } else if req_id != 0 && !sh.refusals.contains_key(&req_id) {
+                    sh.refusals.insert(req_id, code.label().to_string());
+                    sh.terminal += 1;
+                }
+            }
+            Frame::Pong { .. } => {}
+            // server never sends client→server kinds; ignore defensively
+            _ => {}
+        }
+    }
+    shared.lock().expect("client shared lock").reader_dead = true;
+}
+
+struct TenantOutcome {
+    name: String,
+    shared: Arc<Mutex<Shared>>,
+    sent: usize,
+}
+
+fn tenant_worker(
+    addr: String,
+    tenant: TenantLoad,
+    credit_every: u32,
+    time_scale: f64,
+    deadline: Instant,
+    start: Instant,
+) -> Result<TenantOutcome> {
+    let stream = TcpStream::connect(&addr)?;
+    let _ = stream.set_nodelay(true);
+    let write = Arc::new(Mutex::new(stream.try_clone()?));
+    let shared = Arc::new(Mutex::new(Shared::default()));
+    let r_shared = shared.clone();
+    let r_write = write.clone();
+    let reader = std::thread::spawn(move || reader_loop(stream, r_write, r_shared, credit_every));
+
+    let scale = if time_scale > 0.0 { time_scale } else { 1.0 };
+    let mut sent = 0usize;
+    for req in &tenant.requests {
+        let due = start + Duration::from_secs_f64(req.arrival_s / scale);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        if Instant::now() > deadline {
+            break;
+        }
+        {
+            let mut sh = shared.lock().expect("client shared lock");
+            sh.submitted.insert(req.id, Instant::now());
+        }
+        send(
+            &write,
+            &Frame::Submit {
+                req_id: req.id,
+                seed: req.seed,
+                max_new: req.max_new as u32,
+                tenant: tenant.name.clone(),
+                drafter: tenant.drafter.clone(),
+                prompt: req.prompt.clone(),
+            },
+        )?;
+        sent += 1;
+    }
+
+    // Wait for every submitted request to reach a terminal state.
+    loop {
+        {
+            let sh = shared.lock().expect("client shared lock");
+            if sh.terminal >= sent || sh.reader_dead {
+                break;
+            }
+        }
+        if Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Half-close: the server reader sees EOF and cleans the connection.
+    {
+        let s = write.lock().expect("client write lock");
+        let _ = s.shutdown(std::net::Shutdown::Write);
+    }
+    let _ = reader.join();
+    Ok(TenantOutcome { name: tenant.name, shared, sent })
+}
+
+/// Replay the configured load and collect the client-side report.
+pub fn run_load(cfg: ClientConfig) -> Result<ClientReport> {
+    if cfg.tenants.is_empty() {
+        bail!("client: no tenants configured");
+    }
+    let start = Instant::now();
+    let deadline = start + Duration::from_secs_f64(cfg.timeout_s);
+    let mut workers = Vec::new();
+    for tenant in cfg.tenants.clone() {
+        let addr = cfg.addr.clone();
+        let (ce, ts) = (cfg.credit_every, cfg.time_scale);
+        workers.push(std::thread::spawn(move || {
+            tenant_worker(addr, tenant, ce, ts, deadline, start)
+        }));
+    }
+    let mut outcomes = Vec::new();
+    for w in workers {
+        outcomes.push(w.join().map_err(|_| anyhow!("client worker panicked"))??);
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let mut report = ClientReport {
+        metrics: MetricsRegistry::new(),
+        outputs: BTreeMap::new(),
+        completed: 0,
+        cancelled: 0,
+        refused: BTreeMap::new(),
+        failed: 0,
+        wall_s,
+    };
+    for o in outcomes {
+        let sh = o.shared.lock().expect("client shared lock");
+        let by: &[(&str, &str)] = &[("tenant", &o.name)];
+        let mut terminal_seen = sh.refusals.len();
+        for (_, code) in sh.refusals.iter() {
+            *report.refused.entry(code.clone()).or_insert(0) += 1;
+        }
+        for (_, s) in sh.by_session.iter() {
+            report.outputs.insert((o.name.clone(), s.req_id), s.tokens.clone());
+            if let Some(first) = s.first {
+                let ttft = first.duration_since(s.submitted).as_secs_f64();
+                report.metrics.observe("ttft_s", &[], ttft);
+                report.metrics.observe("ttft_s", by, ttft);
+            }
+            if let (Some(first), Some(last)) = (s.first, s.last) {
+                // Mean gap recorded once per gap: per-frame reader-thread
+                // timestamps are scheduler-noisy at microsecond generation
+                // speeds; the session mean is the stable client-side
+                // quantity (SessionStats keeps the per-gap histogram).
+                if s.tokens.len() > 1 {
+                    let itl = last.duration_since(first).as_secs_f64() / (s.tokens.len() - 1) as f64;
+                    for _ in 1..s.tokens.len() {
+                        report.metrics.observe("inter_token_s", &[], itl);
+                        report.metrics.observe("inter_token_s", by, itl);
+                    }
+                }
+            }
+            match s.finished {
+                Some(0) => {
+                    terminal_seen += 1;
+                    report.completed += 1;
+                    report.metrics.inc("sessions_completed", &[], 1.0);
+                    report.metrics.inc("sessions_completed", by, 1.0);
+                    report.metrics.inc("tokens_completed", &[], s.tokens.len() as f64);
+                    report.metrics.inc("tokens_completed", by, s.tokens.len() as f64);
+                }
+                Some(1) => {
+                    terminal_seen += 1;
+                    report.cancelled += 1;
+                    report.metrics.inc("sessions_cancelled", &[], 1.0);
+                    report.metrics.inc("sessions_cancelled", by, 1.0);
+                }
+                Some(_) => {
+                    terminal_seen += 1;
+                    report.failed += 1;
+                    report.metrics.inc("sessions_failed", &[], 1.0);
+                    report.metrics.inc("sessions_failed", by, 1.0);
+                }
+                None => {}
+            }
+        }
+        // deadline-expired: submitted but never terminal
+        let missing = o.sent.saturating_sub(terminal_seen) as u64;
+        report.failed += missing;
+        if missing > 0 {
+            report.metrics.inc("sessions_failed", &[], missing as f64);
+            report.metrics.inc("sessions_failed", by, missing as f64);
+        }
+    }
+
+    if cfg.shutdown_after {
+        drain_server(&cfg.addr)?;
+    }
+    Ok(report)
+}
+
+/// Ask the server to drain gracefully and wait until it does (its side of
+/// every connection closes when the drain completes).
+pub fn drain_server(addr: &str) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let write = stream.try_clone()?;
+    let mut w = write;
+    wire::write_frame(&mut w, &Frame::Shutdown { abort: false })
+        .map_err(|e| anyhow!("client write: {e}"))?;
+    let mut r = BufReader::new(stream);
+    // consume Hello (and anything else) until the server closes
+    while let Ok(Some(_)) = wire::read_frame(&mut r) {}
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_and_goodput() {
+        let mut r = ClientReport {
+            metrics: MetricsRegistry::new(),
+            outputs: BTreeMap::new(),
+            completed: 2,
+            cancelled: 1,
+            refused: BTreeMap::new(),
+            failed: 0,
+            wall_s: 2.0,
+        };
+        r.refused.insert("kv_shed".into(), 3);
+        r.metrics.inc("tokens_completed", &[], 100.0);
+        assert_eq!(r.refused_total(), 3);
+        assert!((r.goodput_tok_s() - 50.0).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("ok=2"), "{text}");
+        assert!(text.contains("refused[kv_shed] = 3"), "{text}");
+    }
+}

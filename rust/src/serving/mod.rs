@@ -1,0 +1,32 @@
+//! Network serving front-end: the process boundary around the engine.
+//!
+//! Three layers, matching the paper's online-serving story (§2.2 —
+//! latency-bound decode under continuous arrivals):
+//!
+//! * [`wire`] — the length-prefixed binary frame protocol
+//!   (submit / stream / cancel, credit-based flow control, typed error
+//!   codes).  Total codec: malformed bytes return [`wire::WireError`],
+//!   never panic.
+//! * [`server`] — `sparsespec-server`: one engine thread (the engine is
+//!   single-threaded by design), per-connection reader/writer threads,
+//!   and the traffic-policing layer — KV-budget admission control,
+//!   watermark load-shedding, bounded per-tenant queues under
+//!   deficit-weighted round-robin, slow-reader drop-to-cancel, graceful
+//!   drain — plus an HTTP `/metrics` endpoint serving the Prometheus
+//!   exposition.
+//! * [`client`] — `sparsespec-client`: open-loop load generator
+//!   replaying `workload` traces per tenant, measuring client-side
+//!   TTFT / inter-token latency / goodput and typed refusal counts.
+//!
+//! Determinism carries over the wire: the engine decodes greedily at
+//! `temperature=0`, so each request's streamed token sequence is
+//! independent of admission order and bit-identical to `Engine::run` on
+//! the same request — pinned by `rust/tests/serving.rs`.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{run_load, ClientConfig, ClientReport, TenantLoad};
+pub use server::{Server, ServerConfig, ServerSummary, WrrQueues};
+pub use wire::{ErrorCode, Frame, WireError};

@@ -1,0 +1,1207 @@
+//! `sparsespec-server`: the network serving front-end.
+//!
+//! One engine thread owns the (single-threaded, `Rc`-state) [`Engine`]
+//! behind an [`EngineHandle`]; every TCP connection gets a reader thread
+//! (frames → control channel) and a writer thread (bounded outbound frame
+//! queue → socket).  The engine thread is the only place sessions are
+//! touched, so the serving loop stays exactly as deterministic as the
+//! in-process API.
+//!
+//! Traffic policing (the point of this module — not just plumbing):
+//!
+//! * **Admission control against the KV budget** — a request whose
+//!   worst-case footprint (`prompt_pad + max_new + k + 2`) exceeds the
+//!   device budget is refused with [`ErrorCode::AdmissionReject`] instead
+//!   of queueing forever; queued requests are only released into the
+//!   engine while the projected resident footprint fits the budget.
+//! * **Load shedding** — when device-KV utilisation crosses
+//!   [`ServerConfig::kv_shed_watermark`], new submissions are refused
+//!   with [`ErrorCode::KvShed`] while already-admitted sessions run to
+//!   completion.
+//! * **Per-tenant fairness** — submissions land in bounded per-tenant
+//!   queues (overflow → [`ErrorCode::TenantQueueFull`]) drained by
+//!   deficit-weighted round-robin ([`WrrQueues`]), so a flooding tenant
+//!   cannot starve the others.
+//! * **Backpressure on slow readers** — token frames are credit-gated
+//!   (see [`super::wire`]): a client that stops granting credit stalls
+//!   its connection; after [`ServerConfig::stall_ticks`] serving-loop
+//!   ticks the connection's sessions are cancelled
+//!   ([`ErrorCode::SlowReader`]) and everyone else keeps streaming.
+//! * **Graceful drain** — `Shutdown` (wire frame or [`Server::shutdown`])
+//!   stops admissions, serves out the queued + live sessions, flushes
+//!   every connection, then returns the final [`RunReport`].
+//!
+//! Observability rides along unchanged: the engine's `Tracer` and
+//! `FaultInjector` are threaded through [`ServerConfig::engine`], and a
+//! `/metrics` endpoint serves `MetricsRegistry::expose_prometheus()`
+//! verbatim with per-tenant labelled series.
+
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::engine::{EngineConfig, EngineHandle, FinishReason, RunReport, SessionHandle};
+use crate::metrics::MetricsRegistry;
+use crate::runtime::Runtime;
+use crate::spec::DrafterKind;
+use crate::workload::Request;
+
+use super::wire::{self, ErrorCode, Frame, WireError};
+
+/// Server configuration.  `engine` carries the full [`EngineConfig`] —
+/// tracing (`TraceConfig`) and chaos (`FaultConfig`) included — so
+/// everything that works in-process works over the wire.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Artifact directory (`Runtime::load`; missing `config.json` falls
+    /// back to the synthetic sim model, same as everywhere else).
+    pub artifacts: String,
+    pub engine: EngineConfig,
+    /// Listen address; port 0 binds an ephemeral port (read it back via
+    /// [`Server::addr`]).
+    pub addr: String,
+    /// HTTP `/metrics` listen address (`None` disables the endpoint).
+    pub metrics_addr: Option<String>,
+    /// Initial token-credit window granted per connection in `Hello`.
+    pub send_window: u32,
+    /// Bound on each connection's outbound frame queue (control frames
+    /// included); tokens are additionally credit-gated.
+    pub send_queue_cap: usize,
+    /// Serving-loop ticks a connection may sit stalled (undelivered
+    /// tokens, zero credit or full queue) before its sessions are
+    /// drop-to-cancelled with [`ErrorCode::SlowReader`].
+    pub stall_ticks: u64,
+    /// Device-KV utilisation fraction above which *new* submissions are
+    /// shed with [`ErrorCode::KvShed`].
+    pub kv_shed_watermark: f64,
+    /// Bound on each tenant's admission queue.
+    pub tenant_queue_cap: usize,
+    /// Max sessions submitted into the engine at once (0 ⇒ 2 × model
+    /// slots).  Keeps the engine's internal queue bounded so WRR order
+    /// and KV-aware admission stay in the server's hands.
+    pub max_inflight: usize,
+    /// Tenant → WRR weight; unlisted tenants weigh 1.0.
+    pub tenant_weights: BTreeMap<String, f64>,
+    /// Export the engine's Chrome/Perfetto trace here on drain (requires
+    /// `engine.trace` enabled).
+    pub trace_out: Option<String>,
+    /// Refresh the published `/metrics` exposition every N loop ticks.
+    pub metrics_publish_every: u64,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts: &str, engine: EngineConfig) -> Self {
+        ServerConfig {
+            artifacts: artifacts.to_string(),
+            engine,
+            addr: "127.0.0.1:7433".into(),
+            metrics_addr: None,
+            send_window: 1024,
+            send_queue_cap: 1024 + 64,
+            stall_ticks: 2000,
+            kv_shed_watermark: 0.85,
+            tenant_queue_cap: 64,
+            max_inflight: 0,
+            tenant_weights: BTreeMap::new(),
+            trace_out: None,
+            metrics_publish_every: 16,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weighted round-robin tenant queues (deficit round-robin)
+// ---------------------------------------------------------------------------
+
+/// Bounded per-tenant FIFO queues drained by deficit-weighted round-robin.
+///
+/// Each admission round visits tenants in name order: a non-empty queue
+/// earns its weight in deficit, then releases one item per whole unit of
+/// deficit.  Over saturated queues the admitted mix converges to the
+/// weight ratio (pinned by the unit tests below and the Python twin in
+/// `python/tests/test_serving_port.py`); empty queues forfeit their
+/// deficit, so there is no banking across idle periods.
+pub struct WrrQueues<T> {
+    tenants: BTreeMap<String, TenantQ<T>>,
+    weights: BTreeMap<String, f64>,
+    cap: usize,
+}
+
+struct TenantQ<T> {
+    weight: f64,
+    deficit: f64,
+    q: VecDeque<T>,
+}
+
+impl<T> WrrQueues<T> {
+    pub fn new(weights: BTreeMap<String, f64>, cap: usize) -> Self {
+        WrrQueues { tenants: BTreeMap::new(), weights, cap }
+    }
+
+    fn weight_of(&self, tenant: &str) -> f64 {
+        let w = self.weights.get(tenant).copied().unwrap_or(1.0);
+        if w.is_finite() && w > 0.0 { w } else { 1.0 }
+    }
+
+    /// Enqueue; `Err(item)` when the tenant's queue is at capacity.
+    pub fn push(&mut self, tenant: &str, item: T) -> std::result::Result<(), T> {
+        let w = self.weight_of(tenant);
+        let tq = self
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantQ { weight: w, deficit: 0.0, q: VecDeque::new() });
+        if tq.q.len() >= self.cap {
+            return Err(item);
+        }
+        tq.q.push_back(item);
+        Ok(())
+    }
+
+    /// One DRR round: visit tenants in name order, top up deficits, pop
+    /// while `can_admit` allows.  `can_admit` models a *global* resource
+    /// (KV headroom, inflight cap): the first refusal ends the round.
+    /// Returns `(tenant, item)` pairs in admission order.
+    pub fn admit_round(
+        &mut self,
+        max: usize,
+        mut can_admit: impl FnMut(&T) -> bool,
+    ) -> Vec<(String, T)> {
+        let mut out = Vec::new();
+        for (name, tq) in self.tenants.iter_mut() {
+            if tq.q.is_empty() {
+                tq.deficit = 0.0; // no banking while idle
+                continue;
+            }
+            tq.deficit += tq.weight;
+            while tq.deficit >= 1.0 && out.len() < max {
+                let Some(front) = tq.q.front() else { break };
+                if !can_admit(front) {
+                    return out; // global resource exhausted: end the round
+                }
+                tq.deficit -= 1.0;
+                out.push((name.clone(), tq.q.pop_front().expect("front checked")));
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Remove one queued item by predicate (queued-but-unadmitted cancel).
+    pub fn remove(&mut self, mut pred: impl FnMut(&T) -> bool) -> Option<T> {
+        for tq in self.tenants.values_mut() {
+            if let Some(i) = tq.q.iter().position(&mut pred) {
+                return tq.q.remove(i);
+            }
+        }
+        None
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.tenants.values().map(|t| t.q.len()).sum()
+    }
+
+    /// `(tenant, depth)` in name order — queue-depth gauges.
+    pub fn depths(&self) -> Vec<(String, usize)> {
+        self.tenants.iter().map(|(n, t)| (n.clone(), t.q.len())).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection outbound queue (bounded, credit-gated for tokens)
+// ---------------------------------------------------------------------------
+
+struct OutState {
+    q: VecDeque<Frame>,
+    credit: u32,
+    /// No further frames will be enqueued; writer flushes then exits.
+    closed: bool,
+    /// Socket write failed / peer gone; everything drops.
+    broken: bool,
+}
+
+pub(crate) struct ConnOut {
+    cap: usize,
+    st: Mutex<OutState>,
+    cv: Condvar,
+    /// Kept for force-shutdown on drain (wakes a blocked peer reader).
+    stream: Mutex<Option<TcpStream>>,
+}
+
+impl ConnOut {
+    fn new(cap: usize, window: u32, stream: Option<TcpStream>) -> Arc<ConnOut> {
+        Arc::new(ConnOut {
+            cap,
+            st: Mutex::new(OutState {
+                q: VecDeque::new(),
+                credit: window,
+                closed: false,
+                broken: false,
+            }),
+            cv: Condvar::new(),
+            stream: Mutex::new(stream),
+        })
+    }
+
+    /// Queue a token frame iff credit and queue space allow.
+    fn try_token(&self, f: Frame) -> bool {
+        let mut st = self.st.lock().expect("conn out lock");
+        if st.closed || st.broken || st.credit == 0 || st.q.len() >= self.cap {
+            return false;
+        }
+        st.credit -= 1;
+        st.q.push_back(f);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Queue a control frame (never credit-gated; ignores the cap so
+    /// per-session terminal frames cannot deadlock behind a full queue —
+    /// control volume is bounded by session count).
+    fn push_ctrl(&self, f: Frame) -> bool {
+        let mut st = self.st.lock().expect("conn out lock");
+        if st.closed || st.broken {
+            return false;
+        }
+        st.q.push_back(f);
+        self.cv.notify_one();
+        true
+    }
+
+    fn add_credit(&self, n: u32) {
+        let mut st = self.st.lock().expect("conn out lock");
+        st.credit = st.credit.saturating_add(n);
+        self.cv.notify_one();
+    }
+
+    fn is_broken(&self) -> bool {
+        self.st.lock().expect("conn out lock").broken
+    }
+
+    /// Flush-and-close: the writer drains the queue then half-closes.
+    fn close(&self) {
+        self.st.lock().expect("conn out lock").closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Hard shutdown of the socket (drain finalisation): unblocks the
+    /// peer and our reader thread.
+    fn force_shutdown(&self) {
+        if let Some(s) = self.stream.lock().expect("stream lock").take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn writer_loop(self: &Arc<Self>, stream: TcpStream) {
+        let mut w = std::io::BufWriter::new(stream);
+        loop {
+            let batch: Vec<Frame> = {
+                let mut st = self.st.lock().expect("conn out lock");
+                while st.q.is_empty() && !st.closed && !st.broken {
+                    let (g, _) = self
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(100))
+                        .expect("conn out lock");
+                    st = g;
+                }
+                if st.broken {
+                    return;
+                }
+                if st.q.is_empty() && st.closed {
+                    break;
+                }
+                st.q.drain(..).collect()
+            };
+            for f in &batch {
+                if wire::write_frame(&mut w, f).is_err() {
+                    self.st.lock().expect("conn out lock").broken = true;
+                    return;
+                }
+            }
+            if w.flush().is_err() {
+                self.st.lock().expect("conn out lock").broken = true;
+                return;
+            }
+        }
+        let _ = w.flush();
+        if let Ok(s) = w.into_inner() {
+            let _ = s.shutdown(std::net::Shutdown::Write);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------------
+
+enum Ctrl {
+    Conn { conn: u64, out: Arc<ConnOut> },
+    Frame { conn: u64, frame: Frame },
+    Closed { conn: u64 },
+    Shutdown { abort: bool },
+}
+
+struct PendingReq {
+    conn: u64,
+    session: u64,
+    client_req: u64,
+    tenant: String,
+    req: Request,
+}
+
+struct LiveSession {
+    client_req: u64,
+    conn: u64,
+    tenant: String,
+    handle: SessionHandle,
+    /// Drained from the engine but not yet queued (credit/queue limited).
+    pending: VecDeque<i32>,
+    /// Token frames queued so far (the wire `index`).
+    sent: u32,
+}
+
+struct ConnState {
+    out: Arc<ConnOut>,
+    stall_since: Option<u64>,
+}
+
+/// Final state handed back by [`Server::join`].
+pub struct ServerSummary {
+    pub report: RunReport,
+    /// The last-published Prometheus exposition (per-tenant series
+    /// included), with the final run-report registry merged in.
+    pub exposition: String,
+    pub sessions_completed: u64,
+    pub sessions_cancelled: u64,
+    pub sessions_refused: u64,
+}
+
+struct EngineThread {
+    cfg: ServerConfig,
+    handle: EngineHandle,
+    prompt_pad: usize,
+    slots: usize,
+    conns: BTreeMap<u64, ConnState>,
+    live: BTreeMap<u64, LiveSession>,
+    queues: WrrQueues<PendingReq>,
+    metrics: MetricsRegistry,
+    published: Arc<Mutex<String>>,
+    next_session: u64,
+    tick: u64,
+    draining: bool,
+    completed: u64,
+    cancelled: u64,
+    refused: u64,
+}
+
+impl EngineThread {
+    fn refuse(&mut self, conn: u64, req_id: u64, code: ErrorCode, detail: String, tenant: &str) {
+        self.refused += 1;
+        self.metrics.inc("sessions_refused", &[("code", code.label())], 1.0);
+        if !tenant.is_empty() {
+            self.metrics
+                .inc("sessions_refused", &[("code", code.label()), ("tenant", tenant)], 1.0);
+        }
+        if let Some(c) = self.conns.get(&conn) {
+            c.out.push_ctrl(Frame::Error { req_id, code, detail });
+        }
+    }
+
+    fn on_submit(
+        &mut self,
+        conn: u64,
+        req_id: u64,
+        seed: u64,
+        max_new: u32,
+        tenant: String,
+        drafter: String,
+        prompt: Vec<i32>,
+    ) {
+        if !self.conns.contains_key(&conn) {
+            return;
+        }
+        if self.draining {
+            return self.refuse(conn, req_id, ErrorCode::Draining, "server is draining".into(), &tenant);
+        }
+        if prompt.is_empty() || prompt.len() > self.prompt_pad {
+            let d = format!("prompt length {} outside (0, {}]", prompt.len(), self.prompt_pad);
+            return self.refuse(conn, req_id, ErrorCode::AdmissionReject, d, &tenant);
+        }
+        if max_new == 0 {
+            return self.refuse(conn, req_id, ErrorCode::AdmissionReject, "max_new == 0".into(), &tenant);
+        }
+        let budget = self.cfg.engine.kv_budget;
+        let worst = self.prompt_pad + max_new as usize + self.cfg.engine.k + 2;
+        if worst > budget {
+            let d = format!("worst-case {worst} KV tokens can never fit budget {budget}");
+            return self.refuse(conn, req_id, ErrorCode::AdmissionReject, d, &tenant);
+        }
+        let used = self.handle.engine().kv_used_tokens();
+        let watermark = self.cfg.kv_shed_watermark;
+        if (used as f64) > watermark * budget as f64 {
+            let d = format!(
+                "kv pressure {:.3} over watermark {watermark:.3}",
+                used as f64 / budget as f64
+            );
+            return self.refuse(conn, req_id, ErrorCode::KvShed, d, &tenant);
+        }
+        let drafter_kind = if drafter.is_empty() {
+            None
+        } else {
+            match DrafterKind::parse_name(&drafter) {
+                Some(k) => Some(k),
+                None => {
+                    let d = format!("unknown drafter '{drafter}'");
+                    return self.refuse(conn, req_id, ErrorCode::DrafterRejected, d, &tenant);
+                }
+            }
+        };
+        let session = self.next_session;
+        self.next_session += 1;
+        let req = Request {
+            id: session,
+            prompt,
+            max_new: max_new as usize,
+            arrival_s: self.handle.clock_s(),
+            seed,
+            drafter: drafter_kind,
+        };
+        let pend = PendingReq { conn, session, client_req: req_id, tenant: tenant.clone(), req };
+        match self.queues.push(&tenant, pend) {
+            Ok(()) => {
+                self.metrics.inc("sessions_submitted", &[("tenant", &tenant)], 1.0);
+                if let Some(c) = self.conns.get(&conn) {
+                    c.out.push_ctrl(Frame::Accepted { req_id, session });
+                }
+            }
+            Err(_) => {
+                let d = format!("tenant '{tenant}' queue at capacity {}", self.cfg.tenant_queue_cap);
+                self.refuse(conn, req_id, ErrorCode::TenantQueueFull, d, &tenant);
+            }
+        }
+    }
+
+    fn cancel_conn_sessions(&mut self, conn: u64, code: Option<ErrorCode>) {
+        let victims: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, l)| l.conn == conn)
+            .map(|(&s, _)| s)
+            .collect();
+        for s in victims {
+            if let Some(l) = self.live.get_mut(&s) {
+                l.handle.cancel();
+                l.pending.clear();
+                if let (Some(code), Some(c)) = (code, self.conns.get(&conn)) {
+                    c.out.push_ctrl(Frame::Error {
+                        req_id: l.client_req,
+                        code,
+                        detail: format!("session {s} dropped: {}", code.label()),
+                    });
+                }
+            }
+        }
+        // queued-but-unadmitted requests from this connection die too
+        while let Some(p) = self.queues.remove(|p| p.conn == conn) {
+            self.cancelled += 1;
+            self.metrics.inc("sessions_cancelled", &[("tenant", &p.tenant)], 1.0);
+            if let Some(c) = self.conns.get(&conn) {
+                c.out.push_ctrl(Frame::Finished { session: p.session, reason: 1, tokens: 0 });
+            }
+        }
+    }
+
+    fn on_ctrl(&mut self, msg: Ctrl) {
+        match msg {
+            Ctrl::Conn { conn, out } => {
+                if self.draining {
+                    out.push_ctrl(Frame::Error {
+                        req_id: 0,
+                        code: ErrorCode::Draining,
+                        detail: "server is draining".into(),
+                    });
+                    out.close();
+                    return;
+                }
+                self.metrics.inc("connections_total", &[], 1.0);
+                self.conns.insert(conn, ConnState { out, stall_since: None });
+            }
+            Ctrl::Closed { conn } => {
+                self.cancel_conn_sessions(conn, None);
+                if let Some(c) = self.conns.remove(&conn) {
+                    c.out.close();
+                }
+            }
+            Ctrl::Shutdown { abort } => self.begin_drain(abort),
+            Ctrl::Frame { conn, frame } => match frame {
+                Frame::Submit { req_id, seed, max_new, tenant, drafter, prompt } => {
+                    self.on_submit(conn, req_id, seed, max_new, tenant, drafter, prompt)
+                }
+                Frame::Cancel { session } => {
+                    if let Some(l) = self.live.get_mut(&session) {
+                        if l.conn == conn {
+                            l.handle.cancel();
+                            l.pending.clear();
+                        }
+                    } else if let Some(p) =
+                        self.queues.remove(|p| p.session == session && p.conn == conn)
+                    {
+                        self.cancelled += 1;
+                        self.metrics.inc("sessions_cancelled", &[("tenant", &p.tenant)], 1.0);
+                        if let Some(c) = self.conns.get(&conn) {
+                            c.out.push_ctrl(Frame::Finished { session, reason: 1, tokens: 0 });
+                        }
+                    }
+                }
+                Frame::Credit { n } => {
+                    if let Some(c) = self.conns.get(&conn) {
+                        c.out.add_credit(n);
+                        // granting credit ends a stall immediately
+                    }
+                    if let Some(c) = self.conns.get_mut(&conn) {
+                        c.stall_since = None;
+                    }
+                }
+                Frame::Ping { nonce } => {
+                    if let Some(c) = self.conns.get(&conn) {
+                        c.out.push_ctrl(Frame::Pong { nonce });
+                    }
+                }
+                Frame::Shutdown { abort } => self.begin_drain(abort),
+                other => {
+                    // server→client kinds arriving at the server are a
+                    // protocol violation; answer typed, keep serving.
+                    if let Some(c) = self.conns.get(&conn) {
+                        c.out.push_ctrl(Frame::Error {
+                            req_id: 0,
+                            code: ErrorCode::Protocol,
+                            detail: format!("unexpected frame kind 0x{:02x}", other.kind()),
+                        });
+                    }
+                }
+            },
+        }
+    }
+
+    fn begin_drain(&mut self, abort: bool) {
+        self.draining = true;
+        if abort {
+            let sessions: Vec<u64> = self.live.keys().copied().collect();
+            for s in sessions {
+                if let Some(l) = self.live.get_mut(&s) {
+                    l.handle.cancel();
+                    l.pending.clear();
+                }
+            }
+            // flush queued-but-unadmitted work as cancelled
+            while let Some(p) = self.queues.remove(|_| true) {
+                self.cancelled += 1;
+                self.metrics.inc("sessions_cancelled", &[("tenant", &p.tenant)], 1.0);
+                if let Some(c) = self.conns.get(&p.conn) {
+                    c.out.push_ctrl(Frame::Finished { session: p.session, reason: 1, tokens: 0 });
+                }
+            }
+        }
+    }
+
+    /// Release queued requests into the engine: one DRR round bounded by
+    /// the inflight cap and the projected KV footprint.
+    fn admit(&mut self) {
+        let est = self.prompt_pad + self.cfg.engine.k + 2;
+        let budget = self.cfg.engine.kv_budget;
+        let max_inflight = if self.cfg.max_inflight == 0 {
+            self.slots * 2
+        } else {
+            self.cfg.max_inflight
+        };
+        let mut inflight = self.live.len();
+        // Sessions admitted but not yet generating still owe their
+        // worst-case prompt footprint to the projection.
+        let unstarted = self
+            .live
+            .values()
+            .filter(|l| l.handle.tokens_delivered() == 0 && !l.handle.is_finished())
+            .count();
+        let mut projected = self.handle.engine().kv_used_tokens() + unstarted * est;
+        let admitted = self.queues.admit_round(usize::MAX, |_req| {
+            if inflight < max_inflight && projected + est <= budget {
+                inflight += 1;
+                projected += est;
+                true
+            } else {
+                false
+            }
+        });
+        for (tenant, p) in admitted {
+            let h = self.handle.submit(p.req);
+            self.metrics.inc("sessions_admitted", &[("tenant", &tenant)], 1.0);
+            self.live.insert(
+                p.session,
+                LiveSession {
+                    client_req: p.client_req,
+                    conn: p.conn,
+                    tenant,
+                    handle: h,
+                    pending: VecDeque::new(),
+                    sent: 0,
+                },
+            );
+        }
+    }
+
+    /// Move accepted tokens to connection queues (credit-gated), emit
+    /// terminal frames, fold finished sessions into the metrics, and run
+    /// the stall clock on blocked connections.
+    fn deliver(&mut self) {
+        let mut blocked_conns: Vec<u64> = Vec::new();
+        let mut finished: Vec<u64> = Vec::new();
+        for (&sid, l) in self.live.iter_mut() {
+            for t in l.handle.drain() {
+                l.pending.push_back(t);
+            }
+            let Some(c) = self.conns.get(&l.conn) else {
+                // connection vanished: cancel, nothing to deliver to
+                l.handle.cancel();
+                l.pending.clear();
+                if l.handle.is_finished() {
+                    finished.push(sid);
+                }
+                continue;
+            };
+            if c.out.is_broken() {
+                l.handle.cancel();
+                l.pending.clear();
+            }
+            let mut streamed = 0u64;
+            while let Some(&tok) = l.pending.front() {
+                let f = Frame::Token { session: sid, index: l.sent, token: tok };
+                if c.out.try_token(f) {
+                    l.pending.pop_front();
+                    l.sent += 1;
+                    streamed += 1;
+                } else {
+                    blocked_conns.push(l.conn);
+                    break;
+                }
+            }
+            if streamed > 0 {
+                self.metrics.inc("tokens_streamed", &[("tenant", &l.tenant)], streamed as f64);
+            }
+            if l.handle.is_finished() && l.pending.is_empty() {
+                finished.push(sid);
+            }
+        }
+
+        // stall clock: a connection is stalled while any of its sessions
+        // has undeliverable tokens; past the allowance it is dropped
+        let mut stalled_out: Vec<u64> = Vec::new();
+        for (&cid, c) in self.conns.iter_mut() {
+            if blocked_conns.contains(&cid) {
+                let since = *c.stall_since.get_or_insert(self.tick);
+                if self.tick.saturating_sub(since) > self.cfg.stall_ticks {
+                    c.stall_since = None;
+                    stalled_out.push(cid);
+                }
+            } else {
+                c.stall_since = None;
+            }
+        }
+        for cid in stalled_out {
+            self.metrics.inc("slow_reader_drops", &[], 1.0);
+            self.cancel_conn_sessions(cid, Some(ErrorCode::SlowReader));
+        }
+
+        for sid in finished {
+            let Some(l) = self.live.remove(&sid) else { continue };
+            let reason = l.handle.finish_reason().expect("finished session has a reason");
+            let tenant = l.tenant.clone();
+            let by: &[(&str, &str)] = &[("tenant", &tenant)];
+            match reason {
+                FinishReason::Completed => {
+                    self.completed += 1;
+                    self.metrics.inc("sessions_completed", by, 1.0);
+                }
+                FinishReason::Cancelled => {
+                    self.cancelled += 1;
+                    self.metrics.inc("sessions_cancelled", by, 1.0);
+                }
+                FinishReason::Rejected => {
+                    let detail = l.handle.reject_reason().unwrap_or_default();
+                    self.refused += 1;
+                    self.metrics
+                        .inc("sessions_refused", &[("code", "drafter_rejected"), ("tenant", &tenant)], 1.0);
+                    if let Some(c) = self.conns.get(&l.conn) {
+                        c.out.push_ctrl(Frame::Error {
+                            req_id: l.client_req,
+                            code: ErrorCode::DrafterRejected,
+                            detail,
+                        });
+                    }
+                }
+                FinishReason::Failed => {
+                    let detail = l.handle.failure_reason().unwrap_or_default();
+                    self.metrics.inc("sessions_failed", by, 1.0);
+                    if let Some(c) = self.conns.get(&l.conn) {
+                        c.out.push_ctrl(Frame::Error {
+                            req_id: l.client_req,
+                            code: ErrorCode::EngineFault,
+                            detail,
+                        });
+                    }
+                }
+            }
+            let st = l.handle.stats();
+            if let Some(t) = st.ttft_s {
+                self.metrics.observe("ttft_s", by, t);
+            }
+            if let Some(t) = st.ttft_sim_s() {
+                self.metrics.observe("ttft_sim_s", by, t);
+            }
+            self.metrics.hist_mut("inter_token_s", by).merge(&st.inter_token_s);
+            if !st.drafter.is_empty() {
+                self.metrics.inc(
+                    "sessions_finished",
+                    &[("tenant", &tenant), ("drafter", &st.drafter)],
+                    1.0,
+                );
+            }
+            if let Some(c) = self.conns.get(&l.conn) {
+                c.out.push_ctrl(Frame::Finished {
+                    session: sid,
+                    reason: wire::reason_to_wire(reason),
+                    tokens: l.sent,
+                });
+            }
+        }
+    }
+
+    fn publish_metrics(&mut self) {
+        let mut m = self.metrics.snapshot();
+        let budget = self.cfg.engine.kv_budget;
+        let used = self.handle.engine().kv_used_tokens();
+        m.set_gauge("kv_used_tokens", &[], used as f64);
+        if budget < usize::MAX / 4 {
+            m.set_gauge("kv_utilization", &[], used as f64 / budget as f64);
+        }
+        m.set_gauge("sessions_live", &[], self.live.len() as f64);
+        m.set_gauge("draining", &[], self.draining as u64 as f64);
+        for (tenant, depth) in self.queues.depths() {
+            m.set_gauge("queue_depth", &[("tenant", &tenant)], depth as f64);
+        }
+        *self.published.lock().expect("exposition lock") = m.expose_prometheus("sparsespec");
+    }
+
+    fn run(mut self, ctrl_rx: Receiver<Ctrl>) -> Result<ServerSummary> {
+        loop {
+            let busy = !self.live.is_empty() || self.queues.total_len() > 0;
+            if !busy && !self.draining {
+                // idle: block briefly instead of spinning
+                match ctrl_rx.recv_timeout(Duration::from_millis(10)) {
+                    Ok(m) => self.on_ctrl(m),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => self.draining = true,
+                }
+            }
+            loop {
+                match ctrl_rx.try_recv() {
+                    Ok(m) => self.on_ctrl(m),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            self.tick += 1;
+            self.admit();
+            let progressed = self.handle.step()?;
+            self.deliver();
+            if self.tick % self.cfg.metrics_publish_every.max(1) == 0 {
+                self.publish_metrics();
+            }
+            if self.draining && self.live.is_empty() && self.queues.total_len() == 0 {
+                break;
+            }
+            if !progressed && !self.live.is_empty() {
+                // engine idle but frames still undeliverable (credit):
+                // don't spin hot against the stall clock
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // finalise: trace export, final metrics, close every connection
+        if let Some(path) = &self.cfg.trace_out {
+            let json = self.handle.tracer().export_chrome_string();
+            if let Err(e) = std::fs::write(path, json) {
+                eprintln!("serving: trace export to {path} failed: {e}");
+            }
+        }
+        let report = self.handle.report();
+        let mut final_m = self.metrics.snapshot();
+        final_m.merge_from(&report.registry());
+        let exposition = final_m.expose_prometheus("sparsespec");
+        *self.published.lock().expect("exposition lock") = exposition.clone();
+        for c in self.conns.values() {
+            c.out.close();
+            c.out.force_shutdown();
+        }
+        Ok(ServerSummary {
+            report,
+            exposition,
+            sessions_completed: self.completed,
+            sessions_cancelled: self.cancelled,
+            sessions_refused: self.refused,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener / reader / metrics threads + the public Server handle
+// ---------------------------------------------------------------------------
+
+fn reader_loop(conn: u64, stream: TcpStream, out: Arc<ConnOut>, ctrl: Sender<Ctrl>) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(f)) => {
+                if ctrl.send(Ctrl::Frame { conn, frame: f }).is_err() {
+                    break;
+                }
+            }
+            Ok(None) => break,
+            Err(WireError::Io(_)) => break,
+            Err(e) => {
+                // malformed frame: typed refusal, then hang up (framing is
+                // lost, resync is not possible on a length-prefixed stream)
+                out.push_ctrl(Frame::Error {
+                    req_id: 0,
+                    code: ErrorCode::Protocol,
+                    detail: e.to_string(),
+                });
+                out.close();
+                break;
+            }
+        }
+    }
+    let _ = ctrl.send(Ctrl::Closed { conn });
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctrl: Sender<Ctrl>,
+    stop: Arc<AtomicBool>,
+    window: u32,
+    queue_cap: usize,
+) {
+    let next_conn = AtomicU64::new(1);
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let _ = stream.set_nodelay(true);
+        let conn = next_conn.fetch_add(1, Ordering::SeqCst);
+        let Ok(write_half) = stream.try_clone() else { continue };
+        let Ok(keep) = stream.try_clone() else { continue };
+        let out = ConnOut::new(queue_cap, window, Some(keep));
+        out.push_ctrl(Frame::Hello { version: wire::PROTOCOL_VERSION, window });
+        if ctrl.send(Ctrl::Conn { conn, out: out.clone() }).is_err() {
+            break;
+        }
+        let w_out = out.clone();
+        std::thread::spawn(move || w_out.writer_loop(write_half));
+        let r_ctrl = ctrl.clone();
+        std::thread::spawn(move || reader_loop(conn, stream, out, r_ctrl));
+    }
+}
+
+/// Minimal HTTP/1.1 responder for `/metrics`: reuses
+/// `MetricsRegistry::expose_prometheus()` output verbatim.
+fn metrics_loop(listener: TcpListener, published: Arc<Mutex<String>>, stop: Arc<AtomicBool>) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(mut stream) = stream else { continue };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let mut buf = [0u8; 1024];
+        let mut head = Vec::new();
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    head.extend_from_slice(&buf[..n]);
+                    if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let line = String::from_utf8_lossy(&head);
+        let path = line.split_whitespace().nth(1).unwrap_or("");
+        let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+            ("200 OK", published.lock().expect("exposition lock").clone())
+        } else {
+            ("404 Not Found", "only /metrics is served\n".to_string())
+        };
+        let resp = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let _ = stream.write_all(resp.as_bytes());
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Running server handle: bound addresses, drain trigger, join.
+pub struct Server {
+    addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
+    ctrl: Sender<Ctrl>,
+    stop: Arc<AtomicBool>,
+    engine_thread: Option<JoinHandle<Result<ServerSummary>>>,
+    aux_threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, start the engine/listener/metrics threads, return once the
+    /// engine is constructed (so config errors surface here, not later).
+    pub fn spawn(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let metrics_listener = match &cfg.metrics_addr {
+            Some(a) => Some(TcpListener::bind(a)?),
+            None => None,
+        };
+        let metrics_addr = match &metrics_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let (ctrl_tx, ctrl_rx) = channel::<Ctrl>();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let published = Arc::new(Mutex::new(String::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let engine_published = published.clone();
+        let engine_cfg = cfg.clone();
+        let engine_thread = std::thread::Builder::new()
+            .name("sparsespec-engine".into())
+            .spawn(move || -> Result<ServerSummary> {
+                let weights = engine_cfg.tenant_weights.clone();
+                let queue_cap = engine_cfg.tenant_queue_cap;
+                let et = (|| -> Result<EngineThread> {
+                    let rt = Rc::new(Runtime::load(&engine_cfg.artifacts)?);
+                    let prompt_pad = rt.cfg.model.prompt_pad;
+                    let slots = rt.cfg.model.slots;
+                    let handle = EngineHandle::new(rt, engine_cfg.engine.clone())?;
+                    Ok(EngineThread {
+                        cfg: engine_cfg,
+                        handle,
+                        prompt_pad,
+                        slots,
+                        conns: BTreeMap::new(),
+                        live: BTreeMap::new(),
+                        queues: WrrQueues::new(weights, queue_cap),
+                        metrics: MetricsRegistry::new(),
+                        published: engine_published,
+                        next_session: 1,
+                        tick: 0,
+                        draining: false,
+                        completed: 0,
+                        cancelled: 0,
+                        refused: 0,
+                    })
+                })();
+                match et {
+                    Ok(et) => {
+                        let _ = ready_tx.send(Ok(()));
+                        et.run(ctrl_rx)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        Err(e)
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!("server startup: {e}"))?;
+
+        let mut aux = Vec::new();
+        let a_ctrl = ctrl_tx.clone();
+        let a_stop = stop.clone();
+        let window = cfg.send_window;
+        let qcap = cfg.send_queue_cap;
+        aux.push(
+            std::thread::Builder::new()
+                .name("sparsespec-accept".into())
+                .spawn(move || accept_loop(listener, a_ctrl, a_stop, window, qcap))?,
+        );
+        if let Some(ml) = metrics_listener {
+            let m_pub = published.clone();
+            let m_stop = stop.clone();
+            aux.push(
+                std::thread::Builder::new()
+                    .name("sparsespec-metrics".into())
+                    .spawn(move || metrics_loop(ml, m_pub, m_stop))?,
+            );
+        }
+        Ok(Server {
+            addr,
+            metrics_addr,
+            ctrl: ctrl_tx,
+            stop,
+            engine_thread: Some(engine_thread),
+            aux_threads: aux,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// Begin drain (`abort` cancels live sessions first).  Idempotent.
+    pub fn shutdown(&self, abort: bool) {
+        let _ = self.ctrl.send(Ctrl::Shutdown { abort });
+    }
+
+    /// Wait for the drain to complete and return the final summary.
+    /// (Call [`Server::shutdown`] first, or have a client send the
+    /// `Shutdown` frame.)
+    pub fn join(mut self) -> Result<ServerSummary> {
+        let summary = self
+            .engine_thread
+            .take()
+            .expect("join called once")
+            .join()
+            .map_err(|_| anyhow!("engine thread panicked"))??;
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept loops
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(m) = self.metrics_addr {
+            let _ = TcpStream::connect_timeout(&m, Duration::from_millis(200));
+        }
+        for t in self.aux_threads.drain(..) {
+            let _ = t.join();
+        }
+        Ok(summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(weights: &[(&str, f64)], cap: usize) -> WrrQueues<u32> {
+        let w = weights.iter().map(|(n, v)| (n.to_string(), *v)).collect();
+        WrrQueues::new(w, cap)
+    }
+
+    #[test]
+    fn wrr_respects_weights_under_saturation() {
+        let mut qs = q(&[("a", 2.0), ("b", 1.0)], 1000);
+        for i in 0..300u32 {
+            qs.push("a", i).unwrap();
+            qs.push("b", 1000 + i).unwrap();
+        }
+        let mut got_a = 0usize;
+        let mut got_b = 0usize;
+        for _ in 0..60 {
+            for (t, _) in qs.admit_round(3, |_| true) {
+                if t == "a" {
+                    got_a += 1;
+                } else {
+                    got_b += 1;
+                }
+            }
+        }
+        assert_eq!(got_a + got_b, 180);
+        let ratio = got_a as f64 / got_b as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "2:1 weights must admit ~2:1 (got {ratio})");
+    }
+
+    #[test]
+    fn wrr_is_fifo_within_a_tenant_and_bounded() {
+        let mut qs = q(&[], 3);
+        qs.push("t", 1).unwrap();
+        qs.push("t", 2).unwrap();
+        qs.push("t", 3).unwrap();
+        assert_eq!(qs.push("t", 4), Err(4), "cap is enforced");
+        // weight 1 ⇒ one item per round; items come out in FIFO order
+        let mut admitted: Vec<u32> = Vec::new();
+        for _ in 0..3 {
+            admitted.extend(qs.admit_round(10, |_| true).into_iter().map(|(_, v)| v));
+        }
+        assert_eq!(admitted, vec![1, 2, 3], "FIFO per tenant");
+        assert_eq!(qs.total_len(), 0);
+    }
+
+    #[test]
+    fn wrr_global_refusal_ends_the_round() {
+        // 'a' weighs 3: it asks for three admissions, exhausting the
+        // global allowance; 'b' is then refused, which ends the round
+        let mut qs = q(&[("a", 3.0)], 100);
+        for i in 0..10u32 {
+            qs.push("a", i).unwrap();
+            qs.push("b", 100 + i).unwrap();
+        }
+        let mut allowed = 3;
+        let admitted = qs.admit_round(usize::MAX, |_| {
+            if allowed > 0 {
+                allowed -= 1;
+                true
+            } else {
+                false
+            }
+        });
+        assert!(admitted.iter().all(|(t, _)| t == "a"), "{admitted:?}");
+        assert_eq!(admitted.len(), 3, "refusal stops everything, nothing is lost");
+        assert_eq!(qs.total_len(), 17);
+    }
+
+    #[test]
+    fn wrr_idle_tenants_do_not_bank_deficit() {
+        let mut qs = q(&[("a", 4.0)], 100);
+        // several empty rounds must not accumulate deficit for 'a'
+        for _ in 0..10 {
+            assert!(qs.admit_round(10, |_| true).is_empty());
+        }
+        for i in 0..10u32 {
+            qs.push("a", i).unwrap();
+            qs.push("b", 100 + i).unwrap();
+        }
+        let first: Vec<String> =
+            qs.admit_round(usize::MAX, |_| true).into_iter().map(|(t, _)| t).collect();
+        let a_first = first.iter().filter(|t| *t == "a").count();
+        assert!(a_first <= 4, "one round grants at most the weight (got {a_first})");
+    }
+
+    #[test]
+    fn conn_out_credit_gating_and_ctrl_bypass() {
+        let out = ConnOut::new(4, 2, None);
+        let tok = |i| Frame::Token { session: 1, index: i, token: 7 };
+        assert!(out.try_token(tok(0)));
+        assert!(out.try_token(tok(1)));
+        assert!(!out.try_token(tok(2)), "credit exhausted");
+        assert!(out.push_ctrl(Frame::Pong { nonce: 1 }), "control bypasses credit");
+        out.add_credit(1);
+        assert!(out.try_token(tok(2)));
+        assert!(!out.try_token(tok(3)), "queue cap binds even with credit");
+        out.close();
+        assert!(!out.push_ctrl(Frame::Pong { nonce: 2 }), "closed refuses everything");
+    }
+}

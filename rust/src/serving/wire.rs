@@ -1,0 +1,549 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//! The serving front-end speaks a deliberately small binary protocol —
+//! small enough that the codec is exhaustively property-tested (round-trip
+//! fuzz in `rust/tests/wire.rs`, byte-layout twin in
+//! `python/tests/test_wire_port.py`) and that a load generator in any
+//! language is an afternoon of work.
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! ```text
+//! frame   := len:u32  body              len = |body|, 0 < len <= MAX_FRAME
+//! body    := kind:u8  payload
+//! str     := n:u16  utf8-bytes[n]
+//! ```
+//!
+//! | kind | dir | frame     | payload |
+//! |------|-----|-----------|---------|
+//! | 0x01 | c→s | Submit    | req_id:u64 seed:u64 max_new:u32 tenant:str drafter:str n:u32 prompt:i32[n] |
+//! | 0x02 | c→s | Cancel    | session:u64 |
+//! | 0x03 | c→s | Credit    | n:u32 |
+//! | 0x04 | c→s | Shutdown  | abort:u8 (0 = graceful drain, 1 = cancel live sessions first) |
+//! | 0x05 | c→s | Ping      | nonce:u64 |
+//! | 0x10 | s→c | Hello     | version:u8 window:u32 |
+//! | 0x11 | s→c | Accepted  | req_id:u64 session:u64 |
+//! | 0x12 | s→c | Token     | session:u64 index:u32 token:i32 |
+//! | 0x13 | s→c | Finished  | session:u64 reason:u8 tokens:u32 |
+//! | 0x14 | s→c | Error     | req_id:u64 code:u8 detail:str |
+//! | 0x15 | s→c | Pong      | nonce:u64 |
+//!
+//! `Hello` opens every connection and grants the initial **token credit
+//! window**: the server decrements one credit per `Token` frame it queues
+//! and stops sending tokens at zero; the client returns credit with
+//! `Credit` frames as it consumes.  Receiver-driven flow control makes
+//! slow-reader backpressure deterministic (no dependence on kernel socket
+//! buffer sizes) — see `serving::server` for the stall → drop-to-cancel
+//! policy.  Control frames (`Accepted`/`Finished`/`Error`/`Pong`) are
+//! never credit-gated.
+//!
+//! Decoding is total: truncated, oversized, trailing-garbage and
+//! unknown-kind inputs return a typed [`WireError`], never panic, and
+//! never allocate more than the declared (bounds-checked) sizes.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Protocol version announced in `Hello`.
+pub const PROTOCOL_VERSION: u8 = 1;
+/// Hard cap on the body length of a single frame (1 MiB).
+pub const MAX_FRAME: usize = 1 << 20;
+/// Hard cap on the prompt token count a `Submit` may carry (decode-time
+/// bound; the model's `prompt_pad` is far smaller and enforced at
+/// admission).
+pub const MAX_PROMPT: usize = 4096;
+
+// Frame kind bytes (pinned by python/tests/test_wire_port.py).
+pub const K_SUBMIT: u8 = 0x01;
+pub const K_CANCEL: u8 = 0x02;
+pub const K_CREDIT: u8 = 0x03;
+pub const K_SHUTDOWN: u8 = 0x04;
+pub const K_PING: u8 = 0x05;
+pub const K_HELLO: u8 = 0x10;
+pub const K_ACCEPTED: u8 = 0x11;
+pub const K_TOKEN: u8 = 0x12;
+pub const K_FINISHED: u8 = 0x13;
+pub const K_ERROR: u8 = 0x14;
+pub const K_PONG: u8 = 0x15;
+
+/// Typed refusal codes carried by `Error` frames (pinned by
+/// python/tests/test_wire_port.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// The request can never fit the engine's KV budget (prompt too long
+    /// or `prompt + max_new + k` beyond the device budget).
+    AdmissionReject = 1,
+    /// Load shed: device-KV pressure crossed the server's watermark.
+    KvShed = 2,
+    /// The tenant's admission queue is at capacity (bounded queueing).
+    TenantQueueFull = 3,
+    /// Backpressure drop-to-cancel: the connection stalled out of token
+    /// credit for longer than the configured stall budget.
+    SlowReader = 4,
+    /// The named per-request drafter could not be resolved.
+    DrafterRejected = 5,
+    /// Malformed or out-of-protocol frame from the client.
+    Protocol = 6,
+    /// The server is draining and accepts no new work.
+    Draining = 7,
+    /// A fatal engine fault poisoned the session mid-run (the typed
+    /// `EngineError` rendering rides in `detail`; the paired `Finished`
+    /// frame carries reason `failed`).
+    EngineFault = 8,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::AdmissionReject),
+            2 => Some(ErrorCode::KvShed),
+            3 => Some(ErrorCode::TenantQueueFull),
+            4 => Some(ErrorCode::SlowReader),
+            5 => Some(ErrorCode::DrafterRejected),
+            6 => Some(ErrorCode::Protocol),
+            7 => Some(ErrorCode::Draining),
+            8 => Some(ErrorCode::EngineFault),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase label (metric label values, client reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::AdmissionReject => "admission_reject",
+            ErrorCode::KvShed => "kv_shed",
+            ErrorCode::TenantQueueFull => "tenant_queue_full",
+            ErrorCode::SlowReader => "slow_reader",
+            ErrorCode::DrafterRejected => "drafter_rejected",
+            ErrorCode::Protocol => "protocol",
+            ErrorCode::Draining => "draining",
+            ErrorCode::EngineFault => "engine_fault",
+        }
+    }
+}
+
+/// `FinishReason` ↔ wire byte (0 completed, 1 cancelled, 2 rejected,
+/// 3 failed).
+pub fn reason_to_wire(r: crate::engine::FinishReason) -> u8 {
+    match r {
+        crate::engine::FinishReason::Completed => 0,
+        crate::engine::FinishReason::Cancelled => 1,
+        crate::engine::FinishReason::Rejected => 2,
+        crate::engine::FinishReason::Failed => 3,
+    }
+}
+
+pub fn reason_from_wire(v: u8) -> Option<crate::engine::FinishReason> {
+    match v {
+        0 => Some(crate::engine::FinishReason::Completed),
+        1 => Some(crate::engine::FinishReason::Cancelled),
+        2 => Some(crate::engine::FinishReason::Rejected),
+        3 => Some(crate::engine::FinishReason::Failed),
+        _ => None,
+    }
+}
+
+/// One protocol frame.  See the module docs for the byte layout.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Submit {
+        req_id: u64,
+        seed: u64,
+        max_new: u32,
+        tenant: String,
+        drafter: String,
+        prompt: Vec<i32>,
+    },
+    Cancel { session: u64 },
+    Credit { n: u32 },
+    Shutdown { abort: bool },
+    Ping { nonce: u64 },
+    Hello { version: u8, window: u32 },
+    Accepted { req_id: u64, session: u64 },
+    Token { session: u64, index: u32, token: i32 },
+    Finished { session: u64, reason: u8, tokens: u32 },
+    Error { req_id: u64, code: ErrorCode, detail: String },
+    Pong { nonce: u64 },
+}
+
+/// Typed decode/IO failures.  Every malformed input maps here — the codec
+/// never panics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// Body ended before the payload the kind requires.
+    Truncated,
+    /// Declared frame length of 0 or beyond [`MAX_FRAME`].
+    Oversized { len: usize },
+    /// Unknown frame-kind byte.
+    UnknownKind(u8),
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+    /// Bytes left over after the payload was fully parsed.
+    Trailing { extra: usize },
+    /// A field value outside its domain (error code, finish reason,
+    /// prompt length, shutdown mode).
+    BadValue(&'static str),
+    /// Underlying socket/IO failure.
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "frame truncated"),
+            WireError::Oversized { len } => write!(f, "frame length {len} outside (0, {MAX_FRAME}]"),
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind 0x{k:02x}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid utf-8"),
+            WireError::Trailing { extra } => write!(f, "{extra} trailing bytes after payload"),
+            WireError::BadValue(what) => write!(f, "field out of domain: {what}"),
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    debug_assert!(bytes.len() <= u16::MAX as usize, "string field too long");
+    let n = bytes.len().min(u16::MAX as usize) as u16;
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&bytes[..n as usize]);
+}
+
+impl Frame {
+    /// The kind byte this frame encodes with.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Submit { .. } => K_SUBMIT,
+            Frame::Cancel { .. } => K_CANCEL,
+            Frame::Credit { .. } => K_CREDIT,
+            Frame::Shutdown { .. } => K_SHUTDOWN,
+            Frame::Ping { .. } => K_PING,
+            Frame::Hello { .. } => K_HELLO,
+            Frame::Accepted { .. } => K_ACCEPTED,
+            Frame::Token { .. } => K_TOKEN,
+            Frame::Finished { .. } => K_FINISHED,
+            Frame::Error { .. } => K_ERROR,
+            Frame::Pong { .. } => K_PONG,
+        }
+    }
+
+    /// Encode body (kind byte + payload), without the length prefix.
+    pub fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        out.push(self.kind());
+        match self {
+            Frame::Submit { req_id, seed, max_new, tenant, drafter, prompt } => {
+                out.extend_from_slice(&req_id.to_le_bytes());
+                out.extend_from_slice(&seed.to_le_bytes());
+                out.extend_from_slice(&max_new.to_le_bytes());
+                put_str(&mut out, tenant);
+                put_str(&mut out, drafter);
+                out.extend_from_slice(&(prompt.len() as u32).to_le_bytes());
+                for t in prompt {
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+            Frame::Cancel { session } => out.extend_from_slice(&session.to_le_bytes()),
+            Frame::Credit { n } => out.extend_from_slice(&n.to_le_bytes()),
+            Frame::Shutdown { abort } => out.push(*abort as u8),
+            Frame::Ping { nonce } => out.extend_from_slice(&nonce.to_le_bytes()),
+            Frame::Hello { version, window } => {
+                out.push(*version);
+                out.extend_from_slice(&window.to_le_bytes());
+            }
+            Frame::Accepted { req_id, session } => {
+                out.extend_from_slice(&req_id.to_le_bytes());
+                out.extend_from_slice(&session.to_le_bytes());
+            }
+            Frame::Token { session, index, token } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&index.to_le_bytes());
+                out.extend_from_slice(&token.to_le_bytes());
+            }
+            Frame::Finished { session, reason, tokens } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.push(*reason);
+                out.extend_from_slice(&tokens.to_le_bytes());
+            }
+            Frame::Error { req_id, code, detail } => {
+                out.extend_from_slice(&req_id.to_le_bytes());
+                out.push(*code as u8);
+                put_str(&mut out, detail);
+            }
+            Frame::Pong { nonce } => out.extend_from_slice(&nonce.to_le_bytes()),
+        }
+        out
+    }
+
+    /// Full on-wire bytes: u32 length prefix + body.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn rest(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Decode one frame body (kind byte + payload, no length prefix).
+/// Total: every malformed input returns a typed error, and the payload
+/// must be consumed exactly (`Trailing` otherwise).
+pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur { buf: body, pos: 0 };
+    let kind = c.u8().map_err(|_| WireError::Truncated)?;
+    let frame = match kind {
+        K_SUBMIT => {
+            let req_id = c.u64()?;
+            let seed = c.u64()?;
+            let max_new = c.u32()?;
+            let tenant = c.string()?;
+            let drafter = c.string()?;
+            let n = c.u32()? as usize;
+            if n > MAX_PROMPT {
+                return Err(WireError::BadValue("prompt length"));
+            }
+            // The cursor bounds-checks before allocating: a lying length
+            // on a short body fails Truncated without reserving n*4 bytes.
+            if c.rest() < n * 4 {
+                return Err(WireError::Truncated);
+            }
+            let mut prompt = Vec::with_capacity(n);
+            for _ in 0..n {
+                prompt.push(c.i32()?);
+            }
+            Frame::Submit { req_id, seed, max_new, tenant, drafter, prompt }
+        }
+        K_CANCEL => Frame::Cancel { session: c.u64()? },
+        K_CREDIT => Frame::Credit { n: c.u32()? },
+        K_SHUTDOWN => {
+            let mode = c.u8()?;
+            if mode > 1 {
+                return Err(WireError::BadValue("shutdown mode"));
+            }
+            Frame::Shutdown { abort: mode == 1 }
+        }
+        K_PING => Frame::Ping { nonce: c.u64()? },
+        K_HELLO => Frame::Hello { version: c.u8()?, window: c.u32()? },
+        K_ACCEPTED => Frame::Accepted { req_id: c.u64()?, session: c.u64()? },
+        K_TOKEN => Frame::Token { session: c.u64()?, index: c.u32()?, token: c.i32()? },
+        K_FINISHED => {
+            let session = c.u64()?;
+            let reason = c.u8()?;
+            if reason_from_wire(reason).is_none() {
+                return Err(WireError::BadValue("finish reason"));
+            }
+            let tokens = c.u32()?;
+            Frame::Finished { session, reason, tokens }
+        }
+        K_ERROR => {
+            let req_id = c.u64()?;
+            let code = ErrorCode::from_u8(c.u8()?).ok_or(WireError::BadValue("error code"))?;
+            let detail = c.string()?;
+            Frame::Error { req_id, code, detail }
+        }
+        K_PONG => Frame::Pong { nonce: c.u64()? },
+        other => return Err(WireError::UnknownKind(other)),
+    };
+    if c.rest() != 0 {
+        return Err(WireError::Trailing { extra: c.rest() });
+    }
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame.  `Ok(None)` on clean EOF at a frame
+/// boundary; `Err` on mid-frame EOF, oversized declared length, or a
+/// malformed body.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, WireError> {
+    let mut len_buf = [0u8; 4];
+    // Clean EOF is only legal before the first length byte.
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated);
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(WireError::Oversized { len });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e.to_string())
+        }
+    })?;
+    decode_body(&body)
+}
+
+/// Write one frame (length prefix + body).  Does not flush.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), WireError> {
+    w.write_all(&f.encode()).map_err(|e| WireError::Io(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_kind() {
+        let frames = vec![
+            Frame::Submit {
+                req_id: 7,
+                seed: u64::MAX,
+                max_new: 40,
+                tenant: "acme".into(),
+                drafter: "pillar_w64".into(),
+                prompt: vec![1, -2, 511],
+            },
+            Frame::Cancel { session: 9 },
+            Frame::Credit { n: 128 },
+            Frame::Shutdown { abort: false },
+            Frame::Shutdown { abort: true },
+            Frame::Ping { nonce: 0xDEAD },
+            Frame::Hello { version: PROTOCOL_VERSION, window: 1024 },
+            Frame::Accepted { req_id: 7, session: 3 },
+            Frame::Token { session: 3, index: 0, token: -1 },
+            Frame::Finished { session: 3, reason: 0, tokens: 40 },
+            Frame::Error {
+                req_id: 7,
+                code: ErrorCode::KvShed,
+                detail: "kv pressure 0.93 > watermark 0.85".into(),
+            },
+            Frame::Pong { nonce: 0xDEAD },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+            assert_eq!(len, bytes.len() - 4);
+            assert_eq!(decode_body(&bytes[4..]).unwrap(), f, "{f:?}");
+            // and through the stream reader
+            let mut cursor = std::io::Cursor::new(bytes);
+            assert_eq!(read_frame(&mut cursor).unwrap(), Some(f));
+            assert_eq!(read_frame(&mut cursor).unwrap(), None, "clean EOF after");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_without_panic() {
+        // empty body
+        assert_eq!(decode_body(&[]), Err(WireError::Truncated));
+        // unknown kind
+        assert_eq!(decode_body(&[0x7F]), Err(WireError::UnknownKind(0x7F)));
+        // truncated payload
+        assert_eq!(decode_body(&[K_CANCEL, 1, 2]), Err(WireError::Truncated));
+        // trailing garbage
+        let mut bytes = Frame::Credit { n: 1 }.encode_body();
+        bytes.push(0xAA);
+        assert_eq!(decode_body(&bytes), Err(WireError::Trailing { extra: 1 }));
+        // bad error code / finish reason / shutdown mode
+        let mut e = Frame::Error { req_id: 1, code: ErrorCode::KvShed, detail: "x".into() }
+            .encode_body();
+        e[9] = 99;
+        assert_eq!(decode_body(&e), Err(WireError::BadValue("error code")));
+        let mut fin = Frame::Finished { session: 1, reason: 0, tokens: 2 }.encode_body();
+        fin[9] = 17;
+        assert_eq!(decode_body(&fin), Err(WireError::BadValue("finish reason")));
+        assert_eq!(decode_body(&[K_SHUTDOWN, 2]), Err(WireError::BadValue("shutdown mode")));
+        // zero and oversized length prefixes
+        let mut z = std::io::Cursor::new(vec![0, 0, 0, 0]);
+        assert_eq!(read_frame(&mut z), Err(WireError::Oversized { len: 0 }));
+        let big = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        let mut b = std::io::Cursor::new(big);
+        assert_eq!(read_frame(&mut b), Err(WireError::Oversized { len: MAX_FRAME + 1 }));
+        // lying prompt count on a short body must not OOM or panic
+        let mut s = Frame::Submit {
+            req_id: 1,
+            seed: 2,
+            max_new: 3,
+            tenant: "t".into(),
+            drafter: String::new(),
+            prompt: vec![],
+        }
+        .encode_body();
+        let n = s.len();
+        s[n - 4..].copy_from_slice(&(MAX_PROMPT as u32).to_le_bytes());
+        assert_eq!(decode_body(&s), Err(WireError::Truncated));
+        s[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_body(&s), Err(WireError::BadValue("prompt length")));
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error_not_a_hang() {
+        let bytes = Frame::Ping { nonce: 1 }.encode();
+        for cut in 1..bytes.len() {
+            let mut c = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert!(
+                matches!(read_frame(&mut c), Err(WireError::Truncated)),
+                "cut at {cut}"
+            );
+        }
+    }
+}

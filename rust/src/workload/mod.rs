@@ -103,6 +103,107 @@ impl Dataset {
     }
 }
 
+/// Arrival-curve shapes for the online request generators.
+///
+/// `Uniform` is the homogeneous Poisson process — the original code path,
+/// bit-identical RNG consumption to the pre-curve generators.  The other
+/// shapes are *nonhomogeneous* Poisson processes sampled by thinning
+/// (candidates at the peak rate, each kept with probability
+/// `λ(t)/λ_peak`), which preserves per-seed determinism: the same seed,
+/// rate, horizon and curve always yield the same trace.  Both shapes
+/// preserve the requested mean rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalCurve {
+    /// Constant rate (homogeneous Poisson).
+    Uniform,
+    /// Square wave with 50% duty cycle over [`ArrivalCurve::BURSTY_CYCLES`]
+    /// cycles per horizon: bursts at `ratio`× the quiet rate.
+    Bursty { ratio: f64 },
+    /// Sinusoid with one cycle per horizon (a compressed day);
+    /// peak-to-trough rate ratio is `ratio`.
+    Diurnal { ratio: f64 },
+}
+
+impl ArrivalCurve {
+    /// Burst/quiet alternations per horizon for `Bursty`.
+    pub const BURSTY_CYCLES: f64 = 4.0;
+
+    /// Parse `"uniform"`, `"bursty:<ratio>"` or `"diurnal:<ratio>"`
+    /// (ratio > 1).
+    pub fn parse(s: &str) -> Option<ArrivalCurve> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "uniform" || s == "poisson" {
+            return Some(ArrivalCurve::Uniform);
+        }
+        let (kind, ratio) = s.split_once(':')?;
+        let ratio: f64 = ratio.parse().ok()?;
+        if !ratio.is_finite() || ratio <= 1.0 {
+            return None;
+        }
+        match kind {
+            "bursty" => Some(ArrivalCurve::Bursty { ratio }),
+            "diurnal" => Some(ArrivalCurve::Diurnal { ratio }),
+            _ => None,
+        }
+    }
+
+    /// `λ(t) / λ_mean` — normalised intensity at `t ∈ [0, horizon)`.
+    fn intensity(&self, t: f64, horizon_s: f64) -> f64 {
+        match *self {
+            ArrivalCurve::Uniform => 1.0,
+            ArrivalCurve::Bursty { ratio } => {
+                // mean-preserving square wave: burst = 2r/(r+1)·mean,
+                // quiet = 2/(r+1)·mean
+                let phase = (t / horizon_s * Self::BURSTY_CYCLES).fract();
+                if phase < 0.5 {
+                    2.0 * ratio / (ratio + 1.0)
+                } else {
+                    2.0 / (ratio + 1.0)
+                }
+            }
+            ArrivalCurve::Diurnal { ratio } => {
+                // 1 + a·sin: (1+a)/(1-a) = ratio  ⇒  a = (r-1)/(r+1)
+                let a = (ratio - 1.0) / (ratio + 1.0);
+                1.0 + a * (2.0 * std::f64::consts::PI * t / horizon_s).sin()
+            }
+        }
+    }
+
+    /// `max_t λ(t) / λ_mean` — the thinning envelope.
+    fn peak(&self) -> f64 {
+        match *self {
+            ArrivalCurve::Uniform => 1.0,
+            ArrivalCurve::Bursty { ratio } => 2.0 * ratio / (ratio + 1.0),
+            ArrivalCurve::Diurnal { ratio } => 1.0 + (ratio - 1.0) / (ratio + 1.0),
+        }
+    }
+
+    /// Advance `t` to the next accepted arrival.  Returns `false` once
+    /// past the horizon.  `Uniform` takes the plain exponential-gap path
+    /// (identical RNG stream to the pre-curve generators); curved shapes
+    /// thin candidates drawn at the peak rate.
+    fn next_arrival(&self, rng: &mut Xoshiro256, t: &mut f64, rate: f64, horizon_s: f64) -> bool {
+        match self {
+            ArrivalCurve::Uniform => {
+                *t += rng.exponential(rate);
+                *t <= horizon_s
+            }
+            curved => {
+                let peak = curved.peak();
+                loop {
+                    *t += rng.exponential(rate * peak);
+                    if *t > horizon_s {
+                        return false;
+                    }
+                    if rng.unit() < curved.intensity(*t, horizon_s) / peak {
+                        return true;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Generates request traces for a dataset profile.
 pub struct WorkloadGen {
     pub grammar: GrammarConfig,
@@ -152,16 +253,26 @@ impl WorkloadGen {
     /// streaming equivalent for the session-serving driver and yields the
     /// identical sequence for the same generator state.
     pub fn online_trace(&mut self, rate: f64, horizon_s: f64) -> Vec<Request> {
+        self.online_trace_curve(rate, horizon_s, ArrivalCurve::Uniform)
+    }
+
+    /// `online_trace` under an [`ArrivalCurve`]: `Uniform` reproduces the
+    /// plain Poisson trace bit-for-bit; `Bursty`/`Diurnal` shape the
+    /// instantaneous rate (production-shaped load for the serving
+    /// client) while preserving the mean and per-seed determinism.
+    pub fn online_trace_curve(
+        &mut self,
+        rate: f64,
+        horizon_s: f64,
+        curve: ArrivalCurve,
+    ) -> Vec<Request> {
         let mut out = Vec::new();
         let mut t = 0.0;
-        loop {
-            t += self.rng.exponential(rate);
-            if t > horizon_s {
-                return out;
-            }
+        while curve.next_arrival(&mut self.rng, &mut t, rate, horizon_s) {
             let r = self.next_request(t);
             out.push(r);
         }
+        out
     }
 
     /// Streaming Poisson arrival process: consumes the generator and
@@ -169,7 +280,18 @@ impl WorkloadGen {
     /// `EngineDriver` can interleave admission with decode iterations
     /// instead of materialising the whole trace upfront.
     pub fn online_arrivals(self, rate: f64, horizon_s: f64) -> OnlineArrivals {
-        OnlineArrivals { gen: self, rate, horizon_s, t: 0.0, done: false }
+        self.online_arrivals_curve(rate, horizon_s, ArrivalCurve::Uniform)
+    }
+
+    /// Streaming form of [`WorkloadGen::online_trace_curve`] — identical
+    /// sequence for the same generator state, curve included.
+    pub fn online_arrivals_curve(
+        self,
+        rate: f64,
+        horizon_s: f64,
+        curve: ArrivalCurve,
+    ) -> OnlineArrivals {
+        OnlineArrivals { gen: self, rate, horizon_s, curve, t: 0.0, done: false }
     }
 }
 
@@ -180,6 +302,7 @@ pub struct OnlineArrivals {
     gen: WorkloadGen,
     rate: f64,
     horizon_s: f64,
+    curve: ArrivalCurve,
     t: f64,
     done: bool,
 }
@@ -191,8 +314,10 @@ impl Iterator for OnlineArrivals {
         if self.done {
             return None;
         }
-        self.t += self.gen.rng.exponential(self.rate);
-        if self.t > self.horizon_s {
+        if !self
+            .curve
+            .next_arrival(&mut self.gen.rng, &mut self.t, self.rate, self.horizon_s)
+        {
             self.done = true;
             return None;
         }
@@ -290,6 +415,106 @@ mod tests {
             .online_arrivals(5.0, 0.0);
         assert!(it.next().is_none());
         assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn arrival_curve_parses() {
+        assert_eq!(ArrivalCurve::parse("uniform"), Some(ArrivalCurve::Uniform));
+        assert_eq!(ArrivalCurve::parse("bursty:4"), Some(ArrivalCurve::Bursty { ratio: 4.0 }));
+        assert_eq!(
+            ArrivalCurve::parse("diurnal:2.5"),
+            Some(ArrivalCurve::Diurnal { ratio: 2.5 })
+        );
+        assert_eq!(ArrivalCurve::parse("bursty:1"), None, "ratio must exceed 1");
+        assert_eq!(ArrivalCurve::parse("bursty:-3"), None);
+        assert_eq!(ArrivalCurve::parse("sawtooth:2"), None);
+        assert_eq!(ArrivalCurve::parse("bursty"), None);
+    }
+
+    #[test]
+    fn uniform_curve_is_bitwise_the_old_path() {
+        let (g, m) = cfgs();
+        let old = WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 11).online_trace(5.0, 20.0);
+        let new = WorkloadGen::new(g, m, Dataset::Aime, 11)
+            .online_trace_curve(5.0, 20.0, ArrivalCurve::Uniform);
+        assert_eq!(old.len(), new.len());
+        for (a, b) in old.iter().zip(new.iter()) {
+            assert_eq!((a.id, &a.prompt, a.max_new, a.seed), (b.id, &b.prompt, b.max_new, b.seed));
+            assert_eq!(a.arrival_s, b.arrival_s, "RNG consumption must be unchanged");
+        }
+    }
+
+    #[test]
+    fn bursty_trace_is_deterministic_per_seed_and_streams_identically() {
+        let (g, m) = cfgs();
+        let curve = ArrivalCurve::Bursty { ratio: 4.0 };
+        let a = WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 21)
+            .online_trace_curve(8.0, 40.0, curve);
+        let b = WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 21)
+            .online_trace_curve(8.0, 40.0, curve);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.seed, y.seed);
+        }
+        // streaming twin yields the same sequence
+        let streamed: Vec<Request> = WorkloadGen::new(g.clone(), m.clone(), Dataset::Aime, 21)
+            .online_arrivals_curve(8.0, 40.0, curve)
+            .collect();
+        assert_eq!(a.len(), streamed.len());
+        for (x, y) in a.iter().zip(streamed.iter()) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        // and a different seed actually moves the trace
+        let c = WorkloadGen::new(g, m, Dataset::Aime, 22).online_trace_curve(8.0, 40.0, curve);
+        assert!(
+            c.len() != a.len()
+                || c.iter().zip(a.iter()).any(|(x, y)| x.arrival_s != y.arrival_s),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_and_preserves_mean() {
+        let (g, m) = cfgs();
+        let ratio = 9.0;
+        let trace = WorkloadGen::new(g, m, Dataset::Aime, 5)
+            .online_trace_curve(20.0, 100.0, ArrivalCurve::Bursty { ratio });
+        // mean rate preserved within Poisson noise
+        let rate = trace.len() as f64 / 100.0;
+        assert!((rate - 20.0).abs() < 3.0, "mean rate drifted: {rate}");
+        // count arrivals in burst vs quiet half-cycles
+        let cycles = ArrivalCurve::BURSTY_CYCLES;
+        let (mut burst, mut quiet) = (0usize, 0usize);
+        for r in &trace {
+            let phase = (r.arrival_s / 100.0 * cycles).fract();
+            if phase < 0.5 {
+                burst += 1;
+            } else {
+                quiet += 1;
+            }
+        }
+        let observed = burst as f64 / quiet.max(1) as f64;
+        assert!(
+            observed > ratio * 0.6 && observed < ratio * 1.6,
+            "burst/quiet ratio {observed} should track {ratio}"
+        );
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_cycle() {
+        let (g, m) = cfgs();
+        let trace = WorkloadGen::new(g, m, Dataset::Aime, 6)
+            .online_trace_curve(20.0, 100.0, ArrivalCurve::Diurnal { ratio: 6.0 });
+        // sin peaks in the first half of the horizon, troughs in the second
+        let first: usize = trace.iter().filter(|r| r.arrival_s < 50.0).count();
+        let second = trace.len() - first;
+        assert!(
+            first as f64 > 1.5 * second as f64,
+            "diurnal first-half {first} should dominate second-half {second}"
+        );
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! End-to-end serving-front-end tests over real TCP sockets (loopback,
+//! ephemeral ports): the acceptance criteria of the network subsystem.
+//!
+//! * Two concurrent tenants stream tokens over the wire **bit-identical**
+//!   to an in-process `Engine::run` of the same requests — the serving
+//!   layer adds transport, admission and fairness, never different math.
+//! * A slow reader exhausts its credit window, trips the stall clock, and
+//!   is drop-to-cancelled with a typed `SlowReader` error — while a
+//!   healthy connection's sessions finish undisturbed.
+//! * Above the KV watermark new submissions are shed with a typed
+//!   `KvShed` error while every admitted session runs to completion.
+//! * `/metrics` serves a parseable Prometheus exposition with per-tenant
+//!   labelled series; graceful drain leaves an accurate summary.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::kv_cache::KvPolicy;
+use sparsespec::runtime::Runtime;
+use sparsespec::serving::{
+    run_load, wire, ClientConfig, ErrorCode, Frame, Server, ServerConfig, TenantLoad,
+};
+use sparsespec::spec::DrafterKind;
+use sparsespec::workload::{Dataset, Request, WorkloadGen};
+
+fn artifacts_dir() -> String {
+    std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load(&artifacts_dir()).expect("runtime loads"))
+}
+
+fn small_requests(rt: &Runtime, n: usize, cap: usize, seed: u64) -> Vec<Request> {
+    let mut reqs =
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, seed)
+            .offline_batch(n);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+/// In-process greedy reference for a request set (outputs are schedule-
+/// independent at temperature 0, pinned by tests/sessions.rs).
+fn reference_outputs(
+    rt: &Rc<Runtime>,
+    cfg: EngineConfig,
+    reqs: Vec<Request>,
+) -> BTreeMap<u64, Vec<i32>> {
+    let mut eng = Engine::new(rt.clone(), cfg).expect("reference engine");
+    eng.run(reqs).expect("reference run").outputs
+}
+
+/// Read frames off a raw socket until `done` says stop (or panic at the
+/// deadline); returns everything read.
+fn read_frames_until(
+    r: &mut BufReader<TcpStream>,
+    deadline: Instant,
+    mut done: impl FnMut(&Frame) -> bool,
+) -> Vec<Frame> {
+    let mut out = Vec::new();
+    loop {
+        assert!(Instant::now() < deadline, "deadline waiting for frames; got {out:?}");
+        match wire::read_frame(r) {
+            Ok(Some(f)) => {
+                let stop = done(&f);
+                out.push(f);
+                if stop {
+                    return out;
+                }
+            }
+            Ok(None) => panic!("server hung up early; got {out:?}"),
+            Err(e) => panic!("wire error {e}; got {out:?}"),
+        }
+    }
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let reader = BufReader::new(stream.try_clone().expect("clone"));
+    (stream, reader)
+}
+
+fn http_get_metrics(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).expect("metrics connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+        .expect("metrics GET");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("metrics body");
+    resp
+}
+
+/// Acceptance pin: two concurrent tenants over real TCP, streamed tokens
+/// bit-identical to `Engine::run`, `/metrics` parseable with per-tenant
+/// series, graceful drain with an accurate summary.
+#[test]
+fn two_tenants_stream_bit_identical_to_in_process_run() {
+    let rt = runtime();
+    let mk_cfg = || {
+        let mut c = EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+        c.max_iterations = u64::MAX;
+        c
+    };
+    // unique ids across tenants so one reference run covers both
+    let mut acme = small_requests(&rt, 4, 32, 11);
+    let mut hobby = small_requests(&rt, 4, 32, 22);
+    for (i, r) in acme.iter_mut().enumerate() {
+        r.id = 1000 + i as u64;
+    }
+    for (i, r) in hobby.iter_mut().enumerate() {
+        r.id = 2000 + i as u64;
+    }
+    let mut union = acme.clone();
+    union.extend(hobby.iter().cloned());
+    let reference = reference_outputs(&rt, mk_cfg(), union);
+
+    let mut scfg = ServerConfig::new(&artifacts_dir(), mk_cfg());
+    scfg.addr = "127.0.0.1:0".into();
+    scfg.metrics_addr = Some("127.0.0.1:0".into());
+    let server = Server::spawn(scfg).expect("server spawns");
+    let metrics_addr = server.metrics_addr().expect("metrics listener");
+
+    let mut ccfg = ClientConfig::new(&server.addr().to_string());
+    ccfg.timeout_s = 60.0;
+    ccfg.tenants.push(TenantLoad { name: "acme".into(), requests: acme.clone(), drafter: String::new() });
+    ccfg.tenants.push(TenantLoad { name: "hobby".into(), requests: hobby.clone(), drafter: String::new() });
+    let report = run_load(ccfg).expect("client run");
+
+    assert_eq!(report.completed, 8, "all sessions complete: {}", report.render());
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.refused_total(), 0);
+    for (tenant, reqs) in [("acme", &acme), ("hobby", &hobby)] {
+        for r in reqs.iter() {
+            let got = report
+                .outputs
+                .get(&(tenant.to_string(), r.id))
+                .unwrap_or_else(|| panic!("missing output for {tenant}/{}", r.id));
+            assert_eq!(
+                got,
+                &reference[&r.id],
+                "tenant {tenant} req {} streamed tokens differ from Engine::run",
+                r.id
+            );
+        }
+        assert_eq!(
+            report.metrics.counter("sessions_completed", &[("tenant", tenant)]),
+            4.0
+        );
+    }
+
+    // /metrics: poll until the post-completion publish lands, then check
+    // it parses as a Prometheus exposition with per-tenant series.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let body = loop {
+        let resp = http_get_metrics(metrics_addr);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        if body.contains("tenant=\"acme\"") && body.contains("tenant=\"hobby\"") {
+            break body;
+        }
+        assert!(Instant::now() < deadline, "per-tenant series never published:\n{body}");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let mut series = 0;
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("unparseable: {line}"));
+        assert!(name.starts_with("sparsespec_"), "unprefixed series: {line}");
+        value.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric sample: {line}"));
+        series += 1;
+    }
+    assert!(series > 10, "suspiciously few series:\n{body}");
+    assert!(
+        body.contains("sparsespec_sessions_completed{tenant=\"acme\"} 4"),
+        "labelled completion counter missing:\n{body}"
+    );
+
+    server.shutdown(false);
+    let summary = server.join().expect("drain");
+    assert_eq!(summary.sessions_completed, 8);
+    assert_eq!(summary.sessions_cancelled, 0);
+    assert_eq!(summary.sessions_refused, 0);
+    assert!(summary.exposition.contains("tenant=\"hobby\""));
+    // engine-side report merged into the final exposition on drain
+    assert_eq!(summary.report.outputs.len(), 8);
+}
+
+/// Acceptance pin: a reader that never returns credit stalls, is dropped
+/// with a typed SlowReader error and a cancelled Finished — and a healthy
+/// concurrent connection's sessions stream to completion bit-identically.
+#[test]
+fn slow_reader_is_cancelled_without_disturbing_others() {
+    let rt = runtime();
+    let mk_cfg = || {
+        let mut c = EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(4);
+        c.max_iterations = u64::MAX;
+        c
+    };
+    let mut scfg = ServerConfig::new(&artifacts_dir(), mk_cfg());
+    scfg.addr = "127.0.0.1:0".into();
+    scfg.send_window = 4; // tiny credit window: backpressure bites fast
+    scfg.send_queue_cap = 4 + 64;
+    scfg.stall_ticks = 40;
+    let server = Server::spawn(scfg).expect("server spawns");
+    let deadline = Instant::now() + Duration::from_secs(30);
+
+    // Slow connection: one long request, then silence — no reads, no
+    // credit. 450 tokens at k=4 is ~90 engine iterations, far past the
+    // 40-tick stall allowance, so the drop lands mid-generation.
+    let (mut slow_w, mut slow_r) = connect(server.addr());
+    let mut long_req = small_requests(&rt, 1, usize::MAX, 33).remove(0);
+    long_req.max_new = 450;
+    wire::write_frame(
+        &mut slow_w,
+        &Frame::Submit {
+            req_id: 77,
+            seed: long_req.seed,
+            max_new: long_req.max_new as u32,
+            tenant: "victim".into(),
+            drafter: String::new(),
+            prompt: long_req.prompt.clone(),
+        },
+    )
+    .expect("slow submit");
+
+    // Healthy connection: pre-grant a huge credit window so the tiny
+    // server default never gates it, then stream two sessions fully.
+    let healthy_reqs = small_requests(&rt, 2, 32, 44);
+    let reference = reference_outputs(&rt, mk_cfg(), healthy_reqs.clone());
+    let (mut h_w, mut h_r) = connect(server.addr());
+    wire::write_frame(&mut h_w, &Frame::Credit { n: 1 << 20 }).expect("credit");
+    for r in &healthy_reqs {
+        wire::write_frame(
+            &mut h_w,
+            &Frame::Submit {
+                req_id: r.id,
+                seed: r.seed,
+                max_new: r.max_new as u32,
+                tenant: "healthy".into(),
+                drafter: String::new(),
+                prompt: r.prompt.clone(),
+            },
+        )
+        .expect("healthy submit");
+    }
+    let mut by_req: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut session_to_req: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut finished = 0usize;
+    read_frames_until(&mut h_r, deadline, |f| {
+        match f {
+            Frame::Accepted { req_id, session } => {
+                session_to_req.insert(*session, *req_id);
+            }
+            Frame::Token { session, token, .. } => {
+                by_req.entry(session_to_req[session]).or_default().push(*token);
+            }
+            Frame::Finished { reason, .. } => {
+                assert_eq!(*reason, 0, "healthy session must complete");
+                finished += 1;
+            }
+            Frame::Error { detail, .. } => panic!("healthy conn got error: {detail}"),
+            _ => {}
+        }
+        finished == 2
+    });
+    for r in &healthy_reqs {
+        assert_eq!(
+            by_req.get(&r.id),
+            reference.get(&r.id),
+            "slow-reader drop disturbed healthy request {}",
+            r.id
+        );
+    }
+
+    // The slow connection's backlog is in the kernel buffer: exactly the
+    // credit window of tokens, then the typed drop and the cancel.
+    let mut tokens = 0u32;
+    let mut saw_error: Option<ErrorCode> = None;
+    let frames = read_frames_until(&mut slow_r, deadline, |f| {
+        match f {
+            Frame::Token { .. } => tokens += 1,
+            Frame::Error { code, .. } => saw_error = Some(*code),
+            _ => {}
+        }
+        matches!(f, Frame::Finished { .. })
+    });
+    assert_eq!(tokens, 4, "exactly the credit window leaks out: {frames:?}");
+    assert_eq!(saw_error, Some(ErrorCode::SlowReader), "{frames:?}");
+    match frames.last() {
+        Some(Frame::Finished { reason, tokens, .. }) => {
+            assert_eq!(*reason, 1, "slow session ends cancelled");
+            assert_eq!(*tokens, 4);
+        }
+        other => panic!("expected Finished, got {other:?}"),
+    }
+
+    server.shutdown(false);
+    let summary = server.join().expect("drain");
+    assert_eq!(summary.sessions_completed, 2);
+    assert_eq!(summary.sessions_cancelled, 1);
+    assert!(summary.exposition.contains("sparsespec_slow_reader_drops 1"));
+}
+
+/// Acceptance pin: above the KV watermark new submissions get a typed
+/// KvShed refusal; everything admitted still runs to completion with
+/// outputs bit-identical to the in-process reference.
+#[test]
+fn kv_watermark_sheds_new_submissions_while_admitted_work_completes() {
+    let rt = runtime();
+    let pad = rt.cfg.model.prompt_pad;
+    let k = 4usize;
+    let long_new = 450usize;
+    // budget fits the long request (worst-case pad + max_new + k + 2,
+    // plus headroom) — and the near-zero watermark sheds any submission
+    // arriving while KV is occupied at all.
+    let budget = pad + long_new + k + 2 + 32;
+    let mk_cfg = || {
+        let mut c = EngineConfig::new(DrafterKind::Pillar { w: 64 })
+            .with_k(k)
+            .with_kv(KvPolicy::parse("dynamic").unwrap(), budget);
+        c.max_iterations = u64::MAX;
+        c
+    };
+    let mut scfg = ServerConfig::new(&artifacts_dir(), mk_cfg());
+    scfg.addr = "127.0.0.1:0".into();
+    scfg.kv_shed_watermark = 1e-6;
+    let server = Server::spawn(scfg).expect("server spawns");
+    let deadline = Instant::now() + Duration::from_secs(30);
+
+    let mut long_req = small_requests(&rt, 1, usize::MAX, 5).remove(0);
+    long_req.max_new = long_new;
+    long_req.id = 1;
+    let reference = reference_outputs(&rt, mk_cfg(), vec![long_req.clone()]);
+
+    // Conn 1: the long-running session; credit granted up front so the
+    // server streams freely into the kernel buffer.
+    let (mut a_w, mut a_r) = connect(server.addr());
+    wire::write_frame(&mut a_w, &Frame::Credit { n: 1 << 20 }).expect("credit");
+    wire::write_frame(
+        &mut a_w,
+        &Frame::Submit {
+            req_id: long_req.id,
+            seed: long_req.seed,
+            max_new: long_req.max_new as u32,
+            tenant: "hog".into(),
+            drafter: String::new(),
+            prompt: long_req.prompt.clone(),
+        },
+    )
+    .expect("submit long");
+    // wait until it is visibly generating — KV is in use from here on
+    read_frames_until(&mut a_r, deadline, |f| matches!(f, Frame::Token { .. }));
+
+    // Conn 2: probe submissions. While any session holds KV the watermark
+    // sheds the probe; an admitted probe (possible once everything else
+    // finished) must itself complete — then the next probe sheds on it.
+    let (mut b_w, mut b_r) = connect(server.addr());
+    wire::write_frame(&mut b_w, &Frame::Credit { n: 1 << 20 }).expect("credit");
+    let small = small_requests(&rt, 1, 8, 6).remove(0);
+    let mut shed: Option<String> = None;
+    for attempt in 0..40u64 {
+        let req_id = 500 + attempt;
+        wire::write_frame(
+            &mut b_w,
+            &Frame::Submit {
+                req_id,
+                seed: small.seed,
+                max_new: small.max_new as u32,
+                tenant: "probe".into(),
+                drafter: String::new(),
+                prompt: small.prompt.clone(),
+            },
+        )
+        .expect("submit probe");
+        let mut refusal: Option<(ErrorCode, String)> = None;
+        read_frames_until(&mut b_r, deadline, |f| match f {
+            Frame::Error { code, detail, .. } => {
+                refusal = Some((*code, detail.clone()));
+                true
+            }
+            Frame::Finished { reason, .. } => {
+                assert_eq!(*reason, 0, "admitted probe must complete");
+                true
+            }
+            _ => false,
+        });
+        if let Some((code, detail)) = refusal {
+            assert_eq!(code, ErrorCode::KvShed, "typed shed expected, got {code:?}: {detail}");
+            shed = Some(detail);
+            break;
+        }
+    }
+    let detail = shed.expect("no probe was ever shed above the watermark");
+    assert!(detail.contains("watermark"), "{detail}");
+
+    // The admitted long session runs to completion, bit-identical.
+    let mut tokens: Vec<i32> = Vec::new();
+    read_frames_until(&mut a_r, deadline, |f| {
+        if let Frame::Token { token, .. } = f {
+            tokens.push(*token);
+        }
+        matches!(f, Frame::Finished { .. })
+    });
+    assert_eq!(&tokens, &reference[&long_req.id], "shedding disturbed the admitted session");
+
+    server.shutdown(false);
+    let summary = server.join().expect("drain");
+    assert!(summary.sessions_refused >= 1);
+    assert!(
+        summary.exposition.contains("sessions_refused{code=\"kv_shed\""),
+        "{}",
+        summary.exposition
+    );
+}
+
+/// Draining: while a drain is in progress, new connections are turned
+/// away with a typed refusal; in-flight work still finishes and the
+/// summary's engine report carries its output.
+///
+/// The in-flight session is held open deterministically by credit
+/// starvation (window 4, astronomically large stall allowance), so the
+/// drain window is as wide as the test needs it to be.
+#[test]
+fn graceful_drain_refuses_new_connections() {
+    let rt = runtime();
+    let mut cfg = EngineConfig::new(DrafterKind::Vanilla).with_k(4);
+    cfg.max_iterations = u64::MAX;
+    let mut scfg = ServerConfig::new(&artifacts_dir(), cfg);
+    scfg.addr = "127.0.0.1:0".into();
+    scfg.send_window = 4;
+    scfg.send_queue_cap = 4 + 64;
+    scfg.stall_ticks = u64::MAX / 2; // never slow-reader-drop in this test
+    let server = Server::spawn(scfg).expect("server spawns");
+    let deadline = Instant::now() + Duration::from_secs(30);
+
+    // a session larger than the credit window: 4 tokens stream, the rest
+    // stay undeliverable until we grant credit — the drain must wait
+    let mut req = small_requests(&rt, 1, usize::MAX, 3).remove(0);
+    req.max_new = 64;
+    let (mut w, mut r) = connect(server.addr());
+    wire::write_frame(
+        &mut w,
+        &Frame::Submit {
+            req_id: req.id,
+            seed: req.seed,
+            max_new: req.max_new as u32,
+            tenant: "t".into(),
+            drafter: String::new(),
+            prompt: req.prompt.clone(),
+        },
+    )
+    .unwrap();
+    let mut seen = 0;
+    read_frames_until(&mut r, deadline, |f| {
+        if matches!(f, Frame::Token { .. }) {
+            seen += 1;
+        }
+        seen == 4
+    });
+
+    server.shutdown(false);
+    // a late connection is refused typed (polling: the engine thread has
+    // to observe the drain first)
+    let mut refused = false;
+    while Instant::now() < deadline {
+        let stream = TcpStream::connect(server.addr()).expect("listener stays up during drain");
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut lr = BufReader::new(stream);
+        let mut saw_drain = false;
+        loop {
+            match wire::read_frame(&mut lr) {
+                Ok(Some(Frame::Error { code: ErrorCode::Draining, .. })) => saw_drain = true,
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => break,
+            }
+        }
+        if saw_drain {
+            refused = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(refused, "late connection never saw a typed Draining refusal");
+
+    // release the hostage: credit lets the session finish, the drain ends
+    wire::write_frame(&mut w, &Frame::Credit { n: 1 << 20 }).unwrap();
+    read_frames_until(&mut r, deadline, |f| matches!(f, Frame::Finished { .. }));
+    let summary = server.join().expect("drain");
+    assert_eq!(summary.sessions_completed, 1);
+    assert_eq!(summary.report.outputs.len(), 1);
+}

@@ -1,0 +1,201 @@
+//! Wire-protocol codec property tests (seeded, deterministic — no
+//! external fuzzing deps).
+//!
+//! Properties pinned here, with a byte-layout twin in
+//! `python/tests/test_wire_port.py`:
+//!   1. encode → decode round-trips every frame kind, arbitrary values;
+//!   2. decoding is *canonical*: any body that decodes re-encodes to the
+//!      identical bytes (no two wire representations of one frame);
+//!   3. truncated / mutated / garbage inputs never panic and never
+//!      silently succeed where the layout is violated;
+//!   4. golden byte strings (shared verbatim with the Python twin) pin
+//!      the layout across languages.
+
+use sparsespec::serving::wire::{self, Frame, WireError};
+use sparsespec::serving::ErrorCode;
+use sparsespec::util::rng::Xoshiro256;
+
+fn rand_string(rng: &mut Xoshiro256, max: usize) -> String {
+    let n = (rng.next_u64() as usize) % (max + 1);
+    (0..n)
+        .map(|_| {
+            // mixed ASCII + multibyte to exercise UTF-8 handling
+            match rng.next_u64() % 4 {
+                0 => 'é',
+                1 => '→',
+                _ => (b'a' + (rng.next_u64() % 26) as u8) as char,
+            }
+        })
+        .collect()
+}
+
+fn rand_frame(rng: &mut Xoshiro256) -> Frame {
+    match rng.next_u64() % 11 {
+        0 => Frame::Submit {
+            req_id: rng.next_u64(),
+            seed: rng.next_u64(),
+            max_new: rng.next_u64() as u32,
+            tenant: rand_string(rng, 12),
+            drafter: rand_string(rng, 12),
+            prompt: (0..(rng.next_u64() % 64)).map(|_| rng.next_u64() as i32).collect(),
+        },
+        1 => Frame::Cancel { session: rng.next_u64() },
+        2 => Frame::Credit { n: rng.next_u64() as u32 },
+        3 => Frame::Shutdown { abort: rng.next_u64() % 2 == 1 },
+        4 => Frame::Ping { nonce: rng.next_u64() },
+        5 => Frame::Hello { version: rng.next_u64() as u8, window: rng.next_u64() as u32 },
+        6 => Frame::Accepted { req_id: rng.next_u64(), session: rng.next_u64() },
+        7 => Frame::Token {
+            session: rng.next_u64(),
+            index: rng.next_u64() as u32,
+            token: rng.next_u64() as i32,
+        },
+        8 => Frame::Finished {
+            session: rng.next_u64(),
+            reason: (rng.next_u64() % 4) as u8,
+            tokens: rng.next_u64() as u32,
+        },
+        9 => Frame::Error {
+            req_id: rng.next_u64(),
+            code: ErrorCode::from_u8((rng.next_u64() % 8 + 1) as u8).unwrap(),
+            detail: rand_string(rng, 40),
+        },
+        _ => Frame::Pong { nonce: rng.next_u64() },
+    }
+}
+
+#[test]
+fn fuzz_roundtrip_random_frames() {
+    let mut rng = Xoshiro256::new(0xC0DEC);
+    for i in 0..2000 {
+        let f = rand_frame(&mut rng);
+        let bytes = f.encode();
+        let mut cur = std::io::Cursor::new(&bytes);
+        let back = wire::read_frame(&mut cur).unwrap_or_else(|e| panic!("iter {i}: {e} on {f:?}"));
+        assert_eq!(back, Some(f), "iter {i}");
+    }
+}
+
+#[test]
+fn fuzz_decode_is_canonical() {
+    // any body that decodes must re-encode to the identical bytes —
+    // there is exactly one wire representation per frame
+    let mut rng = Xoshiro256::new(0xBEEF);
+    for _ in 0..2000 {
+        let body = rand_frame(&mut rng).encode_body();
+        let decoded = wire::decode_body(&body).expect("valid body decodes");
+        assert_eq!(decoded.encode_body(), body, "canonical re-encode");
+    }
+}
+
+#[test]
+fn fuzz_truncations_always_error() {
+    let mut rng = Xoshiro256::new(0x7A7A);
+    for _ in 0..200 {
+        let body = rand_frame(&mut rng).encode_body();
+        for cut in 0..body.len() {
+            let r = wire::decode_body(&body[..cut]);
+            assert!(r.is_err(), "strict prefix (len {cut}/{}) decoded: {r:?}", body.len());
+        }
+    }
+}
+
+#[test]
+fn fuzz_mutations_never_panic() {
+    // single-byte mutations: any outcome is fine except a panic or an
+    // over-allocation; run a bounded number per frame
+    let mut rng = Xoshiro256::new(0xF00D);
+    for _ in 0..400 {
+        let mut body = rand_frame(&mut rng).encode_body();
+        let at = (rng.next_u64() as usize) % body.len();
+        body[at] ^= (rng.next_u64() as u8) | 1;
+        let _ = wire::decode_body(&body);
+    }
+}
+
+#[test]
+fn fuzz_garbage_never_panics() {
+    let mut rng = Xoshiro256::new(0x6A6B);
+    for _ in 0..2000 {
+        let n = (rng.next_u64() as usize) % 96;
+        let garbage: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = wire::decode_body(&garbage);
+        // and through the stream reader (garbage length prefixes included)
+        let mut cur = std::io::Cursor::new(&garbage);
+        let _ = wire::read_frame(&mut cur);
+    }
+}
+
+#[test]
+fn oversized_and_zero_lengths_rejected_before_allocation() {
+    for len in [0u32, (wire::MAX_FRAME as u32) + 1, u32::MAX] {
+        let mut bytes = len.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        let mut cur = std::io::Cursor::new(&bytes);
+        assert!(
+            matches!(wire::read_frame(&mut cur), Err(WireError::Oversized { .. })),
+            "len {len}"
+        );
+    }
+}
+
+/// Golden byte pins, shared verbatim with python/tests/test_wire_port.py.
+/// If these change, the wire protocol changed: bump PROTOCOL_VERSION and
+/// update both twins.
+#[test]
+fn golden_bytes_pin_the_layout() {
+    let cases: Vec<(Frame, &str)> = vec![
+        (
+            Frame::Submit {
+                req_id: 1,
+                seed: 2,
+                max_new: 3,
+                tenant: "t".into(),
+                drafter: "d".into(),
+                prompt: vec![5, -1],
+            },
+            "270000000101000000000000000200000000000000030000000100740100640200000005000000ffffffff",
+        ),
+        (
+            Frame::Hello { version: 1, window: 1024 },
+            "06000000100100040000",
+        ),
+        (
+            Frame::Error { req_id: 7, code: ErrorCode::KvShed, detail: "x".into() },
+            "0d00000014070000000000000002010078",
+        ),
+        (
+            Frame::Token { session: 9, index: 4, token: -7 },
+            "1100000012090000000000000004000000f9ffffff",
+        ),
+    ];
+    for (frame, hex) in cases {
+        let got: String = frame.encode().iter().map(|b| format!("{b:02x}")).collect();
+        assert_eq!(got, hex, "{frame:?}");
+        let raw: Vec<u8> = (0..hex.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&hex[i..i + 2], 16).unwrap())
+            .collect();
+        let mut cur = std::io::Cursor::new(&raw);
+        assert_eq!(wire::read_frame(&mut cur).unwrap(), Some(frame));
+    }
+}
+
+#[test]
+fn multiple_frames_stream_back_to_back() {
+    let frames = vec![
+        Frame::Hello { version: wire::PROTOCOL_VERSION, window: 64 },
+        Frame::Accepted { req_id: 1, session: 10 },
+        Frame::Token { session: 10, index: 0, token: 42 },
+        Frame::Finished { session: 10, reason: 0, tokens: 1 },
+    ];
+    let mut bytes = Vec::new();
+    for f in &frames {
+        bytes.extend_from_slice(&f.encode());
+    }
+    let mut cur = std::io::Cursor::new(&bytes);
+    for f in &frames {
+        assert_eq!(wire::read_frame(&mut cur).unwrap().as_ref(), Some(f));
+    }
+    assert_eq!(wire::read_frame(&mut cur).unwrap(), None);
+}
