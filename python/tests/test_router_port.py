@@ -1,0 +1,249 @@
+"""Python twin of the router placement policy in
+`rust/src/serving/router.rs` (scale-out serving PR).
+
+Per the working convention (no Rust toolchain in the authoring
+container), this twin re-implements the pure routing state machine —
+``bucket_of`` / ``route`` / ``release`` / ``failover_action`` — and runs
+the same deterministic scenarios as the Rust unit tests, then pins the
+load-bearing lines of the Rust source by regex:
+
+* the bucket rule: count of edges strictly below the cost,
+* the selection key ``(load[r][bucket], live[r], r)`` over ``Up``
+  replicas only,
+* tenant stickiness that follows only while the sticky replica is Up,
+* the failover contract: resubmit iff ``sent == 0 && pending == 0``,
+* the projected-cost formula ``prompt + max_new + 2`` and the default
+  bucket edges / health-check knobs of ``RouterConfig``.
+
+If the policy drifts in Rust without a matching edit here, a test below
+fails pointing at the divergence.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+ROUTER_RS = REPO / "rust" / "src" / "serving" / "router.rs"
+
+UP, DEGRADED, DOWN = "up", "degraded", "down"
+
+# RouterConfig defaults pinned against the Rust source below.
+DEFAULT_BUCKET_EDGES = [128, 256, 512]
+DEFAULT_PING_EVERY_MS = 500
+DEFAULT_DOWN_AFTER_MISSED = 3
+
+
+class RouterPolicy:
+    """Twin of ``router::RouterPolicy`` — pure and deterministic."""
+
+    def __init__(self, replicas: int, bucket_edges: list[int]):
+        self.bucket_edges = sorted(set(bucket_edges))
+        n_buckets = len(self.bucket_edges) + 1
+        self.health = [UP] * replicas
+        self.live = [0] * replicas
+        self.load = [[0] * n_buckets for _ in range(replicas)]
+        self.sticky: dict[str, int] = {}
+
+    def replicas(self) -> int:
+        return len(self.health)
+
+    def n_buckets(self) -> int:
+        return len(self.bucket_edges) + 1
+
+    def bucket_of(self, cost: int) -> int:
+        return sum(1 for e in self.bucket_edges if cost > e)
+
+    def route(self, tenant: str, cost: int):
+        """Returns ``(replica, bucket, sticky)`` or ``None``."""
+        bucket = self.bucket_of(cost)
+        r = self.sticky.get(tenant)
+        if r is not None and self.health[r] == UP:
+            self.live[r] += 1
+            self.load[r][bucket] += cost
+            return (r, bucket, True)
+        up = [r for r in range(self.replicas()) if self.health[r] == UP]
+        if not up:
+            return None
+        best = min(up, key=lambda r: (self.load[r][bucket], self.live[r], r))
+        self.live[best] += 1
+        self.load[best][bucket] += cost
+        self.sticky[tenant] = best
+        return (best, bucket, False)
+
+    def release(self, replica: int, bucket: int, cost: int) -> None:
+        self.live[replica] = max(0, self.live[replica] - 1)
+        self.load[replica][bucket] = max(0, self.load[replica][bucket] - cost)
+
+
+def failover_action(sent: int, pending: int) -> str:
+    """Twin of ``router::failover_action``."""
+    return "resubmit" if sent == 0 and pending == 0 else "fail_fast"
+
+
+def policy(n: int) -> RouterPolicy:
+    return RouterPolicy(n, [100, 200])
+
+
+# ---------------------------------------------------------------------------
+# Scenario twins of the Rust unit tests
+# ---------------------------------------------------------------------------
+
+def test_bucket_edges_partition_costs():
+    p = policy(2)
+    assert p.n_buckets() == 3
+    assert p.bucket_of(1) == 0
+    assert p.bucket_of(100) == 0  # edges are inclusive upper bounds
+    assert p.bucket_of(101) == 1
+    assert p.bucket_of(200) == 1
+    assert p.bucket_of(201) == 2
+    assert p.bucket_of(100_000) == 2  # overflow bucket
+
+
+def test_least_loaded_within_bucket_not_globally():
+    p = policy(2)
+    assert p.route("long-a", 500) == (0, 2, False)
+    assert p.route("long-b", 400)[0] == 1
+    # a short session sees equal short-bucket loads and falls to the
+    # live-count tie-break: bucket-aware, not global-load
+    assert p.route("short-a", 50) == (0, 0, False)
+
+
+def test_ties_break_by_live_count_then_index():
+    p = policy(3)
+    assert p.route("t1", 50)[0] == 0
+    assert p.route("t2", 50)[0] == 1
+    assert p.route("t3", 50)[0] == 2
+
+
+def test_tenant_stickiness_follows_while_up():
+    p = policy(2)
+    first = p.route("acme", 50)
+    assert first[2] is False
+    for _ in range(5):
+        p.route("other", 50)
+    again = p.route("acme", 50)
+    assert again[0] == first[0]
+    assert again[2] is True
+
+
+def test_stickiness_does_not_follow_into_degraded_or_down():
+    p = policy(2)
+    assert p.route("acme", 50)[0] == 0
+    p.health[0] = DEGRADED
+    moved = p.route("acme", 50)
+    assert moved[0] == 1 and moved[2] is False
+    p.health[0] = UP
+    # the tenant re-sticks to its new home
+    assert p.route("acme", 50)[0] == 1
+
+
+def test_release_rebalances_future_routing():
+    p = policy(2)
+    r0, b0, _ = p.route("a", 150)
+    assert r0 == 0
+    assert p.route("b", 150)[0] == 1
+    p.release(r0, b0, 150)
+    assert p.route("c", 150)[0] == 0
+    assert p.live[0] == 1
+
+
+def test_no_live_replica_routes_none():
+    p = policy(2)
+    p.health[0] = DOWN
+    p.health[1] = DEGRADED
+    assert p.route("acme", 50) is None
+    p.health[1] = UP
+    assert p.route("acme", 50) is not None
+
+
+def test_failover_contract_resubmit_vs_fail_fast():
+    assert failover_action(0, 0) == "resubmit"
+    assert failover_action(1, 0) == "fail_fast"
+    assert failover_action(42, 3) == "fail_fast"
+    # buffered-but-undelivered tokens also forbid resubmit
+    assert failover_action(0, 1) == "fail_fast"
+
+
+def test_projected_load_is_cost_weighted():
+    p = RouterPolicy(2, [1000])
+    assert p.route("big", 900)[0] == 0
+    assert p.route("s1", 300)[0] == 1
+    assert p.route("s2", 300)[0] == 1  # 600 < 900
+    assert p.route("s3", 300)[0] == 1  # sticky
+    assert p.route("s4", 300)[0] == 0  # 1200 > 900 now
+
+
+def test_bucket_edges_are_sorted_and_deduped():
+    p = RouterPolicy(2, [200, 100, 200])
+    assert p.bucket_edges == [100, 200]
+    assert p.n_buckets() == 3
+
+
+# ---------------------------------------------------------------------------
+# Source pins against rust/src/serving/router.rs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rust_src() -> str:
+    assert ROUTER_RS.exists(), f"missing {ROUTER_RS}"
+    return ROUTER_RS.read_text()
+
+
+def test_bucket_rule_is_pinned(rust_src):
+    # count of edges strictly below the cost
+    assert re.search(
+        r"bucket_edges\.iter\(\)\.filter\(\|e\| cost > \*\*e\)\.count\(\)", rust_src
+    ), "bucket_of rule drifted in router.rs"
+
+
+def test_selection_key_is_pinned(rust_src):
+    # min over Up replicas by (bucket load, live count, index)
+    assert re.search(
+        r"min_by_key\(\|&r\| \(self\.load\[r\]\[bucket\], self\.live\[r\], r\)\)", rust_src
+    ), "least-loaded selection key drifted in router.rs"
+    assert "ReplicaHealth::Up" in rust_src
+
+
+def test_stickiness_follows_only_while_up(rust_src):
+    m = re.search(
+        r"if let Some\(&r\) = self\.sticky\.get\(tenant\) \{\s*"
+        r"if self\.health\[r\] == ReplicaHealth::Up", rust_src,
+    )
+    assert m, "tenant-stickiness Up guard drifted in router.rs"
+
+
+def test_failover_contract_is_pinned(rust_src):
+    assert re.search(
+        r"if sent == 0 && pending == 0 \{\s*FailoverAction::Resubmit", rust_src
+    ), "failover_action contract drifted in router.rs"
+
+
+def test_projected_cost_formula_is_pinned(rust_src):
+    assert re.search(
+        r"prompt\.len\(\) \+ max_new as usize \+ 2", rust_src
+    ), "projected KV cost formula drifted in router.rs"
+
+
+def test_router_config_defaults_are_pinned(rust_src):
+    edges = ", ".join(str(e) for e in DEFAULT_BUCKET_EDGES)
+    assert re.search(rf"bucket_edges: vec!\[{edges}\]", rust_src)
+    assert re.search(rf"ping_every_ms: {DEFAULT_PING_EVERY_MS}\b", rust_src)
+    assert re.search(rf"down_after_missed: {DEFAULT_DOWN_AFTER_MISSED}\b", rust_src)
+
+
+def test_midstream_failover_uses_typed_replica_down(rust_src):
+    # fail-fast surfaces ErrorCode::ReplicaDown and a failed Finished
+    assert "ErrorCode::ReplicaDown" in rust_src
+    assert re.search(r"Frame::Finished \{ session: sid, reason: 3", rust_src)
+
+
+def test_router_validates_replica_hello(rust_src):
+    # wire hardening satellite: both the synchronous control handshake
+    # and delegated-link readers go through wire::expect_hello
+    assert rust_src.count("expect_hello") >= 2, (
+        "router must validate the replica Hello on control and delegated links"
+    )

@@ -56,6 +56,7 @@ ERROR_CODES = {
     6: "protocol",
     7: "draining",
     8: "engine_fault",
+    9: "replica_down",
 }
 
 FINISH_REASONS = (0, 1, 2, 3)  # completed, cancelled, rejected, failed
@@ -93,7 +94,11 @@ def encode_body(frame: tuple) -> bytes:
     if kind == "hello":
         return bytes([KINDS["HELLO"], frame[1]]) + struct.pack("<I", frame[2])
     if kind == "accepted":
-        return bytes([KINDS["ACCEPTED"]]) + struct.pack("<QQ", frame[1], frame[2])
+        # optional trailing replica id: absent encodes as absence
+        out = bytes([KINDS["ACCEPTED"]]) + struct.pack("<QQ", frame[1], frame[2])
+        if frame[3] is not None:
+            out += struct.pack("<H", frame[3])
+        return out
     if kind == "token":
         return bytes([KINDS["TOKEN"]]) + struct.pack("<QIi", frame[1], frame[2], frame[3])
     if kind == "finished":
@@ -163,7 +168,9 @@ def decode_body(body: bytes) -> tuple:
     elif kind == KINDS["HELLO"]:
         frame = ("hello", *c.unpack("<BI"))
     elif kind == KINDS["ACCEPTED"]:
-        frame = ("accepted", *c.unpack("<QQ"))
+        req_id, session = c.unpack("<QQ")
+        replica = c.unpack("<H")[0] if c.rest() == 2 else None
+        frame = ("accepted", req_id, session, replica)
     elif kind == KINDS["TOKEN"]:
         frame = ("token", *c.unpack("<QIi"))
     elif kind == KINDS["FINISHED"]:
@@ -236,6 +243,8 @@ GOLDEN = [
     (("hello", 1, 1024), "06000000100100040000"),
     (("error", 7, 2, "x"), "0d00000014070000000000000002010078"),
     (("token", 9, 4, -7), "1100000012090000000000000004000000f9ffffff"),
+    (("accepted", 7, 3, None), "110000001107000000000000000300000000000000"),
+    (("accepted", 7, 3, 1), "1300000011070000000000000003000000000000000100"),
 ]
 
 
@@ -292,13 +301,14 @@ def _rand_frame(rng) -> tuple:
     if k == 5:
         return ("hello", next(rng) % 256, u32())
     if k == 6:
-        return ("accepted", u64(), u64())
+        replica = None if next(rng) % 2 == 0 else next(rng) & 0xFFFF
+        return ("accepted", u64(), u64(), replica)
     if k == 7:
         return ("token", u64(), u32(), i32())
     if k == 8:
         return ("finished", u64(), next(rng) % 4, u32())
     if k == 9:
-        return ("error", u64(), 1 + next(rng) % 8, s(40))
+        return ("error", u64(), 1 + next(rng) % 9, s(40))
     return ("pong", u64())
 
 
@@ -319,8 +329,15 @@ def test_decode_is_canonical():
 def test_truncations_always_raise():
     rng = splitmix64(0x7A7A)
     for _ in range(200):
-        body = encode_body(_rand_frame(rng))
+        f = _rand_frame(rng)
+        body = encode_body(f)
         for cut in range(len(body)):
+            # Sanctioned exception (mirrors rust/tests/wire.rs): slicing
+            # off Accepted's optional replica id yields the equally
+            # canonical replica-less form.
+            if f[0] == "accepted" and f[3] is not None and cut == len(body) - 2:
+                assert decode_body(body[:cut]) == ("accepted", f[1], f[2], None)
+                continue
             with pytest.raises(WireErr):
                 decode_body(body[:cut])
 
@@ -366,6 +383,34 @@ def test_malformed_rejections():
     bad = bytes([KINDS["ERROR"]]) + struct.pack("<QB", 1, 1) + struct.pack("<H", 2) + b"\xff\xfe"
     with pytest.raises(WireErr, match="utf8"):
         decode_body(bad)
+
+
+def expect_hello(frame: tuple):
+    """Twin of ``wire::expect_hello``: the connection-opening handshake."""
+    if frame[0] != "hello":
+        raise WireErr("bad value: expected hello")
+    if frame[1] != PROTOCOL_VERSION:
+        raise WireErr("bad value: protocol version")
+    return frame[2]
+
+
+def test_hello_version_handshake_is_pinned():
+    # positive path: the one supported version yields the credit window
+    assert expect_hello(("hello", PROTOCOL_VERSION, 256)) == 256
+    # negative path: any other version is a typed refusal, mirroring the
+    # client/router hardening in wire.rs
+    for v in (0, PROTOCOL_VERSION + 1, 255):
+        with pytest.raises(WireErr, match="protocol version"):
+            expect_hello(("hello", v, 256))
+    with pytest.raises(WireErr, match="expected hello"):
+        expect_hello(("pong", 1))
+    # and the Rust side actually ships the guard
+    src = WIRE_RS.read_text()
+    assert "pub fn expect_hello" in src
+    assert re.search(r"if \*version == PROTOCOL_VERSION => Ok\(\*window\)", src)
+    for user in ("client.rs", "router.rs"):
+        peer = WIRE_RS.parent / user
+        assert "expect_hello" in peer.read_text(), f"{user} skips the version check"
 
 
 def test_rust_twin_carries_the_same_goldens():

@@ -1,0 +1,189 @@
+//! sparsespec-router — scale-out front door over N server replicas.
+//!
+//! Speaks wire v1 upstream (an unchanged `sparsespec-client` connects to
+//! it like any server) and downstream (each replica sees an ordinary
+//! client).  Two ways to get a fleet:
+//!
+//!   attach mode — replicas already running:
+//!     sparsespec-router --listen 127.0.0.1:7533 --metrics-addr 127.0.0.1:7534 \
+//!         --replicas 127.0.0.1:7433@127.0.0.1:7434,127.0.0.1:7443@127.0.0.1:7444
+//!
+//!   spawn mode — launch the replicas as child processes (ephemeral
+//!   ports, addresses parsed from their stdout), forwarding any extra
+//!   engine flags verbatim:
+//!     sparsespec-router --spawn 2 --listen 127.0.0.1:7533 \
+//!         --metrics-addr 127.0.0.1:7534 -- --drafter pillar --k 8
+//!
+//! Fleet `/metrics` serves the one-merge rollup of every replica's
+//! `/snapshot` plus the router's own routing/health series.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+
+use sparsespec::serving::router::{ReplicaSpec, Router, RouterConfig};
+use sparsespec::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sparsespec-router [flags] [-- server-flags...]\n\
+         \x20 --replicas SPEC        addr[@metrics_addr],...  attach to running replicas\n\
+         \x20 --spawn N              launch N sparsespec-server children instead (ephemeral ports);\n\
+         \x20                        flags after `--` are passed through to each child\n\
+         \x20 --listen ADDR          upstream listen address (default 127.0.0.1:7533; port 0 = ephemeral)\n\
+         \x20 --metrics-addr ADDR    fleet /metrics + /snapshot HTTP address (off unless given)\n\
+         \x20 --send-window N        per-client token credit window (default 1024)\n\
+         \x20 --bucket-edges SPEC    ascending KV-cost bucket bounds (default 128,256,512)\n\
+         \x20 --ping-every-ms N      health-check ping period (default 500)\n\
+         \x20 --down-after N         unanswered pings before a replica is Down (default 3)\n\
+         \x20 --rollup-every-ms N    fleet metrics refresh period (default 200)\n\
+         \x20 --trace-out FILE       export the routing Perfetto trace on drain\n\
+         \x20 --metrics-out FILE     save the final fleet exposition on drain"
+    );
+    std::process::exit(2)
+}
+
+fn parse_replicas(spec: &str) -> Option<Vec<ReplicaSpec>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (addr, metrics) = match part.split_once('@') {
+            Some((a, m)) => (a.to_string(), Some(m.to_string())),
+            None => (part.to_string(), None),
+        };
+        if addr.is_empty() {
+            return None;
+        }
+        out.push(ReplicaSpec { addr, metrics_addr: metrics });
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+fn parse_edges(spec: &str) -> Option<Vec<usize>> {
+    spec.split(',').filter(|p| !p.is_empty()).map(|p| p.parse().ok()).collect()
+}
+
+/// Launch one `sparsespec-server` child on ephemeral ports and scrape its
+/// bound addresses from stdout ("sparsespec-server listening on ADDR" /
+/// "metrics on http://ADDR/metrics").
+fn spawn_replica(i: usize, passthrough: &[String]) -> anyhow::Result<(Child, ReplicaSpec)> {
+    let me = std::env::current_exe()?;
+    let server_bin = me
+        .parent()
+        .map(|d| d.join("sparsespec-server"))
+        .filter(|p| p.exists())
+        .ok_or_else(|| anyhow::anyhow!("sparsespec-server not found next to {}", me.display()))?;
+    let mut child = Command::new(&server_bin)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--metrics-addr")
+        .arg("127.0.0.1:0")
+        .arg("--replica-id")
+        .arg(i.to_string())
+        .args(passthrough)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()?;
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    let mut metrics = None;
+    let mut line = String::new();
+    while (addr.is_none() || metrics.is_none()) && {
+        line.clear();
+        reader.read_line(&mut line)? > 0
+    } {
+        let l = line.trim();
+        if let Some(rest) = l.strip_prefix("sparsespec-server listening on ") {
+            addr = Some(rest.to_string());
+        } else if let Some(rest) = l.strip_prefix("metrics on http://") {
+            metrics = Some(rest.trim_end_matches("/metrics").to_string());
+        }
+    }
+    // keep draining the child's stdout so its prints never block it
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            print!("replica {i}: {sink}");
+            sink.clear();
+        }
+    });
+    let addr = addr.ok_or_else(|| anyhow::anyhow!("replica {i}: no listen address on stdout"))?;
+    Ok((child, ReplicaSpec { addr, metrics_addr: metrics }))
+}
+
+fn main() -> anyhow::Result<()> {
+    // split off `-- server-flags...` before normal flag parsing
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (own, passthrough) = match argv.iter().position(|a| a == "--") {
+        Some(i) => (argv[..i].to_vec(), argv[i + 1..].to_vec()),
+        None => (argv, Vec::new()),
+    };
+    let args = Args::parse(own);
+    if args.bool("help", false) {
+        usage();
+    }
+
+    let mut children: Vec<Child> = Vec::new();
+    let replicas = if let Some(n) = args.opt("spawn") {
+        let n: usize = n.parse().unwrap_or_else(|_| usage());
+        if n == 0 {
+            usage();
+        }
+        let mut specs = Vec::new();
+        for i in 0..n {
+            let (child, spec) = spawn_replica(i, &passthrough)?;
+            println!(
+                "router: replica {i} pid={} addr={} metrics={}",
+                child.id(),
+                spec.addr,
+                spec.metrics_addr.as_deref().unwrap_or("n/a")
+            );
+            children.push(child);
+            specs.push(spec);
+        }
+        specs
+    } else {
+        match args.opt("replicas").and_then(parse_replicas) {
+            Some(r) => r,
+            None => usage(),
+        }
+    };
+
+    let mut cfg = RouterConfig::new(replicas);
+    cfg.addr = args.str("listen", "127.0.0.1:7533");
+    cfg.metrics_addr = args.opt("metrics-addr").map(|s| s.to_string());
+    cfg.send_window = args.u64("send-window", 1024) as u32;
+    cfg.send_queue_cap = cfg.send_window as usize + 64;
+    if let Some(spec) = args.opt("bucket-edges") {
+        cfg.bucket_edges = parse_edges(spec).unwrap_or_else(|| usage());
+    }
+    cfg.ping_every_ms = args.u64("ping-every-ms", 500);
+    cfg.down_after_missed = args.u64("down-after", 3) as u32;
+    cfg.rollup_every_ms = args.u64("rollup-every-ms", 200);
+    cfg.trace_out = args.opt("trace-out").map(|s| s.to_string());
+
+    let router = Router::spawn(cfg)?;
+    println!("sparsespec-router listening on {}", router.addr());
+    if let Some(m) = router.metrics_addr() {
+        println!("fleet metrics on http://{m}/metrics");
+    }
+    println!("(drain with the wire Shutdown frame, e.g. sparsespec-client --shutdown)");
+
+    let summary = router.join()?;
+    println!(
+        "fleet drained: routed={} resubmitted={} failed_over={}",
+        summary.routed, summary.resubmitted, summary.failed_over
+    );
+    if let Some(path) = args.opt("metrics-out") {
+        std::fs::write(path, &summary.exposition)?;
+        println!("fleet metrics exposition saved to {path}");
+    }
+    for mut child in children {
+        // the drain already forwarded Shutdown; reap the replicas
+        let _ = child.wait();
+    }
+    Ok(())
+}

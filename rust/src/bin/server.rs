@@ -36,6 +36,7 @@ fn usage() -> ! {
          \x20 --tenant-queue-cap N   per-tenant admission queue bound (default 64)\n\
          \x20 --max-inflight N       sessions in the engine at once (default 2x slots)\n\
          \x20 --tenant-weights SPEC  name:weight[,name:weight..] for weighted round-robin\n\
+         \x20 --replica-id N         echo this replica id in every Accepted frame (router fleets)\n\
          \x20 --trace-out FILE       export the Perfetto trace on drain  --trace-sample N\n\
          \x20 --fault-plan SPEC  --fault-seed S   chaos injection (as the sparsespec CLI)"
     );
@@ -101,6 +102,7 @@ fn main() -> anyhow::Result<()> {
     scfg.tenant_queue_cap = args.usize("tenant-queue-cap", 64);
     scfg.max_inflight = args.usize("max-inflight", 0);
     scfg.trace_out = trace_out;
+    scfg.replica_id = args.opt("replica-id").map(|s| s.parse::<u16>().unwrap_or_else(|_| usage()));
     if let Some(spec) = args.opt("tenant-weights") {
         scfg.tenant_weights = parse_weights(spec).unwrap_or_else(|| usage());
     }

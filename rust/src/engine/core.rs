@@ -331,7 +331,10 @@ impl Engine {
                     .unwrap_or(2)
                     .clamp(2, 8),
             ),
-            delayed: Vec::new(),
+            // Pre-sized to the slot ceiling (one promise per participating
+            // slot per round) so the steady-state drain never grows it —
+            // collect_delayed drains in place and keeps the capacity.
+            delayed: Vec::with_capacity(m.slots),
             rng: Xoshiro256::new(cfg.seed),
             device,
             sim_scale,
@@ -2085,7 +2088,10 @@ impl Engine {
         if self.delayed.is_empty() {
             return Ok(0.0);
         }
-        let promises = std::mem::take(&mut self.delayed);
+        // Take the queue out to appease the borrow checker, drain it in
+        // place, and hand the (now empty) Vec back so its capacity — sized
+        // to the slot ceiling at construction — survives every round.
+        let mut promises = std::mem::take(&mut self.delayed);
         let n_jobs = promises.len();
         let mut boundary = Vec::new();
         let mut stall = 0.0;
@@ -2108,7 +2114,7 @@ impl Engine {
                 );
             }
         }
-        for p in promises {
+        for p in promises.drain(..) {
             let t0 = Instant::now();
             let w = p.get(); // usually already done: ran during GPU work
             stall += t0.elapsed().as_secs_f64();
@@ -2116,6 +2122,7 @@ impl Engine {
             boundary.push(w.slot_idx);
             self.apply_verify(w)?;
         }
+        self.delayed = promises;
         if sel > 0.0 {
             // Selection ran overlapped with GPU work, but the Table-2
             // breakdown (and the overlap model's observers) still want to

@@ -80,6 +80,43 @@ fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
+/// Escape a string for the snapshot codec: backslash, the two structural
+/// separators (tab, comma), `=`, and newline.
+fn esc_field(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\t' => out.push_str("\\t"),
+            '\n' => out.push_str("\\n"),
+            ',' => out.push_str("\\c"),
+            '=' => out.push_str("\\e"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unesc_field(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('t') => out.push('\t'),
+            Some('n') => out.push('\n'),
+            Some('c') => out.push(','),
+            Some('e') => out.push('='),
+            other => return Err(format!("bad escape \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
 /// Render `{k="v",...}` for exposition, with optional extra pairs
 /// (the `quantile` label on summary lines).
 fn label_block(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
@@ -220,6 +257,110 @@ impl MetricsRegistry {
             let _ = writeln!(out, "{full}_count{} {}", label_block(&k.labels, &[]), h.len());
         }
         out
+    }
+
+    /// Lossless text serialisation of a snapshot, for shipping a
+    /// registry across a replica boundary (`/snapshot` on the server's
+    /// metrics endpoint, fetched by the router's fleet rollup).  The
+    /// Prometheus exposition cannot serve this purpose: it renders
+    /// histograms as quantile summaries, which do not merge.  This codec
+    /// keeps the raw samples so `decode_text(encode_text(r))` is
+    /// merge-equivalent to `r` — the router's one-merge rollup stays
+    /// associative end to end.
+    ///
+    /// Line format (tab-separated, stable `BTreeMap` order):
+    ///
+    /// ```text
+    /// sparsespec-metrics-snapshot v1
+    /// c <name> <k=v,k2=v2|-> <value>
+    /// g <name> <labels>      <value>
+    /// h <name> <labels>      <s1,s2,...>
+    /// ```
+    ///
+    /// Names, label keys and values are escaped (`\\`, tab, newline,
+    /// `,`, `=`) so arbitrary tenant strings survive.  Floats use Rust's
+    /// shortest round-trip `Display`.
+    pub fn encode_text(&self) -> String {
+        let mut out = String::from("sparsespec-metrics-snapshot v1\n");
+        let labels = |k: &MetricKey| -> String {
+            if k.labels.is_empty() {
+                return "-".into();
+            }
+            k.labels
+                .iter()
+                .map(|(lk, lv)| format!("{}={}", esc_field(lk), esc_field(lv)))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "c\t{}\t{}\t{v}", esc_field(&k.name), labels(k));
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(out, "g\t{}\t{}\t{v}", esc_field(&k.name), labels(k));
+        }
+        for (k, h) in &self.histograms {
+            let samples: Vec<String> = h.samples().iter().map(|s| s.to_string()).collect();
+            let _ = writeln!(
+                out,
+                "h\t{}\t{}\t{}",
+                esc_field(&k.name),
+                labels(k),
+                samples.join(",")
+            );
+        }
+        out
+    }
+
+    /// Inverse of [`encode_text`](Self::encode_text).  Total: malformed
+    /// input returns a typed description, never panics.
+    pub fn decode_text(text: &str) -> Result<MetricsRegistry, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("sparsespec-metrics-snapshot v1") => {}
+            other => return Err(format!("bad snapshot header: {other:?}")),
+        }
+        let mut reg = MetricsRegistry::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.splitn(4, '\t');
+            let (kind, name, labels, payload) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(k), Some(n), Some(l), Some(p)) => (k, n, l, p),
+                _ => return Err(format!("line {}: expected 4 tab-separated fields", i + 2)),
+            };
+            let name = unesc_field(name)?;
+            let mut key = MetricKey { name, labels: Vec::new() };
+            if labels != "-" {
+                for pair in labels.split(',') {
+                    let (lk, lv) = pair
+                        .split_once('=')
+                        .ok_or_else(|| format!("line {}: label without '='", i + 2))?;
+                    key.labels.push((unesc_field(lk)?, unesc_field(lv)?));
+                }
+            }
+            let parse = |s: &str| -> Result<f64, String> {
+                s.parse::<f64>().map_err(|_| format!("line {}: bad float {s:?}", i + 2))
+            };
+            match kind {
+                "c" => {
+                    *reg.counters.entry(key).or_insert(0.0) += parse(payload)?;
+                }
+                "g" => {
+                    reg.gauges.insert(key, parse(payload)?);
+                }
+                "h" => {
+                    let h = reg.histograms.entry(key).or_default();
+                    if !payload.is_empty() {
+                        for s in payload.split(',') {
+                            h.record(parse(s)?);
+                        }
+                    }
+                }
+                other => return Err(format!("line {}: unknown series kind {other:?}", i + 2)),
+            }
+        }
+        Ok(reg)
     }
 
     /// Deterministic markdown rendering (sorted keys, fixed precision).
@@ -368,6 +509,50 @@ mod tests {
         r.observe("ttft_s", &[], 9.0);
         assert_eq!(snap.get("requests_done"), 3.0);
         assert_eq!(snap.histogram("ttft_s", &[]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_text_roundtrips_losslessly() {
+        let mut r = sample();
+        // hostile label values: the structural characters of the codec
+        r.inc("evil", &[("k", "a,b=c\td\ne\\f")], 2.5);
+        r.observe("empty_hist", &[], 1.0);
+        let text = r.encode_text();
+        let back = MetricsRegistry::decode_text(&text).unwrap();
+        assert_eq!(back.encode_text(), text, "decode ∘ encode is identity");
+        assert_eq!(back.get("requests_done"), 3.0);
+        assert_eq!(back.counter("evil", &[("k", "a,b=c\td\ne\\f")]), 2.5);
+        assert_eq!(back.gauge("kv_used_tokens", &[]), Some(128.0));
+        assert_eq!(back.histogram("ttft_s", &[]).unwrap().samples(), vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn snapshot_text_merge_equals_in_process_merge() {
+        // the router's rollup path: encode on the replica, decode on the
+        // router, merge — must equal merging the live registries
+        let mut a = sample();
+        let mut b = MetricsRegistry::new();
+        b.inc("requests_done", &[], 4.0);
+        b.observe("ttft_s", &[], 2.5);
+        let mut via_wire = MetricsRegistry::decode_text(&a.encode_text()).unwrap();
+        via_wire.merge_from(&MetricsRegistry::decode_text(&b.encode_text()).unwrap());
+        a.merge_from(&b);
+        assert_eq!(via_wire.encode_text(), a.encode_text());
+        assert_eq!(via_wire.expose_prometheus("s"), a.expose_prometheus("s"));
+    }
+
+    #[test]
+    fn snapshot_text_rejects_malformed() {
+        assert!(MetricsRegistry::decode_text("").is_err(), "missing header");
+        assert!(MetricsRegistry::decode_text("garbage v9\n").is_err());
+        let hdr = "sparsespec-metrics-snapshot v1\n";
+        assert!(MetricsRegistry::decode_text(&format!("{hdr}c\tx\t-")).is_err(), "3 fields");
+        assert!(MetricsRegistry::decode_text(&format!("{hdr}q\tx\t-\t1")).is_err(), "bad kind");
+        assert!(MetricsRegistry::decode_text(&format!("{hdr}c\tx\t-\tnope")).is_err(), "bad float");
+        assert!(MetricsRegistry::decode_text(&format!("{hdr}c\tx\tk\t1")).is_err(), "label sans =");
+        // trailing newline / empty lines are tolerated
+        let ok = MetricsRegistry::decode_text(&format!("{hdr}c\tx\t-\t1\n\n")).unwrap();
+        assert_eq!(ok.get("x"), 1.0);
     }
 
     #[test]

@@ -69,6 +69,17 @@ impl ClientConfig {
     }
 }
 
+/// Per-request terminal detail (accepted sessions and refusals alike).
+#[derive(Clone, Debug)]
+pub struct SessionDetail {
+    /// Replica id echoed in `Accepted` when the server (or router) runs
+    /// with one configured; `None` against a plain single server.
+    pub replica: Option<u16>,
+    /// "completed" / "cancelled" / "rejected" / "failed" /
+    /// "refused:<code>" / "none" (never reached a terminal state).
+    pub outcome: String,
+}
+
 /// Client-side run results.
 pub struct ClientReport {
     /// `ttft_s` / `inter_token_s` histograms and session counters, both
@@ -76,6 +87,8 @@ pub struct ClientReport {
     pub metrics: MetricsRegistry,
     /// Streamed output per request: `(tenant, client req id)` → tokens.
     pub outputs: BTreeMap<(String, u64), Vec<i32>>,
+    /// Terminal detail per request: `(tenant, client req id)`.
+    pub sessions: BTreeMap<(String, u64), SessionDetail>,
     pub completed: u64,
     pub cancelled: u64,
     /// Typed pre-admission refusals by [`super::wire::ErrorCode`] label.
@@ -136,6 +149,24 @@ impl ClientReport {
         for (code, n) in &self.refused {
             let _ = writeln!(out, "  refused[{code}] = {n}");
         }
+        // Per-replica attribution — only when the server actually echoed
+        // replica ids in `Accepted` (a plain single server does not; the
+        // remainder prints under "n/a").
+        let mut by_replica: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        for (key, d) in &self.sessions {
+            if d.outcome != "completed" {
+                continue;
+            }
+            let label = d.replica.map(|r| r.to_string()).unwrap_or_else(|| "n/a".to_string());
+            let e = by_replica.entry(label).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += self.outputs.get(key).map(|t| t.len() as u64).unwrap_or(0);
+        }
+        if by_replica.keys().any(|k| k != "n/a") {
+            for (replica, (ok, tokens)) in &by_replica {
+                let _ = writeln!(out, "  replica {replica}: ok={ok} tokens={tokens}");
+            }
+        }
         out
     }
 }
@@ -143,6 +174,7 @@ impl ClientReport {
 /// Per-session receive state, filled in by the reader thread.
 struct SessRecv {
     req_id: u64,
+    replica: Option<u16>,
     tokens: Vec<i32>,
     submitted: Instant,
     first: Option<Instant>,
@@ -164,6 +196,9 @@ struct Shared {
     /// Requests that reached a terminal state (refused or finished).
     terminal: usize,
     hello_window: Option<u32>,
+    /// The opening `Hello` failed [`wire::expect_hello`] (wrong protocol
+    /// version): the whole run is invalid, not just one request.
+    hello_error: Option<String>,
     reader_dead: bool,
 }
 
@@ -182,13 +217,29 @@ fn reader_loop(stream: TcpStream, write: Arc<Mutex<TcpStream>>, shared: Arc<Mute
         };
         let mut sh = shared.lock().expect("client shared lock");
         match frame {
-            Frame::Hello { window, .. } => sh.hello_window = Some(window),
-            Frame::Accepted { req_id, session } => {
+            f @ Frame::Hello { .. } => match wire::expect_hello(&f) {
+                Ok(window) => sh.hello_window = Some(window),
+                Err(e) => {
+                    // hard handshake failure: refuse to speak further
+                    sh.hello_error = Some(e.to_string());
+                    sh.reader_dead = true;
+                    break;
+                }
+            },
+            Frame::Accepted { req_id, session, replica } => {
                 let submitted = sh.submitted.get(&req_id).copied().unwrap_or_else(Instant::now);
                 sh.req_to_session.insert(req_id, session);
                 sh.by_session.insert(
                     session,
-                    SessRecv { req_id, tokens: Vec::new(), submitted, first: None, last: None, finished: None },
+                    SessRecv {
+                        req_id,
+                        replica,
+                        tokens: Vec::new(),
+                        submitted,
+                        first: None,
+                        last: None,
+                        finished: None,
+                    },
                 );
             }
             Frame::Token { session, token, .. } => {
@@ -305,6 +356,9 @@ fn tenant_worker(
         let _ = s.shutdown(std::net::Shutdown::Write);
     }
     let _ = reader.join();
+    if let Some(e) = shared.lock().expect("client shared lock").hello_error.clone() {
+        bail!("tenant {}: server handshake rejected: {e}", tenant.name);
+    }
     Ok(TenantOutcome { name: tenant.name, shared, sent })
 }
 
@@ -332,6 +386,7 @@ pub fn run_load(cfg: ClientConfig) -> Result<ClientReport> {
     let mut report = ClientReport {
         metrics: MetricsRegistry::new(),
         outputs: BTreeMap::new(),
+        sessions: BTreeMap::new(),
         completed: 0,
         cancelled: 0,
         refused: BTreeMap::new(),
@@ -342,11 +397,26 @@ pub fn run_load(cfg: ClientConfig) -> Result<ClientReport> {
         let sh = o.shared.lock().expect("client shared lock");
         let by: &[(&str, &str)] = &[("tenant", &o.name)];
         let mut terminal_seen = sh.refusals.len();
-        for (_, code) in sh.refusals.iter() {
+        for (req, code) in sh.refusals.iter() {
             *report.refused.entry(code.clone()).or_insert(0) += 1;
+            report.sessions.insert(
+                (o.name.clone(), *req),
+                SessionDetail { replica: None, outcome: format!("refused:{code}") },
+            );
         }
         for (_, s) in sh.by_session.iter() {
             report.outputs.insert((o.name.clone(), s.req_id), s.tokens.clone());
+            let outcome = match s.finished {
+                Some(0) => "completed",
+                Some(1) => "cancelled",
+                Some(2) => "rejected",
+                Some(_) => "failed",
+                None => "none",
+            };
+            report.sessions.insert(
+                (o.name.clone(), s.req_id),
+                SessionDetail { replica: s.replica, outcome: outcome.to_string() },
+            );
             if let Some(first) = s.first {
                 let ttft = first.duration_since(s.submitted).as_secs_f64();
                 report.metrics.observe("ttft_s", &[], ttft);
@@ -427,6 +497,7 @@ mod tests {
         let mut r = ClientReport {
             metrics: MetricsRegistry::new(),
             outputs: BTreeMap::new(),
+            sessions: BTreeMap::new(),
             completed: 2,
             cancelled: 1,
             refused: BTreeMap::new(),
@@ -440,5 +511,37 @@ mod tests {
         let text = r.render();
         assert!(text.contains("ok=2"), "{text}");
         assert!(text.contains("refused[kv_shed] = 3"), "{text}");
+        // no replica ids anywhere → the attribution block stays silent
+        assert!(!text.contains("replica"), "{text}");
+    }
+
+    #[test]
+    fn replica_attribution_prints_with_na_guard() {
+        let mut r = ClientReport {
+            metrics: MetricsRegistry::new(),
+            outputs: BTreeMap::new(),
+            sessions: BTreeMap::new(),
+            completed: 3,
+            cancelled: 0,
+            refused: BTreeMap::new(),
+            failed: 0,
+            wall_s: 1.0,
+        };
+        let key0 = ("acme".to_string(), 1u64);
+        let key1 = ("acme".to_string(), 2u64);
+        let key2 = ("hobby".to_string(), 1u64);
+        r.outputs.insert(key0.clone(), vec![1, 2, 3]);
+        r.outputs.insert(key1.clone(), vec![4]);
+        r.outputs.insert(key2.clone(), vec![5, 6]);
+        r.sessions
+            .insert(key0, SessionDetail { replica: Some(0), outcome: "completed".into() });
+        r.sessions
+            .insert(key1, SessionDetail { replica: Some(1), outcome: "completed".into() });
+        // one session against a non-echoing server falls under "n/a"
+        r.sessions.insert(key2, SessionDetail { replica: None, outcome: "completed".into() });
+        let text = r.render();
+        assert!(text.contains("replica 0: ok=1 tokens=3"), "{text}");
+        assert!(text.contains("replica 1: ok=1 tokens=1"), "{text}");
+        assert!(text.contains("replica n/a: ok=1 tokens=2"), "{text}");
     }
 }

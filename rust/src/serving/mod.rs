@@ -17,6 +17,11 @@
 //! * [`client`] — `sparsespec-client`: open-loop load generator
 //!   replaying `workload` traces per tenant, measuring client-side
 //!   TTFT / inter-token latency / goodput and typed refusal counts.
+//! * [`router`] — `sparsespec-router`: scale-out front door over N
+//!   server replicas — bucket-aware least-loaded routing with tenant
+//!   stickiness, health-checked failover (resubmit vs typed fail-fast),
+//!   graceful fleet drain, and the one-merge fleet `/metrics` rollup
+//!   over each replica's lossless `/snapshot`.
 //!
 //! Determinism carries over the wire: the engine decodes greedily at
 //! `temperature=0`, so each request's streamed token sequence is
@@ -24,9 +29,14 @@
 //! the same request — pinned by `rust/tests/serving.rs`.
 
 pub mod client;
+pub mod router;
 pub mod server;
 pub mod wire;
 
 pub use client::{run_load, ClientConfig, ClientReport, TenantLoad};
+pub use router::{
+    failover_action, FailoverAction, ReplicaHealth, ReplicaSpec, RouteDecision, Router,
+    RouterConfig, RouterPolicy, RouterSummary,
+};
 pub use server::{Server, ServerConfig, ServerSummary, WrrQueues};
 pub use wire::{ErrorCode, Frame, WireError};

@@ -1,0 +1,1429 @@
+//! `sparsespec-router`: scale-out serving front door over N
+//! `sparsespec-server` replicas.
+//!
+//! The router speaks wire v1 **both ways**: upstream it presents the
+//! identical protocol a single server does (an unchanged
+//! `sparsespec-client` cannot tell the difference), downstream it is an
+//! ordinary client of each replica.  One core thread owns all routing
+//! state — the same single-writer discipline as the server's engine
+//! thread — fed by reader threads for every client and replica socket.
+//!
+//! # Routing
+//!
+//! Each `Submit` is placed by [`RouterPolicy`]: sessions are grouped
+//! into **length buckets** by projected KV cost (`prompt + max_new + 2`)
+//! and the request goes to the replica with the least projected load
+//! *within its bucket* — so one replica does not end up with all the
+//! long-generation sessions while another idles on shorts.  Ties break
+//! by total live-session count, then lowest replica index.  Per-tenant
+//! **stickiness** pins a tenant to its last replica while that replica
+//! is `Up`, so multi-turn prefix reuse lands where the KV pages already
+//! are.
+//!
+//! # Credit accounting, end to end
+//!
+//! Token frames from a replica are re-queued to the client through the
+//! same credit-gated [`ConnOut`] the server uses, and the router only
+//! returns credit *downstream* for tokens it actually queued upstream.
+//! A slow client therefore stalls exactly its own per-replica delegated
+//! connections (the router opens one downstream connection per
+//! (client, replica) pair), the replica's slow-reader policing fires
+//! against exactly that client's sessions, and everyone else keeps
+//! streaming.
+//!
+//! # Health and failover
+//!
+//! Each replica has a control connection carrying periodic `Ping`
+//! health checks: a missed reply degrades the replica (no *new*
+//! sessions routed to it), [`RouterConfig::down_after_missed`] misses —
+//! or any replica-socket EOF outside a drain — marks it `Down`.  On
+//! `Down`, sessions that have not streamed a token are transparently
+//! **resubmitted** to a surviving replica; mid-stream sessions fail
+//! fast with [`ErrorCode::ReplicaDown`] (a silent resubmit would replay
+//! already-delivered tokens).  Graceful fleet drain forwards `Shutdown`
+//! to every replica and waits for each one's held sessions.
+//!
+//! # Fleet metrics
+//!
+//! `/metrics` serves the **one-merge rollup**: every replica's lossless
+//! `/snapshot` (`MetricsRegistry::decode_text`) merged with the
+//! router-local registry (per-replica routed / resubmitted /
+//! failed-over counters, health transitions, live-session and pending
+//! gauges).  Counters sum, gauges last-write-win, histograms
+//! concatenate — associative, so the rollup equals what a single
+//! registry would have recorded.  Routing decisions also land as
+//! Perfetto instants (`--trace-out`), so a timeline shows each
+//! request's replica hop.
+
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::MetricsRegistry;
+use crate::trace::{TraceConfig, Track, Tracer};
+
+use super::server::{metrics_http_loop, ConnOut};
+use super::wire::{self, ErrorCode, Frame, WireError};
+
+// ---------------------------------------------------------------------------
+// Routing policy (pure state machine — twinned by
+// python/tests/test_router_port.py)
+// ---------------------------------------------------------------------------
+
+/// Replica health as seen by the router's state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Answering pings; eligible for new sessions.
+    Up,
+    /// Missed a ping: existing sessions keep streaming, no new routing.
+    Degraded,
+    /// Socket gone or pings exhausted: sessions failed over.  Terminal.
+    Down,
+}
+
+/// One routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub replica: usize,
+    pub bucket: usize,
+    /// The tenant-stickiness fast path was taken.
+    pub sticky: bool,
+}
+
+/// Bucket-aware least-loaded replica selection with tenant stickiness.
+///
+/// Pure and deterministic: every decision is a function of the recorded
+/// loads, so the unit tests (and the Python twin) drive it without any
+/// sockets.
+pub struct RouterPolicy {
+    bucket_edges: Vec<usize>,
+    health: Vec<ReplicaHealth>,
+    live: Vec<usize>,
+    /// Projected KV cost per `[replica][bucket]`.
+    load: Vec<Vec<usize>>,
+    sticky: BTreeMap<String, usize>,
+}
+
+impl RouterPolicy {
+    /// `bucket_edges` are ascending upper bounds; costs above the last
+    /// edge share the final overflow bucket.
+    pub fn new(replicas: usize, mut bucket_edges: Vec<usize>) -> Self {
+        bucket_edges.sort_unstable();
+        bucket_edges.dedup();
+        let buckets = bucket_edges.len() + 1;
+        RouterPolicy {
+            bucket_edges,
+            health: vec![ReplicaHealth::Up; replicas],
+            live: vec![0; replicas],
+            load: vec![vec![0; buckets]; replicas],
+            sticky: BTreeMap::new(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.health.len()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.bucket_edges.len() + 1
+    }
+
+    /// Bucket index for a projected KV cost: the count of edges strictly
+    /// below `cost` (bucket 0 is `cost <= edges[0]`).
+    pub fn bucket_of(&self, cost: usize) -> usize {
+        self.bucket_edges.iter().filter(|e| cost > **e).count()
+    }
+
+    /// Route one session: sticky replica if still `Up`, else the `Up`
+    /// replica with the least projected load in the session's bucket,
+    /// ties broken by live-session count then lowest index.  Records the
+    /// load and stickiness; `None` when no replica is `Up`.
+    pub fn route(&mut self, tenant: &str, cost: usize) -> Option<RouteDecision> {
+        let bucket = self.bucket_of(cost);
+        if let Some(&r) = self.sticky.get(tenant) {
+            if self.health[r] == ReplicaHealth::Up {
+                self.live[r] += 1;
+                self.load[r][bucket] += cost;
+                return Some(RouteDecision { replica: r, bucket, sticky: true });
+            }
+        }
+        let best = (0..self.replicas())
+            .filter(|&r| self.health[r] == ReplicaHealth::Up)
+            .min_by_key(|&r| (self.load[r][bucket], self.live[r], r))?;
+        self.live[best] += 1;
+        self.load[best][bucket] += cost;
+        self.sticky.insert(tenant.to_string(), best);
+        Some(RouteDecision { replica: best, bucket, sticky: false })
+    }
+
+    /// Return a finished/failed session's projected load.
+    pub fn release(&mut self, replica: usize, bucket: usize, cost: usize) {
+        self.live[replica] = self.live[replica].saturating_sub(1);
+        self.load[replica][bucket] = self.load[replica][bucket].saturating_sub(cost);
+    }
+
+    pub fn set_health(&mut self, replica: usize, h: ReplicaHealth) {
+        self.health[replica] = h;
+    }
+
+    pub fn health(&self, replica: usize) -> ReplicaHealth {
+        self.health[replica]
+    }
+
+    pub fn live_sessions(&self, replica: usize) -> usize {
+        self.live[replica]
+    }
+}
+
+/// What to do with a session whose replica went down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailoverAction {
+    /// Nothing streamed yet: resubmit transparently to a survivor.
+    Resubmit,
+    /// Tokens already left the router (or sit undelivered): fail fast
+    /// with [`ErrorCode::ReplicaDown`] — a resubmit would replay output.
+    FailFast,
+}
+
+/// The failover contract: resubmit iff zero tokens were forwarded to the
+/// client *and* none are buffered from the dead replica.
+pub fn failover_action(sent: u32, pending: usize) -> FailoverAction {
+    if sent == 0 && pending == 0 {
+        FailoverAction::Resubmit
+    } else {
+        FailoverAction::FailFast
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// One replica endpoint.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpec {
+    /// Wire-protocol address of the replica.
+    pub addr: String,
+    /// The replica's `/metrics`+`/snapshot` HTTP address; `None` leaves
+    /// that replica out of the fleet rollup (routing still works).
+    pub metrics_addr: Option<String>,
+}
+
+/// Router configuration.  Defaults mirror [`super::ServerConfig`] where
+/// the knobs overlap.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    /// Upstream listen address (port 0 ⇒ ephemeral, see [`Router::addr`]).
+    pub addr: String,
+    /// Fleet `/metrics` + `/snapshot` address (`None` disables).
+    pub metrics_addr: Option<String>,
+    /// Token-credit window granted to each upstream client in `Hello`.
+    pub send_window: u32,
+    /// Outbound frame-queue bound per upstream connection.
+    pub send_queue_cap: usize,
+    /// Ascending bucket upper bounds on projected KV cost
+    /// (`prompt + max_new + 2`); one overflow bucket is added above.
+    pub bucket_edges: Vec<usize>,
+    /// Milliseconds between health `Ping`s on each replica control
+    /// connection.
+    pub ping_every_ms: u64,
+    /// Consecutive unanswered pings before a replica is declared Down
+    /// (1 unanswered ping already degrades it).
+    pub down_after_missed: u32,
+    /// Milliseconds between fleet-rollup refreshes of `/metrics`.
+    pub rollup_every_ms: u64,
+    /// Export the router's Perfetto trace here on drain.
+    pub trace_out: Option<String>,
+}
+
+impl RouterConfig {
+    pub fn new(replicas: Vec<ReplicaSpec>) -> Self {
+        RouterConfig {
+            replicas,
+            addr: "127.0.0.1:7533".into(),
+            metrics_addr: None,
+            send_window: 1024,
+            send_queue_cap: 1024 + 64,
+            bucket_edges: vec![128, 256, 512],
+            ping_every_ms: 500,
+            down_after_missed: 3,
+            rollup_every_ms: 200,
+            trace_out: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core thread
+// ---------------------------------------------------------------------------
+
+enum Ev {
+    ClientConn { conn: u64, out: Arc<ConnOut> },
+    ClientFrame { conn: u64, frame: Frame },
+    ClientClosed { conn: u64 },
+    /// `conn` is the owning client connection for delegated links, 0 for
+    /// the replica's control connection.
+    ReplicaFrame { replica: usize, conn: u64, frame: Frame },
+    ReplicaClosed { replica: usize, conn: u64 },
+    Shutdown { abort: bool },
+}
+
+struct RSession {
+    conn: u64,
+    client_req: u64,
+    tenant: String,
+    replica: usize,
+    bucket: usize,
+    cost: usize,
+    /// Replica-assigned session id (post-`Accepted`).
+    down_sid: Option<u64>,
+    /// `Accepted` already forwarded upstream (suppressed on resubmit).
+    accepted_fwd: bool,
+    /// Client cancelled before the replica accepted.
+    cancel_wanted: bool,
+    /// Token frames queued to the client so far.
+    sent: u32,
+    /// Received from the replica, not yet past the client's credit gate.
+    pending: VecDeque<i32>,
+    /// Replica's terminal `Finished { reason, tokens }`.
+    fin: Option<(u8, u32)>,
+    /// The downstream `Submit` (req_id = router sid), kept for resubmit.
+    submit: Frame,
+}
+
+struct DownLink {
+    stream: TcpStream,
+    /// Credit owed to the replica for tokens we queued upstream; flushed
+    /// as one batched `Credit` per loop pass.
+    owed: u32,
+}
+
+/// State shared with the rollup + HTTP threads.
+struct RollupShared {
+    local: Mutex<MetricsRegistry>,
+    last_snaps: Mutex<Vec<Option<MetricsRegistry>>>,
+    exposition: Arc<Mutex<String>>,
+    snapshot: Arc<Mutex<String>>,
+}
+
+/// Final state handed back by [`Router::join`].
+pub struct RouterSummary {
+    /// Router-local series only (routed / resubmitted / failed-over /
+    /// health transitions).
+    pub local: MetricsRegistry,
+    /// The associative merge of every replica's final snapshot.
+    pub replicas_merged: MetricsRegistry,
+    /// `local ⊕ replicas_merged` — what `/metrics` served.
+    pub fleet: MetricsRegistry,
+    pub exposition: String,
+    pub routed: u64,
+    pub resubmitted: u64,
+    pub failed_over: u64,
+}
+
+struct RouterCore {
+    cfg: RouterConfig,
+    policy: RouterPolicy,
+    conns: BTreeMap<u64, Arc<ConnOut>>,
+    sessions: BTreeMap<u64, RSession>,
+    by_down: BTreeMap<(usize, u64), u64>,
+    links: BTreeMap<(u64, usize), DownLink>,
+    control: Vec<Option<TcpStream>>,
+    control_open: Vec<bool>,
+    missed_pings: Vec<u32>,
+    next_sid: u64,
+    draining: bool,
+    metrics: MetricsRegistry,
+    shared: Arc<RollupShared>,
+    tracer: Tracer,
+    t0: Instant,
+    ev_tx: Sender<Ev>,
+    routed: u64,
+    resubmitted: u64,
+    failed_over: u64,
+}
+
+impl RouterCore {
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn trace_instant(&mut self, name: &str, track: Track, args: crate::trace::Args) {
+        if self.tracer.enabled() {
+            let t = self.now_s();
+            self.tracer.instant(name, track, t, args);
+        }
+    }
+
+    fn health_transition(&mut self, replica: usize, to: ReplicaHealth) {
+        if self.policy.health(replica) == to {
+            return;
+        }
+        self.policy.set_health(replica, to);
+        let label = match to {
+            ReplicaHealth::Up => "up",
+            ReplicaHealth::Degraded => "degraded",
+            ReplicaHealth::Down => "down",
+        };
+        let rl = replica.to_string();
+        self.metrics
+            .inc("router_health_transitions", &[("replica", &rl), ("to", label)], 1.0);
+        self.trace_instant(
+            "replica_health",
+            Track::Scheduler,
+            vec![("replica", (replica as u64).into()), ("to", label.into())],
+        );
+    }
+
+    /// Open (or reuse) the delegated downstream connection for a
+    /// (client, replica) pair.
+    fn ensure_link(&mut self, conn: u64, replica: usize) -> Result<(), WireError> {
+        if self.links.contains_key(&(conn, replica)) {
+            return Ok(());
+        }
+        let addr = self.cfg.replicas[replica].addr.clone();
+        let stream = TcpStream::connect(&addr).map_err(|e| WireError::Io(e.to_string()))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone().map_err(|e| WireError::Io(e.to_string()))?;
+        let tx = self.ev_tx.clone();
+        std::thread::spawn(move || replica_reader(replica, conn, read_half, tx, true));
+        self.links.insert((conn, replica), DownLink { stream, owed: 0 });
+        Ok(())
+    }
+
+    fn write_down(&mut self, conn: u64, replica: usize, f: &Frame) -> Result<(), WireError> {
+        let link = self
+            .links
+            .get_mut(&(conn, replica))
+            .ok_or_else(|| WireError::Io("no link".into()))?;
+        wire::write_frame(&mut link.stream, f)
+    }
+
+    fn refuse(&mut self, conn: u64, req_id: u64, code: ErrorCode, detail: String) {
+        self.metrics.inc("router_refused", &[("code", code.label())], 1.0);
+        if let Some(out) = self.conns.get(&conn) {
+            out.push_ctrl(Frame::Error { req_id, code, detail });
+        }
+    }
+
+    fn on_submit(&mut self, conn: u64, frame: Frame) {
+        let Frame::Submit { req_id, seed, max_new, tenant, drafter, prompt } = frame else {
+            return;
+        };
+        if !self.conns.contains_key(&conn) {
+            return;
+        }
+        if self.draining {
+            return self.refuse(conn, req_id, ErrorCode::Draining, "router is draining".into());
+        }
+        let cost = prompt.len() + max_new as usize + 2;
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        let submit = Frame::Submit { req_id: sid, seed, max_new, tenant: tenant.clone(), drafter, prompt };
+        let sess = RSession {
+            conn,
+            client_req: req_id,
+            tenant,
+            replica: usize::MAX,
+            bucket: 0,
+            cost,
+            down_sid: None,
+            accepted_fwd: false,
+            cancel_wanted: false,
+            sent: 0,
+            pending: VecDeque::new(),
+            fin: None,
+            submit,
+        };
+        self.sessions.insert(sid, sess);
+        self.route_session(sid);
+    }
+
+    /// Place (or re-place) session `sid` on a live replica, writing its
+    /// `Submit` downstream.  A replica that fails the write is marked
+    /// Down (with full failover for its other sessions) and the loop
+    /// retries on the survivors; with nobody left the session gets the
+    /// typed [`ErrorCode::ReplicaDown`] refusal.
+    fn route_session(&mut self, sid: u64) {
+        loop {
+            let Some(s) = self.sessions.get(&sid) else { return };
+            let (conn, tenant, cost, client_req, accepted_fwd, sent) =
+                (s.conn, s.tenant.clone(), s.cost, s.client_req, s.accepted_fwd, s.sent);
+            let Some(d) = self.policy.route(&tenant, cost) else {
+                self.metrics.inc("router_refused", &[("code", ErrorCode::ReplicaDown.label())], 1.0);
+                if let Some(out) = self.conns.get(&conn) {
+                    out.push_ctrl(Frame::Error {
+                        req_id: client_req,
+                        code: ErrorCode::ReplicaDown,
+                        detail: "no live replica".into(),
+                    });
+                    if accepted_fwd {
+                        out.push_ctrl(Frame::Finished { session: sid, reason: 3, tokens: sent });
+                    }
+                }
+                self.sessions.remove(&sid);
+                return;
+            };
+            let ok = self.ensure_link(conn, d.replica).is_ok() && {
+                let submit = self.sessions[&sid].submit.clone();
+                self.write_down(conn, d.replica, &submit).is_ok()
+            };
+            if ok {
+                if let Some(s) = self.sessions.get_mut(&sid) {
+                    s.replica = d.replica;
+                    s.bucket = d.bucket;
+                    s.down_sid = None;
+                }
+                let rl = d.replica.to_string();
+                self.routed += 1;
+                self.metrics.inc("router_routed", &[("replica", &rl)], 1.0);
+                if d.sticky {
+                    self.metrics.inc("router_sticky_hits", &[("replica", &rl)], 1.0);
+                }
+                self.trace_instant(
+                    "route",
+                    Track::Session,
+                    vec![
+                        ("sid", sid.into()),
+                        ("replica", (d.replica as u64).into()),
+                        ("bucket", (d.bucket as u64).into()),
+                        ("sticky", if d.sticky { "yes".into() } else { "no".into() }),
+                    ],
+                );
+                return;
+            }
+            // the write itself failed: the replica is gone — release the
+            // just-recorded load, fail the replica over, and retry
+            self.policy.release(d.replica, d.bucket, cost);
+            self.health_transition(d.replica, ReplicaHealth::Down);
+            self.replica_down(d.replica, Some(sid));
+        }
+    }
+
+    /// Failover for every session on a dead replica.  `skip` excludes the
+    /// session currently being routed by the caller's retry loop.
+    fn replica_down(&mut self, replica: usize, skip: Option<u64>) {
+        // flush anything already terminal so it is not failed over
+        self.deliver();
+        self.missed_pings[replica] = 0;
+        if let Some(stream) = self.control[replica].take() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        self.control_open[replica] = false;
+        let dead_links: Vec<(u64, usize)> = self
+            .links
+            .keys()
+            .filter(|(_, r)| *r == replica)
+            .copied()
+            .collect();
+        for k in dead_links {
+            if let Some(l) = self.links.remove(&k) {
+                let _ = l.stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        // a session whose Finished already arrived needs nothing more
+        // from the replica: leave it to drain through the client's
+        // credit gate instead of failing it over
+        let victims: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(sid, s)| s.replica == replica && s.fin.is_none() && Some(**sid) != skip)
+            .map(|(&sid, _)| sid)
+            .collect();
+        let rl = replica.to_string();
+        for sid in victims {
+            let s = self.sessions.get(&sid).expect("victim exists");
+            let action = failover_action(s.sent, s.pending.len());
+            self.policy.release(replica, s.bucket, s.cost);
+            if let Some(down) = s.down_sid {
+                self.by_down.remove(&(replica, down));
+            }
+            match action {
+                FailoverAction::Resubmit => {
+                    self.resubmitted += 1;
+                    self.metrics.inc("router_resubmitted", &[("replica", &rl)], 1.0);
+                    self.trace_instant(
+                        "resubmit",
+                        Track::Session,
+                        vec![("sid", sid.into()), ("from", (replica as u64).into())],
+                    );
+                    self.route_session(sid);
+                }
+                FailoverAction::FailFast => {
+                    self.failed_over += 1;
+                    self.metrics.inc("router_failed_over", &[("replica", &rl)], 1.0);
+                    let s = self.sessions.remove(&sid).expect("victim exists");
+                    self.trace_instant(
+                        "replica_down_session",
+                        Track::Session,
+                        vec![("sid", sid.into()), ("sent", (s.sent as u64).into())],
+                    );
+                    if let Some(out) = self.conns.get(&s.conn) {
+                        out.push_ctrl(Frame::Error {
+                            req_id: s.client_req,
+                            code: ErrorCode::ReplicaDown,
+                            detail: format!("replica {replica} went down mid-stream"),
+                        });
+                        out.push_ctrl(Frame::Finished { session: sid, reason: 3, tokens: s.sent });
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_replica_frame(&mut self, replica: usize, frame: Frame) {
+        match frame {
+            Frame::Hello { .. } => {} // validated by the reader thread
+            Frame::Pong { .. } => {
+                self.missed_pings[replica] = 0;
+                if self.policy.health(replica) == ReplicaHealth::Degraded {
+                    self.health_transition(replica, ReplicaHealth::Up);
+                }
+            }
+            Frame::Accepted { req_id: sid, session: down_sid, .. } => {
+                let Some(s) = self.sessions.get_mut(&sid) else {
+                    // session evaporated (client gone / failed over):
+                    // release it on the replica immediately
+                    let cancel = Frame::Cancel { session: down_sid };
+                    let link_conn = self.links.keys().find(|(_, r)| *r == replica).map(|k| k.0);
+                    if let Some(c) = link_conn {
+                        let _ = self.write_down(c, replica, &cancel);
+                    }
+                    return;
+                };
+                if s.replica != replica {
+                    return; // stale accept from the dead replica
+                }
+                s.down_sid = Some(down_sid);
+                let (conn, client_req, cancel_wanted, fwd) =
+                    (s.conn, s.client_req, s.cancel_wanted, s.accepted_fwd);
+                self.by_down.insert((replica, down_sid), sid);
+                if !fwd {
+                    if let Some(out) = self.conns.get(&conn) {
+                        out.push_ctrl(Frame::Accepted {
+                            req_id: client_req,
+                            session: sid,
+                            replica: Some(replica as u16),
+                        });
+                    }
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.accepted_fwd = true;
+                    }
+                }
+                if cancel_wanted {
+                    let _ = self.write_down(conn, replica, &Frame::Cancel { session: down_sid });
+                }
+            }
+            Frame::Token { session: down_sid, token, .. } => {
+                if let Some(&sid) = self.by_down.get(&(replica, down_sid)) {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.pending.push_back(token);
+                    }
+                }
+            }
+            Frame::Finished { session: down_sid, reason, tokens } => {
+                if let Some(&sid) = self.by_down.get(&(replica, down_sid)) {
+                    if let Some(s) = self.sessions.get_mut(&sid) {
+                        s.fin = Some((reason, tokens));
+                    }
+                }
+            }
+            Frame::Error { req_id: sid, code, detail } => {
+                if sid == 0 {
+                    // connection-scoped notice from the replica (e.g. a
+                    // draining refusal at accept): surface as a counter
+                    self.metrics
+                        .inc("router_replica_errors", &[("code", code.label())], 1.0);
+                    return;
+                }
+                let Some(s) = self.sessions.get_mut(&sid) else { return };
+                if s.replica != replica {
+                    return;
+                }
+                let (conn, client_req) = (s.conn, s.client_req);
+                let pre_accept = s.down_sid.is_none() && s.fin.is_none();
+                if let Some(out) = self.conns.get(&conn) {
+                    out.push_ctrl(Frame::Error { req_id: client_req, code, detail });
+                }
+                if pre_accept {
+                    // typed refusal before the replica accepted: terminal
+                    let s = self.sessions.remove(&sid).expect("session exists");
+                    self.policy.release(replica, s.bucket, s.cost);
+                    self.metrics.inc("router_refused", &[("code", code.label())], 1.0);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_ev(&mut self, ev: Ev) {
+        match ev {
+            Ev::ClientConn { conn, out } => {
+                if self.draining {
+                    out.push_ctrl(Frame::Error {
+                        req_id: 0,
+                        code: ErrorCode::Draining,
+                        detail: "router is draining".into(),
+                    });
+                    out.close();
+                    return;
+                }
+                self.metrics.inc("router_connections_total", &[], 1.0);
+                self.conns.insert(conn, out);
+            }
+            Ev::ClientClosed { conn } => {
+                let orphans: Vec<u64> = self
+                    .sessions
+                    .iter()
+                    .filter(|(_, s)| s.conn == conn)
+                    .map(|(&sid, _)| sid)
+                    .collect();
+                for sid in orphans {
+                    let (replica, down_sid) = {
+                        let s = self.sessions.get_mut(&sid).expect("orphan exists");
+                        s.cancel_wanted = true;
+                        s.pending.clear();
+                        (s.replica, s.down_sid)
+                    };
+                    if let Some(down) = down_sid {
+                        let _ = self.write_down(conn, replica, &Frame::Cancel { session: down });
+                    }
+                }
+                if let Some(out) = self.conns.remove(&conn) {
+                    out.close();
+                }
+            }
+            Ev::ClientFrame { conn, frame } => match frame {
+                f @ Frame::Submit { .. } => self.on_submit(conn, f),
+                Frame::Cancel { session: sid } => {
+                    let Some(s) = self.sessions.get_mut(&sid) else { return };
+                    if s.conn != conn {
+                        return;
+                    }
+                    match s.down_sid {
+                        Some(down) => {
+                            let replica = s.replica;
+                            let _ = self.write_down(conn, replica, &Frame::Cancel { session: down });
+                        }
+                        None => s.cancel_wanted = true,
+                    }
+                }
+                Frame::Credit { n } => {
+                    if let Some(out) = self.conns.get(&conn) {
+                        out.add_credit(n);
+                    }
+                }
+                Frame::Ping { nonce } => {
+                    if let Some(out) = self.conns.get(&conn) {
+                        out.push_ctrl(Frame::Pong { nonce });
+                    }
+                }
+                Frame::Shutdown { abort } => self.begin_drain(abort),
+                other => {
+                    if let Some(out) = self.conns.get(&conn) {
+                        out.push_ctrl(Frame::Error {
+                            req_id: 0,
+                            code: ErrorCode::Protocol,
+                            detail: format!("unexpected frame kind 0x{:02x}", other.kind()),
+                        });
+                    }
+                }
+            },
+            Ev::ReplicaFrame { replica, frame, .. } => self.on_replica_frame(replica, frame),
+            Ev::ReplicaClosed { replica, conn } => {
+                if self.draining {
+                    // expected during fleet drain: the replica finished
+                    // its held sessions and closed every connection
+                    if conn == 0 {
+                        self.control_open[replica] = false;
+                        self.control[replica] = None;
+                    }
+                    self.links.remove(&(conn, replica));
+                    if self.policy.health(replica) != ReplicaHealth::Down
+                        && !self.sessions.values().any(|s| s.replica == replica)
+                    {
+                        return;
+                    }
+                }
+                if self.policy.health(replica) != ReplicaHealth::Down {
+                    self.health_transition(replica, ReplicaHealth::Down);
+                    self.replica_down(replica, None);
+                }
+            }
+            Ev::Shutdown { abort } => self.begin_drain(abort),
+        }
+    }
+
+    fn begin_drain(&mut self, abort: bool) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        let abort_flag: u64 = abort as u64;
+        self.trace_instant("fleet_drain", Track::Engine, vec![("abort", abort_flag.into())]);
+        for r in 0..self.cfg.replicas.len() {
+            if !self.control_open[r] {
+                continue;
+            }
+            let ok = match self.control[r].as_mut() {
+                Some(stream) => wire::write_frame(stream, &Frame::Shutdown { abort }).is_ok(),
+                None => false,
+            };
+            if !ok {
+                self.health_transition(r, ReplicaHealth::Down);
+                self.replica_down(r, None);
+            }
+        }
+    }
+
+    /// Move buffered replica tokens through each client's credit gate,
+    /// finalise sessions whose replica reported `Finished`, and record
+    /// the downstream credit owed for every token that made it through.
+    fn deliver(&mut self) {
+        let mut done: Vec<u64> = Vec::new();
+        let mut owed: Vec<(u64, usize, u32)> = Vec::new();
+        for (&sid, s) in self.sessions.iter_mut() {
+            let Some(out) = self.conns.get(&s.conn) else {
+                s.pending.clear();
+                if s.fin.is_some() {
+                    done.push(sid);
+                }
+                continue;
+            };
+            let mut moved = 0u32;
+            while let Some(&tok) = s.pending.front() {
+                let f = Frame::Token { session: sid, index: s.sent, token: tok };
+                if out.try_token(f) {
+                    s.pending.pop_front();
+                    s.sent += 1;
+                    moved += 1;
+                } else {
+                    break;
+                }
+            }
+            if moved > 0 {
+                owed.push((s.conn, s.replica, moved));
+            }
+            if s.fin.is_some() && s.pending.is_empty() {
+                done.push(sid);
+            }
+        }
+        for (conn, replica, n) in owed {
+            if let Some(link) = self.links.get_mut(&(conn, replica)) {
+                link.owed += n;
+            }
+        }
+        for sid in done {
+            let Some(s) = self.sessions.remove(&sid) else { continue };
+            let (reason, _) = s.fin.expect("finished session has a reason");
+            self.policy.release(s.replica, s.bucket, s.cost);
+            if let Some(down) = s.down_sid {
+                self.by_down.remove(&(s.replica, down));
+            }
+            let rl = s.replica.to_string();
+            let outcome = match reason {
+                0 => "completed",
+                1 => "cancelled",
+                2 => "rejected",
+                _ => "failed",
+            };
+            self.metrics
+                .inc("router_sessions_finished", &[("replica", &rl), ("outcome", outcome)], 1.0);
+            if let Some(out) = self.conns.get(&s.conn) {
+                out.push_ctrl(Frame::Finished { session: sid, reason, tokens: s.sent });
+            }
+        }
+    }
+
+    /// Return batched credit downstream for tokens that cleared the
+    /// client gate.  Only then may the replica send more — this is what
+    /// stretches per-connection flow control across the hop.
+    fn flush_credits(&mut self) {
+        let mut dead: Vec<usize> = Vec::new();
+        for ((_, replica), link) in self.links.iter_mut() {
+            if link.owed == 0 {
+                continue;
+            }
+            let f = Frame::Credit { n: link.owed };
+            if wire::write_frame(&mut link.stream, &f).is_ok() {
+                link.owed = 0;
+            } else {
+                dead.push(*replica);
+            }
+        }
+        for r in dead {
+            if self.policy.health(r) != ReplicaHealth::Down {
+                self.health_transition(r, ReplicaHealth::Down);
+                self.replica_down(r, None);
+            }
+        }
+    }
+
+    fn health_tick(&mut self, nonce: u64) {
+        let mut dead: Vec<usize> = Vec::new();
+        for r in 0..self.cfg.replicas.len() {
+            if !self.control_open[r] || self.policy.health(r) == ReplicaHealth::Down {
+                continue;
+            }
+            if self.missed_pings[r] >= self.cfg.down_after_missed {
+                dead.push(r);
+                continue;
+            }
+            if self.missed_pings[r] >= 1 && self.policy.health(r) == ReplicaHealth::Up {
+                self.health_transition(r, ReplicaHealth::Degraded);
+            }
+            let ok = match self.control[r].as_mut() {
+                Some(stream) => wire::write_frame(stream, &Frame::Ping { nonce }).is_ok(),
+                None => false,
+            };
+            if ok {
+                self.missed_pings[r] += 1;
+            } else {
+                dead.push(r);
+            }
+        }
+        for r in dead {
+            self.health_transition(r, ReplicaHealth::Down);
+            self.replica_down(r, None);
+        }
+    }
+
+    fn publish_local(&mut self) {
+        let mut m = self.metrics.snapshot();
+        for r in 0..self.cfg.replicas.len() {
+            let rl = r.to_string();
+            let h = match self.policy.health(r) {
+                ReplicaHealth::Up => 2.0,
+                ReplicaHealth::Degraded => 1.0,
+                ReplicaHealth::Down => 0.0,
+            };
+            m.set_gauge("router_replica_health", &[("replica", &rl)], h);
+            m.set_gauge(
+                "router_sessions_live",
+                &[("replica", &rl)],
+                self.policy.live_sessions(r) as f64,
+            );
+            let pending: usize = self
+                .sessions
+                .values()
+                .filter(|s| s.replica == r)
+                .map(|s| s.pending.len())
+                .sum();
+            m.set_gauge("router_pending_tokens", &[("replica", &rl)], pending as f64);
+        }
+        m.set_gauge("router_draining", &[], self.draining as u64 as f64);
+        *self.shared.local.lock().expect("local registry lock") = m;
+    }
+
+    fn run(mut self, rx: Receiver<Ev>) -> Result<RouterSummary> {
+        let mut last_ping = Instant::now();
+        let mut last_publish = Instant::now() - Duration::from_secs(1);
+        let mut nonce = 0u64;
+        loop {
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(ev) => self.on_ev(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => self.draining = true,
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(ev) => self.on_ev(ev),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            self.deliver();
+            self.flush_credits();
+            if last_ping.elapsed().as_millis() as u64 >= self.cfg.ping_every_ms {
+                last_ping = Instant::now();
+                nonce += 1;
+                self.health_tick(nonce);
+            }
+            if last_publish.elapsed().as_millis() as u64 >= 50 {
+                last_publish = Instant::now();
+                self.publish_local();
+            }
+            if self.draining
+                && self.sessions.is_empty()
+                && self.control_open.iter().all(|open| !open)
+            {
+                break;
+            }
+        }
+        self.publish_local();
+        if let Some(path) = &self.cfg.trace_out {
+            let json = self.tracer.export_chrome_string();
+            if let Err(e) = std::fs::write(path, json) {
+                eprintln!("router: trace export to {path} failed: {e}");
+            }
+        }
+        // Final rollup: prefer a live fetch of each replica's terminal
+        // snapshot (published before it closes its wire connections),
+        // falling back to the rollup thread's last good copy.
+        let mut replicas_merged = MetricsRegistry::new();
+        {
+            let last = self.shared.last_snaps.lock().expect("snaps lock");
+            for (i, spec) in self.cfg.replicas.iter().enumerate() {
+                let fresh = spec
+                    .metrics_addr
+                    .as_deref()
+                    .and_then(|a| http_get_text(a, "/snapshot").ok())
+                    .and_then(|t| MetricsRegistry::decode_text(&t).ok());
+                if let Some(snap) = fresh.or_else(|| last[i].clone()) {
+                    replicas_merged.merge_from(&snap);
+                }
+            }
+        }
+        let local = self.metrics.snapshot();
+        let mut fleet = local.snapshot();
+        fleet.merge_from(&replicas_merged);
+        let exposition = fleet.expose_prometheus("sparsespec");
+        *self.shared.exposition.lock().expect("exposition lock") = exposition.clone();
+        *self.shared.snapshot.lock().expect("snapshot lock") = fleet.encode_text();
+        for out in self.conns.values() {
+            out.close();
+            out.force_shutdown();
+        }
+        Ok(RouterSummary {
+            local,
+            replicas_merged,
+            fleet,
+            exposition,
+            routed: self.routed,
+            resubmitted: self.resubmitted,
+            failed_over: self.failed_over,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader / rollup threads and plumbing
+// ---------------------------------------------------------------------------
+
+fn client_reader(conn: u64, stream: TcpStream, out: Arc<ConnOut>, tx: Sender<Ev>) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(f)) => {
+                if tx.send(Ev::ClientFrame { conn, frame: f }).is_err() {
+                    break;
+                }
+            }
+            Ok(None) => break,
+            Err(WireError::Io(_)) => break,
+            Err(e) => {
+                out.push_ctrl(Frame::Error {
+                    req_id: 0,
+                    code: ErrorCode::Protocol,
+                    detail: e.to_string(),
+                });
+                out.close();
+                break;
+            }
+        }
+    }
+    let _ = tx.send(Ev::ClientClosed { conn });
+}
+
+/// Reader for a replica-facing socket.  `check_hello` consumes and
+/// validates the opening `Hello` (delegated links; the control link's
+/// Hello is validated synchronously in [`Router::spawn`]).
+fn replica_reader(replica: usize, conn: u64, stream: TcpStream, tx: Sender<Ev>, check_hello: bool) {
+    let mut r = std::io::BufReader::new(stream);
+    if check_hello {
+        match wire::read_frame(&mut r) {
+            Ok(Some(f)) if wire::expect_hello(&f).is_ok() => {}
+            _ => {
+                let _ = tx.send(Ev::ReplicaClosed { replica, conn });
+                return;
+            }
+        }
+    }
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(f)) => {
+                if tx.send(Ev::ReplicaFrame { replica, conn, frame: f }).is_err() {
+                    break;
+                }
+            }
+            _ => break,
+        }
+    }
+    let _ = tx.send(Ev::ReplicaClosed { replica, conn });
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<Ev>,
+    stop: Arc<AtomicBool>,
+    window: u32,
+    queue_cap: usize,
+) {
+    let next_conn = AtomicU64::new(1);
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let _ = stream.set_nodelay(true);
+        let conn = next_conn.fetch_add(1, Ordering::SeqCst);
+        let Ok(write_half) = stream.try_clone() else { continue };
+        let Ok(keep) = stream.try_clone() else { continue };
+        let out = ConnOut::new(queue_cap, window, Some(keep));
+        out.push_ctrl(Frame::Hello { version: wire::PROTOCOL_VERSION, window });
+        if tx.send(Ev::ClientConn { conn, out: out.clone() }).is_err() {
+            break;
+        }
+        let w_out = out.clone();
+        std::thread::spawn(move || w_out.writer_loop(write_half));
+        let r_tx = tx.clone();
+        std::thread::spawn(move || client_reader(conn, stream, out, r_tx));
+    }
+}
+
+/// One-shot HTTP/1.1 GET returning the response body.
+pub(crate) fn http_get_text(addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf)?;
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response from {addr}{path}"))?;
+    let status = head.split_whitespace().nth(1).unwrap_or("");
+    if status != "200" {
+        return Err(anyhow!("GET {addr}{path}: status {status}"));
+    }
+    Ok(body.to_string())
+}
+
+fn rollup_loop(cfg: RouterConfig, shared: Arc<RollupShared>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        for (i, spec) in cfg.replicas.iter().enumerate() {
+            let Some(addr) = spec.metrics_addr.as_deref() else { continue };
+            if let Ok(text) = http_get_text(addr, "/snapshot") {
+                if let Ok(snap) = MetricsRegistry::decode_text(&text) {
+                    shared.last_snaps.lock().expect("snaps lock")[i] = Some(snap);
+                }
+            }
+        }
+        let mut fleet = shared.local.lock().expect("local registry lock").snapshot();
+        {
+            let last = shared.last_snaps.lock().expect("snaps lock");
+            for snap in last.iter().flatten() {
+                fleet.merge_from(snap);
+            }
+        }
+        *shared.exposition.lock().expect("exposition lock") = fleet.expose_prometheus("sparsespec");
+        *shared.snapshot.lock().expect("snapshot lock") = fleet.encode_text();
+        std::thread::sleep(Duration::from_millis(cfg.rollup_every_ms.max(10)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public handle
+// ---------------------------------------------------------------------------
+
+/// Running router handle, mirroring [`super::Server`].
+pub struct Router {
+    addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
+    tx: Sender<Ev>,
+    stop: Arc<AtomicBool>,
+    core: Option<JoinHandle<Result<RouterSummary>>>,
+    aux: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind the upstream listener, handshake every replica's control
+    /// connection (a version mismatch or unreachable replica fails here,
+    /// not mid-traffic), and start the core/accept/rollup threads.
+    pub fn spawn(cfg: RouterConfig) -> Result<Router> {
+        if cfg.replicas.is_empty() {
+            return Err(anyhow!("router needs at least one replica"));
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let metrics_listener = match &cfg.metrics_addr {
+            Some(a) => Some(TcpListener::bind(a)?),
+            None => None,
+        };
+        let metrics_addr = match &metrics_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let (tx, rx) = channel::<Ev>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let exposition = Arc::new(Mutex::new(String::new()));
+        let snapshot = Arc::new(Mutex::new(MetricsRegistry::new().encode_text()));
+        let shared = Arc::new(RollupShared {
+            local: Mutex::new(MetricsRegistry::new()),
+            last_snaps: Mutex::new(vec![None; cfg.replicas.len()]),
+            exposition: exposition.clone(),
+            snapshot: snapshot.clone(),
+        });
+
+        // control connections, with the Hello version handshake up front
+        let mut control: Vec<Option<TcpStream>> = Vec::new();
+        for (i, spec) in cfg.replicas.iter().enumerate() {
+            let stream = TcpStream::connect(&spec.addr)
+                .map_err(|e| anyhow!("replica {i} ({}): connect: {e}", spec.addr))?;
+            let _ = stream.set_nodelay(true);
+            stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+            let mut r = std::io::BufReader::new(
+                stream.try_clone().map_err(|e| anyhow!("replica {i}: clone: {e}"))?,
+            );
+            let hello = wire::read_frame(&mut r)
+                .map_err(|e| anyhow!("replica {i}: reading Hello: {e}"))?
+                .ok_or_else(|| anyhow!("replica {i}: closed before Hello"))?;
+            wire::expect_hello(&hello)
+                .map_err(|e| anyhow!("replica {i} rejected ({e}): refusing to route to it"))?;
+            stream.set_read_timeout(None)?;
+            let tx2 = tx.clone();
+            std::thread::spawn(move || {
+                // BufReader keeps any bytes past Hello it already pulled
+                let mut r = r;
+                loop {
+                    match wire::read_frame(&mut r) {
+                        Ok(Some(f)) => {
+                            if tx2.send(Ev::ReplicaFrame { replica: i, conn: 0, frame: f }).is_err() {
+                                break;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+                let _ = tx2.send(Ev::ReplicaClosed { replica: i, conn: 0 });
+            });
+            control.push(Some(stream));
+        }
+
+        let n = cfg.replicas.len();
+        let tracer = if cfg.trace_out.is_some() {
+            Tracer::new(TraceConfig::on())
+        } else {
+            Tracer::disabled()
+        };
+        let core_state = RouterCore {
+            policy: RouterPolicy::new(n, cfg.bucket_edges.clone()),
+            conns: BTreeMap::new(),
+            sessions: BTreeMap::new(),
+            by_down: BTreeMap::new(),
+            links: BTreeMap::new(),
+            control,
+            control_open: vec![true; n],
+            missed_pings: vec![0; n],
+            next_sid: 1,
+            draining: false,
+            metrics: MetricsRegistry::new(),
+            shared: shared.clone(),
+            tracer,
+            t0: Instant::now(),
+            ev_tx: tx.clone(),
+            routed: 0,
+            resubmitted: 0,
+            failed_over: 0,
+            cfg: cfg.clone(),
+        };
+        let core = std::thread::Builder::new()
+            .name("sparsespec-router".into())
+            .spawn(move || core_state.run(rx))?;
+
+        let mut aux = Vec::new();
+        let a_tx = tx.clone();
+        let a_stop = stop.clone();
+        let (window, qcap) = (cfg.send_window, cfg.send_queue_cap);
+        aux.push(
+            std::thread::Builder::new()
+                .name("sparsespec-router-accept".into())
+                .spawn(move || accept_loop(listener, a_tx, a_stop, window, qcap))?,
+        );
+        if let Some(ml) = metrics_listener {
+            let routes = vec![("/metrics", exposition), ("/snapshot", snapshot)];
+            let m_stop = stop.clone();
+            aux.push(
+                std::thread::Builder::new()
+                    .name("sparsespec-router-metrics".into())
+                    .spawn(move || metrics_http_loop(ml, routes, m_stop))?,
+            );
+        }
+        let r_shared = shared;
+        let r_stop = stop.clone();
+        let r_cfg = cfg;
+        aux.push(
+            std::thread::Builder::new()
+                .name("sparsespec-router-rollup".into())
+                .spawn(move || rollup_loop(r_cfg, r_shared, r_stop))?,
+        );
+        Ok(Router { addr, metrics_addr, tx, stop, core: Some(core), aux })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// Begin the fleet drain (forwards `Shutdown` to every replica).
+    pub fn shutdown(&self, abort: bool) {
+        let _ = self.tx.send(Ev::Shutdown { abort });
+    }
+
+    /// Wait for the drain to complete and return the final summary.
+    pub fn join(mut self) -> Result<RouterSummary> {
+        let summary = self
+            .core
+            .take()
+            .expect("join called once")
+            .join()
+            .map_err(|_| anyhow!("router core thread panicked"))??;
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(m) = self.metrics_addr {
+            let _ = TcpStream::connect_timeout(&m, Duration::from_millis(200));
+        }
+        for t in self.aux.drain(..) {
+            let _ = t.join();
+        }
+        Ok(summary)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy unit tests (deterministic, no sockets; twinned by
+// python/tests/test_router_port.py)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(n: usize) -> RouterPolicy {
+        RouterPolicy::new(n, vec![100, 200])
+    }
+
+    #[test]
+    fn bucket_edges_partition_costs() {
+        let p = policy(2);
+        assert_eq!(p.n_buckets(), 3);
+        assert_eq!(p.bucket_of(1), 0);
+        assert_eq!(p.bucket_of(100), 0, "edges are inclusive upper bounds");
+        assert_eq!(p.bucket_of(101), 1);
+        assert_eq!(p.bucket_of(200), 1);
+        assert_eq!(p.bucket_of(201), 2);
+        assert_eq!(p.bucket_of(100_000), 2, "overflow bucket");
+    }
+
+    #[test]
+    fn least_loaded_within_bucket_not_globally() {
+        let mut p = policy(2);
+        // replica 0 carries heavy long-bucket load...
+        let d = p.route("long-a", 500).unwrap();
+        assert_eq!((d.replica, d.bucket), (0, 2));
+        // ...so another long session goes to replica 1 (new tenant)
+        assert_eq!(p.route("long-b", 400).unwrap().replica, 1);
+        // but a *short* session sees equal short-bucket loads (0, 0) and
+        // falls to the live-count tie-break: both carry one session, so
+        // lowest index wins — bucket-aware, not global-load
+        let d = p.route("short-a", 50).unwrap();
+        assert_eq!((d.replica, d.bucket), (0, 0));
+    }
+
+    #[test]
+    fn ties_break_by_live_count_then_index() {
+        let mut p = policy(3);
+        // equal bucket loads everywhere; live counts 0,0,0 → index 0
+        assert_eq!(p.route("t1", 50).unwrap().replica, 0);
+        // live 1,0,0 → replica 1
+        assert_eq!(p.route("t2", 50).unwrap().replica, 1);
+        // loads now 50,50,0 in bucket 0 → replica 2 by load
+        assert_eq!(p.route("t3", 50).unwrap().replica, 2);
+    }
+
+    #[test]
+    fn tenant_stickiness_follows_while_up() {
+        let mut p = policy(2);
+        let first = p.route("acme", 50).unwrap();
+        assert!(!first.sticky);
+        // pile opposing load on the *other* replica so least-loaded would
+        // pick it — stickiness must win anyway
+        for _ in 0..5 {
+            p.route("other", 50).unwrap();
+        }
+        let again = p.route("acme", 50).unwrap();
+        assert_eq!(again.replica, first.replica);
+        assert!(again.sticky);
+    }
+
+    #[test]
+    fn stickiness_does_not_follow_into_degraded_or_down() {
+        let mut p = policy(2);
+        let first = p.route("acme", 50).unwrap();
+        assert_eq!(first.replica, 0);
+        p.set_health(0, ReplicaHealth::Degraded);
+        let moved = p.route("acme", 50).unwrap();
+        assert_eq!(moved.replica, 1, "degraded replica gets no new sessions");
+        assert!(!moved.sticky);
+        // the tenant re-sticks to its new home
+        p.set_health(0, ReplicaHealth::Up);
+        assert_eq!(p.route("acme", 50).unwrap().replica, 1);
+    }
+
+    #[test]
+    fn release_rebalances_future_routing() {
+        let mut p = policy(2);
+        let d0 = p.route("a", 150).unwrap();
+        assert_eq!(d0.replica, 0);
+        assert_eq!(p.route("b", 150).unwrap().replica, 1);
+        // finish replica 0's session: next mid-bucket session goes back
+        p.release(d0.replica, d0.bucket, 150);
+        assert_eq!(p.route("c", 150).unwrap().replica, 0);
+        assert_eq!(p.live_sessions(0), 1);
+    }
+
+    #[test]
+    fn no_live_replica_routes_none() {
+        let mut p = policy(2);
+        p.set_health(0, ReplicaHealth::Down);
+        p.set_health(1, ReplicaHealth::Degraded);
+        assert_eq!(p.route("acme", 50), None);
+        p.set_health(1, ReplicaHealth::Up);
+        assert!(p.route("acme", 50).is_some());
+    }
+
+    #[test]
+    fn failover_contract_resubmit_vs_fail_fast() {
+        // nothing streamed, nothing buffered → transparent resubmit
+        assert_eq!(failover_action(0, 0), FailoverAction::Resubmit);
+        // a single forwarded token pins the session to fail-fast
+        assert_eq!(failover_action(1, 0), FailoverAction::FailFast);
+        assert_eq!(failover_action(42, 3), FailoverAction::FailFast);
+        // buffered-but-undelivered tokens also forbid resubmit (the
+        // replica already committed output we may re-deliver)
+        assert_eq!(failover_action(0, 1), FailoverAction::FailFast);
+    }
+
+    #[test]
+    fn projected_load_is_cost_weighted() {
+        let mut p = RouterPolicy::new(2, vec![1000]);
+        // one big session on 0 outweighs two smaller on 1
+        assert_eq!(p.route("big", 900).unwrap().replica, 0);
+        assert_eq!(p.route("s1", 300).unwrap().replica, 1);
+        assert_eq!(p.route("s2", 300).unwrap().replica, 1, "600 < 900");
+        assert_eq!(p.route("s3", 300).unwrap().replica, 1, "sticky");
+        assert_eq!(p.route("s4", 300).unwrap().replica, 0, "1200 > 900 now");
+    }
+}

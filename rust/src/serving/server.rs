@@ -94,6 +94,10 @@ pub struct ServerConfig {
     pub trace_out: Option<String>,
     /// Refresh the published `/metrics` exposition every N loop ticks.
     pub metrics_publish_every: u64,
+    /// Replica index echoed in every `Accepted` frame (the optional
+    /// trailing wire field) so clients and the router can attribute
+    /// sessions.  `None` (the default) omits the field.
+    pub replica_id: Option<u16>,
 }
 
 impl ServerConfig {
@@ -112,6 +116,7 @@ impl ServerConfig {
             tenant_weights: BTreeMap::new(),
             trace_out: None,
             metrics_publish_every: 16,
+            replica_id: None,
         }
     }
 }
@@ -237,7 +242,7 @@ pub(crate) struct ConnOut {
 }
 
 impl ConnOut {
-    fn new(cap: usize, window: u32, stream: Option<TcpStream>) -> Arc<ConnOut> {
+    pub(crate) fn new(cap: usize, window: u32, stream: Option<TcpStream>) -> Arc<ConnOut> {
         Arc::new(ConnOut {
             cap,
             st: Mutex::new(OutState {
@@ -252,7 +257,7 @@ impl ConnOut {
     }
 
     /// Queue a token frame iff credit and queue space allow.
-    fn try_token(&self, f: Frame) -> bool {
+    pub(crate) fn try_token(&self, f: Frame) -> bool {
         let mut st = self.st.lock().expect("conn out lock");
         if st.closed || st.broken || st.credit == 0 || st.q.len() >= self.cap {
             return false;
@@ -266,7 +271,7 @@ impl ConnOut {
     /// Queue a control frame (never credit-gated; ignores the cap so
     /// per-session terminal frames cannot deadlock behind a full queue —
     /// control volume is bounded by session count).
-    fn push_ctrl(&self, f: Frame) -> bool {
+    pub(crate) fn push_ctrl(&self, f: Frame) -> bool {
         let mut st = self.st.lock().expect("conn out lock");
         if st.closed || st.broken {
             return false;
@@ -276,31 +281,31 @@ impl ConnOut {
         true
     }
 
-    fn add_credit(&self, n: u32) {
+    pub(crate) fn add_credit(&self, n: u32) {
         let mut st = self.st.lock().expect("conn out lock");
         st.credit = st.credit.saturating_add(n);
         self.cv.notify_one();
     }
 
-    fn is_broken(&self) -> bool {
+    pub(crate) fn is_broken(&self) -> bool {
         self.st.lock().expect("conn out lock").broken
     }
 
     /// Flush-and-close: the writer drains the queue then half-closes.
-    fn close(&self) {
+    pub(crate) fn close(&self) {
         self.st.lock().expect("conn out lock").closed = true;
         self.cv.notify_all();
     }
 
     /// Hard shutdown of the socket (drain finalisation): unblocks the
     /// peer and our reader thread.
-    fn force_shutdown(&self) {
+    pub(crate) fn force_shutdown(&self) {
         if let Some(s) = self.stream.lock().expect("stream lock").take() {
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
     }
 
-    fn writer_loop(self: &Arc<Self>, stream: TcpStream) {
+    pub(crate) fn writer_loop(self: &Arc<Self>, stream: TcpStream) {
         let mut w = std::io::BufWriter::new(stream);
         loop {
             let batch: Vec<Frame> = {
@@ -394,6 +399,9 @@ struct EngineThread {
     queues: WrrQueues<PendingReq>,
     metrics: MetricsRegistry,
     published: Arc<Mutex<String>>,
+    /// Lossless snapshot text (`MetricsRegistry::encode_text`) served at
+    /// `/snapshot` — the router's fleet-rollup transport.
+    published_snap: Arc<Mutex<String>>,
     next_session: u64,
     tick: u64,
     draining: bool,
@@ -479,7 +487,11 @@ impl EngineThread {
             Ok(()) => {
                 self.metrics.inc("sessions_submitted", &[("tenant", &tenant)], 1.0);
                 if let Some(c) = self.conns.get(&conn) {
-                    c.out.push_ctrl(Frame::Accepted { req_id, session });
+                    c.out.push_ctrl(Frame::Accepted {
+                        req_id,
+                        session,
+                        replica: self.cfg.replica_id,
+                    });
                 }
             }
             Err(_) => {
@@ -797,6 +809,7 @@ impl EngineThread {
             m.set_gauge("queue_depth", &[("tenant", &tenant)], depth as f64);
         }
         *self.published.lock().expect("exposition lock") = m.expose_prometheus("sparsespec");
+        *self.published_snap.lock().expect("snapshot lock") = m.encode_text();
     }
 
     fn run(mut self, ctrl_rx: Receiver<Ctrl>) -> Result<ServerSummary> {
@@ -848,6 +861,7 @@ impl EngineThread {
         final_m.merge_from(&report.registry());
         let exposition = final_m.expose_prometheus("sparsespec");
         *self.published.lock().expect("exposition lock") = exposition.clone();
+        *self.published_snap.lock().expect("snapshot lock") = final_m.encode_text();
         for c in self.conns.values() {
             c.out.close();
             c.out.force_shutdown();
@@ -922,9 +936,16 @@ fn accept_loop(
     }
 }
 
-/// Minimal HTTP/1.1 responder for `/metrics`: reuses
-/// `MetricsRegistry::expose_prometheus()` output verbatim.
-fn metrics_loop(listener: TcpListener, published: Arc<Mutex<String>>, stop: Arc<AtomicBool>) {
+/// Minimal HTTP/1.1 responder serving published text documents by path.
+/// The server mounts `/metrics` (Prometheus exposition, verbatim) and
+/// `/snapshot` (lossless `MetricsRegistry::encode_text`, the router's
+/// rollup transport); the router reuses the same loop for its fleet
+/// endpoints.  Each route matches exactly or with a `?query` suffix.
+pub(crate) fn metrics_http_loop(
+    listener: TcpListener,
+    routes: Vec<(&'static str, Arc<Mutex<String>>)>,
+    stop: Arc<AtomicBool>,
+) {
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -947,10 +968,15 @@ fn metrics_loop(listener: TcpListener, published: Arc<Mutex<String>>, stop: Arc<
         }
         let line = String::from_utf8_lossy(&head);
         let path = line.split_whitespace().nth(1).unwrap_or("");
-        let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
-            ("200 OK", published.lock().expect("exposition lock").clone())
-        } else {
-            ("404 Not Found", "only /metrics is served\n".to_string())
+        let hit = routes.iter().find(|(p, _)| {
+            path == *p || (path.starts_with(p) && path.as_bytes().get(p.len()) == Some(&b'?'))
+        });
+        let (status, body) = match hit {
+            Some((_, doc)) => ("200 OK", doc.lock().expect("published doc lock").clone()),
+            None => {
+                let served: Vec<&str> = routes.iter().map(|(p, _)| *p).collect();
+                ("404 Not Found", format!("served paths: {}\n", served.join(" ")))
+            }
         };
         let resp = format!(
             "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
@@ -989,9 +1015,11 @@ impl Server {
         let (ctrl_tx, ctrl_rx) = channel::<Ctrl>();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let published = Arc::new(Mutex::new(String::new()));
+        let published_snap = Arc::new(Mutex::new(MetricsRegistry::new().encode_text()));
         let stop = Arc::new(AtomicBool::new(false));
 
         let engine_published = published.clone();
+        let engine_snap = published_snap.clone();
         let engine_cfg = cfg.clone();
         let engine_thread = std::thread::Builder::new()
             .name("sparsespec-engine".into())
@@ -1013,6 +1041,7 @@ impl Server {
                         queues: WrrQueues::new(weights, queue_cap),
                         metrics: MetricsRegistry::new(),
                         published: engine_published,
+                        published_snap: engine_snap,
                         next_session: 1,
                         tick: 0,
                         draining: false,
@@ -1048,12 +1077,12 @@ impl Server {
                 .spawn(move || accept_loop(listener, a_ctrl, a_stop, window, qcap))?,
         );
         if let Some(ml) = metrics_listener {
-            let m_pub = published.clone();
+            let routes = vec![("/metrics", published.clone()), ("/snapshot", published_snap.clone())];
             let m_stop = stop.clone();
             aux.push(
                 std::thread::Builder::new()
                     .name("sparsespec-metrics".into())
-                    .spawn(move || metrics_loop(ml, m_pub, m_stop))?,
+                    .spawn(move || metrics_http_loop(ml, routes, m_stop))?,
             );
         }
         Ok(Server {

@@ -22,7 +22,7 @@
 //! | 0x04 | c→s | Shutdown  | abort:u8 (0 = graceful drain, 1 = cancel live sessions first) |
 //! | 0x05 | c→s | Ping      | nonce:u64 |
 //! | 0x10 | s→c | Hello     | version:u8 window:u32 |
-//! | 0x11 | s→c | Accepted  | req_id:u64 session:u64 |
+//! | 0x11 | s→c | Accepted  | req_id:u64 session:u64 [replica:u16] |
 //! | 0x12 | s→c | Token     | session:u64 index:u32 token:i32 |
 //! | 0x13 | s→c | Finished  | session:u64 reason:u8 tokens:u32 |
 //! | 0x14 | s→c | Error     | req_id:u64 code:u8 detail:str |
@@ -40,6 +40,14 @@
 //! Decoding is total: truncated, oversized, trailing-garbage and
 //! unknown-kind inputs return a typed [`WireError`], never panic, and
 //! never allocate more than the declared (bounds-checked) sizes.
+//!
+//! `Accepted` carries one **optional trailing field**: a `replica:u16`
+//! appended by `sparsespec-router` so clients can attribute sessions to
+//! the replica that served them.  Absence is encoded by absence (a bare
+//! 17-byte body, what `sparsespec-server` has always sent), presence by
+//! exactly two extra bytes; any other tail is `Trailing`.  This keeps
+//! both forms canonical under PROTOCOL_VERSION 1 and leaves every other
+//! frame's layout untouched.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -91,6 +99,10 @@ pub enum ErrorCode {
     /// `EngineError` rendering rides in `detail`; the paired `Finished`
     /// frame carries reason `failed`).
     EngineFault = 8,
+    /// The replica serving this session went down (router failover): no
+    /// live replica was available to route to, or the session had already
+    /// streamed tokens and cannot be transparently resubmitted.
+    ReplicaDown = 9,
 }
 
 impl ErrorCode {
@@ -104,6 +116,7 @@ impl ErrorCode {
             6 => Some(ErrorCode::Protocol),
             7 => Some(ErrorCode::Draining),
             8 => Some(ErrorCode::EngineFault),
+            9 => Some(ErrorCode::ReplicaDown),
             _ => None,
         }
     }
@@ -119,6 +132,7 @@ impl ErrorCode {
             ErrorCode::Protocol => "protocol",
             ErrorCode::Draining => "draining",
             ErrorCode::EngineFault => "engine_fault",
+            ErrorCode::ReplicaDown => "replica_down",
         }
     }
 }
@@ -160,7 +174,7 @@ pub enum Frame {
     Shutdown { abort: bool },
     Ping { nonce: u64 },
     Hello { version: u8, window: u32 },
-    Accepted { req_id: u64, session: u64 },
+    Accepted { req_id: u64, session: u64, replica: Option<u16> },
     Token { session: u64, index: u32, token: i32 },
     Finished { session: u64, reason: u8, tokens: u32 },
     Error { req_id: u64, code: ErrorCode, detail: String },
@@ -258,9 +272,12 @@ impl Frame {
                 out.push(*version);
                 out.extend_from_slice(&window.to_le_bytes());
             }
-            Frame::Accepted { req_id, session } => {
+            Frame::Accepted { req_id, session, replica } => {
                 out.extend_from_slice(&req_id.to_le_bytes());
                 out.extend_from_slice(&session.to_le_bytes());
+                if let Some(r) = replica {
+                    out.extend_from_slice(&r.to_le_bytes());
+                }
             }
             Frame::Token { session, index, token } => {
                 out.extend_from_slice(&session.to_le_bytes());
@@ -382,7 +399,15 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, WireError> {
         }
         K_PING => Frame::Ping { nonce: c.u64()? },
         K_HELLO => Frame::Hello { version: c.u8()?, window: c.u32()? },
-        K_ACCEPTED => Frame::Accepted { req_id: c.u64()?, session: c.u64()? },
+        K_ACCEPTED => {
+            let req_id = c.u64()?;
+            let session = c.u64()?;
+            // Optional trailing replica id: either absent (legacy server
+            // form) or exactly one u16.  Anything else falls through to
+            // the Trailing check below.
+            let replica = if c.rest() == 2 { Some(c.u16()?) } else { None };
+            Frame::Accepted { req_id, session, replica }
+        }
         K_TOKEN => Frame::Token { session: c.u64()?, index: c.u32()?, token: c.i32()? },
         K_FINISHED => {
             let session = c.u64()?;
@@ -448,6 +473,20 @@ pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), WireError> {
     w.write_all(&f.encode()).map_err(|e| WireError::Io(e.to_string()))
 }
 
+/// Validate the connection-opening frame: it must be a `Hello` carrying
+/// the one [`PROTOCOL_VERSION`] this build speaks.  Returns the granted
+/// credit window.  Both `serving::client` and the router run every
+/// server-side handshake through this instead of pattern-matching
+/// `Hello` fields loosely — a version we don't understand must be a
+/// typed refusal, never a silent best-effort decode.
+pub fn expect_hello(f: &Frame) -> Result<u32, WireError> {
+    match f {
+        Frame::Hello { version, window } if *version == PROTOCOL_VERSION => Ok(*window),
+        Frame::Hello { .. } => Err(WireError::BadValue("protocol version")),
+        _ => Err(WireError::BadValue("expected hello")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,7 +508,8 @@ mod tests {
             Frame::Shutdown { abort: true },
             Frame::Ping { nonce: 0xDEAD },
             Frame::Hello { version: PROTOCOL_VERSION, window: 1024 },
-            Frame::Accepted { req_id: 7, session: 3 },
+            Frame::Accepted { req_id: 7, session: 3, replica: None },
+            Frame::Accepted { req_id: 7, session: 3, replica: Some(1) },
             Frame::Token { session: 3, index: 0, token: -1 },
             Frame::Finished { session: 3, reason: 0, tokens: 40 },
             Frame::Error {
@@ -533,6 +573,34 @@ mod tests {
         assert_eq!(decode_body(&s), Err(WireError::Truncated));
         s[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(decode_body(&s), Err(WireError::BadValue("prompt length")));
+    }
+
+    #[test]
+    fn accepted_optional_replica_is_canonical() {
+        // absent → 17-byte body, present → exactly 19; a one-byte tail is
+        // Trailing, not a half-read replica id.
+        let bare = Frame::Accepted { req_id: 1, session: 2, replica: None }.encode_body();
+        assert_eq!(bare.len(), 17);
+        let tagged = Frame::Accepted { req_id: 1, session: 2, replica: Some(7) }.encode_body();
+        assert_eq!(tagged.len(), 19);
+        let mut odd = bare.clone();
+        odd.push(0xFF);
+        assert_eq!(decode_body(&odd), Err(WireError::Trailing { extra: 1 }));
+        let mut long = tagged.clone();
+        long.push(0xFF);
+        assert_eq!(decode_body(&long), Err(WireError::Trailing { extra: 3 }));
+    }
+
+    #[test]
+    fn expect_hello_pins_the_protocol_version() {
+        let ok = Frame::Hello { version: PROTOCOL_VERSION, window: 64 };
+        assert_eq!(expect_hello(&ok), Ok(64));
+        let bad = Frame::Hello { version: PROTOCOL_VERSION + 1, window: 64 };
+        assert_eq!(expect_hello(&bad), Err(WireError::BadValue("protocol version")));
+        assert_eq!(
+            expect_hello(&Frame::Pong { nonce: 1 }),
+            Err(WireError::BadValue("expected hello"))
+        );
     }
 
     #[test]

@@ -325,6 +325,93 @@ impl Iterator for OnlineArrivals {
     }
 }
 
+/// How a multi-replica load generator splits one trace across N shards
+/// (one shard per client connection / replica in scale-out experiments).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShardShape {
+    /// Round-robin: every shard sees the same arrival mix.
+    Even,
+    /// Hot-spot: shard 0 receives the `hot` fraction of requests, the
+    /// remainder round-robins over the other shards.  Stresses the
+    /// router's least-loaded balancing.
+    Skewed { hot: f64 },
+    /// Rank requests by projected KV cost (`prompt + max_new`) and give
+    /// each shard one contiguous cost quantile — shard 0 the shortest,
+    /// the last shard the longest.  Stresses bucket-aware placement.
+    ByLength,
+}
+
+impl ShardShape {
+    /// `even` | `skewed:<hot-fraction>` | `bylength`.
+    pub fn parse(s: &str) -> Option<ShardShape> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "even" => return Some(ShardShape::Even),
+            "bylength" | "by-length" => return Some(ShardShape::ByLength),
+            _ => {}
+        }
+        let (kind, hot) = s.split_once(':')?;
+        if kind != "skewed" {
+            return None;
+        }
+        let hot: f64 = hot.parse().ok()?;
+        if !hot.is_finite() || !(0.0..=1.0).contains(&hot) {
+            return None;
+        }
+        Some(ShardShape::Skewed { hot })
+    }
+}
+
+/// Deterministically split `reqs` into `n` shards under `shape`.  Every
+/// request lands in exactly one shard; within a shard the original
+/// arrival order is preserved (so replays stay time-sorted).
+pub fn shard_requests(reqs: Vec<Request>, n: usize, shape: ShardShape) -> Vec<Vec<Request>> {
+    let n = n.max(1);
+    let mut shards: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
+    match shape {
+        ShardShape::Even => {
+            for (i, r) in reqs.into_iter().enumerate() {
+                shards[i % n].push(r);
+            }
+        }
+        ShardShape::Skewed { hot } => {
+            if n == 1 {
+                shards[0] = reqs;
+            } else {
+                // shard 0 takes every request whose position crosses the
+                // next multiple of 1/hot — a largest-remainder assignment
+                // that spreads the hot picks evenly through time instead
+                // of front-loading them
+                let mut acc = 0.0f64;
+                let mut cold = 0usize;
+                for r in reqs.into_iter() {
+                    acc += hot;
+                    if acc >= 1.0 {
+                        acc -= 1.0;
+                        shards[0].push(r);
+                    } else {
+                        shards[1 + cold % (n - 1)].push(r);
+                        cold += 1;
+                    }
+                }
+            }
+        }
+        ShardShape::ByLength => {
+            let mut order: Vec<usize> = (0..reqs.len()).collect();
+            order.sort_by_key(|&i| (reqs[i].prompt.len() + reqs[i].max_new, i));
+            // rank → shard by quantile; then scatter back in input order
+            let mut shard_of = vec![0usize; reqs.len()];
+            for (rank, &i) in order.iter().enumerate() {
+                shard_of[i] = rank * n / reqs.len().max(1);
+            }
+            for (i, r) in reqs.into_iter().enumerate() {
+                shards[shard_of[i].min(n - 1)].push(r);
+            }
+        }
+    }
+    shards
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,5 +612,89 @@ mod tests {
         let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
         ids.dedup();
         assert_eq!(ids.len(), 100);
+    }
+
+    #[test]
+    fn shard_shape_parses() {
+        assert_eq!(ShardShape::parse("even"), Some(ShardShape::Even));
+        assert_eq!(ShardShape::parse("ByLength"), Some(ShardShape::ByLength));
+        assert_eq!(ShardShape::parse("skewed:0.75"), Some(ShardShape::Skewed { hot: 0.75 }));
+        assert_eq!(ShardShape::parse("skewed:1.5"), None, "fraction must be <= 1");
+        assert_eq!(ShardShape::parse("skewed:-0.1"), None);
+        assert_eq!(ShardShape::parse("skewed"), None);
+        assert_eq!(ShardShape::parse("hotcold:0.5"), None);
+    }
+
+    #[test]
+    fn shard_even_round_robins_and_partitions() {
+        let (g, m) = cfgs();
+        let reqs = WorkloadGen::new(g, m, Dataset::Aime, 3).offline_batch(20);
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let shards = shard_requests(reqs, 3, ShardShape::Even);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 20);
+        // sizes differ by at most one, every id lands exactly once
+        let (min, max) = (
+            shards.iter().map(|s| s.len()).min().unwrap(),
+            shards.iter().map(|s| s.len()).max().unwrap(),
+        );
+        assert!(max - min <= 1);
+        let mut seen: Vec<u64> = shards.iter().flatten().map(|r| r.id).collect();
+        seen.sort_unstable();
+        let mut want = ids;
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn shard_skewed_gives_shard0_the_hot_fraction() {
+        let (g, m) = cfgs();
+        let reqs = WorkloadGen::new(g, m, Dataset::Aime, 8).offline_batch(200);
+        let shards = shard_requests(reqs, 4, ShardShape::Skewed { hot: 0.6 });
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 200);
+        // largest-remainder: shard 0 gets floor/ceil of hot * n
+        let hot_n = shards[0].len();
+        assert!((119..=121).contains(&hot_n), "hot shard got {hot_n} of 200 at 0.6");
+        // cold remainder spreads evenly over the other shards
+        let (cmin, cmax) = (
+            shards[1..].iter().map(|s| s.len()).min().unwrap(),
+            shards[1..].iter().map(|s| s.len()).max().unwrap(),
+        );
+        assert!(cmax - cmin <= 1, "cold shards uneven: {cmin}..{cmax}");
+    }
+
+    #[test]
+    fn shard_by_length_orders_quantiles() {
+        let (g, m) = cfgs();
+        let reqs = WorkloadGen::new(g, m, Dataset::Aime, 13).offline_batch(120);
+        let shards = shard_requests(reqs, 3, ShardShape::ByLength);
+        assert!(shards.iter().all(|s| s.len() == 40));
+        let mean = |s: &[Request]| {
+            s.iter().map(|r| (r.prompt.len() + r.max_new) as f64).sum::<f64>() / s.len() as f64
+        };
+        assert!(mean(&shards[0]) < mean(&shards[1]));
+        assert!(mean(&shards[1]) < mean(&shards[2]));
+        // arrival order preserved within each shard
+        for s in &shards {
+            assert!(s.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        }
+    }
+
+    #[test]
+    fn shard_degenerate_cases() {
+        let (g, m) = cfgs();
+        let reqs = WorkloadGen::new(g, m, Dataset::Aime, 2).offline_batch(7);
+        // n = 1 keeps the whole trace in order regardless of shape
+        for shape in [ShardShape::Even, ShardShape::Skewed { hot: 0.9 }, ShardShape::ByLength] {
+            let shards = shard_requests(reqs.clone(), 1, shape);
+            assert_eq!(shards.len(), 1);
+            let ids: Vec<u64> = shards[0].iter().map(|r| r.id).collect();
+            let want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+            assert_eq!(ids, want);
+        }
+        // empty input yields n empty shards
+        let empty = shard_requests(Vec::new(), 3, ShardShape::ByLength);
+        assert_eq!(empty.len(), 3);
+        assert!(empty.iter().all(|s| s.is_empty()));
     }
 }

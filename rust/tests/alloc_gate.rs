@@ -5,8 +5,9 @@
 //! engine_iteration` enforces; having it as a test means plain `cargo
 //! test` catches an allocation regression without running the bench.
 //!
-//! This file is its own test binary with a single test, so no concurrent
-//! test can pollute the allocation count.  Sim-backend only: the pjrt
+//! This file is its own test binary, so no other test binary can pollute
+//! the allocation count; the tests *within* it serialise on [`GATE`]
+//! because the counter is process-global.  Sim-backend only: the pjrt
 //! runner allocates per device fetch by design.
 
 #![cfg(not(feature = "pjrt"))]
@@ -15,12 +16,21 @@
 static ALLOC: sparsespec::util::alloc::CountingAlloc = sparsespec::util::alloc::CountingAlloc;
 
 use std::rc::Rc;
+use std::sync::Mutex;
 
+use sparsespec::engine::{Engine, EngineConfig};
 use sparsespec::runtime::{ModelRunner, Runtime};
+use sparsespec::scheduler::Schedule;
+use sparsespec::spec::DrafterKind;
 use sparsespec::util::alloc;
+use sparsespec::workload::Request;
+
+/// Serialises the tests sharing the process-global allocation counter.
+static GATE: Mutex<()> = Mutex::new(());
 
 #[test]
 fn serial_arena_step_loop_is_allocation_free() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
     let dir = std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let rt = Rc::new(Runtime::load(&dir).expect("runtime loads"));
     let m = rt.cfg.model.clone();
@@ -57,4 +67,62 @@ fn serial_arena_step_loop_is_allocation_free() {
     }
     let n = alloc::allocations_since(base).expect("counter stays installed");
     assert_eq!(n, 0, "steady-state serial step loop allocated {n} time(s), expected 0");
+}
+
+/// The delayed-verify counterpart of the gate (ROADMAP item).  Delayed
+/// mode cannot be allocation-*free*: each overlapped round spawns one
+/// verify job per participating slot through `Promise::spawn_on` (a
+/// channel, a boxed closure, a pool queue node) plus the job-owned input
+/// copies — that is the price of the CPU/GPU overlap, and it is O(slots)
+/// per round by construction, not per-token or per-context.  What this
+/// test pins is exactly that bound: the deferred-verification queue
+/// itself is pre-sized to the slot ceiling and drained capacity-
+/// preserving (`collect_delayed`), so steady-state allocations stay under
+/// a fixed per-job constant instead of growing with queue reallocation.
+#[test]
+fn delayed_verify_steady_state_allocations_are_bounded() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Rc::new(Runtime::load(&dir).expect("runtime loads"));
+    let m = rt.cfg.model.clone();
+    let slots = m.slots;
+
+    let cfg = EngineConfig::new(DrafterKind::Pillar { w: m.draft_budget })
+        .with_k(m.spec_k)
+        .with_schedule(Schedule::parse("unified").expect("unified schedule parses"), true);
+    let mut eng = Engine::new(rt.clone(), cfg).expect("engine builds");
+    for i in 0..slots as u64 {
+        eng.submit(Request {
+            id: i,
+            prompt: (0..16).map(|t| (t % 50) as i32 + 1).collect(),
+            max_new: 400, // long enough that nobody retires mid-measurement
+            arrival_s: 0.0,
+            seed: 11 + i,
+            drafter: None,
+        });
+    }
+    // Warmup: fill the slots, run the first verify rounds, let lazy state
+    // (stats keys, pool threads, scratch buffers) reach steady state.
+    for _ in 0..12 {
+        assert!(eng.step().expect("warmup step"), "work should remain during warmup");
+    }
+
+    let base = alloc::allocations();
+    assert!(base.is_some(), "counting allocator must be installed in this binary");
+    const STEPS: u64 = 20;
+    for _ in 0..STEPS {
+        assert!(eng.step().expect("measured step"), "work should remain while measuring");
+    }
+    let n = alloc::allocations_since(base).expect("counter stays installed");
+    // Generous per-job constant (channel + closure + queue node + owned
+    // input copies is well under this); what it must NOT absorb is any
+    // per-round queue growth, which would scale with STEPS x reallocation.
+    let bound = STEPS * slots as u64 * 64;
+    assert!(
+        n <= bound,
+        "delayed-verify steady state allocated {n} times over {STEPS} steps \
+         ({} slots); bound is {bound} — the deferred-verification queue is \
+         likely growing instead of reusing its capacity",
+        slots
+    );
 }

@@ -1,0 +1,534 @@
+//! Scale-out router tests over real TCP (loopback, ephemeral ports): the
+//! acceptance criteria of the N-replica serving subsystem.
+//!
+//! * A 2-tenant workload through `sparsespec-router` + 2 real replicas
+//!   streams **bit-identical** to a single in-process `Engine::run` of
+//!   the union, partitioned by the routing decision — the router adds
+//!   placement and transport, never different math.  The fleet
+//!   `/metrics` rollup equals the associative merge of the replicas'
+//!   individual `/snapshot`s plus the router-local registry.
+//! * Killing a replica mid-load yields typed `ReplicaDown` errors only
+//!   for its mid-stream sessions, transparently resubmits its queued
+//!   ones, and never disturbs the surviving replica's outputs.
+//! * A replica whose `Hello` carries the wrong protocol version is
+//!   rejected at `Router::spawn` (and by the unchanged client) instead
+//!   of being routed to blind.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sparsespec::engine::{Engine, EngineConfig};
+use sparsespec::metrics::MetricsRegistry;
+use sparsespec::runtime::Runtime;
+use sparsespec::serving::{
+    run_load, wire, ClientConfig, ErrorCode, Frame, ReplicaSpec, Router, RouterConfig, Server,
+    ServerConfig, TenantLoad,
+};
+use sparsespec::spec::DrafterKind;
+use sparsespec::workload::{Dataset, Request, WorkloadGen};
+use std::rc::Rc;
+
+fn artifacts_dir() -> String {
+    std::env::var("SPARSESPEC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load(&artifacts_dir()).expect("runtime loads"))
+}
+
+fn small_requests(rt: &Runtime, n: usize, cap: usize, seed: u64) -> Vec<Request> {
+    let mut reqs =
+        WorkloadGen::new(rt.cfg.grammar.clone(), rt.cfg.model.clone(), Dataset::Aime, seed)
+            .offline_batch(n);
+    for r in &mut reqs {
+        r.max_new = r.max_new.min(cap);
+    }
+    reqs
+}
+
+fn reference_outputs(
+    rt: &Rc<Runtime>,
+    cfg: EngineConfig,
+    reqs: Vec<Request>,
+) -> BTreeMap<u64, Vec<i32>> {
+    let mut eng = Engine::new(rt.clone(), cfg).expect("reference engine");
+    eng.run(reqs).expect("reference run").outputs
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let reader = BufReader::new(stream.try_clone().expect("clone"));
+    (stream, reader)
+}
+
+fn read_frames_until(
+    r: &mut BufReader<TcpStream>,
+    deadline: Instant,
+    mut done: impl FnMut(&Frame) -> bool,
+) -> Vec<Frame> {
+    let mut out = Vec::new();
+    loop {
+        assert!(Instant::now() < deadline, "deadline waiting for frames; got {out:?}");
+        match wire::read_frame(r) {
+            Ok(Some(f)) => {
+                let stop = done(&f);
+                out.push(f);
+                if stop {
+                    return out;
+                }
+            }
+            Ok(None) => panic!("peer hung up early; got {out:?}"),
+            Err(e) => panic!("wire error {e}; got {out:?}"),
+        }
+    }
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("http connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").expect("GET");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("http body");
+    assert!(resp.starts_with("HTTP/1.1 200"), "GET {path}: {resp}");
+    resp.split_once("\r\n\r\n").expect("http header split").1.to_string()
+}
+
+fn mk_cfg() -> EngineConfig {
+    let mut c = EngineConfig::new(DrafterKind::Pillar { w: 64 }).with_k(8);
+    c.max_iterations = u64::MAX;
+    c
+}
+
+fn spawn_replica(id: u16) -> (Server, ReplicaSpec) {
+    let mut scfg = ServerConfig::new(&artifacts_dir(), mk_cfg());
+    scfg.addr = "127.0.0.1:0".into();
+    scfg.metrics_addr = Some("127.0.0.1:0".into());
+    scfg.replica_id = Some(id);
+    let server = Server::spawn(scfg).expect("replica spawns");
+    let spec = ReplicaSpec {
+        addr: server.addr().to_string(),
+        metrics_addr: Some(server.metrics_addr().expect("replica metrics").to_string()),
+    };
+    (server, spec)
+}
+
+/// Acceptance pin: 2 tenants through router + 2 replicas, bit-identical
+/// to the in-process union run; fleet `/metrics` serves per-replica
+/// labelled series; the drain summary's rollup equals the associative
+/// merge of the replicas' own final `/snapshot`s.
+#[test]
+fn two_tenants_through_router_bit_identical_with_fleet_rollup() {
+    let rt = runtime();
+    let mut acme = small_requests(&rt, 4, 32, 11);
+    let mut hobby = small_requests(&rt, 4, 32, 22);
+    for (i, r) in acme.iter_mut().enumerate() {
+        r.id = 1000 + i as u64;
+    }
+    for (i, r) in hobby.iter_mut().enumerate() {
+        r.id = 2000 + i as u64;
+    }
+    let mut union = acme.clone();
+    union.extend(hobby.iter().cloned());
+    let reference = reference_outputs(&rt, mk_cfg(), union);
+
+    let (server0, spec0) = spawn_replica(0);
+    let (server1, spec1) = spawn_replica(1);
+    let replica_metrics =
+        [server0.metrics_addr().unwrap(), server1.metrics_addr().unwrap()];
+    let trace_path = std::env::temp_dir().join(format!("router_trace_{}.json", std::process::id()));
+    let mut rcfg = RouterConfig::new(vec![spec0, spec1]);
+    rcfg.addr = "127.0.0.1:0".into();
+    rcfg.metrics_addr = Some("127.0.0.1:0".into());
+    rcfg.trace_out = Some(trace_path.to_string_lossy().into_owned());
+    let router = Router::spawn(rcfg).expect("router spawns");
+    let fleet_metrics = router.metrics_addr().expect("fleet metrics listener");
+
+    let mut ccfg = ClientConfig::new(&router.addr().to_string());
+    ccfg.timeout_s = 60.0;
+    ccfg.tenants.push(TenantLoad { name: "acme".into(), requests: acme.clone(), drafter: String::new() });
+    ccfg.tenants.push(TenantLoad { name: "hobby".into(), requests: hobby.clone(), drafter: String::new() });
+    let report = run_load(ccfg).expect("client run");
+
+    assert_eq!(report.completed, 8, "all sessions complete: {}", report.render());
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.refused_total(), 0);
+    for (tenant, reqs) in [("acme", &acme), ("hobby", &hobby)] {
+        for r in reqs.iter() {
+            let got = report
+                .outputs
+                .get(&(tenant.to_string(), r.id))
+                .unwrap_or_else(|| panic!("missing output for {tenant}/{}", r.id));
+            assert_eq!(
+                got,
+                &reference[&r.id],
+                "tenant {tenant} req {} streamed tokens differ from Engine::run",
+                r.id
+            );
+        }
+    }
+
+    // Replica attribution: every session carries the router's echo, one
+    // replica per tenant (stickiness), both replicas used across tenants.
+    let mut per_tenant: BTreeMap<&str, Vec<u16>> = BTreeMap::new();
+    for ((tenant, _), d) in &report.sessions {
+        let r = d.replica.unwrap_or_else(|| panic!("missing replica echo for {tenant}"));
+        assert!(r < 2, "unknown replica {r}");
+        per_tenant.entry(tenant.as_str()).or_default().push(r);
+    }
+    let mut homes = Vec::new();
+    for (tenant, rs) in &per_tenant {
+        assert!(
+            rs.windows(2).all(|w| w[0] == w[1]),
+            "tenant {tenant} was not sticky: {rs:?}"
+        );
+        homes.push(rs[0]);
+    }
+    homes.sort_unstable();
+    assert_eq!(homes, vec![0, 1], "the two tenants must land on distinct replicas");
+
+    // Fleet /metrics: poll until the rollup shows per-replica routing
+    // counters alongside replica-side per-tenant series.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let body = loop {
+        let body = http_get(fleet_metrics, "/metrics");
+        if body.contains("sparsespec_router_routed{replica=\"0\"}")
+            && body.contains("sparsespec_router_routed{replica=\"1\"}")
+            && body.contains("tenant=\"acme\"")
+        {
+            break body;
+        }
+        assert!(Instant::now() < deadline, "fleet rollup never converged:\n{body}");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("unparseable: {line}"));
+        assert!(name.starts_with("sparsespec_"), "unprefixed series: {line}");
+        value.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric sample: {line}"));
+    }
+
+    router.shutdown(false);
+    let summary = router.join().expect("fleet drain");
+    assert_eq!(summary.routed, 8);
+    assert_eq!(summary.resubmitted, 0);
+    assert_eq!(summary.failed_over, 0);
+    assert_eq!(
+        summary.local.counter("router_routed", &[("replica", "0")])
+            + summary.local.counter("router_routed", &[("replica", "1")]),
+        8.0
+    );
+
+    // The rollup acceptance: merging the replicas' own terminal
+    // snapshots (still served until Server::join) reproduces the
+    // summary's `replicas_merged` exactly, and local ⊕ replicas equals
+    // the fleet registry `/metrics` exposed.
+    let mut merged = MetricsRegistry::new();
+    for addr in replica_metrics {
+        let snap = MetricsRegistry::decode_text(&http_get(addr, "/snapshot"))
+            .expect("replica snapshot decodes");
+        merged.merge_from(&snap);
+    }
+    assert_eq!(
+        merged.encode_text(),
+        summary.replicas_merged.encode_text(),
+        "fleet rollup differs from the associative merge of replica snapshots"
+    );
+    let mut recomputed = summary.local.snapshot();
+    recomputed.merge_from(&summary.replicas_merged);
+    assert_eq!(recomputed.encode_text(), summary.fleet.encode_text());
+    assert_eq!(summary.fleet.counter("sessions_completed", &[("tenant", "acme")]), 4.0);
+    assert_eq!(summary.fleet.counter("sessions_completed", &[("tenant", "hobby")]), 4.0);
+    assert!(summary.exposition.contains("sparsespec_router_routed"));
+
+    let s0 = server0.join().expect("replica 0 drains");
+    let s1 = server1.join().expect("replica 1 drains");
+    assert_eq!(s0.sessions_completed + s1.sessions_completed, 8);
+    assert_eq!(s0.sessions_completed, 4, "stickiness splits 4/4");
+
+    let trace = std::fs::read_to_string(&trace_path).expect("router trace exported");
+    assert!(trace.contains("\"route\""), "routing instants missing from trace");
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+// ---------------------------------------------------------------------------
+// Scripted fake replica: speaks wire v1 (or a wrong version) well enough
+// to accept sessions and stream a few tokens, then dies on command.
+// ---------------------------------------------------------------------------
+
+struct FakeReplica {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    socks: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl FakeReplica {
+    /// Every accepted connection: send `Hello{version}`, answer `Ping`,
+    /// accept each `Submit` — the first submit on a connection also
+    /// streams 3 tokens (never finishing), later ones stay queued.
+    fn spawn(version: u8) -> FakeReplica {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("fake bind");
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let socks: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let (l_stop, l_socks) = (stop.clone(), socks.clone());
+        std::thread::spawn(move || {
+            let mut next_base = 1000u64;
+            for stream in listener.incoming() {
+                if l_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                if let Ok(c) = stream.try_clone() {
+                    l_socks.lock().unwrap().push(c);
+                }
+                let base = next_base;
+                next_base += 100;
+                std::thread::spawn(move || fake_conn(stream, version, base));
+            }
+        });
+        FakeReplica { addr, stop, socks }
+    }
+
+    /// Hard-kill: every open socket is shut down at once, as a crashed
+    /// process would.
+    fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for s in self.socks.lock().unwrap().iter() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        // unblock the accept loop
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+    }
+}
+
+fn fake_conn(mut stream: TcpStream, version: u8, session_base: u64) {
+    let window = 1u32 << 20;
+    if wire::write_frame(&mut stream, &Frame::Hello { version, window }).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut r = BufReader::new(read_half);
+    let mut submits = 0u64;
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(Frame::Submit { req_id, .. })) => {
+                let session = session_base + submits;
+                submits += 1;
+                if wire::write_frame(&mut stream, &Frame::Accepted { req_id, session, replica: None })
+                    .is_err()
+                {
+                    return;
+                }
+                if submits == 1 {
+                    // mid-stream forever: tokens without a Finished
+                    for (i, tok) in [7, 8, 9].into_iter().enumerate() {
+                        let f = Frame::Token { session, index: i as u32, token: tok };
+                        if wire::write_frame(&mut stream, &f).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            Ok(Some(Frame::Ping { nonce })) => {
+                if wire::write_frame(&mut stream, &Frame::Pong { nonce }).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(_)) => {} // Credit / Cancel / Shutdown: ignored
+            _ => return,
+        }
+    }
+}
+
+/// Frame bookkeeping shared by the failover test's read loops.
+fn on_frame(
+    f: &Frame,
+    sid_of: &mut BTreeMap<u64, u64>,
+    replica_of: &mut BTreeMap<u64, u16>,
+    tokens: &mut BTreeMap<u64, Vec<i32>>,
+    errors: &mut BTreeMap<u64, ErrorCode>,
+    finished: &mut BTreeMap<u64, (u8, u32)>,
+) {
+    match f {
+        Frame::Accepted { req_id, session, replica } => {
+            assert!(
+                sid_of.insert(*req_id, *session).is_none(),
+                "duplicate Accepted for req {req_id}"
+            );
+            replica_of.insert(*req_id, replica.expect("router echoes replica"));
+        }
+        Frame::Token { session, token, .. } => {
+            tokens.entry(*session).or_default().push(*token);
+        }
+        Frame::Error { req_id, code, .. } => {
+            errors.insert(*req_id, *code);
+        }
+        Frame::Finished { session, reason, tokens: n } => {
+            finished.insert(*session, (*reason, *n));
+        }
+        _ => {}
+    }
+}
+
+/// Acceptance pin of the failover contract: killing a replica mid-load
+/// fails its mid-stream session fast with a typed `ReplicaDown`,
+/// transparently resubmits its not-yet-streamed one, and leaves the
+/// surviving replica's outputs bit-identical.
+#[test]
+fn replica_death_fails_fast_midstream_and_resubmits_queued() {
+    let rt = runtime();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let fake = FakeReplica::spawn(wire::PROTOCOL_VERSION);
+    let (server, real_spec) = spawn_replica(1);
+
+    // Two real requests run on the survivor; the reference pins their
+    // outputs (id keys match the client-side req ids below).
+    let mut safe = small_requests(&rt, 1, 24, 44).remove(0);
+    safe.id = 2;
+    let mut queued = small_requests(&rt, 1, 24, 55).remove(0);
+    queued.id = 3;
+    let reference = reference_outputs(&rt, mk_cfg(), vec![safe.clone(), queued.clone()]);
+
+    let trace_path =
+        std::env::temp_dir().join(format!("router_failover_trace_{}.json", std::process::id()));
+    let mut rcfg = RouterConfig::new(vec![
+        ReplicaSpec { addr: fake.addr.to_string(), metrics_addr: None },
+        real_spec,
+    ]);
+    rcfg.addr = "127.0.0.1:0".into();
+    rcfg.trace_out = Some(trace_path.to_string_lossy().into_owned());
+    let router = Router::spawn(rcfg).expect("router spawns");
+
+    // Deterministic placement with default edges [128, 256, 512] and
+    // distinct tenants (no stickiness coupling), submitted in order:
+    //  req 1 "doomed": overflow bucket, all loads zero   → replica 0
+    //  req 2 "safe":   bucket 0 loads (0,0), live (1,0)  → replica 1
+    //  req 3 "queued": bucket 0 loads (0, cost_safe)     → replica 0
+    let (mut cw, mut cr) = connect(router.addr());
+    wire::write_frame(&mut cw, &Frame::Credit { n: 1 << 20 }).expect("credit");
+    let doomed_prompt = small_requests(&rt, 1, 24, 66).remove(0).prompt;
+    wire::write_frame(
+        &mut cw,
+        &Frame::Submit {
+            req_id: 1,
+            seed: 9,
+            max_new: 600,
+            tenant: "doomed".into(),
+            drafter: String::new(),
+            prompt: doomed_prompt,
+        },
+    )
+    .expect("submit doomed");
+    for (req_id, tenant, r) in [(2u64, "safe", &safe), (3u64, "queued", &queued)] {
+        wire::write_frame(
+            &mut cw,
+            &Frame::Submit {
+                req_id,
+                seed: r.seed,
+                max_new: r.max_new as u32,
+                tenant: tenant.into(),
+                drafter: String::new(),
+                prompt: r.prompt.clone(),
+            },
+        )
+        .expect("submit");
+    }
+
+    // Sync point: all three accepted (with the router's replica echo)
+    // and the doomed session visibly mid-stream (3 tokens forwarded).
+    // Every frame kind is tracked in both read loops — the fast survivor
+    // session may finish before the kill.
+    let mut sid_of: BTreeMap<u64, u64> = BTreeMap::new(); // req -> session
+    let mut replica_of: BTreeMap<u64, u16> = BTreeMap::new();
+    let mut tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new(); // session -> toks
+    let mut errors: BTreeMap<u64, ErrorCode> = BTreeMap::new(); // req -> code
+    let mut finished: BTreeMap<u64, (u8, u32)> = BTreeMap::new(); // session -> (reason, toks)
+    read_frames_until(&mut cr, deadline, |f| {
+        on_frame(f, &mut sid_of, &mut replica_of, &mut tokens, &mut errors, &mut finished);
+        sid_of.len() == 3
+            && tokens.get(&sid_of[&1]).map(|t| t.len()).unwrap_or(0) >= 3
+    });
+    assert_eq!(replica_of[&1], 0, "doomed must land on the fake replica");
+    assert_eq!(replica_of[&2], 1, "safe must land on the survivor");
+    assert_eq!(replica_of[&3], 0, "queued must land on the fake replica");
+
+    // Kill the fake: the router must fail the mid-stream session fast
+    // and resubmit the queued one to the survivor.
+    fake.kill();
+    read_frames_until(&mut cr, deadline, |f| {
+        on_frame(f, &mut sid_of, &mut replica_of, &mut tokens, &mut errors, &mut finished);
+        finished.len() == 3
+    });
+
+    // Mid-stream: typed fail-fast, exactly the 3 already-streamed tokens.
+    assert_eq!(errors.get(&1), Some(&ErrorCode::ReplicaDown), "errors: {errors:?}");
+    assert_eq!(finished[&sid_of[&1]], (3, 3), "doomed ends failed with 3 tokens");
+    assert_eq!(tokens[&sid_of[&1]], vec![7, 8, 9]);
+    // Queued: resubmitted transparently — no error, no duplicate
+    // Accepted (sid_of insert would have panicked), completes on the
+    // survivor bit-identical to the reference.
+    assert!(!errors.contains_key(&3), "queued session must not surface an error: {errors:?}");
+    assert_eq!(finished[&sid_of[&3]].0, 0, "queued completes after resubmit");
+    assert_eq!(tokens[&sid_of[&3]], reference[&queued.id]);
+    // Survivor untouched throughout.
+    assert!(!errors.contains_key(&2), "survivor session errored: {errors:?}");
+    assert_eq!(finished[&sid_of[&2]].0, 0);
+    assert_eq!(tokens[&sid_of[&2]], reference[&safe.id]);
+
+    drop(cw);
+    drop(cr);
+    router.shutdown(false);
+    let summary = router.join().expect("fleet drain");
+    assert_eq!(summary.resubmitted, 1);
+    assert_eq!(summary.failed_over, 1);
+    assert_eq!(summary.routed, 4, "3 placements + 1 resubmit");
+    assert_eq!(
+        summary.local.counter("router_health_transitions", &[("replica", "0"), ("to", "down")]),
+        1.0
+    );
+
+    let s = server.join().expect("survivor drains");
+    assert_eq!(s.sessions_completed, 2, "safe + resubmitted queued");
+
+    let trace = std::fs::read_to_string(&trace_path).expect("router trace exported");
+    assert!(trace.contains("\"resubmit\""), "resubmit instant missing");
+    assert!(trace.contains("\"replica_down_session\""), "fail-fast instant missing");
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// Wire hardening: a replica (or server) speaking the wrong protocol
+/// version is rejected up front — by `Router::spawn` for the fleet, and
+/// by the unchanged client's handshake for a direct connection.
+#[test]
+fn wrong_protocol_version_is_rejected_by_router_and_client() {
+    let rt = runtime();
+    let fake = FakeReplica::spawn(wire::PROTOCOL_VERSION + 1);
+
+    let mut rcfg =
+        RouterConfig::new(vec![ReplicaSpec { addr: fake.addr.to_string(), metrics_addr: None }]);
+    rcfg.addr = "127.0.0.1:0".into();
+    let err = Router::spawn(rcfg).err().expect("version mismatch must fail spawn");
+    assert!(
+        format!("{err:#}").contains("rejected"),
+        "unexpected spawn error: {err:#}"
+    );
+
+    let mut ccfg = ClientConfig::new(&fake.addr.to_string());
+    ccfg.timeout_s = 10.0;
+    ccfg.tenants.push(TenantLoad {
+        name: "t".into(),
+        requests: small_requests(&rt, 1, 8, 7),
+        drafter: String::new(),
+    });
+    let err = run_load(ccfg).err().expect("client must refuse a v2 server");
+    assert!(
+        format!("{err:#}").contains("handshake rejected"),
+        "unexpected client error: {err:#}"
+    );
+    fake.kill();
+}

@@ -257,7 +257,7 @@ fn slow_reader_is_cancelled_without_disturbing_others() {
     let mut finished = 0usize;
     read_frames_until(&mut h_r, deadline, |f| {
         match f {
-            Frame::Accepted { req_id, session } => {
+            Frame::Accepted { req_id, session, .. } => {
                 session_to_req.insert(*session, *req_id);
             }
             Frame::Token { session, token, .. } => {

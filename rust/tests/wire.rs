@@ -44,7 +44,11 @@ fn rand_frame(rng: &mut Xoshiro256) -> Frame {
         3 => Frame::Shutdown { abort: rng.next_u64() % 2 == 1 },
         4 => Frame::Ping { nonce: rng.next_u64() },
         5 => Frame::Hello { version: rng.next_u64() as u8, window: rng.next_u64() as u32 },
-        6 => Frame::Accepted { req_id: rng.next_u64(), session: rng.next_u64() },
+        6 => Frame::Accepted {
+            req_id: rng.next_u64(),
+            session: rng.next_u64(),
+            replica: if rng.next_u64() % 2 == 0 { None } else { Some(rng.next_u64() as u16) },
+        },
         7 => Frame::Token {
             session: rng.next_u64(),
             index: rng.next_u64() as u32,
@@ -57,7 +61,7 @@ fn rand_frame(rng: &mut Xoshiro256) -> Frame {
         },
         9 => Frame::Error {
             req_id: rng.next_u64(),
-            code: ErrorCode::from_u8((rng.next_u64() % 8 + 1) as u8).unwrap(),
+            code: ErrorCode::from_u8((rng.next_u64() % 9 + 1) as u8).unwrap(),
             detail: rand_string(rng, 40),
         },
         _ => Frame::Pong { nonce: rng.next_u64() },
@@ -92,8 +96,17 @@ fn fuzz_decode_is_canonical() {
 fn fuzz_truncations_always_error() {
     let mut rng = Xoshiro256::new(0x7A7A);
     for _ in 0..200 {
-        let body = rand_frame(&mut rng).encode_body();
+        let f = rand_frame(&mut rng);
+        let body = f.encode_body();
         for cut in 0..body.len() {
+            // The one sanctioned exception: Accepted's optional trailing
+            // replica id means cutting exactly that field yields the
+            // (equally canonical) replica-less form.
+            if matches!(f, Frame::Accepted { replica: Some(_), .. }) && cut == body.len() - 2 {
+                let r = wire::decode_body(&body[..cut]).unwrap();
+                assert!(matches!(r, Frame::Accepted { replica: None, .. }));
+                continue;
+            }
             let r = wire::decode_body(&body[..cut]);
             assert!(r.is_err(), "strict prefix (len {cut}/{}) decoded: {r:?}", body.len());
         }
@@ -168,6 +181,14 @@ fn golden_bytes_pin_the_layout() {
             Frame::Token { session: 9, index: 4, token: -7 },
             "1100000012090000000000000004000000f9ffffff",
         ),
+        (
+            Frame::Accepted { req_id: 7, session: 3, replica: None },
+            "110000001107000000000000000300000000000000",
+        ),
+        (
+            Frame::Accepted { req_id: 7, session: 3, replica: Some(1) },
+            "1300000011070000000000000003000000000000000100",
+        ),
     ];
     for (frame, hex) in cases {
         let got: String = frame.encode().iter().map(|b| format!("{b:02x}")).collect();
@@ -181,11 +202,34 @@ fn golden_bytes_pin_the_layout() {
     }
 }
 
+/// Negative path of the Hello version handshake (the wire-hardening
+/// contract): a `Hello` carrying any version other than PROTOCOL_VERSION
+/// must be a typed refusal, and non-Hello opening frames likewise.
+#[test]
+fn hello_version_mismatch_is_a_typed_refusal() {
+    for v in [0u8, wire::PROTOCOL_VERSION + 1, u8::MAX] {
+        let f = Frame::Hello { version: v, window: 256 };
+        assert_eq!(
+            wire::expect_hello(&f),
+            Err(WireError::BadValue("protocol version")),
+            "version {v}"
+        );
+    }
+    assert_eq!(
+        wire::expect_hello(&Frame::Hello { version: wire::PROTOCOL_VERSION, window: 256 }),
+        Ok(256)
+    );
+    assert_eq!(
+        wire::expect_hello(&Frame::Ping { nonce: 0 }),
+        Err(WireError::BadValue("expected hello"))
+    );
+}
+
 #[test]
 fn multiple_frames_stream_back_to_back() {
     let frames = vec![
         Frame::Hello { version: wire::PROTOCOL_VERSION, window: 64 },
-        Frame::Accepted { req_id: 1, session: 10 },
+        Frame::Accepted { req_id: 1, session: 10, replica: None },
         Frame::Token { session: 10, index: 0, token: 42 },
         Frame::Finished { session: 10, reason: 0, tokens: 1 },
     ];
